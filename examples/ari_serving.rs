@@ -1,0 +1,89 @@
+//! End-to-end serving driver — the repo's E2E validation (DESIGN.md §5).
+//!
+//! Loads the trained fashion_syn model (full + reduced), prints its
+//! build-time training loss curve, calibrates the ARI threshold, serves
+//! batched requests through the full three-layer stack (rust coordinator
+//! -> PJRT -> AOT-lowered JAX/Pallas HLO), and reports
+//! latency/throughput, escalation fraction, accuracy parity with the
+//! always-full baseline, and modelled energy savings.  The run is
+//! recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ari_serving
+//! ```
+
+use ari::config::{AriConfig, Mode, ThresholdPolicy};
+use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
+use ari::runtime::Engine;
+use ari::server::{run_serving, ServeOptions};
+
+fn main() -> ari::Result<()> {
+    let mut cfg = AriConfig::default();
+    cfg.dataset = "fashion_syn".into();
+    cfg.mode = Mode::Fp;
+    cfg.reduced_level = 10;
+    cfg.full_level = 16;
+    cfg.threshold = ThresholdPolicy::MMax;
+    cfg.batch_size = 32;
+    cfg.batch_timeout_us = 2000;
+    cfg.requests = 2048;
+    cfg.arrival_rate = 0.0; // closed loop: measure peak throughput
+
+    println!("=== ARI end-to-end serving driver ===\n");
+
+    // 1. The build-time training loss curve (L2, recorded by make artifacts).
+    let log_path = cfg.artifacts.join(&cfg.dataset).join("train_log.txt");
+    if let Ok(log) = std::fs::read_to_string(&log_path) {
+        println!("build-time training curve ({}):", cfg.dataset);
+        for line in log.lines() {
+            println!("  {line}");
+        }
+        println!();
+    }
+
+    // 2. Load + calibrate.
+    let mut engine = Engine::new(&cfg.artifacts)?;
+    let data = engine.eval_data(&cfg.dataset)?;
+    let t0 = std::time::Instant::now();
+    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, data.n / 2)?;
+    println!(
+        "calibration: {:?} over {} rows -> T = {:.4} ({} changed elements)",
+        t0.elapsed(),
+        data.n / 2,
+        cascade.threshold,
+        cascade.calibration.changed_margins.len()
+    );
+
+    // 3. Baseline: always-full predictions (for parity + energy compare).
+    let full_v = engine
+        .manifest
+        .variant(&cfg.dataset, cfg.mode.kind(), cfg.full_level, cfg.batch_size)?
+        .clone();
+    let full_out = engine.run_dataset(&full_v, &data, cfg.seed as u32)?;
+    println!("always-full baseline accuracy: {:.4}\n", full_out.accuracy(&data.y));
+
+    // 4. Serve, both escalation policies.
+    for (name, esc) in [("immediate", EscalationPolicy::Immediate), ("deferred", EscalationPolicy::Deferred)] {
+        let report = run_serving(
+            &mut engine,
+            &cascade,
+            &cfg,
+            &data,
+            Some(&full_out.pred),
+            ServeOptions { escalation: esc },
+        )?;
+        println!("--- escalation policy: {name} ---");
+        println!("{}\n", report.summary());
+    }
+
+    // 5. Runtime statistics.
+    println!(
+        "engine: {} compiles ({} ms), {} executes, mean {:.0} µs/batch, {:.1} MiB host->device",
+        engine.stats.compiles,
+        engine.stats.compile_ms,
+        engine.stats.executes,
+        engine.mean_execute_us(),
+        engine.stats.h2d_bytes as f64 / (1024.0 * 1024.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! The paper's case study (§IV-E, Tables III & IV): pick T = Mmax so the
+//! cascade reproduces the full model's dataset accuracy exactly, and
+//! report the energy savings at the paper's chosen operating points.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example case_study
+//! ```
+
+use ari::runtime::Engine;
+
+fn main() -> ari::Result<()> {
+    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
+    println!("{}", ari::experiments::run_experiment(&mut engine, "table3")?);
+    println!("{}", ari::experiments::run_experiment(&mut engine, "table4")?);
+    Ok(())
+}

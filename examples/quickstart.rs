@@ -1,0 +1,56 @@
+//! Quickstart: load artifacts, calibrate an ARI cascade, classify a few
+//! samples, and print what the cascade decided.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ari::config::{AriConfig, Mode, ThresholdPolicy};
+use ari::coordinator::{Cascade, CascadeSpec};
+use ari::runtime::Engine;
+
+fn main() -> ari::Result<()> {
+    let mut cfg = AriConfig::default();
+    cfg.dataset = "fashion_syn".into();
+    cfg.mode = Mode::Fp;
+    cfg.reduced_level = 10; // FP10: 6 mantissa bits removed from FP16
+    cfg.threshold = ThresholdPolicy::MMax;
+    cfg.batch_size = 32;
+
+    let mut engine = Engine::new(&cfg.artifacts)?;
+    let data = engine.eval_data(&cfg.dataset)?;
+
+    // Calibrate the threshold on the first half of the eval split.
+    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, data.n / 2)?;
+    println!(
+        "calibrated: T = {:.4} (Mmax over {} changed elements of {})",
+        cascade.threshold,
+        cascade.calibration.changed_margins.len(),
+        cascade.calibration.n
+    );
+    println!(
+        "energy per inference: reduced {:.3} µJ, full {:.3} µJ",
+        cascade.e_reduced, cascade.e_full
+    );
+
+    // Classify the first 32 samples with the cascade.
+    let out = cascade.infer_batch(&mut engine, data.rows(0, 32), 32, 0)?;
+    println!("\n sample  label  pred  margin   path");
+    for i in 0..32 {
+        println!(
+            "  {i:<6} {:<6} {:<5} {:<8.4} {}",
+            data.y[i],
+            out.pred[i],
+            out.margin[i],
+            if out.escalated[i] { "reduced -> FULL (margin below T)" } else { "reduced only" }
+        );
+    }
+    let f = Cascade::escalation_fraction(&out);
+    println!(
+        "\nescalated {:.0}% of the batch; batch energy {:.2} µJ (always-full would be {:.2} µJ)",
+        100.0 * f,
+        out.energy_uj,
+        32.0 * cascade.e_full
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Stochastic-computing substrate explorer: the exact bitstream simulator
+//! next to the calibrated noise model, on real trained weights.
+//!
+//! Shows, for one eval sample and a range of sequence lengths, the
+//! layer-0 MAC error of the exact LFSR/XNOR/APC simulator vs the
+//! `c*sqrt(fan_in/L)` model the L1 Pallas kernel uses — the calibration
+//! contract of DESIGN.md §2, on production weights rather than toy data.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sc_explorer
+//! ```
+
+use ari::mlp::{sc_exact_forward, FpEngine, ScNoiseEngine};
+use ari::quant::FpFormat;
+use ari::runtime::Engine;
+use ari::sc::ScConfig;
+
+fn main() -> ari::Result<()> {
+    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let ds = "fashion_syn";
+    engine.load_dataset(ds)?;
+    let data = engine.eval_data(ds)?;
+    let weights = engine.weights(ds)?;
+
+    let x = data.row(0);
+    let exact_ref = FpEngine::new(weights, FpFormat::FP16).forward(x, 1);
+    println!("sample 0: label={} fp16 pred={} margin={:.4}\n", data.y[0], exact_ref.pred[0], exact_ref.margin[0]);
+
+    println!("L        exact_sim_pred  noise_model_pred  exact_time");
+    for l in [256usize, 1024] {
+        let cfg = ScConfig::new(l);
+        let t0 = std::time::Instant::now();
+        let exact = sc_exact_forward(weights, x, cfg, 7);
+        let dt = t0.elapsed();
+        let noise = ScNoiseEngine::new(weights, cfg).forward(x, 1, 7);
+        println!("{l:<8} {:<15} {:<17} {dt:?}", exact.pred[0], noise.pred[0]);
+    }
+
+    // Layer-0 MAC error: exact simulator vs the noise model's sigma.
+    println!("\nlayer-0 MAC std (first 8 neurons), exact sim vs c*sqrt(fan_in/L) model:");
+    let l0 = &weights.layers[0];
+    let fan_in = l0.in_dim;
+    let xmax = x.iter().fold(1e-6f32, |a, &v| a.max(v.abs()));
+    let wmax = l0.w.iter().fold(1e-6f32, |a, &v| a.max(v.abs()));
+    let xn: Vec<f32> = x.iter().map(|&v| v / xmax).collect();
+    // Keep only the first 8 output neurons (contiguous re-pack) so the
+    // exact simulation stays fast.
+    let n_out = 8usize;
+    let mut wn = vec![0.0f32; fan_in * n_out];
+    for i in 0..fan_in {
+        for j in 0..n_out {
+            wn[i * n_out + j] = l0.w[i * l0.out_dim + j] / wmax;
+        }
+    }
+    // truth on normalised values
+    let mut truth = vec![0.0f64; n_out];
+    for i in 0..fan_in {
+        for (j, t) in truth.iter_mut().enumerate() {
+            *t += xn[i] as f64 * wn[i * n_out + j] as f64;
+        }
+    }
+    for l in [512usize, 2048] {
+        let cfg = ScConfig::new(l);
+        let mut errs = Vec::new();
+        for seed in 0..6u64 {
+            let est = ari::sc::sc_dot(&xn, &wn, n_out, cfg, seed * 31 + 1);
+            for j in 0..n_out {
+                errs.push(est[j] - truth[j]);
+            }
+        }
+        let emp = ari::util::Summary::of(&errs).std;
+        let model = ari::mlp::SC_NOISE_C * ((fan_in as f64) / l as f64).sqrt();
+        println!("  L={l:<6} empirical={emp:.3}  model={model:.3}  ratio={:.2}", emp / model);
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""ARI build-time compile package (L1 kernels + L2 model + AOT export).
+
+This package runs exactly once, from ``make artifacts``.  The rust serving
+binary never imports python; it loads the HLO text + raw binaries this
+package writes into ``artifacts/``.
+"""

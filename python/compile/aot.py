@@ -1,0 +1,224 @@
+"""AOT exporter — the single build-time entry point (``make artifacts``).
+
+For every synthetic dataset this:
+
+  1. trains the full-precision MLP (``train.py``),
+  2. exports weights, the evaluation split and the training log as raw
+     little-endian binaries with line-based ``.meta`` headers (the rust
+     loader in ``rust/src/data/`` parses exactly this format — no serde in
+     the sandbox's vendored crate set),
+  3. lowers every resolution variant of the L2 model to **HLO text**
+     (NOT ``.serialize()`` — jax >= 0.5 emits 64-bit instruction ids that
+     the xla crate's xla_extension 0.5.1 rejects; the text parser
+     reassigns ids and round-trips cleanly, see
+     /opt/xla-example/README.md) into ``artifacts/<ds>/<variant>_b<B>.hlo.txt``,
+  4. writes a ``manifest.txt`` the rust side uses to discover everything.
+
+Variants (paper §IV): floating point FP16 (full), FP14, FP12, FP10, FP9,
+FP8; stochastic computing L = 4096 (full), 2048, 1024, 512, 256, 128, 64.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model, train
+from .kernels import QuantSpec, SCSpec
+
+FP_BITS = [16, 14, 12, 10, 9, 8]          # FP16 is the full model
+SC_LENS = [4096, 2048, 1024, 512, 256, 128, 64]  # 4096 is the full model
+BATCH_SIZES = [32, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Binary export (the .bin/.meta format shared with rust/src/data/)
+# ---------------------------------------------------------------------------
+
+_DTYPE_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32", np.dtype(np.uint32): "u32"}
+
+
+class BinWriter:
+    """Accumulates named tensors into one .bin blob + .meta header.
+
+    .meta format (one record per line, space separated):
+        ari-meta v1
+        tensor <name> <dtype> <rank> <dim0> ... <dimN-1> <byte_offset> <byte_len>
+    """
+
+    def __init__(self) -> None:
+        self.blobs: list[bytes] = []
+        self.lines: list[str] = ["ari-meta v1"]
+        self.offset = 0
+
+    def add(self, name: str, arr: np.ndarray) -> None:
+        arr = np.ascontiguousarray(arr)
+        dt = _DTYPE_NAMES[arr.dtype]
+        raw = arr.tobytes()
+        dims = " ".join(str(d) for d in arr.shape)
+        self.lines.append(
+            f"tensor {name} {dt} {arr.ndim} {dims} {self.offset} {len(raw)}".replace("  ", " ")
+        )
+        self.blobs.append(raw)
+        self.offset += len(raw)
+
+    def write(self, path_base: str) -> None:
+        with open(path_base + ".bin", "wb") as f:
+            for b in self.blobs:
+                f.write(b)
+        with open(path_base + ".meta", "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Per-dataset export
+# ---------------------------------------------------------------------------
+
+
+def export_dataset(spec: datasets.DatasetSpec, out_dir: str, args) -> dict:
+    ds_dir = os.path.join(out_dir, spec.name)
+    os.makedirs(ds_dir, exist_ok=True)
+    t0 = time.time()
+    params, (x_ev, y_ev), history = train.train(
+        spec, n_train=args.train_n, n_eval=args.eval_n, epochs=args.epochs, batch=args.train_batch
+    )
+
+    # Weights.
+    w = BinWriter()
+    for name, tensor in model.params_to_flat(params):
+        w.add(name, np.asarray(tensor))
+    w.write(os.path.join(ds_dir, "weights"))
+
+    # Eval split (the paper's calibration-and-reporting dataset).
+    d = BinWriter()
+    d.add("x", x_ev)
+    d.add("y", y_ev)
+    d.write(os.path.join(ds_dir, "eval"))
+
+    # Golden outputs: jax-side (scores, pred, margin) on the first 32 eval
+    # samples for three representative variants.  The rust integration
+    # tests (rust/tests/runtime_parity.rs) re-run the same HLO through the
+    # PJRT runtime and assert bit-parity — the cross-language correctness
+    # signal of the whole AOT bridge.
+    g = BinWriter()
+    xg = x_ev[:32]
+    flat0 = [np.asarray(t) for _, t in model.params_to_flat(params)]
+    from .kernels.ref import ref_quantize_fp
+
+    for bits in (16, min(args.fp_bits)):
+        # Kernel contract: weights arrive pre-quantised (w tensors only —
+        # index 0 of each (w, b, alpha) triple); mirrors the rust runtime.
+        spec_b = QuantSpec.fp(bits)
+        flat_q = [ref_quantize_fp(t, spec_b) if i % 3 == 0 else t for i, t in enumerate(flat0)]
+        s, p, m = jax.jit(model.fp_entry(QuantSpec.fp(bits)))(xg, *flat_q)
+        g.add(f"fp{bits}.scores", np.asarray(s))
+        g.add(f"fp{bits}.pred", np.asarray(p))
+        g.add(f"fp{bits}.margin", np.asarray(m))
+    key = jnp.array([1, 42], dtype=jnp.uint32)
+    sc_l = args.sc_lens[len(args.sc_lens) // 2]
+    s, p, m = jax.jit(model.sc_entry(SCSpec(sc_l)))(xg, key, *flat0)
+    g.add(f"sc{sc_l}.scores", np.asarray(s))
+    g.add(f"sc{sc_l}.pred", np.asarray(p))
+    g.add(f"sc{sc_l}.margin", np.asarray(m))
+    g.write(os.path.join(ds_dir, "golden"))
+    with open(os.path.join(ds_dir, "golden.cfg"), "w") as f:
+        f.write(f"fp_bits 16 {min(args.fp_bits)}\nsc_len {sc_l}\nkey 1 42\nbatch 32\n")
+
+    # Training log (loss curve for EXPERIMENTS.md §E2E).
+    with open(os.path.join(ds_dir, "train_log.txt"), "w") as f:
+        f.write("epoch loss eval_acc\n")
+        for epoch, loss, acc in history:
+            f.write(f"{epoch} {loss:.6f} {acc:.6f}\n")
+
+    # HLO variants.
+    flat = [np.asarray(t) for _, t in model.params_to_flat(params)]
+    w_shapes = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in flat]
+    variants = []
+    for bsz in args.batch_sizes:
+        x_shape = jax.ShapeDtypeStruct((bsz, spec.input_dim), jnp.float32)
+        for bits in args.fp_bits:
+            name = f"fp{bits}_b{bsz}"
+            fn = model.fp_entry(QuantSpec.fp(bits))
+            lowered = jax.jit(fn).lower(x_shape, *w_shapes)
+            _write_hlo(ds_dir, name, to_hlo_text(lowered))
+            variants.append(("fp", bits, bsz, name))
+            print(f"  lowered {spec.name}/{name}", flush=True)
+        key_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        for L in args.sc_lens:
+            name = f"sc{L}_b{bsz}"
+            fn = model.sc_entry(SCSpec(L))
+            lowered = jax.jit(fn).lower(x_shape, key_shape, *w_shapes)
+            _write_hlo(ds_dir, name, to_hlo_text(lowered))
+            variants.append(("sc", L, bsz, name))
+            print(f"  lowered {spec.name}/{name}", flush=True)
+
+    final_acc = history[-1][2]
+    print(f"[aot] {spec.name}: acc={final_acc:.4f} variants={len(variants)} ({time.time()-t0:.0f}s)")
+    return {"spec": spec, "variants": variants, "acc": final_acc, "n_eval": len(y_ev)}
+
+
+def _write_hlo(ds_dir: str, name: str, text: str) -> None:
+    with open(os.path.join(ds_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+
+
+def write_manifest(out_dir: str, results: list[dict], args) -> None:
+    """manifest.txt — discovery file for the rust side (line-based)."""
+    lines = ["ari-manifest v1"]
+    for r in results:
+        spec: datasets.DatasetSpec = r["spec"]
+        lines.append(
+            f"dataset {spec.name} paper={spec.paper_name.replace(' ', '_')} "
+            f"input_dim={spec.input_dim} n_classes={spec.n_classes} "
+            f"n_eval={r['n_eval']} train_acc={r['acc']:.6f}"
+        )
+        for kind, level, bsz, name in r["variants"]:
+            lines.append(f"variant {spec.name} kind={kind} level={level} batch={bsz} file={name}.hlo.txt")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description="ARI AOT exporter")
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--datasets", nargs="*", default=list(datasets.SPECS))
+    p.add_argument("--epochs", type=int, default=12)
+    p.add_argument("--train-n", type=int, default=4096)
+    p.add_argument("--eval-n", type=int, default=4096)
+    p.add_argument("--train-batch", type=int, default=256)
+    p.add_argument("--batch-sizes", type=int, nargs="*", default=BATCH_SIZES)
+    p.add_argument("--fp-bits", type=int, nargs="*", default=FP_BITS)
+    p.add_argument("--sc-lens", type=int, nargs="*", default=SC_LENS)
+    p.add_argument("--quick", action="store_true", help="tiny run for CI smoke tests")
+    args = p.parse_args(argv)
+    if args.quick:
+        args.epochs, args.train_n, args.eval_n = 2, 512, 512
+        args.batch_sizes, args.fp_bits, args.sc_lens = [32], [16, 10], [4096, 512]
+        args.datasets = ["fashion_syn"]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for name in args.datasets:
+        results.append(export_dataset(datasets.SPECS[name], args.out, args))
+    write_manifest(args.out, results, args)
+    print(f"[aot] wrote manifest for {len(results)} datasets to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

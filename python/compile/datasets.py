@@ -1,0 +1,98 @@
+"""Synthetic stand-ins for SVHN / CIFAR-10 / Fashion-MNIST.
+
+The paper's datasets are unavailable in this offline sandbox (DESIGN.md §2).
+ARI's behaviour depends only on the *score-margin distribution* of a trained
+classifier, so each stand-in keeps the original's input dimensionality and
+class count and tunes *difficulty* so the trained full-precision MLP lands
+in a qualitatively similar accuracy band (Fashion-MNIST easiest, SVHN
+middle, CIFAR-10 hardest) — which is what shapes the margin tails ARI keys
+on.
+
+Generator: a 10-class Gaussian mixture on a low-dimensional latent manifold
+(class prototypes + within-class factors), projected to pixel space through
+a fixed random linear "rendering" map, plus pixel noise and a per-sample
+contrast jitter.  Everything is seeded and reproducible; the rust side
+never regenerates data — it reads the exported binaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """A synthetic dataset family, shaped like its paper counterpart."""
+
+    name: str          # artifact directory name
+    paper_name: str    # the dataset it stands in for
+    input_dim: int
+    n_classes: int
+    latent_dim: int    # manifold dimensionality (higher = harder)
+    class_sep: float   # prototype separation (lower = harder)
+    noise: float       # pixel-space noise std (higher = harder)
+    cov_dissim: float  # how class-specific the covariances are (lower = harder)
+    seed: int
+
+
+# Difficulty tuning: Fashion-MNIST-like easiest, SVHN-like middle,
+# CIFAR-10-like hardest, mirroring the relative accuracy ordering of the
+# paper's MLPs (~87 / ~78 / ~46 %).
+SPECS = {
+    "fashion_syn": DatasetSpec(
+        name="fashion_syn", paper_name="Fashion-MNIST", input_dim=784,
+        n_classes=10, latent_dim=20, class_sep=1.60, noise=1.0, cov_dissim=0.35, seed=101,
+    ),
+    "svhn_syn": DatasetSpec(
+        name="svhn_syn", paper_name="SVHN", input_dim=3072,
+        n_classes=10, latent_dim=28, class_sep=1.05, noise=1.3, cov_dissim=0.25, seed=202,
+    ),
+    "cifar10_syn": DatasetSpec(
+        name="cifar10_syn", paper_name="CIFAR-10", input_dim=3072,
+        n_classes=10, latent_dim=48, class_sep=0.62, noise=1.7, cov_dissim=0.12, seed=303,
+    ),
+}
+
+
+def generate(spec: DatasetSpec, n: int, split_seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Draw ``n`` samples from the dataset family.
+
+    Returns (x, y): x is (n, input_dim) f32 standardised to roughly unit
+    scale; y is (n,) int32 labels.  ``split_seed`` decorrelates splits
+    while the class geometry (prototypes, rendering map) stays fixed by
+    ``spec.seed``.
+    """
+    geom = np.random.RandomState(spec.seed)
+    protos = geom.randn(spec.n_classes, spec.latent_dim) * spec.class_sep
+    # Within-class factor loadings: mostly *shared* covariance structure
+    # (otherwise the MLP classifies classes by covariance alone and every
+    # dataset saturates), with a class-specific component scaled by
+    # ``cov_dissim`` that makes margins class-dependent and heavy-tailed,
+    # like natural images.
+    shared = geom.randn(spec.latent_dim, spec.latent_dim) * 0.9
+    deltas = geom.randn(spec.n_classes, spec.latent_dim, spec.latent_dim) * 0.9
+    w_shared = np.sqrt(1.0 - spec.cov_dissim**2)
+    factors = w_shared * shared[None, :, :] + spec.cov_dissim * deltas
+    render = geom.randn(spec.latent_dim, spec.input_dim) / np.sqrt(spec.latent_dim)
+
+    rs = np.random.RandomState(split_seed)
+    y = rs.randint(0, spec.n_classes, size=n).astype(np.int32)
+    z = protos[y] + np.einsum("nk,nkl->nl", rs.randn(n, spec.latent_dim), factors[y])
+    x = z @ render
+    # Per-sample contrast jitter (multiplicative) + pixel noise: makes the
+    # score distribution heteroscedastic, again like natural images.
+    contrast = np.exp(rs.randn(n, 1) * 0.15)
+    x = x * contrast + rs.randn(n, spec.input_dim) * spec.noise
+    x = (x - x.mean(axis=1, keepdims=True)) / (x.std(axis=1, keepdims=True) + 1e-6)
+    return x.astype(np.float32), y
+
+
+def splits(spec: DatasetSpec, n_train: int, n_eval: int):
+    """Standard (train, eval) splits.  The eval split doubles as the
+    paper's 'dataset' used both for threshold calibration and reporting —
+    exactly the paper's protocol (§III-C uses the dataset itself)."""
+    x_tr, y_tr = generate(spec, n_train, split_seed=spec.seed * 7 + 1)
+    x_ev, y_ev = generate(spec, n_eval, split_seed=spec.seed * 7 + 2)
+    return (x_tr, y_tr), (x_ev, y_ev)

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for ARI.
+
+Every kernel here is the build-time author path of the three-layer stack:
+it lowers (with ``interpret=True``, so plain HLO comes out) into the L2 jax
+model, which ``compile.aot`` serialises to HLO text loaded by the rust
+runtime.  Nothing in this package is imported at serving time.
+"""
+
+from .quant_matmul import quant_matmul, quantize_fp, QuantSpec  # noqa: F401
+from .sc_matmul import sc_matmul, sc_sigma, SCSpec  # noqa: F401

@@ -1,0 +1,163 @@
+"""Reduced-precision (truncated-mantissa) matmul — the FP side of ARI.
+
+The paper's floating-point hardware derives every reduced model from the
+FP16 full model by *removing least-significant mantissa bits* (Fig. 2):
+FP16 keeps 10 mantissa bits, FP14 keeps 8, ..., FP8 keeps 2, all with the
+FP16 5-bit exponent.  This kernel emulates that datapath at the value
+level inside f32 compute:
+
+  * inputs are quantised to the target format on load,
+  * weights arrive already quantised (done once at export),
+  * the MAC accumulation runs in f32 (a stand-in for the wide accumulator
+    every MAC array uses),
+  * the epilogue re-quantises ``acc + bias`` and applies PReLU, then
+    quantises once more — matching a datapath whose registers between
+    layers hold reduced-precision values.
+
+TPU adaptation (paper targets a 32 nm ASIC MAC bank, not a GPU): the
+64-PE × SRAM banking of the paper maps to a (block_m × K) @ (K × block_n)
+VMEM tiling; quantisation is fused into the tile epilogue so the
+reduced-precision emulation costs no extra HBM traffic.  Lowered with
+``interpret=True`` — the CPU PJRT client cannot execute Mosaic
+custom-calls (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """An FP16-family format: 1 sign bit, ``e_bits`` exponent, ``m_bits``
+    mantissa.  The paper's FPk format is ``QuantSpec(m_bits=k - 6)``
+    (k = 1 + 5 + mantissa)."""
+
+    m_bits: int
+    e_bits: int = 5
+
+    def __post_init__(self) -> None:
+        if not 1 <= self.m_bits <= 23:
+            raise ValueError(f"m_bits must be in [1, 23], got {self.m_bits}")
+        if not 2 <= self.e_bits <= 8:
+            raise ValueError(f"e_bits must be in [2, 8], got {self.e_bits}")
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.e_bits + self.m_bits
+
+    @property
+    def max_value(self) -> float:
+        """Largest finite magnitude: (2 - 2^-m) * 2^emax."""
+        emax = (1 << (self.e_bits - 1)) - 1
+        return float((2.0 - 2.0 ** (-self.m_bits)) * 2.0**emax)
+
+    @property
+    def min_normal(self) -> float:
+        emin = 2 - (1 << (self.e_bits - 1))
+        return float(2.0**emin)
+
+    @classmethod
+    def fp(cls, total_bits: int) -> "QuantSpec":
+        """Paper notation: FP16 = full, FP10 = 6 bits removed, etc."""
+        return cls(m_bits=total_bits - 6)
+
+
+def quantize_fp(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Round-to-nearest-even truncation of an f32 tensor to ``spec``.
+
+    Bit-exact emulation of dropping mantissa LSBs: the f32 pattern is
+    rounded (RNE, carry into the exponent is the correct behaviour) and
+    masked; magnitudes are clamped to the format's max and flushed to zero
+    below its min normal (subnormals are flushed — the paper's MAC arrays
+    do the same; see DESIGN.md).
+    """
+    x = x.astype(jnp.float32)
+    shift = 23 - spec.m_bits
+    i = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    lsb = (i >> shift) & jnp.uint32(1)
+    bias = lsb + jnp.uint32((1 << (shift - 1)) - 1)
+    i = (i + bias) & jnp.uint32(0xFFFFFFFF ^ ((1 << shift) - 1))
+    q = jax.lax.bitcast_convert_type(i, jnp.float32)
+    # Range handling for the narrow exponent.
+    q = jnp.clip(q, -spec.max_value, spec.max_value)
+    q = jnp.where(jnp.abs(q) < spec.min_normal, 0.0, q)
+    # Preserve exact zeros / signs and pass NaN through untouched.
+    q = jnp.where(jnp.isnan(x), x, q)
+    return q
+
+
+def _quant_layer_kernel(x_ref, w_ref, b_ref, alpha_ref, o_ref, *, spec: QuantSpec, activate: bool):
+    """One (block_m, K) x (K, block_n) tile of the reduced-precision layer.
+
+    CONTRACT: ``w`` must arrive already quantised to ``spec``.  Weight
+    quantisation is idempotent and batch-independent, so it is hoisted out
+    of the per-call kernel entirely: the rust runtime quantises each
+    dataset's weights once per precision level on the host
+    (`runtime::Engine::load_dataset` + `quant::FpFormat`, bit-identical to
+    `quantize_fp`) and uploads per-level device buffers.  §Perf: this
+    removes ~1.6-3.9 M elementwise quantise ops from every execute.
+    """
+    xq = quantize_fp(x_ref[...], spec)
+    acc = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+    pre = quantize_fp(acc + quantize_fp(b_ref[...], spec), spec)
+    if activate:
+        alpha = alpha_ref[0]
+        pre = jnp.where(pre >= 0.0, pre, alpha * pre)
+        pre = quantize_fp(pre, spec)
+    o_ref[...] = pre
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (tile shape must tile
+    the array exactly; batch/feature dims here are powers of two or 10)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "activate"))
+def quant_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    alpha: jax.Array,
+    *,
+    spec: QuantSpec,
+    activate: bool = True,
+) -> jax.Array:
+    """Reduced-precision MLP layer: ``prelu(quant(quant(x) @ wq + bq))``.
+
+    Args:
+      x: (batch, in_dim) activations, f32.
+      w: (in_dim, out_dim) weights (pre-quantised at export).
+      b: (out_dim,) bias.
+      alpha: scalar (1,) PReLU slope; ignored when ``activate=False``.
+      spec: target reduced format.
+      activate: apply PReLU (hidden layers) or not (output layer).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = _pick_block(m, 128)
+    bn = _pick_block(n, 256)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_quant_layer_kernel, spec=spec, activate=activate),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, w, b, alpha)

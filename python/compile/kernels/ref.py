@@ -1,0 +1,191 @@
+"""Pure reference oracles for the L1 kernels.
+
+Three tiers:
+
+  * ``ref_quant_layer`` / ``ref_quantize_fp`` — straight jnp re-statement of
+    the reduced-precision layer, no pallas.  The pallas kernel must match
+    these bit-for-bit (``tests/test_quant_kernel.py``).
+  * ``ref_sc_layer`` — straight jnp re-statement of the SC noise model.
+  * ``sc_exact_*`` — a numpy *bitstream-exact* stochastic-computing
+    simulator (LFSR → SNG → bipolar XNOR multiply → APC accumulate).  This
+    is the ground truth the noise model is calibrated against, and the
+    python twin of ``rust/src/sc/`` (cross-checked through golden vectors
+    in ``tests/test_sc_exact.py`` and ``rust/src/sc/golden.rs``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .quant_matmul import QuantSpec, quantize_fp
+from .sc_matmul import SCSpec, sc_sigma, snap_to_grid
+
+# ---------------------------------------------------------------------------
+# FP quantisation reference
+# ---------------------------------------------------------------------------
+
+
+def ref_quantize_fp(x: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """Numpy mirror of ``quantize_fp`` (round-to-nearest-even mantissa
+    truncation, clamp to format range, flush subnormals)."""
+    x = np.asarray(x, dtype=np.float32)
+    shift = 23 - spec.m_bits
+    i = x.view(np.uint32).copy()
+    lsb = (i >> shift) & np.uint32(1)
+    bias = lsb + np.uint32((1 << (shift - 1)) - 1)
+    i = (i + bias) & np.uint32(0xFFFFFFFF ^ ((1 << shift) - 1))
+    q = i.view(np.float32)
+    q = np.clip(q, -spec.max_value, spec.max_value)
+    q = np.where(np.abs(q) < spec.min_normal, np.float32(0.0), q)
+    q = np.where(np.isnan(x), x, q)
+    return q.astype(np.float32)
+
+
+def ref_quant_layer(
+    x: np.ndarray,
+    w: np.ndarray,
+    b: np.ndarray,
+    alpha: float,
+    spec: QuantSpec,
+    activate: bool = True,
+) -> np.ndarray:
+    """Reference reduced-precision layer (f32 accumulator, quantised
+    operands and epilogue) — mirrors ``quant_matmul``."""
+    xq = ref_quantize_fp(x, spec)
+    wq = ref_quantize_fp(w, spec)
+    acc = xq.astype(np.float32) @ wq.astype(np.float32)
+    pre = ref_quantize_fp(acc + ref_quantize_fp(b, spec), spec)
+    if activate:
+        pre = np.where(pre >= 0.0, pre, np.float32(alpha) * pre)
+        pre = ref_quantize_fp(pre, spec)
+    return pre
+
+
+# ---------------------------------------------------------------------------
+# SC noise-model reference (jnp, no pallas)
+# ---------------------------------------------------------------------------
+
+
+def ref_sc_layer(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    alpha: float,
+    eps: jnp.ndarray,
+    spec: SCSpec,
+    activate: bool = True,
+) -> jnp.ndarray:
+    """Reference SC noise-model layer — mirrors ``sc_matmul`` (including
+    the per-tile max|x|*max|w| scale, assuming a single tile)."""
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    pre = acc + b
+    scale = jnp.max(jnp.abs(x)) * jnp.max(jnp.abs(w))
+    fan_in = x.shape[-1]
+    noisy = pre + sc_sigma(fan_in, spec, scale) * eps
+    noisy = snap_to_grid(noisy, spec, scale)
+    if activate:
+        noisy = jnp.where(noisy >= 0.0, noisy, alpha * noisy)
+    return noisy
+
+
+# ---------------------------------------------------------------------------
+# Exact bitstream SC simulator (numpy) — ground truth for calibration
+# ---------------------------------------------------------------------------
+
+# Maximal-length taps for Fibonacci LFSRs (XOR form), indexed by width.
+_LFSR_TAPS = {
+    8: (8, 6, 5, 4),
+    10: (10, 7),
+    12: (12, 11, 10, 4),
+    16: (16, 15, 13, 4),
+}
+
+
+def lfsr_sequence(width: int, seed: int, length: int) -> np.ndarray:
+    """``length`` successive states of a maximal Fibonacci LFSR of
+    ``width`` bits (states in [1, 2^width - 1]; seed 0 is remapped to 1).
+
+    This is the python twin of ``rust/src/sc/lfsr.rs`` — the golden test
+    vectors in tests/golden_lfsr.txt are produced here and re-checked by
+    the rust side.
+    """
+    taps = _LFSR_TAPS[width]
+    mask = (1 << width) - 1
+    state = seed & mask or 1
+    out = np.empty(length, dtype=np.uint32)
+    for t in range(length):
+        out[t] = state
+        fb = 0
+        for tap in taps:
+            fb ^= state >> (tap - 1)
+        fb &= 1
+        state = ((state << 1) | fb) & mask
+    return out
+
+
+def sng_bipolar(values: np.ndarray, rng_states: np.ndarray, width: int) -> np.ndarray:
+    """Stochastic number generator: compare each value (bipolar, in
+    [-1, 1]) against the LFSR state sequence, producing a bit matrix of
+    shape ``values.shape + (L,)`` with P(bit=1) = (v + 1) / 2."""
+    v = np.clip(np.asarray(values, dtype=np.float64), -1.0, 1.0)
+    p = (v + 1.0) / 2.0
+    denom = float(1 << width)
+    thresholds = np.floor(p * denom)  # bit = 1  iff  state < thresholds
+    return (rng_states[None, :] < thresholds[..., None]).astype(np.uint8)
+
+
+def sc_exact_dot(
+    x: np.ndarray,
+    w: np.ndarray,
+    spec: SCSpec,
+    seed: int = 1,
+    width: int = 16,
+) -> np.ndarray:
+    """Bitstream-exact bipolar SC dot product.
+
+    x: (fan_in,) values in [-1, 1];  w: (fan_in, n_out) values in [-1, 1].
+    Each operand stream gets an independently-seeded LFSR.  Products are
+    XNOR streams; an APC (exact popcount) accumulates over fan-in and
+    time.  Returns the (n_out,) estimate of ``x @ w``.
+    """
+    fan_in = x.shape[0]
+    n_out = w.shape[1]
+    L = spec.seq_len
+    # Independent LFSRs per input stream and per weight stream.
+    x_bits = np.empty((fan_in, L), dtype=np.uint8)
+    for i in range(fan_in):
+        states = lfsr_sequence(width, seed * 2654435761 + i + 1, L)
+        x_bits[i] = sng_bipolar(x[i : i + 1], states, width)[0]
+    est = np.empty(n_out, dtype=np.float64)
+    for j in range(n_out):
+        acc = 0
+        for i in range(fan_in):
+            states = lfsr_sequence(width, (seed + 7919) * 40503 + i * n_out + j + 1, L)
+            w_bits = sng_bipolar(w[i : i + 1, j], states, width)[0]
+            prod = np.logical_not(np.logical_xor(x_bits[i], w_bits))  # XNOR
+            acc += int(prod.sum())  # APC: exact popcount
+        # acc counts 1s over fan_in*L product bits; bipolar decode per
+        # product is 2p-1, summed over fan_in streams.
+        est[j] = 2.0 * acc / L - fan_in
+    return est
+
+
+def sc_exact_layer(
+    x: np.ndarray,
+    w: np.ndarray,
+    b: np.ndarray,
+    alpha: float,
+    spec: SCSpec,
+    seed: int = 1,
+    activate: bool = True,
+) -> np.ndarray:
+    """Bitstream-exact SC layer on normalised (bipolar-range) values:
+    SC dot + (exact) bias + PReLU.  Bias and activation are done on the
+    counter readout, as in the paper's LFSM design."""
+    est = sc_exact_dot(x, w, spec, seed=seed)
+    pre = est + b
+    if activate:
+        pre = np.where(pre >= 0.0, pre, alpha * pre)
+    return pre

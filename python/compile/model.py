@@ -1,0 +1,176 @@
+"""L2 — the paper's MLP in JAX, in all resolution variants.
+
+Topology (paper §II-C / §IV): input – 1024 – 512 – 256 – 256 – 10 with
+PReLU activations.  Trained once in f32 (``train.py``); at export the
+*full* model is the FP16-semantics forward (paper: "pre-trained as the
+full precision model ... with format FP16") and every reduced model is a
+mantissa-truncated or shorter-bitstream variant of the same weights —
+no retraining, exactly the paper's setup.
+
+Each forward returns ``(scores, pred, margin)`` with the margin
+``M = S1st − S2nd`` computed *inside the graph*, so the rust hot path gets
+it for free (one device round trip, no host-side top-k).
+
+All heavy math goes through the L1 pallas kernels
+(``kernels.quant_matmul`` / ``kernels.sc_matmul``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import QuantSpec, SCSpec, quant_matmul, sc_matmul
+
+HIDDEN = (1024, 512, 256, 256)
+N_CLASSES = 10
+
+FULL_FP = QuantSpec.fp(16)     # the paper's full floating-point model
+FULL_SC_LEN = 4096             # the paper's full stochastic-computing model
+
+
+class LayerParams(NamedTuple):
+    w: jax.Array      # (in_dim, out_dim)
+    b: jax.Array      # (out_dim,)
+    alpha: jax.Array  # (1,) PReLU slope
+
+
+def layer_dims(input_dim: int) -> list[tuple[int, int]]:
+    dims = (input_dim, *HIDDEN, N_CLASSES)
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def init_params(key: jax.Array, input_dim: int) -> list[LayerParams]:
+    """He-initialised parameters for the 5-layer MLP."""
+    params = []
+    for d_in, d_out in layer_dims(input_dim):
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (d_in, d_out), jnp.float32) * jnp.sqrt(2.0 / d_in)
+        params.append(
+            LayerParams(w=w, b=jnp.zeros((d_out,), jnp.float32), alpha=jnp.full((1,), 0.25, jnp.float32))
+        )
+    return params
+
+
+def params_to_flat(params: list[LayerParams]) -> list[tuple[str, jax.Array]]:
+    """Stable (name, tensor) listing used by the AOT exporter and the rust
+    weight loader — order must match ``rust/src/data/weights.rs``."""
+    out = []
+    for i, p in enumerate(params):
+        out.append((f"layer{i}.w", p.w))
+        out.append((f"layer{i}.b", p.b))
+        out.append((f"layer{i}.alpha", p.alpha))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _top2_margin(scores: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(pred, margin) via masked reductions.  ``jax.lax.top_k`` lowers to a
+    TopK HLO attribute the xla crate's 0.5.1 parser rejects, so the top-2
+    is computed with two plain max-reduces instead (cheap for 10 classes,
+    and parses everywhere)."""
+    s1 = jnp.max(scores, axis=-1)
+    pred = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    classes = jnp.arange(scores.shape[-1], dtype=jnp.int32)
+    masked = jnp.where(classes[None, :] == pred[:, None], -jnp.inf, scores)
+    s2 = jnp.max(masked, axis=-1)
+    return pred, s1 - s2
+
+
+def _normalize(logits: jax.Array) -> jax.Array:
+    """Scores = L2-normalised logits.
+
+    The paper's classifier scores are the raw (bounded) outputs of the
+    last layer — counter readouts in the SC design, datapath values in
+    the FP design — NOT softmax probabilities.  That distinction matters
+    for ARI: a resolution-induced class flip happens exactly when the two
+    top *raw* scores cross, so changed elements have small raw margins,
+    while softmax saturation would hand even borderline flips a margin
+    near 1 and destroy the threshold structure (margins of Figs. 8/10/11).
+    Per-sample L2 normalisation bounds the scores like the paper's
+    hardware range does, without distorting the top-2 gap ordering.
+    """
+    norm = jnp.sqrt(jnp.sum(logits * logits, axis=-1, keepdims=True) + 1e-12)
+    return logits / norm
+
+
+def _outputs(logits: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(scores, pred, margin): normalised scores in [-1, 1], the arg-max
+    class, and the top-1 − top-2 score margin (paper §III-B)."""
+    scores = _normalize(logits)
+    pred, margin = _top2_margin(scores)
+    return scores, pred, margin
+
+
+def forward_train(params: list[LayerParams], x: jax.Array) -> jax.Array:
+    """Plain f32 forward (no pallas, differentiable) used only by
+    ``train.py``.  Returns logits."""
+    h = x
+    for p in params[:-1]:
+        pre = h @ p.w + p.b
+        h = jnp.where(pre >= 0.0, pre, p.alpha[0] * pre)
+    last = params[-1]
+    return h @ last.w + last.b
+
+
+def forward_fp(params: list[LayerParams], x: jax.Array, spec: QuantSpec):
+    """Reduced-precision (or FP16 full) forward through the L1 pallas
+    kernel.  ``spec=FULL_FP`` is the paper's full model."""
+    h = x
+    for p in params[:-1]:
+        h = quant_matmul(h, p.w, p.b, p.alpha, spec=spec, activate=True)
+    last = params[-1]
+    logits = quant_matmul(h, last.w, last.b, last.alpha, spec=spec, activate=False)
+    return _outputs(logits)
+
+
+def forward_sc(params: list[LayerParams], x: jax.Array, key: jax.Array, spec: SCSpec):
+    """Stochastic-computing forward (noise model) through the L1 pallas
+    kernel.  ``key`` is an explicit threefry key input so the lowered HLO
+    is a pure, deterministic function of (x, key)."""
+    h = x
+    keys = jax.random.split(key, len(params))
+    for i, p in enumerate(params[:-1]):
+        eps = jax.random.normal(keys[i], (x.shape[0], p.w.shape[1]), jnp.float32)
+        h = sc_matmul(h, p.w, p.b, p.alpha, eps, spec=spec, activate=True)
+    last = params[-1]
+    eps = jax.random.normal(keys[-1], (x.shape[0], last.w.shape[1]), jnp.float32)
+    logits = sc_matmul(h, last.w, last.b, last.alpha, eps, spec=spec, activate=False)
+    scores = _normalize(logits)
+    # Counter-grid readout: scores themselves come off L-bit counters
+    # (bipolar grid of step 2/L on the normalised range).
+    scores = jnp.round(scores * (spec.seq_len / 2)) / (spec.seq_len / 2)
+    pred, margin = _top2_margin(scores)
+    return scores, pred, margin
+
+
+# Entry points the AOT exporter lowers (weights are *parameters* of the
+# HLO, passed by the rust runtime as device buffers created once).
+
+
+def fp_entry(spec: QuantSpec):
+    def fn(x, *flat_w):
+        params = unflatten(flat_w)
+        return forward_fp(params, x, spec)
+
+    return fn
+
+
+def sc_entry(spec: SCSpec):
+    def fn(x, key, *flat_w):
+        params = unflatten(flat_w)
+        return forward_sc(params, x, key, spec)
+
+    return fn
+
+
+def unflatten(flat_w) -> list[LayerParams]:
+    assert len(flat_w) % 3 == 0, len(flat_w)
+    return [LayerParams(*flat_w[i : i + 3]) for i in range(0, len(flat_w), 3)]

@@ -1,0 +1,83 @@
+"""Build-time training of the full-precision MLPs (one per dataset).
+
+Paper protocol (§IV): the MLP is pre-trained as the full-precision model;
+every reduced model reuses the same weights.  Training is plain f32 Adam +
+cross-entropy on the synthetic datasets; the FP16 "full model" semantics
+are applied at inference time by the quantising forward.
+
+Runs once from ``compile.aot``; never at serving time.  Sizes default to
+sandbox-friendly values (single CPU core) and are overridable via CLI for
+a faithful 20-epoch run.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model
+
+
+def cross_entropy(params, x, y):
+    logits = model.forward_train(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def adam_step(params, opt_state, x, y, step, lr=1e-3):
+    """One Adam step (hand-rolled — optax is not in the sandbox)."""
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    loss, grads = jax.value_and_grad(cross_entropy)(params, x, y)
+    m, v = opt_state
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    t = step + 1
+    mhat = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mhat, vhat)
+    return params, (m, v), loss
+
+
+def train(
+    spec: datasets.DatasetSpec,
+    n_train: int = 4096,
+    n_eval: int = 4096,
+    epochs: int = 12,
+    batch: int = 256,
+    lr: float = 1e-3,
+    log=print,
+):
+    """Train one MLP; returns (params, (x_eval, y_eval), history).
+
+    ``history`` is a list of (epoch, loss, eval_acc) rows recorded for
+    EXPERIMENTS.md §E2E (the loss-curve requirement).
+    """
+    (x_tr, y_tr), (x_ev, y_ev) = datasets.splits(spec, n_train, n_eval)
+    params = model.init_params(jax.random.PRNGKey(spec.seed), spec.input_dim)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    opt_state = (zeros, jax.tree.map(jnp.zeros_like, zeros))
+
+    eval_fn = jax.jit(lambda p, x: jnp.argmax(model.forward_train(p, x), axis=-1))
+    history = []
+    step = 0
+    n_batches = n_train // batch
+    rs = np.random.RandomState(spec.seed + 9)
+    t0 = time.time()
+    for epoch in range(epochs):
+        perm = rs.permutation(n_train)
+        losses = []
+        for b in range(n_batches):
+            idx = perm[b * batch : (b + 1) * batch]
+            params, opt_state, loss = adam_step(params, opt_state, x_tr[idx], y_tr[idx], step, lr=lr)
+            losses.append(float(loss))
+            step += 1
+        preds = np.asarray(eval_fn(params, x_ev))
+        acc = float((preds == y_ev).mean())
+        history.append((epoch, float(np.mean(losses)), acc))
+        log(f"[train:{spec.name}] epoch {epoch:2d} loss {np.mean(losses):.4f} eval_acc {acc:.4f} ({time.time()-t0:.0f}s)")
+    return params, (x_ev, y_ev), history

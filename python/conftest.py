@@ -1,0 +1,7 @@
+"""Make the build-time `compile` package importable regardless of where
+pytest is invoked from (repo root or python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,59 @@
+"""AOT exporter: the .bin/.meta format contract with rust, and a quick
+end-to-end export (tiny config) checking every artifact exists and the
+manifest is parseable."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import BinWriter, main as aot_main
+
+
+def test_binwriter_layout(tmp_path):
+    w = BinWriter()
+    a = np.arange(6, dtype=np.float32).reshape(2, 3)
+    b = np.array([1, 2, 3], dtype=np.int32)
+    w.add("a", a)
+    w.add("b", b)
+    w.write(str(tmp_path / "t"))
+    blob = (tmp_path / "t.bin").read_bytes()
+    assert len(blob) == 6 * 4 + 3 * 4
+    np.testing.assert_array_equal(np.frombuffer(blob[:24], np.float32).reshape(2, 3), a)
+    np.testing.assert_array_equal(np.frombuffer(blob[24:], np.int32), b)
+    meta = (tmp_path / "t.meta").read_text().splitlines()
+    assert meta[0] == "ari-meta v1"
+    assert meta[1].split() == ["tensor", "a", "f32", "2", "2", "3", "0", "24"]
+    assert meta[2].split() == ["tensor", "b", "i32", "1", "3", "24", "12"]
+
+
+def test_binwriter_noncontiguous(tmp_path):
+    w = BinWriter()
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4).T  # non-contiguous
+    w.add("t", arr)
+    w.write(str(tmp_path / "nc"))
+    blob = (tmp_path / "nc.bin").read_bytes()
+    np.testing.assert_array_equal(np.frombuffer(blob, np.float32).reshape(4, 3), arr)
+
+
+@pytest.mark.slow
+def test_quick_export_end_to_end(tmp_path):
+    """Full tiny export: train 2 epochs on 512 samples, lower 2 fp + 2 sc
+    variants, and verify every file the rust loader expects."""
+    out = str(tmp_path / "artifacts")
+    aot_main(["--out", out, "--quick"])
+    ds = os.path.join(out, "fashion_syn")
+    for f in [
+        "weights.bin", "weights.meta", "eval.bin", "eval.meta",
+        "golden.bin", "golden.meta", "golden.cfg", "train_log.txt",
+        "fp16_b32.hlo.txt", "fp10_b32.hlo.txt", "sc4096_b32.hlo.txt", "sc512_b32.hlo.txt",
+    ]:
+        assert os.path.exists(os.path.join(ds, f)), f
+    manifest = open(os.path.join(out, "manifest.txt")).read().splitlines()
+    assert manifest[0] == "ari-manifest v1"
+    ds_lines = [l for l in manifest if l.startswith("dataset ")]
+    var_lines = [l for l in manifest if l.startswith("variant ")]
+    assert len(ds_lines) == 1 and len(var_lines) == 4
+    # HLO text must carry the ENTRY computation marker the rust parser needs
+    hlo = open(os.path.join(ds, "fp16_b32.hlo.txt")).read()
+    assert "ENTRY" in hlo

@@ -1,0 +1,126 @@
+"""L1 correctness: the pallas quant kernel vs the pure reference.
+
+The pallas kernel must match ``ref_quant_layer`` bit-for-bit, and the
+quantiser itself must satisfy the format's algebraic properties.  Shapes
+and formats are swept with hypothesis per the repro brief.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import QuantSpec, quant_matmul, quantize_fp
+from compile.kernels.ref import ref_quant_layer, ref_quantize_fp
+
+DIMS = st.sampled_from([1, 2, 4, 8, 10, 16, 32, 64, 128, 256])
+MBITS = st.sampled_from([2, 3, 4, 6, 8, 10])
+
+
+def _rand(rs, *shape):
+    return (rs.randn(*shape) * rs.uniform(0.05, 2.0)).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, mbits=MBITS, seed=st.integers(0, 2**16), activate=st.booleans())
+def test_kernel_matches_reference(m, k, n, mbits, seed, activate):
+    rs = np.random.RandomState(seed)
+    x, w, b = _rand(rs, m, k), _rand(rs, k, n) * 0.1, _rand(rs, n) * 0.1
+    alpha = np.float32(rs.uniform(0.0, 0.5))
+    spec = QuantSpec(m_bits=mbits)
+    # Kernel contract: w arrives pre-quantised (the rust runtime quantises
+    # per level on the host); the reference quantises internally, which is
+    # idempotent, so feeding it raw w is equivalent.
+    wq = ref_quantize_fp(w, spec)
+    out = np.asarray(
+        quant_matmul(jnp.array(x), jnp.array(wq), jnp.array(b), jnp.full((1,), alpha), spec=spec, activate=activate)
+    )
+    ref = ref_quant_layer(x, w, b, alpha, spec, activate=activate)
+    # XLA's dot and numpy's @ may accumulate in different orders, so a
+    # pre-quantisation result can land 1 ULP across a rounding boundary and
+    # move one quantisation step.  Allow exactly that much and no more.
+    np.testing.assert_allclose(out, ref, rtol=2.0**-spec.m_bits, atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(mbits=MBITS, ebits=st.sampled_from([4, 5, 6]), seed=st.integers(0, 2**16))
+def test_quantize_idempotent(mbits, ebits, seed):
+    """q(q(x)) == q(x): a quantised value is a fixed point of the format."""
+    rs = np.random.RandomState(seed)
+    x = (rs.randn(256) * np.logspace(-3, 3, 256)).astype(np.float32)
+    spec = QuantSpec(m_bits=mbits, e_bits=ebits)
+    q1 = np.asarray(quantize_fp(jnp.array(x), spec))
+    q2 = np.asarray(quantize_fp(jnp.array(q1), spec))
+    np.testing.assert_array_equal(q1, q2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(mbits=MBITS, seed=st.integers(0, 2**16))
+def test_quantize_matches_numpy_ref(mbits, seed):
+    rs = np.random.RandomState(seed)
+    x = (rs.randn(512) * np.logspace(-4, 4, 512)).astype(np.float32)
+    spec = QuantSpec(m_bits=mbits)
+    np.testing.assert_array_equal(np.asarray(quantize_fp(jnp.array(x), spec)), ref_quantize_fp(x, spec))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_error_shrinks_with_precision(seed):
+    """More mantissa bits -> monotonically no-worse worst-case error."""
+    rs = np.random.RandomState(seed)
+    x = rs.randn(1024).astype(np.float32)
+    errs = []
+    for mbits in (2, 4, 6, 8, 10):
+        q = ref_quantize_fp(x, QuantSpec(m_bits=mbits))
+        errs.append(np.max(np.abs(q - x)))
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:])), errs
+
+
+def test_relative_error_bound():
+    """|q(x) - x| <= 2^-(m+1) * |x| for normal-range values (RNE)."""
+    rs = np.random.RandomState(0)
+    x = (rs.randn(4096) * np.logspace(-2, 2, 4096)).astype(np.float32)
+    for mbits in (2, 4, 6, 8, 10):
+        spec = QuantSpec(m_bits=mbits)
+        q = ref_quantize_fp(x, spec)
+        mask = (np.abs(x) > spec.min_normal * 2) & (np.abs(x) < spec.max_value / 2)
+        rel = np.abs(q[mask] - x[mask]) / np.abs(x[mask])
+        assert rel.max() <= 2.0 ** -(mbits + 1) + 1e-7, (mbits, rel.max())
+
+
+def test_special_values():
+    spec = QuantSpec.fp(10)
+    x = np.array([0.0, -0.0, 1.0, -1.0, 1e9, -1e9, 1e-9, np.nan], dtype=np.float32)
+    q = ref_quantize_fp(x, spec)
+    assert q[0] == 0.0 and q[1] == 0.0
+    assert q[2] == 1.0 and q[3] == -1.0
+    assert q[4] == spec.max_value and q[5] == -spec.max_value  # clamp
+    assert q[6] == 0.0  # flush below min normal
+    assert np.isnan(q[7])
+
+
+def test_fp16_spec_constants():
+    spec = QuantSpec.fp(16)
+    assert spec.m_bits == 10 and spec.e_bits == 5
+    assert spec.max_value == pytest.approx(65504.0)
+    assert spec.min_normal == pytest.approx(2.0**-14)
+
+
+def test_fp16_halfway_rounds_to_even():
+    """1 + 2^-11 is exactly halfway between FP16 neighbours 1 and 1+2^-10;
+    RNE must pick the even one (1.0)."""
+    spec = QuantSpec.fp(16)
+    x = np.array([1.0 + 2.0**-11], dtype=np.float32)
+    assert ref_quantize_fp(x, spec)[0] == 1.0
+    # just above halfway rounds up
+    x = np.array([1.0 + 2.0**-11 + 2.0**-20], dtype=np.float32)
+    assert ref_quantize_fp(x, spec)[0] == np.float32(1.0 + 2.0**-10)
+
+
+def test_invalid_specs_rejected():
+    with pytest.raises(ValueError):
+        QuantSpec(m_bits=0)
+    with pytest.raises(ValueError):
+        QuantSpec(m_bits=24)
+    with pytest.raises(ValueError):
+        QuantSpec(m_bits=4, e_bits=1)

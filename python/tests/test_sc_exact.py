@@ -1,0 +1,110 @@
+"""The exact bitstream SC simulator: LFSR properties, SNG statistics, and
+dot-product convergence.  Also pins golden LFSR vectors shared with the
+rust twin (rust/src/sc/lfsr.rs — same taps, same golden numbers)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant_matmul import QuantSpec  # noqa: F401  (import sanity)
+from compile.kernels.sc_matmul import SCSpec
+from compile.kernels.ref import lfsr_sequence, sng_bipolar, sc_exact_dot, sc_exact_layer
+
+
+def test_lfsr_maximal_period_8bit():
+    seq = lfsr_sequence(8, seed=1, length=255)
+    assert len(set(seq.tolist())) == 255  # maximal: every nonzero state once
+    assert 0 not in seq
+
+
+def test_lfsr_maximal_period_10bit():
+    seq = lfsr_sequence(10, seed=7, length=1023)
+    assert len(set(seq.tolist())) == 1023
+
+
+def test_lfsr_seed_zero_remapped():
+    seq = lfsr_sequence(8, seed=0, length=4)
+    assert seq[0] == 1
+
+
+def test_lfsr_deterministic():
+    a = lfsr_sequence(16, seed=1234, length=64)
+    b = lfsr_sequence(16, seed=1234, length=64)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_lfsr_golden_vectors():
+    """Golden vectors pinned on both sides of the language boundary.
+    rust/src/sc/lfsr.rs has the same numbers in its unit tests; if either
+    implementation drifts, one of the two test suites fails."""
+    assert lfsr_sequence(8, seed=1, length=8).tolist() == [1, 2, 4, 8, 17, 35, 71, 142]
+    assert lfsr_sequence(10, seed=1, length=8).tolist() == [1, 2, 4, 8, 16, 32, 64, 129]
+    assert lfsr_sequence(16, seed=0xACE1, length=4).tolist() == [44257, 22979, 45958, 26380]
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=st.floats(-1.0, 1.0), width=st.sampled_from([10, 12, 16]), seed=st.integers(1, 2**16))
+def test_sng_mean_tracks_value(v, width, seed):
+    """A length-(2^w - 1) stream decodes to the encoded value within the
+    LFSR's quantisation resolution."""
+    L = (1 << width) - 1
+    states = lfsr_sequence(width, seed, L)
+    bits = sng_bipolar(np.array([v]), states, width)[0]
+    decoded = 2.0 * bits.mean() - 1.0
+    # full-period count is floor(p * 2^w) - 1 over 2^w - 1 bits: decode
+    # bias up to ~2 steps from the floor and ~2p/2^w from the missing
+    # zero state — bound at 4.5 quantisation steps
+    assert abs(decoded - v) <= 4.5 / (1 << width) + 1e-9
+
+
+def test_exact_dot_golden_parity_with_rust():
+    """Same golden numbers pinned in rust/src/sc/layer.rs
+    (golden_parity_with_python) — the cross-language contract."""
+    x = np.array([0.5, -0.25, 0.75, -0.875])
+    w = np.array([[0.5, -0.5], [0.25, 0.125], [-0.75, 0.375], [0.0625, -0.9375]])
+    np.testing.assert_array_equal(sc_exact_dot(x, w, SCSpec(256), seed=3), [-0.3359375, 0.578125])
+    np.testing.assert_array_equal(sc_exact_dot(x, w, SCSpec(1024), seed=11), [-0.361328125, 0.744140625])
+
+
+def test_exact_dot_converges():
+    """Bitstream dot error vs true dot shrinks with L ~ 1/sqrt(L)."""
+    rs = np.random.RandomState(5)
+    fan_in = 32
+    x = rs.uniform(-1, 1, fan_in)
+    w = rs.uniform(-1, 1, (fan_in, 4))
+    true = x @ w
+    errs = []
+    for L in (256, 4096):
+        est = sc_exact_dot(x, w, SCSpec(L), seed=9)
+        errs.append(np.abs(est - true).mean())
+    assert errs[1] < errs[0]
+    assert errs[1] < 0.5  # absolute sanity on the long-stream error
+
+
+def test_exact_dot_error_scale_matches_model():
+    """Empirical MAC std across seeds should be within [0.5, 2] x the
+    c*sqrt(fan_in/L) model used by the pallas kernel — this is the
+    calibration contract from DESIGN.md §2."""
+    rs = np.random.RandomState(6)
+    fan_in, L = 24, 512
+    x = rs.uniform(-0.8, 0.8, fan_in)
+    w = rs.uniform(-0.8, 0.8, (fan_in, 3))
+    true = x @ w
+    errs = []
+    for seed in range(12):
+        est = sc_exact_dot(x, w, SCSpec(L), seed=seed * 131 + 7)
+        errs.extend((est - true).tolist())
+    emp_std = float(np.std(errs))
+    model_std = 0.72 * np.sqrt(fan_in / L)
+    assert 0.5 * model_std <= emp_std <= 2.0 * model_std, (emp_std, model_std)
+
+
+def test_exact_layer_activation():
+    rs = np.random.RandomState(8)
+    x = rs.uniform(-1, 1, 16)
+    w = rs.uniform(-1, 1, (16, 4))
+    b = np.array([0.1, -0.1, 0.0, 0.05])
+    out = sc_exact_layer(x, w, b, alpha=0.25, spec=SCSpec(2048), seed=3)
+    pre = sc_exact_dot(x, w, SCSpec(2048), seed=3) + b
+    expected = np.where(pre >= 0, pre, 0.25 * pre)
+    np.testing.assert_allclose(out, expected, rtol=1e-12)

@@ -1,0 +1,91 @@
+"""L1 correctness: the pallas SC noise-model kernel vs the pure reference,
+plus the statistical properties the noise model must satisfy."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import SCSpec, sc_matmul, sc_sigma
+from compile.kernels.ref import ref_sc_layer
+
+DIMS = st.sampled_from([1, 4, 8, 10, 16, 32, 64, 128])
+LENS = st.sampled_from([64, 128, 256, 512, 1024, 4096])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, L=LENS, seed=st.integers(0, 2**16), activate=st.booleans())
+def test_kernel_matches_reference(m, k, n, L, seed, activate):
+    """Single-tile shapes: kernel output == jnp reference (same eps)."""
+    rs = np.random.RandomState(seed)
+    x = rs.randn(m, k).astype(np.float32)
+    w = (rs.randn(k, n) * 0.1).astype(np.float32)
+    b = (rs.randn(n) * 0.1).astype(np.float32)
+    eps = rs.randn(m, n).astype(np.float32)
+    alpha = np.float32(0.25)
+    spec = SCSpec(L)
+    out = np.asarray(
+        sc_matmul(jnp.array(x), jnp.array(w), jnp.array(b), jnp.full((1,), alpha), jnp.array(eps), spec=spec, activate=activate)
+    )
+    ref = np.asarray(ref_sc_layer(jnp.array(x), jnp.array(w), jnp.array(b), alpha, jnp.array(eps), spec, activate=activate))
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_determinism_same_eps():
+    rs = np.random.RandomState(1)
+    x = rs.randn(8, 32).astype(np.float32)
+    w = rs.randn(32, 16).astype(np.float32) * 0.1
+    b = np.zeros(16, np.float32)
+    eps = rs.randn(8, 16).astype(np.float32)
+    a = jnp.full((1,), 0.25)
+    spec = SCSpec(256)
+    o1 = np.asarray(sc_matmul(jnp.array(x), jnp.array(w), jnp.array(b), a, jnp.array(eps), spec=spec))
+    o2 = np.asarray(sc_matmul(jnp.array(x), jnp.array(w), jnp.array(b), a, jnp.array(eps), spec=spec))
+    np.testing.assert_array_equal(o1, o2)
+
+
+def test_noise_shrinks_with_length():
+    """std(SC output - exact output) must scale ~ 1/sqrt(L)."""
+    rs = np.random.RandomState(2)
+    x = rs.randn(64, 128).astype(np.float32)
+    w = (rs.randn(128, 32) * 0.1).astype(np.float32)
+    b = np.zeros(32, np.float32)
+    a = jnp.full((1,), 0.25)
+    eps = rs.randn(64, 32).astype(np.float32)
+    exact = np.asarray(jnp.maximum(jnp.array(x) @ jnp.array(w), 0.25 * (jnp.array(x) @ jnp.array(w))))
+    stds = []
+    for L in (64, 256, 1024, 4096):
+        out = np.asarray(sc_matmul(jnp.array(x), jnp.array(w), jnp.array(b), a, jnp.array(eps), spec=SCSpec(L)))
+        stds.append(float(np.std(out - exact)))
+    # each 4x length increase should shrink std by ~2x (allow slack for the
+    # grid-snapping floor at small L)
+    assert stds[0] > stds[1] > stds[2] > stds[3]
+    assert stds[0] / stds[2] > 2.0
+
+
+def test_sigma_model_formula():
+    spec = SCSpec(1024)
+    s = float(sc_sigma(256, spec, 1.0))
+    assert s == pytest.approx(0.72 / 48.0 * np.sqrt(256 / 1024), rel=1e-6)
+
+
+def test_infinite_length_limit():
+    """As L -> huge, the SC layer approaches the exact f32 layer."""
+    rs = np.random.RandomState(3)
+    x = rs.randn(16, 64).astype(np.float32)
+    w = (rs.randn(64, 16) * 0.1).astype(np.float32)
+    b = (rs.randn(16) * 0.1).astype(np.float32)
+    a = jnp.full((1,), 0.25)
+    eps = rs.randn(16, 16).astype(np.float32)
+    out = np.asarray(sc_matmul(jnp.array(x), jnp.array(w), jnp.array(b), a, jnp.array(eps), spec=SCSpec(2**22)))
+    pre = x @ w + b
+    exact = np.where(pre >= 0, pre, 0.25 * pre)
+    np.testing.assert_allclose(out, exact, rtol=1e-2, atol=1e-2)
+
+
+def test_invalid_spec_rejected():
+    with pytest.raises(ValueError):
+        SCSpec(100)  # not a power of two
+    with pytest.raises(ValueError):
+        SCSpec(1)

@@ -1,0 +1,91 @@
+//! End-to-end ARI serving bench — the paper's headline, as a serving
+//! system: throughput, latency and energy savings of the cascade vs the
+//! always-full baseline, plus the batching-policy ablation (batch size ×
+//! escalation policy) called out in DESIGN.md §8.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use std::path::PathBuf;
+
+use ari::config::{AriConfig, Mode, ThresholdPolicy};
+use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
+use ari::runtime::Engine;
+use ari::server::{run_serving, ServeOptions};
+use ari::util::benchkit::section;
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.txt").exists() {
+        eprintln!("SKIP bench_cascade: run `make artifacts` first");
+        return;
+    }
+
+    section("ARI cascade vs always-full, fashion_syn FP10 (closed loop, 1024 req)");
+    println!(
+        "{:<34} {:>10} {:>9} {:>9} {:>10} {:>8}",
+        "case", "req/s", "p50", "p99", "energy µJ", "savings"
+    );
+    for (name, reduced, threshold) in [
+        // baseline: reduced IS the full model and nothing ever escalates
+        // (T = -1 accepts every margin) -> exactly one full-cost pass.
+        ("always-full (reduced=full)", 16usize, ThresholdPolicy::Fixed(-1.0)),
+        ("ARI @ Mmax", 10, ThresholdPolicy::MMax),
+        ("ARI @ M99", 10, ThresholdPolicy::M99),
+        ("ARI @ M95", 10, ThresholdPolicy::M95),
+    ] {
+        let mut cfg = AriConfig::default();
+        cfg.artifacts = root.clone();
+        cfg.dataset = "fashion_syn".into();
+        cfg.mode = Mode::Fp;
+        cfg.reduced_level = reduced;
+        cfg.threshold = threshold;
+        cfg.batch_size = 32;
+        cfg.requests = 1024;
+        let mut engine = Engine::new(&root).unwrap();
+        let data = engine.eval_data(&cfg.dataset).unwrap();
+        let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, 2048).unwrap();
+        let r = run_serving(&mut engine, &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
+        println!(
+            "{:<34} {:>10.0} {:>9.1?} {:>9.1?} {:>10.1} {:>7.1}%",
+            name,
+            r.throughput_rps,
+            r.p50,
+            r.p99,
+            r.energy_uj,
+            100.0 * r.savings()
+        );
+    }
+
+    section("batching ablation: batch size x escalation policy (FP10 @ Mmax, 512 req)");
+    println!("{:<34} {:>10} {:>9} {:>9}", "case", "req/s", "p50", "p99");
+    for batch in [32usize, 256] {
+        for (pname, policy) in [("immediate", EscalationPolicy::Immediate), ("deferred", EscalationPolicy::Deferred)] {
+            let mut cfg = AriConfig::default();
+            cfg.artifacts = root.clone();
+            cfg.dataset = "fashion_syn".into();
+            cfg.reduced_level = 10;
+            cfg.batch_size = batch;
+            cfg.requests = 512;
+            let mut engine = Engine::new(&root).unwrap();
+            let data = engine.eval_data(&cfg.dataset).unwrap();
+            let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, 2048).unwrap();
+            let r = run_serving(&mut engine, &cascade, &cfg, &data, None, ServeOptions { escalation: policy }).unwrap();
+            println!("{:<34} {:>10.0} {:>9.1?} {:>9.1?}", format!("b={batch} {pname}"), r.throughput_rps, r.p50, r.p99);
+        }
+    }
+
+    section("SC cascade, fashion_syn L=512 @ Mmax (512 req)");
+    let mut cfg = AriConfig::default();
+    cfg.artifacts = root.clone();
+    cfg.dataset = "fashion_syn".into();
+    cfg.mode = Mode::Sc;
+    cfg.reduced_level = 512;
+    cfg.full_level = 4096;
+    cfg.batch_size = 32;
+    cfg.requests = 512;
+    let mut engine = Engine::new(&root).unwrap();
+    let data = engine.eval_data(&cfg.dataset).unwrap();
+    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, 2048).unwrap();
+    let r = run_serving(&mut engine, &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
+    println!("{}", r.summary());
+}

@@ -1,0 +1,36 @@
+//! Tables I & II regeneration bench: evaluates the calibrated energy
+//! model across the paper's grid and times it (the model sits on the
+//! serving hot path — one call per request).
+
+use ari::energy::{self, EnergyModel};
+use ari::quant::FpFormat;
+use ari::sc::ScConfig;
+use ari::util::benchkit::{bench, section};
+
+fn main() {
+    section("Table I / Table II regeneration (see `ari experiment table1|table2`)");
+    let fp_model = EnergyModel::for_input_dim(784);
+    for (bits, paper) in energy::TABLE_I {
+        let got = fp_model.fp_energy(FpFormat::fp(bits));
+        println!("FP{bits:<3} paper {paper:.2} µJ  model {got:.3} µJ");
+    }
+    let sc_model = EnergyModel { macs: energy::table_ii_reference_macs() };
+    for (l, paper) in energy::TABLE_II {
+        let got = sc_model.sc_energy(ScConfig::new(l));
+        println!("L={l:<5} paper {paper:.2} µJ  model {got:.3} µJ");
+    }
+
+    section("model evaluation cost (hot path: one per request)");
+    bench("fp_energy", 10, 1000, || {
+        std::hint::black_box(fp_model.fp_energy(FpFormat::fp(10)));
+    })
+    .report(None);
+    bench("sc_energy", 10, 1000, || {
+        std::hint::black_box(sc_model.sc_energy(ScConfig::new(512)));
+    })
+    .report(None);
+    bench("ari_savings (eq. 2)", 10, 1000, || {
+        std::hint::black_box(EnergyModel::ari_savings(0.25, 1.0, 0.2));
+    })
+    .report(None);
+}

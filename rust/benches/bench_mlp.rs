@@ -1,0 +1,56 @@
+//! Pure-rust MLP engine vs the PJRT path on the same weights — the
+//! cross-check baseline's cost, and the justification for serving through
+//! PJRT (XLA's fused matmuls win at batch).
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use std::path::PathBuf;
+
+use ari::data::VariantKind;
+use ari::mlp::{FpEngine, ScNoiseEngine};
+use ari::quant::FpFormat;
+use ari::runtime::Engine;
+use ari::sc::ScConfig;
+use ari::util::benchkit::{bench, section};
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.txt").exists() {
+        eprintln!("SKIP bench_mlp: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::new(&root).unwrap();
+    let ds = "fashion_syn";
+    engine.load_dataset(ds).unwrap();
+    let data = engine.eval_data(ds).unwrap();
+
+    section("pure-rust engines, batch 32 (fashion topology)");
+    let x = data.rows(0, 32).to_vec();
+    {
+        let weights = engine.weights(ds).unwrap();
+        for bits in [16u32, 8] {
+            let eng = FpEngine::new(weights, FpFormat::fp(bits));
+            bench(&format!("rust FpEngine FP{bits}"), 1, 5, || {
+                std::hint::black_box(eng.forward(&x, 32));
+            })
+            .report(Some((32, "samples")));
+        }
+        let sc = ScNoiseEngine::new(weights, ScConfig::new(512));
+        bench("rust ScNoiseEngine L=512", 1, 5, || {
+            std::hint::black_box(sc.forward(&x, 32, 7));
+        })
+        .report(Some((32, "samples")));
+    }
+
+    section("PJRT path, batch 32 (same model)");
+    for (kind, level, key) in
+        [(VariantKind::Fp, 16usize, None), (VariantKind::Fp, 8, None), (VariantKind::Sc, 512, Some([1u32, 2u32]))]
+    {
+        let v = engine.manifest.variant(ds, kind, level, 32).unwrap().clone();
+        engine.execute(&v, &x, key).unwrap(); // warm compile
+        bench(&format!("pjrt {:?} level={level}", kind), 2, 10, || {
+            std::hint::black_box(engine.execute(&v, &x, key).unwrap());
+        })
+        .report(Some((32, "samples")));
+    }
+}

@@ -1,0 +1,42 @@
+//! Quantisation substrate benchmarks: FpFormat::quantize throughput and
+//! the pure-rust reduced-precision layer (the rust twin of the L1 Pallas
+//! kernel's epilogue).  Hot on the SC-exact and cross-check paths.
+
+use ari::quant::{quant_layer, FpFormat};
+use ari::tensor::Matrix;
+use ari::util::benchkit::{bench, section};
+use ari::util::Pcg64;
+
+fn main() {
+    section("FpFormat::quantize scalar throughput");
+    let mut rng = Pcg64::seeded(1);
+    let xs: Vec<f32> = (0..65536).map(|_| rng.next_f32() * 100.0 - 50.0).collect();
+    for bits in [8u32, 10, 12, 16] {
+        let fmt = FpFormat::fp(bits);
+        let mut acc = 0.0f32;
+        bench(&format!("quantize 64k values, FP{bits}"), 3, 20, || {
+            let mut local = 0.0f32;
+            for &x in &xs {
+                local += fmt.quantize(x);
+            }
+            acc += local;
+        })
+        .report(Some((xs.len() as u64, "vals")));
+        std::hint::black_box(acc);
+    }
+
+    section("quant_layer (batch 32) — rust twin of the L1 kernel");
+    let mut rng = Pcg64::seeded(2);
+    for (k, n) in [(784usize, 1024usize), (1024, 512), (256, 10)] {
+        let x = Matrix::from_fn(32, k, |_, _| rng.next_f32() - 0.5);
+        let w = Matrix::from_fn(k, n, |_, _| (rng.next_f32() - 0.5) * 0.1);
+        let b = vec![0.01f32; n];
+        for bits in [8u32, 16] {
+            let fmt = FpFormat::fp(bits);
+            bench(&format!("layer {k}x{n}, FP{bits}"), 2, 10, || {
+                std::hint::black_box(quant_layer(&x, &w, &b, 0.25, fmt, true));
+            })
+            .report(Some(((32 * k * n) as u64, "MAC")));
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Stochastic-computing substrate benchmarks: LFSR state generation,
+//! SNG packing, XNOR+popcount multiply, exact dot product, and the
+//! stanh FSM ablation (readout-domain vs stochastic-domain activation).
+
+use ari::sc::fsm::StanhFsm;
+use ari::sc::sng::{count_ones, Sng};
+use ari::sc::{sc_dot, Lfsr, ScConfig};
+use ari::util::benchkit::{bench, section};
+
+fn main() {
+    section("LFSR state generation");
+    for width in [10u32, 16] {
+        bench(&format!("lfsr width={width}, 65536 states"), 2, 20, || {
+            let mut l = Lfsr::new(width, 0xACE1);
+            let mut acc = 0u32;
+            for _ in 0..65536 {
+                acc ^= l.next_state();
+            }
+            std::hint::black_box(acc);
+        })
+        .report(Some((65536, "states")));
+    }
+
+    section("SNG packing (bits -> u64 words)");
+    for l in [1024usize, 4096] {
+        bench(&format!("sng pack L={l}"), 2, 50, || {
+            let mut s = Sng::bipolar(0.37, 16, 12345);
+            std::hint::black_box(s.bits_packed(l));
+        })
+        .report(Some((l as u64, "bits")));
+    }
+
+    section("bitstream multiply-accumulate (XNOR + popcount)");
+    for l in [1024usize, 4096] {
+        let mut a = Sng::bipolar(0.5, 16, 1);
+        let mut b = Sng::bipolar(-0.3, 16, 99);
+        let pa = a.bits_packed(l);
+        let pb = b.bits_packed(l);
+        bench(&format!("xnor+popcount L={l}"), 5, 200, || {
+            std::hint::black_box(ari::sc::ops::product_ones(&pa, &pb, l));
+        })
+        .report(Some((l as u64, "bits")));
+    }
+
+    section("exact SC dot product (fan_in=128, n_out=8)");
+    let x: Vec<f32> = (0..128).map(|i| ((i % 17) as f32 / 17.0) - 0.5).collect();
+    let w: Vec<f32> = (0..128 * 8).map(|i| ((i % 23) as f32 / 23.0) - 0.5).collect();
+    for l in [256usize, 1024, 4096] {
+        bench(&format!("sc_dot L={l}"), 1, 5, || {
+            std::hint::black_box(sc_dot(&x, &w, 8, ScConfig::new(l), 7));
+        })
+        .report(Some(((128 * 8 * l) as u64, "bitops")));
+    }
+
+    section("activation ablation: stanh FSM vs readout PReLU");
+    let mut s = Sng::bipolar(0.3, 16, 5);
+    let stream = s.bits_packed(4096);
+    bench("stanh FSM over L=4096", 5, 100, || {
+        let mut fsm = StanhFsm::new(8);
+        std::hint::black_box(fsm.run_packed(&stream, 4096));
+    })
+    .report(Some((4096, "bits")));
+    bench("readout PReLU (decode + compare)", 5, 100, || {
+        let v = 2.0 * count_ones(&stream, 4096) as f64 / 4096.0 - 1.0;
+        std::hint::black_box(if v < 0.0 { 0.25 * v } else { v });
+    })
+    .report(None);
+}

@@ -1,0 +1,291 @@
+//! Configuration: CLI-facing structures parsed from mini-TOML files
+//! and/or command-line `key=value` overrides.
+//!
+//! Example config (see `examples/configs/serving.toml`):
+//!
+//! ```toml
+//! [ari]
+//! dataset = "fashion_syn"
+//! mode = "fp"            # fp | sc
+//! reduced_level = 10     # FP bits or SC sequence length
+//! threshold = "mmax"     # mmax | m99 | m95 | a float
+//!
+//! [server]
+//! batch_size = 32
+//! batch_timeout_us = 2000
+//! requests = 2048
+//! arrival_rate = 4000.0  # req/s, open-loop poisson
+//! ```
+
+use crate::util::minitoml::Doc;
+use std::path::PathBuf;
+
+/// Threshold selection policy (paper §III-C).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ThresholdPolicy {
+    /// Cover every element that changed class on the calibration set.
+    MMax,
+    /// Cover 99% of changed elements.
+    M99,
+    /// Cover 95% of changed elements.
+    M95,
+    /// Fixed user-supplied threshold.
+    Fixed(f64),
+}
+
+impl ThresholdPolicy {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "mmax" => ThresholdPolicy::MMax,
+            "m99" => ThresholdPolicy::M99,
+            "m95" => ThresholdPolicy::M95,
+            other => ThresholdPolicy::Fixed(
+                other.parse().map_err(|_| anyhow::anyhow!("bad threshold {other:?} (mmax|m99|m95|<float>)"))?,
+            ),
+        })
+    }
+
+    /// Coverage fraction for percentile policies.
+    pub fn coverage(&self) -> Option<f64> {
+        match self {
+            ThresholdPolicy::MMax => Some(1.0),
+            ThresholdPolicy::M99 => Some(0.99),
+            ThresholdPolicy::M95 => Some(0.95),
+            ThresholdPolicy::Fixed(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ThresholdPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ThresholdPolicy::MMax => write!(f, "Mmax"),
+            ThresholdPolicy::M99 => write!(f, "M99"),
+            ThresholdPolicy::M95 => write!(f, "M95"),
+            ThresholdPolicy::Fixed(t) => write!(f, "T={t}"),
+        }
+    }
+}
+
+/// Resolution family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Fp,
+    Sc,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "fp" => Ok(Mode::Fp),
+            "sc" => Ok(Mode::Sc),
+            other => anyhow::bail!("bad mode {other:?} (fp|sc)"),
+        }
+    }
+
+    pub fn kind(&self) -> crate::data::VariantKind {
+        match self {
+            Mode::Fp => crate::data::VariantKind::Fp,
+            Mode::Sc => crate::data::VariantKind::Sc,
+        }
+    }
+}
+
+/// Full server/cascade configuration.
+#[derive(Clone, Debug)]
+pub struct AriConfig {
+    pub artifacts: PathBuf,
+    pub dataset: String,
+    pub mode: Mode,
+    /// FP bit width or SC sequence length of the reduced model.
+    pub reduced_level: usize,
+    /// Level of the full model (FP16 / L=4096 by default).
+    pub full_level: usize,
+    pub threshold: ThresholdPolicy,
+    /// Fraction of the eval split used for threshold calibration.
+    pub calib_fraction: f64,
+    pub batch_size: usize,
+    pub batch_timeout_us: u64,
+    pub requests: usize,
+    /// Open-loop Poisson arrival rate (req/s); 0 = closed loop.
+    pub arrival_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for AriConfig {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            dataset: "fashion_syn".into(),
+            mode: Mode::Fp,
+            reduced_level: 10,
+            full_level: 16,
+            threshold: ThresholdPolicy::MMax,
+            calib_fraction: 0.5,
+            batch_size: 32,
+            batch_timeout_us: 2000,
+            requests: 2048,
+            arrival_rate: 0.0,
+            seed: 0xA41,
+        }
+    }
+}
+
+impl AriConfig {
+    /// Load from a mini-TOML file.
+    pub fn from_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Doc::parse(&text)?;
+        let mut cfg = Self::default();
+        cfg.apply_doc(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed document on top of the current values.
+    pub fn apply_doc(&mut self, doc: &Doc) -> crate::Result<()> {
+        if let Some(v) = doc.get_str("ari", "dataset") {
+            self.dataset = v.to_string();
+        }
+        if let Some(v) = doc.get_str("ari", "artifacts") {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get_str("ari", "mode") {
+            self.mode = Mode::parse(v)?;
+            // keep full_level consistent with the family default
+            if self.mode == Mode::Sc && self.full_level == 16 {
+                self.full_level = 4096;
+            }
+        }
+        if let Some(v) = doc.get_int("ari", "reduced_level") {
+            self.reduced_level = v as usize;
+        }
+        if let Some(v) = doc.get_int("ari", "full_level") {
+            self.full_level = v as usize;
+        }
+        if let Some(v) = doc.get_str("ari", "threshold") {
+            self.threshold = ThresholdPolicy::parse(v)?;
+        } else if let Some(v) = doc.get_float("ari", "threshold") {
+            self.threshold = ThresholdPolicy::Fixed(v);
+        }
+        if let Some(v) = doc.get_float("ari", "calib_fraction") {
+            anyhow::ensure!(v > 0.0 && v < 1.0, "calib_fraction must be in (0,1)");
+            self.calib_fraction = v;
+        }
+        if let Some(v) = doc.get_int("server", "batch_size") {
+            self.batch_size = v as usize;
+        }
+        if let Some(v) = doc.get_int("server", "batch_timeout_us") {
+            self.batch_timeout_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("server", "requests") {
+            self.requests = v as usize;
+        }
+        if let Some(v) = doc.get_float("server", "arrival_rate") {
+            self.arrival_rate = v;
+        }
+        if let Some(v) = doc.get_int("server", "seed") {
+            self.seed = v as u64;
+        }
+        Ok(())
+    }
+
+    /// Apply `section.key=value` command-line overrides.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> crate::Result<()> {
+        if overrides.is_empty() {
+            return Ok(());
+        }
+        // Reuse the TOML value parser by synthesising a document.
+        let mut by_section: std::collections::BTreeMap<&str, Vec<(&str, &str)>> = Default::default();
+        for ov in overrides {
+            let (path, value) = ov
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override must be section.key=value: {ov:?}"))?;
+            let (section, key) = path.split_once('.').unwrap_or(("ari", path));
+            by_section.entry(section).or_default().push((key, value));
+        }
+        let mut text = String::new();
+        for (section, kvs) in by_section {
+            text.push_str(&format!("[{section}]\n"));
+            for (k, v) in kvs {
+                // values that don't parse as numbers/bools/arrays are strings
+                let quoted = if v.parse::<f64>().is_ok() || v == "true" || v == "false" || v.starts_with('[') {
+                    v.to_string()
+                } else {
+                    format!("\"{v}\"")
+                };
+                text.push_str(&format!("{k} = {quoted}\n"));
+            }
+        }
+        self.apply_doc(&Doc::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = AriConfig::default();
+        assert_eq!(c.full_level, 16);
+        assert_eq!(c.threshold, ThresholdPolicy::MMax);
+    }
+
+    #[test]
+    fn parse_threshold_policies() {
+        assert_eq!(ThresholdPolicy::parse("mmax").unwrap(), ThresholdPolicy::MMax);
+        assert_eq!(ThresholdPolicy::parse("m99").unwrap(), ThresholdPolicy::M99);
+        assert_eq!(ThresholdPolicy::parse("0.25").unwrap(), ThresholdPolicy::Fixed(0.25));
+        assert!(ThresholdPolicy::parse("nope").is_err());
+        assert_eq!(ThresholdPolicy::M95.coverage(), Some(0.95));
+        assert_eq!(ThresholdPolicy::Fixed(0.1).coverage(), None);
+    }
+
+    #[test]
+    fn apply_doc_full() {
+        let doc = Doc::parse(
+            r#"
+[ari]
+dataset = "svhn_syn"
+mode = "sc"
+reduced_level = 512
+threshold = "m99"
+[server]
+batch_size = 64
+arrival_rate = 1000.5
+"#,
+        )
+        .unwrap();
+        let mut c = AriConfig::default();
+        c.apply_doc(&doc).unwrap();
+        assert_eq!(c.dataset, "svhn_syn");
+        assert_eq!(c.mode, Mode::Sc);
+        assert_eq!(c.full_level, 4096); // switched with mode
+        assert_eq!(c.reduced_level, 512);
+        assert_eq!(c.threshold, ThresholdPolicy::M99);
+        assert_eq!(c.batch_size, 64);
+        assert!((c.arrival_rate - 1000.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overrides_parse() {
+        let mut c = AriConfig::default();
+        c.apply_overrides(&[
+            "dataset=cifar10_syn".into(),
+            "server.batch_size=128".into(),
+            "threshold=m95".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.dataset, "cifar10_syn");
+        assert_eq!(c.batch_size, 128);
+        assert_eq!(c.threshold, ThresholdPolicy::M95);
+    }
+
+    #[test]
+    fn bad_overrides_rejected() {
+        let mut c = AriConfig::default();
+        assert!(c.apply_overrides(&["no-equals".into()]).is_err());
+        assert!(c.apply_overrides(&["ari.mode=xyz".into()]).is_err());
+        assert!(c.apply_overrides(&["ari.calib_fraction=1.5".into()]).is_err());
+    }
+}

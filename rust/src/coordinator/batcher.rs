@@ -1,0 +1,230 @@
+//! Dynamic batcher: size + deadline policy over an incoming request
+//! stream.
+//!
+//! Requests accumulate until either `max_batch` rows are waiting or the
+//! oldest request has waited `max_wait`; the batch then dispatches.  This
+//! is the standard serving trade-off (throughput vs tail latency) — the
+//! policy is exercised by `benches/bench_cascade.rs` and the batching
+//! ablation in EXPERIMENTS.md.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl BatcherPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0);
+        Self { max_batch, max_wait }
+    }
+}
+
+/// One pending request.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// A drained batch.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<Pending<T>>,
+    /// Why the batch fired.
+    pub reason: FireReason,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FireReason {
+    Size,
+    Deadline,
+    Drain,
+}
+
+/// The queue.  Single-consumer; producers push through a channel and the
+/// coordinator thread owns the batcher (PJRT is not Send — see runtime).
+pub struct Batcher<T> {
+    policy: BatcherPolicy,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatcherPolicy) -> Self {
+        Self { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, payload: T) {
+        self.queue.push_back(Pending { payload, enqueued: Instant::now() });
+    }
+
+    pub fn push_at(&mut self, payload: T, enqueued: Instant) {
+        self.queue.push_back(Pending { payload, enqueued });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Would a batch fire now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(p) => now.duration_since(p.enqueued) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the deadline of the oldest request (None if empty).
+    /// The server loop uses this as its channel-recv timeout — no busy
+    /// polling.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            let waited = now.duration_since(p.enqueued);
+            self.policy.max_wait.saturating_sub(waited)
+        })
+    }
+
+    /// Drain a batch if the policy says so.
+    pub fn try_fire(&mut self, now: Instant) -> Option<Batch<T>> {
+        if self.queue.len() >= self.policy.max_batch {
+            let items: Vec<_> = self.queue.drain(..self.policy.max_batch).collect();
+            return Some(Batch { items, reason: FireReason::Size });
+        }
+        if self.ready(now) {
+            let items: Vec<_> = self.queue.drain(..).collect();
+            return Some(Batch { items, reason: FireReason::Deadline });
+        }
+        None
+    }
+
+    /// Unconditionally drain everything (shutdown path).
+    pub fn drain(&mut self) -> Option<Batch<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let items: Vec<_> = self.queue.drain(..).collect();
+        Some(Batch { items, reason: FireReason::Drain })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(n: usize, ms: u64) -> BatcherPolicy {
+        BatcherPolicy::new(n, Duration::from_millis(ms))
+    }
+
+    #[test]
+    fn fires_on_size() {
+        let mut b = Batcher::new(policy(3, 1000));
+        let now = Instant::now();
+        b.push(1);
+        b.push(2);
+        assert!(b.try_fire(now).is_none());
+        b.push(3);
+        let batch = b.try_fire(now).unwrap();
+        assert_eq!(batch.reason, FireReason::Size);
+        assert_eq!(batch.items.len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn fires_on_deadline() {
+        let mut b = Batcher::new(policy(10, 5));
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        b.push_at(2, t0);
+        assert!(b.try_fire(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.try_fire(later).unwrap();
+        assert_eq!(batch.reason, FireReason::Deadline);
+        assert_eq!(batch.items.len(), 2);
+    }
+
+    #[test]
+    fn size_cap_leaves_remainder() {
+        let mut b = Batcher::new(policy(2, 1000));
+        for i in 0..5 {
+            b.push(i);
+        }
+        let now = Instant::now();
+        assert_eq!(b.try_fire(now).unwrap().items.len(), 2);
+        assert_eq!(b.try_fire(now).unwrap().items.len(), 2);
+        assert_eq!(b.len(), 1);
+        assert!(b.try_fire(now).is_none()); // remainder waits for deadline
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(policy(3, 1000));
+        for i in 0..3 {
+            b.push(i);
+        }
+        let batch = b.try_fire(Instant::now()).unwrap();
+        let vals: Vec<i32> = batch.items.iter().map(|p| p.payload).collect();
+        assert_eq!(vals, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = Batcher::new(policy(10, 100));
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        let d = b.next_deadline(t0 + Duration::from_millis(40)).unwrap();
+        assert!(d <= Duration::from_millis(60));
+        assert!(d >= Duration::from_millis(40));
+        assert!(b.next_deadline(t0 + Duration::from_millis(200)).unwrap().is_zero());
+    }
+
+    #[test]
+    fn drain_flushes_all() {
+        let mut b = Batcher::new(policy(10, 1000));
+        b.push(1);
+        b.push(2);
+        let batch = b.drain().unwrap();
+        assert_eq!(batch.reason, FireReason::Drain);
+        assert_eq!(batch.items.len(), 2);
+        assert!(b.drain().is_none());
+    }
+
+    /// Property: no request is ever lost or duplicated across an
+    /// arbitrary interleaving of pushes and fires.
+    #[test]
+    fn conservation_property() {
+        crate::util::proptest::run(crate::util::proptest::Config::cases(64), |rng| {
+            let cap = 1 + rng.below(8) as usize;
+            let mut b = Batcher::new(policy(cap, 1));
+            let total = rng.below(200) as usize;
+            let mut seen = Vec::new();
+            let mut pushed = 0usize;
+            let t0 = Instant::now();
+            while pushed < total || !b.is_empty() {
+                if pushed < total && rng.next_f64() < 0.6 {
+                    b.push_at(pushed, t0);
+                    pushed += 1;
+                } else {
+                    // time always "past deadline" to force firing
+                    if let Some(batch) = b.try_fire(t0 + Duration::from_millis(5)) {
+                        seen.extend(batch.items.iter().map(|p| p.payload));
+                    }
+                }
+            }
+            assert_eq!(seen.len(), total);
+            for (i, &v) in seen.iter().enumerate() {
+                assert_eq!(v, i, "order violated");
+            }
+        });
+    }
+}

@@ -1,0 +1,260 @@
+//! The two-tier ARI cascade.
+//!
+//! Calibration (paper §III-C): run the full and reduced models over the
+//! calibration split, collect the reduced-model margins of elements whose
+//! predicted class differs, and set `T` by the configured policy
+//! (Mmax / M99 / M95 / fixed).
+//!
+//! Serving (paper Fig. 7b): every batch runs on the reduced model; rows
+//! whose margin fails `accepts(margin, T)` are gathered, re-run on the
+//! full model, and scattered back.  Energy is accounted per inference
+//! with the calibrated [`EnergyModel`] (eq. 1).
+
+use crate::config::{AriConfig, Mode, ThresholdPolicy};
+use crate::data::{EvalData, VariantRef};
+use crate::energy::EnergyModel;
+use crate::margin::{accepts, Calibration};
+use crate::runtime::{BatchOutputs, Engine};
+
+/// Static description of a cascade (what to build from the manifest).
+#[derive(Clone, Debug)]
+pub struct CascadeSpec {
+    pub dataset: String,
+    pub mode: Mode,
+    pub reduced_level: usize,
+    pub full_level: usize,
+    pub batch: usize,
+    pub threshold: ThresholdPolicy,
+    pub seed: u32,
+}
+
+impl CascadeSpec {
+    pub fn from_config(cfg: &AriConfig) -> Self {
+        Self {
+            dataset: cfg.dataset.clone(),
+            mode: cfg.mode,
+            reduced_level: cfg.reduced_level,
+            full_level: cfg.full_level,
+            batch: cfg.batch_size,
+            threshold: cfg.threshold,
+            seed: cfg.seed as u32,
+        }
+    }
+}
+
+/// When to run the full model for escalated rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EscalationPolicy {
+    /// Re-run escalations immediately after each reduced batch (lowest
+    /// latency; possibly padded full-model batches).
+    Immediate,
+    /// Defer escalations into a dedicated queue flushed when full or at
+    /// batch deadline (higher full-model utilisation; more latency).
+    /// Implemented by the server loop; the cascade exposes the split.
+    Deferred,
+}
+
+/// Result of one cascaded batch.
+#[derive(Clone, Debug)]
+pub struct CascadeBatch {
+    pub pred: Vec<i32>,
+    pub margin: Vec<f32>,
+    /// Which rows were escalated to the full model.
+    pub escalated: Vec<bool>,
+    /// Modelled energy for the batch (µJ), per eq. (1) accounting.
+    pub energy_uj: f64,
+    /// Reduced-model outputs (before any overwrite) — kept for analysis.
+    pub reduced_pred: Vec<i32>,
+}
+
+/// A calibrated, servable cascade.
+pub struct Cascade {
+    pub spec: CascadeSpec,
+    pub reduced: VariantRef,
+    pub full: VariantRef,
+    pub threshold: f64,
+    pub calibration: Calibration,
+    /// Energy per inference of the reduced / full models (µJ).
+    pub e_reduced: f64,
+    pub e_full: f64,
+}
+
+impl Cascade {
+    /// Build and calibrate: runs full + reduced over `calib` rows
+    /// [0, n_calib) of the eval split.
+    pub fn calibrate(
+        engine: &mut Engine,
+        spec: CascadeSpec,
+        data: &EvalData,
+        n_calib: usize,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(n_calib > 0 && n_calib <= data.n, "bad calibration size {n_calib}");
+        let kind = spec.mode.kind();
+        let reduced = engine.manifest.variant(&spec.dataset, kind, spec.reduced_level, spec.batch)?.clone();
+        let full = engine.manifest.variant(&spec.dataset, kind, spec.full_level, spec.batch)?.clone();
+        let calib_slice = EvalData {
+            x: data.rows(0, n_calib).to_vec(),
+            y: data.y[..n_calib].to_vec(),
+            n: n_calib,
+            input_dim: data.input_dim,
+        };
+        let full_out = engine.run_dataset(&full, &calib_slice, spec.seed)?;
+        let red_out = engine.run_dataset(&reduced, &calib_slice, spec.seed.wrapping_add(1))?;
+        let calibration = Calibration::from_pairs(&full_out.pred, &red_out.pred, &red_out.margin);
+        let threshold = calibration.threshold(spec.threshold);
+
+        let dims = engine.weights(&spec.dataset)?.dims();
+        let energy = EnergyModel::for_dims(&dims);
+        let (e_reduced, e_full) = match spec.mode {
+            Mode::Fp => (
+                energy.fp_energy(crate::quant::FpFormat::fp(spec.reduced_level as u32)),
+                energy.fp_energy(crate::quant::FpFormat::fp(spec.full_level as u32)),
+            ),
+            Mode::Sc => (
+                energy.sc_energy(crate::sc::ScConfig::new(spec.reduced_level)),
+                energy.sc_energy(crate::sc::ScConfig::new(spec.full_level)),
+            ),
+        };
+        Ok(Self { spec, reduced, full, threshold, calibration, e_reduced, e_full })
+    }
+
+    /// SC key for a chunk (None for FP).
+    pub fn key_for(&self, key_seed: u32) -> Option<[u32; 2]> {
+        match self.spec.mode {
+            Mode::Sc => Some([self.spec.seed, key_seed]),
+            Mode::Fp => None,
+        }
+    }
+
+    /// Reduced-model pass only (used by the server's deferred-escalation
+    /// policy, which manages its own escalation queue).
+    pub fn run_reduced(&self, engine: &mut Engine, x: &[f32], n: usize, key_seed: u32) -> crate::Result<BatchOutputs> {
+        Ok(engine.run_padded(&self.reduced, x, n, self.key_for(key_seed))?.0)
+    }
+
+    /// Full-model pass only.
+    pub fn run_full(&self, engine: &mut Engine, x: &[f32], n: usize, key_seed: u32) -> crate::Result<BatchOutputs> {
+        let key = self.key_for(key_seed).map(|[a, b]| [a ^ 0x5A5A_5A5A, b]);
+        Ok(engine.run_padded(&self.full, x, n, key)?.0)
+    }
+
+    /// Serve one batch of `n` rows through the cascade.
+    /// `key_seed` feeds SC key derivation (ignored for FP).
+    pub fn infer_batch(
+        &self,
+        engine: &mut Engine,
+        x: &[f32],
+        n: usize,
+        key_seed: u32,
+    ) -> crate::Result<CascadeBatch> {
+        let key = self.key_for(key_seed);
+        let (red, _) = engine.run_padded(&self.reduced, x, n, key)?;
+        let mut pred = red.pred.clone();
+        let mut margin = red.margin.clone();
+        let mut escalated = vec![false; n];
+        let mut esc_rows: Vec<usize> = Vec::new();
+        for i in 0..n {
+            if !accepts(red.margin[i], self.threshold) {
+                escalated[i] = true;
+                esc_rows.push(i);
+            }
+        }
+        if !esc_rows.is_empty() {
+            let input_dim = x.len() / n;
+            // Gather escalated rows (they may exceed one full-model batch).
+            for chunk in esc_rows.chunks(self.full.batch) {
+                let mut gathered = Vec::with_capacity(chunk.len() * input_dim);
+                for &i in chunk {
+                    gathered.extend_from_slice(&x[i * input_dim..(i + 1) * input_dim]);
+                }
+                let fkey = key.map(|[a, b]| [a ^ 0x5A5A_5A5A, b]);
+                let (fout, _) = engine.run_padded(&self.full, &gathered, chunk.len(), fkey)?;
+                for (j, &i) in chunk.iter().enumerate() {
+                    pred[i] = fout.pred[j];
+                    margin[i] = fout.margin[j];
+                }
+            }
+        }
+        let energy_uj = n as f64 * self.e_reduced + esc_rows.len() as f64 * self.e_full;
+        Ok(CascadeBatch { pred, margin, escalated, energy_uj, reduced_pred: red.pred })
+    }
+
+    /// Run a whole dataset through the cascade (experiment path).
+    pub fn infer_dataset(&self, engine: &mut Engine, data: &EvalData) -> crate::Result<(CascadeBatch, BatchOutputs)> {
+        let mut agg = CascadeBatch {
+            pred: Vec::with_capacity(data.n),
+            margin: Vec::with_capacity(data.n),
+            escalated: Vec::with_capacity(data.n),
+            energy_uj: 0.0,
+            reduced_pred: Vec::with_capacity(data.n),
+        };
+        let mut chunkid = 0u32;
+        let mut lo = 0;
+        while lo < data.n {
+            let hi = (lo + self.spec.batch).min(data.n);
+            let out = self.infer_batch(engine, data.rows(lo, hi), hi - lo, chunkid)?;
+            agg.pred.extend(out.pred);
+            agg.margin.extend(out.margin);
+            agg.escalated.extend(out.escalated);
+            agg.energy_uj += out.energy_uj;
+            agg.reduced_pred.extend(out.reduced_pred);
+            lo = hi;
+            chunkid += 1;
+        }
+        let n_classes = 10;
+        let outputs = BatchOutputs {
+            scores: Vec::new(),
+            pred: agg.pred.clone(),
+            margin: agg.margin.clone(),
+            batch: data.n,
+            n_classes,
+        };
+        Ok((agg, outputs))
+    }
+
+    /// Observed escalation fraction of a served result.
+    pub fn escalation_fraction(batch: &CascadeBatch) -> f64 {
+        if batch.escalated.is_empty() {
+            return 0.0;
+        }
+        batch.escalated.iter().filter(|&&e| e).count() as f64 / batch.escalated.len() as f64
+    }
+
+    /// Energy savings vs always-full, from served energy (eq. 2 on the
+    /// realised F rather than the calibration estimate).
+    pub fn realised_savings(&self, batch: &CascadeBatch) -> f64 {
+        let n = batch.escalated.len() as f64;
+        if n == 0.0 {
+            return 0.0;
+        }
+        1.0 - batch.energy_uj / (n * self.e_full)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_from_config_roundtrip() {
+        let mut cfg = AriConfig::default();
+        cfg.dataset = "svhn_syn".into();
+        cfg.reduced_level = 12;
+        let spec = CascadeSpec::from_config(&cfg);
+        assert_eq!(spec.dataset, "svhn_syn");
+        assert_eq!(spec.reduced_level, 12);
+        assert_eq!(spec.full_level, 16);
+    }
+
+    #[test]
+    fn escalation_fraction_counts() {
+        let b = CascadeBatch {
+            pred: vec![0; 4],
+            margin: vec![0.0; 4],
+            escalated: vec![true, false, true, false],
+            energy_uj: 0.0,
+            reduced_pred: vec![0; 4],
+        };
+        assert!((Cascade::escalation_fraction(&b) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! The ARI coordinator — the paper's system contribution as a serving
+//! component.
+//!
+//! * [`batcher`] — dynamic batching queue (size + deadline policy);
+//! * [`cascade`] — the two-tier adaptive-resolution cascade: calibrate a
+//!   threshold on a calibration split, then serve every batch reduced-
+//!   first and escalate only low-margin samples to the full model
+//!   (paper Fig. 7b), with per-inference energy accounting (eq. 1).
+
+pub mod batcher;
+pub mod cascade;
+
+pub use batcher::{Batch, Batcher, BatcherPolicy};
+pub use cascade::{Cascade, CascadeBatch, CascadeSpec, EscalationPolicy};

@@ -1,0 +1,236 @@
+//! `artifacts/manifest.txt` — the discovery file the python exporter
+//! writes and everything on the rust side starts from.
+
+use std::path::{Path, PathBuf};
+
+/// Which resolution family a variant belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VariantKind {
+    /// Floating point; `level` is the total bit width (paper's FPk).
+    Fp,
+    /// Stochastic computing; `level` is the sequence length L.
+    Sc,
+}
+
+impl VariantKind {
+    fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "fp" => Ok(VariantKind::Fp),
+            "sc" => Ok(VariantKind::Sc),
+            other => anyhow::bail!("unknown variant kind {other:?}"),
+        }
+    }
+}
+
+/// One lowered executable: (dataset, kind, level, batch) -> HLO file.
+#[derive(Clone, Debug)]
+pub struct VariantRef {
+    pub dataset: String,
+    pub kind: VariantKind,
+    pub level: usize,
+    pub batch: usize,
+    pub file: String,
+}
+
+impl VariantRef {
+    /// Stable cache key.
+    pub fn key(&self) -> String {
+        format!("{}/{:?}{}_b{}", self.dataset, self.kind, self.level, self.batch)
+    }
+}
+
+/// One exported dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetEntry {
+    pub name: String,
+    pub paper_name: String,
+    pub input_dim: usize,
+    pub n_classes: usize,
+    pub n_eval: usize,
+    pub train_acc: f64,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub datasets: Vec<DatasetEntry>,
+    pub variants: Vec<VariantRef>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.txt`.
+    pub fn load(root: &Path) -> crate::Result<Self> {
+        let path = root.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} — run `make artifacts` first"))?;
+        Self::parse(root, &text)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(root: &Path, text: &str) -> crate::Result<Self> {
+        let mut lines = text.lines();
+        anyhow::ensure!(lines.next() == Some("ari-manifest v1"), "bad manifest magic");
+        let mut datasets = Vec::new();
+        let mut variants = Vec::new();
+        for (no, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("dataset") => {
+                    let name = parts.next().ok_or_else(|| anyhow::anyhow!("line {}: missing name", no + 2))?;
+                    let mut e = DatasetEntry {
+                        name: name.to_string(),
+                        paper_name: String::new(),
+                        input_dim: 0,
+                        n_classes: 0,
+                        n_eval: 0,
+                        train_acc: 0.0,
+                    };
+                    for kv in parts {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| anyhow::anyhow!("line {}: bad kv {kv:?}", no + 2))?;
+                        match k {
+                            "paper" => e.paper_name = v.replace('_', " "),
+                            "input_dim" => e.input_dim = v.parse()?,
+                            "n_classes" => e.n_classes = v.parse()?,
+                            "n_eval" => e.n_eval = v.parse()?,
+                            "train_acc" => e.train_acc = v.parse()?,
+                            _ => {} // forward-compatible: ignore unknown keys
+                        }
+                    }
+                    anyhow::ensure!(e.input_dim > 0 && e.n_classes > 0, "line {}: incomplete dataset", no + 2);
+                    datasets.push(e);
+                }
+                Some("variant") => {
+                    let dataset = parts.next().ok_or_else(|| anyhow::anyhow!("line {}: missing ds", no + 2))?;
+                    let mut kind = None;
+                    let mut level = None;
+                    let mut batch = None;
+                    let mut file = None;
+                    for kv in parts {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| anyhow::anyhow!("line {}: bad kv {kv:?}", no + 2))?;
+                        match k {
+                            "kind" => kind = Some(VariantKind::parse(v)?),
+                            "level" => level = Some(v.parse()?),
+                            "batch" => batch = Some(v.parse()?),
+                            "file" => file = Some(v.to_string()),
+                            _ => {}
+                        }
+                    }
+                    variants.push(VariantRef {
+                        dataset: dataset.to_string(),
+                        kind: kind.ok_or_else(|| anyhow::anyhow!("line {}: no kind", no + 2))?,
+                        level: level.ok_or_else(|| anyhow::anyhow!("line {}: no level", no + 2))?,
+                        batch: batch.ok_or_else(|| anyhow::anyhow!("line {}: no batch", no + 2))?,
+                        file: file.ok_or_else(|| anyhow::anyhow!("line {}: no file", no + 2))?,
+                    });
+                }
+                Some(other) => anyhow::bail!("line {}: unknown record {other:?}", no + 2),
+                None => {}
+            }
+        }
+        anyhow::ensure!(!datasets.is_empty(), "manifest has no datasets");
+        Ok(Self { root: root.to_path_buf(), datasets, variants })
+    }
+
+    pub fn dataset(&self, name: &str) -> crate::Result<&DatasetEntry> {
+        self.datasets
+            .iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| anyhow::anyhow!("dataset {name:?} not in manifest (have {:?})", self.dataset_names()))
+    }
+
+    pub fn dataset_names(&self) -> Vec<&str> {
+        self.datasets.iter().map(|d| d.name.as_str()).collect()
+    }
+
+    /// Directory holding a dataset's artifacts.
+    pub fn dataset_dir(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Find a specific variant.
+    pub fn variant(&self, dataset: &str, kind: VariantKind, level: usize, batch: usize) -> crate::Result<&VariantRef> {
+        self.variants
+            .iter()
+            .find(|v| v.dataset == dataset && v.kind == kind && v.level == level && v.batch == batch)
+            .ok_or_else(|| {
+                anyhow::anyhow!("variant {dataset}/{kind:?} level={level} batch={batch} not in manifest")
+            })
+    }
+
+    /// All levels available for (dataset, kind) at some batch size,
+    /// descending (full model first).
+    pub fn levels(&self, dataset: &str, kind: VariantKind) -> Vec<usize> {
+        let mut ls: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|v| v.dataset == dataset && v.kind == kind)
+            .map(|v| v.level)
+            .collect();
+        ls.sort_unstable();
+        ls.dedup();
+        ls.reverse();
+        ls
+    }
+
+    /// Path to a variant's HLO file.
+    pub fn hlo_path(&self, v: &VariantRef) -> PathBuf {
+        self.root.join(&v.dataset).join(&v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "ari-manifest v1\n\
+dataset fashion_syn paper=Fashion-MNIST input_dim=784 n_classes=10 n_eval=4096 train_acc=0.88\n\
+variant fashion_syn kind=fp level=16 batch=32 file=fp16_b32.hlo.txt\n\
+variant fashion_syn kind=fp level=10 batch=32 file=fp10_b32.hlo.txt\n\
+variant fashion_syn kind=sc level=512 batch=256 file=sc512_b256.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.datasets.len(), 1);
+        assert_eq!(m.datasets[0].paper_name, "Fashion-MNIST");
+        assert_eq!(m.variants.len(), 3);
+        let v = m.variant("fashion_syn", VariantKind::Fp, 10, 32).unwrap();
+        assert_eq!(v.file, "fp10_b32.hlo.txt");
+        assert!(m.hlo_path(v).ends_with("fashion_syn/fp10_b32.hlo.txt"));
+    }
+
+    #[test]
+    fn levels_sorted_descending() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.levels("fashion_syn", VariantKind::Fp), vec![16, 10]);
+    }
+
+    #[test]
+    fn missing_variant_is_error() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert!(m.variant("fashion_syn", VariantKind::Fp, 12, 32).is_err());
+        assert!(m.dataset("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_records() {
+        assert!(Manifest::parse(Path::new("/t"), "nope\n").is_err());
+        assert!(Manifest::parse(Path::new("/t"), "ari-manifest v1\nbogus x\n").is_err());
+        assert!(Manifest::parse(Path::new("/t"), "ari-manifest v1\n").is_err()); // no datasets
+    }
+
+    #[test]
+    fn unknown_keys_ignored() {
+        let text = "ari-manifest v1\ndataset d paper=P input_dim=4 n_classes=2 n_eval=1 train_acc=0.5 future=zzz\n";
+        let m = Manifest::parse(Path::new("/t"), text).unwrap();
+        assert_eq!(m.datasets[0].input_dim, 4);
+    }
+}

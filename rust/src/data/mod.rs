@@ -1,0 +1,152 @@
+//! Artifact loading: the `.bin`/`.meta` tensor format, the manifest, and
+//! dataset/weight views.
+//!
+//! The python exporter (`python/compile/aot.py::BinWriter`) writes raw
+//! little-endian blobs plus line-based headers; this module is the rust
+//! side of that contract (no serde in the vendored crate set).
+
+pub mod manifest;
+pub mod tensors;
+
+pub use manifest::{Manifest, VariantKind, VariantRef};
+pub use tensors::{Tensor, TensorFile};
+
+use std::path::Path;
+
+/// An evaluation dataset: inputs (n, input_dim) and labels (n,).
+#[derive(Clone, Debug)]
+pub struct EvalData {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub input_dim: usize,
+}
+
+impl EvalData {
+    /// Load `eval.bin`/`eval.meta` from a dataset artifact directory.
+    pub fn load(ds_dir: &Path) -> crate::Result<Self> {
+        let tf = TensorFile::open(&ds_dir.join("eval"))?;
+        let x = tf.get("x")?;
+        let y = tf.get("y")?;
+        anyhow::ensure!(x.dims.len() == 2, "eval x must be 2-D, got {:?}", x.dims);
+        let (n, input_dim) = (x.dims[0], x.dims[1]);
+        anyhow::ensure!(y.dims == vec![n], "label count {:?} != {n}", y.dims);
+        Ok(Self { x: x.as_f32()?.to_vec(), y: y.as_i32()?.to_vec(), n, input_dim })
+    }
+
+    /// One input row.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.input_dim..(i + 1) * self.input_dim]
+    }
+
+    /// Rows [lo, hi) as a contiguous slice.
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.x[lo * self.input_dim..hi * self.input_dim]
+    }
+}
+
+/// MLP weights in exporter order: (w, b, alpha) per layer.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub layers: Vec<LayerWeights>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    /// Row-major (in_dim, out_dim).
+    pub w: Vec<f32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub b: Vec<f32>,
+    pub alpha: f32,
+}
+
+impl Weights {
+    /// Load `weights.bin`/`weights.meta` from a dataset artifact dir.
+    pub fn load(ds_dir: &Path) -> crate::Result<Self> {
+        let tf = TensorFile::open(&ds_dir.join("weights"))?;
+        let mut layers = Vec::new();
+        for i in 0.. {
+            let Ok(w) = tf.get(&format!("layer{i}.w")) else { break };
+            let b = tf.get(&format!("layer{i}.b"))?;
+            let alpha = tf.get(&format!("layer{i}.alpha"))?;
+            anyhow::ensure!(w.dims.len() == 2, "layer{i}.w must be 2-D");
+            layers.push(LayerWeights {
+                in_dim: w.dims[0],
+                out_dim: w.dims[1],
+                w: w.as_f32()?.to_vec(),
+                b: b.as_f32()?.to_vec(),
+                alpha: alpha.as_f32()?[0],
+            });
+        }
+        anyhow::ensure!(!layers.is_empty(), "no layers found in {ds_dir:?}");
+        // Chain consistency.
+        for pair in layers.windows(2) {
+            anyhow::ensure!(pair[0].out_dim == pair[1].in_dim, "layer dim chain broken");
+        }
+        Ok(Self { layers })
+    }
+
+    /// Layer widths including the input: e.g. [784, 1024, ..., 10].
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.layers[0].in_dim];
+        d.extend(self.layers.iter().map(|l| l.out_dim));
+        d
+    }
+
+    /// Flat (name, dims, data) triples in exporter order — the order the
+    /// lowered HLO expects its weight parameters.
+    pub fn flat(&self) -> Vec<(String, Vec<usize>, &[f32])> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push((format!("layer{i}.w"), vec![l.in_dim, l.out_dim], l.w.as_slice()));
+            out.push((format!("layer{i}.b"), vec![l.out_dim], l.b.as_slice()));
+            out.push((format!("layer{i}.alpha"), vec![1], std::slice::from_ref(&l.alpha)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    /// Write a tiny fake artifact dir and load it back.
+    fn fake_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ari-data-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // weights: 2 layers (3 -> 2 -> 2)
+        let mut bin: Vec<u8> = Vec::new();
+        let mut meta = String::from("ari-meta v1\n");
+        let add = |name: &str, dims: &[usize], vals: &[f32], bin: &mut Vec<u8>, meta: &mut String| {
+            let off = bin.len();
+            for v in vals {
+                bin.extend_from_slice(&v.to_le_bytes());
+            }
+            let dimstr = dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(" ");
+            meta.push_str(&format!("tensor {name} f32 {} {dimstr} {off} {}\n", dims.len(), vals.len() * 4));
+        };
+        add("layer0.w", &[3, 2], &[1., 2., 3., 4., 5., 6.], &mut bin, &mut meta);
+        add("layer0.b", &[2], &[0.1, 0.2], &mut bin, &mut meta);
+        add("layer0.alpha", &[1], &[0.25], &mut bin, &mut meta);
+        add("layer1.w", &[2, 2], &[1., 0., 0., 1.], &mut bin, &mut meta);
+        add("layer1.b", &[2], &[0., 0.], &mut bin, &mut meta);
+        add("layer1.alpha", &[1], &[0.1], &mut bin, &mut meta);
+        std::fs::File::create(dir.join("weights.bin")).unwrap().write_all(&bin).unwrap();
+        std::fs::File::create(dir.join("weights.meta")).unwrap().write_all(meta.as_bytes()).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_weights() {
+        let dir = fake_dir();
+        let w = Weights::load(&dir).unwrap();
+        assert_eq!(w.layers.len(), 2);
+        assert_eq!(w.dims(), vec![3, 2, 2]);
+        assert_eq!(w.layers[0].alpha, 0.25);
+        assert_eq!(w.flat().len(), 6);
+        assert_eq!(w.flat()[0].1, vec![3, 2]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

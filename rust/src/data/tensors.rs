@@ -1,0 +1,195 @@
+//! The `.bin`/`.meta` raw-tensor container written by the python
+//! exporter's `BinWriter` — little-endian blobs plus a line-based header:
+//!
+//! ```text
+//! ari-meta v1
+//! tensor <name> <dtype> <rank> <dim0> ... <dimN-1> <byte_offset> <byte_len>
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Supported element types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => anyhow::bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// One tensor view into the container.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    raw: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(self.dtype == DType::F32, "{} is not f32", self.name);
+        Ok(self.raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn as_i32(&self) -> crate::Result<Vec<i32>> {
+        anyhow::ensure!(self.dtype == DType::I32, "{} is not i32", self.name);
+        Ok(self.raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}
+
+/// A parsed container: all tensors of one `<base>.bin`/`<base>.meta` pair.
+#[derive(Clone, Debug)]
+pub struct TensorFile {
+    pub base: PathBuf,
+    entries: BTreeMap<String, Tensor>,
+}
+
+impl TensorFile {
+    /// Open `<base>.bin` + `<base>.meta`.
+    pub fn open(base: &Path) -> crate::Result<Self> {
+        let meta_path = base.with_extension("meta");
+        let bin_path = base.with_extension("bin");
+        let meta = std::fs::read_to_string(&meta_path)
+            .map_err(|e| anyhow::anyhow!("reading {meta_path:?}: {e}"))?;
+        let blob = std::fs::read(&bin_path).map_err(|e| anyhow::anyhow!("reading {bin_path:?}: {e}"))?;
+        let mut lines = meta.lines();
+        anyhow::ensure!(lines.next() == Some("ari-meta v1"), "bad meta magic in {meta_path:?}");
+        let mut entries = BTreeMap::new();
+        for (no, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(parts.len() >= 6 && parts[0] == "tensor", "bad meta line {}: {line:?}", no + 2);
+            let name = parts[1].to_string();
+            let dtype = DType::parse(parts[2])?;
+            let rank: usize = parts[3].parse()?;
+            anyhow::ensure!(parts.len() == 6 + rank, "bad field count on line {}", no + 2);
+            let dims: Vec<usize> =
+                parts[4..4 + rank].iter().map(|p| p.parse()).collect::<Result<_, _>>()?;
+            let offset: usize = parts[4 + rank].parse()?;
+            let len: usize = parts[5 + rank].parse()?;
+            anyhow::ensure!(offset + len <= blob.len(), "tensor {name} overruns blob");
+            anyhow::ensure!(
+                len == dims.iter().product::<usize>() * dtype.size(),
+                "tensor {name}: byte length {len} != shape {dims:?}"
+            );
+            entries.insert(
+                name.clone(),
+                Tensor { name, dtype, dims, raw: blob[offset..offset + len].to_vec() },
+            );
+        }
+        Ok(Self { base: base.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&Tensor> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor {name:?} not in {:?} (have: {:?})", self.base, self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_pair(dir: &Path, base: &str, meta: &str, bin: &[u8]) -> PathBuf {
+        let b = dir.join(base);
+        std::fs::File::create(b.with_extension("meta")).unwrap().write_all(meta.as_bytes()).unwrap();
+        std::fs::File::create(b.with_extension("bin")).unwrap().write_all(bin).unwrap();
+        b
+    }
+
+    fn tmp() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ari-tensors-{}-{:?}", std::process::id(), std::thread::current().id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_f32_i32() {
+        let dir = tmp();
+        let mut bin = Vec::new();
+        for v in [1.5f32, -2.5] {
+            bin.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [7i32, -9] {
+            bin.extend_from_slice(&v.to_le_bytes());
+        }
+        let meta = "ari-meta v1\ntensor a f32 2 1 2 0 8\ntensor b i32 1 2 8 8\n";
+        let base = write_pair(&dir, "rt", meta, &bin);
+        let tf = TensorFile::open(&base).unwrap();
+        assert_eq!(tf.get("a").unwrap().as_f32().unwrap(), vec![1.5, -2.5]);
+        assert_eq!(tf.get("b").unwrap().as_i32().unwrap(), vec![7, -9]);
+        assert_eq!(tf.get("a").unwrap().dims, vec![1, 2]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = tmp();
+        let base = write_pair(&dir, "bad", "nope v0\n", &[]);
+        assert!(TensorFile::open(&base).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_overrun() {
+        let dir = tmp();
+        let base = write_pair(&dir, "ov", "ari-meta v1\ntensor a f32 1 4 0 16\n", &[0u8; 8]);
+        assert!(TensorFile::open(&base).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_shape_length_mismatch() {
+        let dir = tmp();
+        let base = write_pair(&dir, "mm", "ari-meta v1\ntensor a f32 1 3 0 8\n", &[0u8; 8]);
+        assert!(TensorFile::open(&base).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_error_lists_names() {
+        let dir = tmp();
+        let base = write_pair(&dir, "ms", "ari-meta v1\ntensor a f32 1 1 0 4\n", &[0u8; 4]);
+        let tf = TensorFile::open(&base).unwrap();
+        let err = format!("{:?}", tf.get("zzz").unwrap_err());
+        assert!(err.contains("zzz") && err.contains('a'));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn wrong_dtype_access_rejected() {
+        let dir = tmp();
+        let base = write_pair(&dir, "dt", "ari-meta v1\ntensor a f32 1 1 0 4\n", &[0u8; 4]);
+        let tf = TensorFile::open(&base).unwrap();
+        assert!(tf.get("a").unwrap().as_i32().is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

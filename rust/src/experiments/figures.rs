@@ -1,0 +1,255 @@
+//! Figure drivers (Figs. 5, 6, 8, 10–15).  Each returns the figure's
+//! data series as text (plus ASCII histogram panels where the paper
+//! shows densities).
+
+use crate::config::ThresholdPolicy;
+use crate::data::VariantKind;
+use crate::energy::EnergyModel;
+use crate::margin::Calibration;
+use crate::quant::FpFormat;
+use crate::runtime::Engine;
+use crate::sc::ScConfig;
+use crate::util::Histogram;
+
+use super::sweep::{level_label, Sweep};
+
+const POLICIES: [ThresholdPolicy; 3] = [ThresholdPolicy::MMax, ThresholdPolicy::M99, ThresholdPolicy::M95];
+
+fn dataset_names(engine: &Engine) -> Vec<String> {
+    engine.manifest.dataset_names().iter().map(|s| s.to_string()).collect()
+}
+
+fn energy_for(engine: &mut Engine, ds: &str, kind: VariantKind, level: usize) -> crate::Result<f64> {
+    engine.load_dataset(ds)?;
+    let dims = engine.weights(ds)?.dims();
+    let m = EnergyModel::for_dims(&dims);
+    Ok(match kind {
+        VariantKind::Fp => m.fp_energy(FpFormat::fp(level as u32)),
+        VariantKind::Sc => m.sc_energy(ScConfig::new(level)),
+    })
+}
+
+/// Fig. 5 — accuracy (top) and relative energy per inference (bottom) of
+/// the SC MLP vs sequence length, SVHN.
+pub fn fig5(engine: &mut Engine) -> crate::Result<String> {
+    let ds = "svhn_syn";
+    let mut sweep = Sweep::new();
+    let mut s = String::from("FIG 5 — SC accuracy & relative energy vs sequence length (SVHN-like)\n");
+    s.push_str("seq_len  accuracy  rel_energy_vs_L128\n");
+    let levels = engine.manifest.levels(ds, VariantKind::Sc);
+    let e128 = energy_for(engine, ds, VariantKind::Sc, 128)?;
+    for &l in levels.iter().rev() {
+        let y = sweep.eval(engine, ds)?.y.clone();
+        let out = sweep.outputs(engine, ds, VariantKind::Sc, l)?;
+        let acc = out.accuracy(&y);
+        let rel = energy_for(engine, ds, VariantKind::Sc, l)? / e128 * 100.0;
+        s.push_str(&format!("{l:<8} {acc:<9.4} {rel:.0}%\n"));
+    }
+    s.push_str("\npaper shape: accuracy gains flatten with L while energy grows linearly\n");
+    Ok(s)
+}
+
+/// Fig. 6 — classification scores of one element at L=4096 vs L=512.
+pub fn fig6(engine: &mut Engine) -> crate::Result<String> {
+    let ds = "svhn_syn";
+    let mut sweep = Sweep::new();
+    let full = sweep.outputs(engine, ds, VariantKind::Sc, 4096)?.clone();
+    let red = sweep.outputs(engine, ds, VariantKind::Sc, 512)?.clone();
+    // The paper's example: an element with a large full-model margin whose
+    // class is preserved (though the margin shrinks) at L=512.
+    let mut pick = 0;
+    let mut best = f32::NEG_INFINITY;
+    for i in 0..full.pred.len() {
+        // the paper's example: large full-model margin, class preserved,
+        // margin shrunk at L=512
+        if full.pred[i] == red.pred[i] && red.margin[i] < full.margin[i] && full.margin[i] > best {
+            best = full.margin[i];
+            pick = i;
+        }
+    }
+    let mut s = format!("FIG 6 — scores of element #{pick} (SVHN-like, stochastic computing)\n");
+    s.push_str(&format!(
+        "L=4096: pred={} margin={:.4}\nL=512 : pred={} margin={:.4}\n\nclass  score@4096  score@512\n",
+        full.pred[pick], full.margin[pick], red.pred[pick], red.margin[pick]
+    ));
+    for c in 0..full.n_classes {
+        let a = full.score_row(pick)[c];
+        let b = red.score_row(pick)[c];
+        let bar_a = "#".repeat((a * 40.0) as usize);
+        let bar_b = "+".repeat((b * 40.0) as usize);
+        s.push_str(&format!("{c:<6} {a:<11.4} {b:<10.4} |{bar_a}\n                               |{bar_b}\n"));
+    }
+    s.push_str("\npaper shape: classification (and sign of the margin) unchanged; margin shrinks\n");
+    Ok(s)
+}
+
+fn margin_panel(cal: &Calibration, title: &str) -> String {
+    let mut s = format!("{title}: changed={} / {} ({:.2}%)\n", cal.changed_margins.len(), cal.n, 100.0 * cal.change_rate());
+    if cal.changed_margins.is_empty() {
+        s.push_str("  (no elements change class at this resolution)\n");
+        return s;
+    }
+    let mmax = cal.threshold(ThresholdPolicy::MMax);
+    let m99 = cal.threshold(ThresholdPolicy::M99);
+    let m95 = cal.threshold(ThresholdPolicy::M95);
+    s.push_str(&format!("  Mmax={mmax:.4}  M99={m99:.4}  M95={m95:.4}\n"));
+    let hi = (mmax * 1.05).max(1e-3);
+    let mut h = Histogram::new(0.0, hi, 12);
+    h.record_all(&cal.changed_margins);
+    for (center, d) in h.densities() {
+        let bar = "#".repeat((d * hi * 30.0).min(60.0) as usize);
+        s.push_str(&format!("  {center:7.4} {bar}\n"));
+    }
+    s
+}
+
+/// Fig. 8 — distribution of reduced-model margins over elements that
+/// change class (the paper's SVHN SC L=512 example), with thresholds.
+pub fn fig8(engine: &mut Engine) -> crate::Result<String> {
+    let mut sweep = Sweep::new();
+    let cal = sweep.calibration(engine, "svhn_syn", VariantKind::Sc, 4096, 512)?;
+    let mut s = String::from("FIG 8 — margin density of class-changing elements (SVHN-like, SC 4096->512)\n");
+    s.push_str(&margin_panel(&cal, "SC L=512"));
+    s.push_str("\npaper shape: right-skewed density; M95 < M99 << Mmax\n");
+    Ok(s)
+}
+
+fn margin_grid(engine: &mut Engine, kind: VariantKind, levels: &[usize], title: &str) -> crate::Result<String> {
+    let mut sweep = Sweep::new();
+    let full = Sweep::full_level(kind);
+    let mut s = format!("{title}\n");
+    for ds in dataset_names(engine) {
+        s.push_str(&format!("\n== {ds} ==\n"));
+        for &level in levels {
+            let cal = sweep.calibration(engine, &ds, kind, full, level)?;
+            s.push_str(&margin_panel(&cal, &level_label(kind, level)));
+        }
+    }
+    Ok(s)
+}
+
+/// Fig. 10 — margin distributions, floating point, removing 4/6/8 bits.
+pub fn fig10(engine: &mut Engine) -> crate::Result<String> {
+    margin_grid(
+        engine,
+        VariantKind::Fp,
+        &[12, 10, 8],
+        "FIG 10 — margins of class-changing elements, FP (remove 4/6/8 mantissa bits)",
+    )
+}
+
+/// Fig. 11 — margin distributions, stochastic computing, L=1024/256/64.
+pub fn fig11(engine: &mut Engine) -> crate::Result<String> {
+    margin_grid(
+        engine,
+        VariantKind::Sc,
+        &[1024, 256, 64],
+        "FIG 11 — margins of class-changing elements, SC (L = 1024/256/64)",
+    )
+}
+
+/// Threshold/F/savings/accuracy sweeps share this walk.
+fn sweep_rows(
+    engine: &mut Engine,
+    mut row: impl FnMut(&mut Engine, &mut Sweep, &str, VariantKind, usize, &Calibration) -> crate::Result<String>,
+) -> crate::Result<String> {
+    let mut s = String::new();
+    for kind in [VariantKind::Fp, VariantKind::Sc] {
+        for ds in dataset_names(engine) {
+            s.push_str(&format!("\n== {ds} ({kind:?}) ==\n"));
+            let mut sweep = Sweep::new();
+            let full = Sweep::full_level(kind);
+            for level in Sweep::reduced_levels(engine, &ds, kind) {
+                let cal = sweep.calibration(engine, &ds, kind, full, level)?;
+                s.push_str(&row(engine, &mut sweep, &ds, kind, level, &cal)?);
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// Fig. 12 — thresholds Mmax/M99/M95 vs quantisation level.
+pub fn fig12(engine: &mut Engine) -> crate::Result<String> {
+    let mut s = String::from("FIG 12 — margin thresholds vs quantisation level\nlevel  Mmax  M99  M95\n");
+    s.push_str(&sweep_rows(engine, |_, _, _, kind, level, cal| {
+        Ok(format!(
+            "{:<26} {:.4} {:.4} {:.4}\n",
+            level_label(kind, level),
+            cal.threshold(ThresholdPolicy::MMax),
+            cal.threshold(ThresholdPolicy::M99),
+            cal.threshold(ThresholdPolicy::M95),
+        ))
+    })?);
+    s.push_str("\npaper shape: thresholds grow as resolution drops; percentile thresholds sit below Mmax\n");
+    Ok(s)
+}
+
+/// Fig. 13 — fraction F of inferences that must run the full model.
+pub fn fig13(engine: &mut Engine) -> crate::Result<String> {
+    let mut s = String::from("FIG 13 — escalation fraction F vs quantisation level\nlevel  F@Mmax  F@M99  F@M95\n");
+    s.push_str(&sweep_rows(engine, |engine, sweep, ds, kind, level, cal| {
+        let margins = sweep.outputs(engine, ds, kind, level)?.margin.clone();
+        let mut cells = String::new();
+        for p in POLICIES {
+            let f = Calibration::escalation_fraction(&margins, cal.threshold(p));
+            cells.push_str(&format!(" {f:<7.4}"));
+        }
+        Ok(format!("{:<26}{cells}\n", level_label(kind, level)))
+    })?);
+    s.push_str("\npaper shape: F below ~20% for moderate quantisation, rising steeply at aggressive levels\n");
+    Ok(s)
+}
+
+/// Fig. 14 — energy savings (eq. 2) vs quantisation level.
+pub fn fig14(engine: &mut Engine) -> crate::Result<String> {
+    let mut s = String::from("FIG 14 — ARI energy savings vs quantisation level (eq. 2)\nlevel  savings@Mmax  savings@M99  savings@M95\n");
+    s.push_str(&sweep_rows(engine, |engine, sweep, ds, kind, level, cal| {
+        let margins = sweep.outputs(engine, ds, kind, level)?.margin.clone();
+        let e_r = energy_for(engine, ds, kind, level)?;
+        let e_f = energy_for(engine, ds, kind, Sweep::full_level(kind))?;
+        let mut cells = String::new();
+        for p in POLICIES {
+            let f = Calibration::escalation_fraction(&margins, cal.threshold(p));
+            let sav = EnergyModel::ari_savings(e_r, e_f, f);
+            cells.push_str(&format!(" {:<12.4}", sav));
+        }
+        Ok(format!("{:<26}{cells}\n", level_label(kind, level)))
+    })?);
+    s.push_str("\npaper shape: savings rise, peak at an intermediate resolution, then fall as F explodes\n");
+    Ok(s)
+}
+
+/// Fig. 15 — accuracy drop of ARI vs the plain quantised model.
+pub fn fig15(engine: &mut Engine) -> crate::Result<String> {
+    let mut s = String::from(
+        "FIG 15 — accuracy drop (percentage points vs full model)\nlevel  ari@Mmax  ari@M99  ari@M95  plain_quantised\n",
+    );
+    s.push_str(&sweep_rows(engine, |engine, sweep, ds, kind, level, cal| {
+        let y = sweep.eval(engine, ds)?.y.clone();
+        let full = sweep.outputs(engine, ds, kind, Sweep::full_level(kind))?.clone();
+        let red = sweep.outputs(engine, ds, kind, level)?.clone();
+        let acc_full = full.accuracy(&y);
+        let acc_plain = red.accuracy(&y);
+        let mut cells = String::new();
+        for p in POLICIES {
+            let t = cal.threshold(p);
+            // Simulated ARI: accept reduced when margin clears T, else full.
+            let mut ok = 0usize;
+            for i in 0..y.len() {
+                let pred = if crate::margin::accepts(red.margin[i], t) { red.pred[i] } else { full.pred[i] };
+                if pred == y[i] {
+                    ok += 1;
+                }
+            }
+            let acc_ari = ok as f64 / y.len() as f64;
+            cells.push_str(&format!(" {:<8.4}", 100.0 * (acc_full - acc_ari)));
+        }
+        Ok(format!(
+            "{:<26}{cells} {:<8.4}\n",
+            level_label(kind, level),
+            100.0 * (acc_full - acc_plain)
+        ))
+    })?);
+    s.push_str("\npaper shape: ARI drop ~0 (exactly 0 at Mmax); plain quantisation drops sharply at low resolution\n");
+    Ok(s)
+}

@@ -1,0 +1,40 @@
+//! Regeneration drivers for every table and figure in the paper's
+//! evaluation (§IV) — see DESIGN.md §4 for the index.
+//!
+//! Each driver returns a plain-text report (the "figure" as data series /
+//! ASCII panels); `ari experiment <id>` prints it and `ari experiment all
+//! --out <dir>` writes one file per artifact.  EXPERIMENTS.md is curated
+//! from these outputs.
+
+pub mod case_study;
+pub mod figures;
+pub mod sweep;
+pub mod tables;
+
+use crate::runtime::Engine;
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "fig5", "fig6", "fig8", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+    "table3", "table4",
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(engine: &mut Engine, id: &str) -> crate::Result<String> {
+    match id {
+        "table1" => tables::table1(),
+        "table2" => tables::table2(),
+        "fig5" => figures::fig5(engine),
+        "fig6" => figures::fig6(engine),
+        "fig8" => figures::fig8(engine),
+        "fig10" => figures::fig10(engine),
+        "fig11" => figures::fig11(engine),
+        "fig12" => figures::fig12(engine),
+        "fig13" => figures::fig13(engine),
+        "fig14" => figures::fig14(engine),
+        "fig15" => figures::fig15(engine),
+        "table3" => case_study::table3(engine),
+        "table4" => case_study::table4(engine),
+        other => anyhow::bail!("unknown experiment {other:?} (known: {ALL:?})"),
+    }
+}

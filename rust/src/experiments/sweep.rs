@@ -1,0 +1,103 @@
+//! Shared sweep cache: every figure in §IV needs (dataset × variant)
+//! outputs over the whole eval split; this runs each combination once
+//! per process and memoises the result.
+
+use std::collections::HashMap;
+
+use crate::data::{EvalData, VariantKind};
+use crate::margin::Calibration;
+use crate::runtime::{BatchOutputs, Engine};
+
+/// Batch size used for dataset sweeps (the larger compiled batch).
+pub const SWEEP_BATCH: usize = 256;
+
+/// Memoised sweep runner.
+pub struct Sweep {
+    outputs: HashMap<(String, VariantKind, usize), BatchOutputs>,
+    eval: HashMap<String, EvalData>,
+}
+
+impl Default for Sweep {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sweep {
+    pub fn new() -> Self {
+        Self { outputs: HashMap::new(), eval: HashMap::new() }
+    }
+
+    /// Eval split of a dataset (cached).
+    pub fn eval<'a>(&'a mut self, engine: &Engine, ds: &str) -> crate::Result<&'a EvalData> {
+        if !self.eval.contains_key(ds) {
+            self.eval.insert(ds.to_string(), engine.eval_data(ds)?);
+        }
+        Ok(&self.eval[ds])
+    }
+
+    /// Outputs of (ds, kind, level) over the whole eval split (cached).
+    pub fn outputs<'a>(
+        &'a mut self,
+        engine: &mut Engine,
+        ds: &str,
+        kind: VariantKind,
+        level: usize,
+    ) -> crate::Result<&'a BatchOutputs> {
+        let key = (ds.to_string(), kind, level);
+        if !self.outputs.contains_key(&key) {
+            if !self.eval.contains_key(ds) {
+                self.eval.insert(ds.to_string(), engine.eval_data(ds)?);
+            }
+            let data = &self.eval[ds];
+            let v = engine.manifest.variant(ds, kind, level, SWEEP_BATCH)?.clone();
+            // Seed depends on the level so different SC lengths get
+            // independent streams (as independent hardware runs would).
+            let out = engine.run_dataset(&v, data, level as u32)?;
+            self.outputs.insert(key.clone(), out);
+        }
+        Ok(&self.outputs[&key])
+    }
+
+    /// Calibration of (reduced vs full) over the whole eval split — the
+    /// paper's protocol (margins of changed elements over "the dataset").
+    pub fn calibration(
+        &mut self,
+        engine: &mut Engine,
+        ds: &str,
+        kind: VariantKind,
+        full_level: usize,
+        reduced_level: usize,
+    ) -> crate::Result<Calibration> {
+        let full = self.outputs(engine, ds, kind, full_level)?.pred.clone();
+        let red = self.outputs(engine, ds, kind, reduced_level)?;
+        Ok(Calibration::from_pairs(&full, &red.pred, &red.margin))
+    }
+
+    /// The full-model level of a kind (paper: FP16 / L=4096).
+    pub fn full_level(kind: VariantKind) -> usize {
+        match kind {
+            VariantKind::Fp => 16,
+            VariantKind::Sc => 4096,
+        }
+    }
+
+    /// Reduced levels available in the manifest, descending, excluding
+    /// the full model.
+    pub fn reduced_levels(engine: &Engine, ds: &str, kind: VariantKind) -> Vec<usize> {
+        engine
+            .manifest
+            .levels(ds, kind)
+            .into_iter()
+            .filter(|&l| l != Self::full_level(kind))
+            .collect()
+    }
+}
+
+/// Quantisation-level axis label (paper's x-axes).
+pub fn level_label(kind: VariantKind, level: usize) -> String {
+    match kind {
+        VariantKind::Fp => format!("FP{level} ({} bits removed)", 16 - level),
+        VariantKind::Sc => format!("L={level} ({}x reduction)", 4096 / level.max(1)),
+    }
+}

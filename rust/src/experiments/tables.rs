@@ -1,0 +1,60 @@
+//! Tables I & II: the hardware cost model, regenerated from the
+//! calibrated [`crate::energy::EnergyModel`] next to the paper's
+//! published synthesis numbers.
+
+use crate::energy::{self, EnergyModel};
+use crate::quant::FpFormat;
+use crate::sc::ScConfig;
+
+/// Table I — area/energy of the FP MLP vs precision (Fashion-MNIST
+/// topology).  Area is reported via the paper's own column (the model
+/// reproduces energy; area follows the same linear law and is shown from
+/// the paper's calibration points).
+pub fn table1() -> crate::Result<String> {
+    let model = EnergyModel::for_input_dim(784);
+    let paper_area: [(u32, f64); 5] = [(16, 0.41), (14, 0.34), (12, 0.28), (10, 0.21), (8, 0.14)];
+    let mut s = String::new();
+    s.push_str("TABLE I — floating-point MLP, Fashion-MNIST topology (784-1024-512-256-256-10)\n");
+    s.push_str("precision  paper_area_mm2  paper_energy_uJ  model_energy_uJ  rel_err\n");
+    for (bits, uj) in energy::TABLE_I {
+        let got = model.fp_energy(FpFormat::fp(bits));
+        let area = paper_area.iter().find(|(b, _)| *b == bits).unwrap().1;
+        s.push_str(&format!(
+            "FP{bits:<8} {area:<15.2} {uj:<16.2} {got:<16.3} {:.2}%\n",
+            100.0 * (got - uj).abs() / uj
+        ));
+    }
+    s.push_str("\nmodel: E(bits) = (-0.198 + 0.0555*bits) * macs/macs_ref  [least-squares over the paper's Table I]\n");
+    Ok(s)
+}
+
+/// Table II — latency/energy of the SC MLP vs sequence length
+/// (784-100-200-10 topology).
+pub fn table2() -> crate::Result<String> {
+    let model = EnergyModel { macs: energy::table_ii_reference_macs() };
+    let mut s = String::new();
+    s.push_str("TABLE II — stochastic-computing MLP (784-100-200-10)\n");
+    s.push_str("seq_len  paper_latency_us  model_latency_us  paper_energy_uJ  model_energy_uJ  rel_err\n");
+    for ((l, uj), (_, us)) in energy::TABLE_II.iter().zip(energy::TABLE_II_LATENCY.iter()) {
+        let cfg = ScConfig::new(*l);
+        let got = model.sc_energy(cfg);
+        let got_us = model.sc_latency_us(cfg);
+        s.push_str(&format!(
+            "{l:<8} {us:<17.2} {got_us:<17.3} {uj:<16.2} {got:<16.3} {:.2}%\n",
+            100.0 * (got - uj).abs() / uj
+        ));
+    }
+    s.push_str("\nmodel: E(L) = (2.15/4096)*L * macs/macs_ref;  latency(L) = (4.10/4096)*L\n");
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tables_render() {
+        let t1 = super::table1().unwrap();
+        assert!(t1.contains("FP16") && t1.contains("0.70"));
+        let t2 = super::table2().unwrap();
+        assert!(t2.contains("4096") && t2.contains("2.15"));
+    }
+}

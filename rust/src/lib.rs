@@ -1,0 +1,56 @@
+//! # ARI — Adaptive Resolution Inference
+//!
+//! A production-shaped reproduction of *"Adaptive Resolution Inference
+//! (ARI): Energy-Efficient Machine Learning for Internet of Things"*
+//! (IEEE IoT Journal 2024, DOI 10.1109/JIOT.2023.3339623) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time, python)** — the paper's MLP and its
+//!   reduced-resolution variants (truncated-mantissa floating point and
+//!   stochastic-computing noise model) are authored in JAX + Pallas and
+//!   AOT-lowered to HLO text (`make artifacts`).
+//! * **L3 (this crate)** — the serving system: a PJRT runtime that loads
+//!   the lowered executables, and the ARI cascade coordinator that runs
+//!   every request on the reduced model first, checks the score margin
+//!   against a calibrated threshold, and escalates only low-margin
+//!   requests to the full model (paper Fig. 7b).
+//!
+//! Python never runs on the request path; the binary is self-contained
+//! once `artifacts/` exists.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | PRNG, stats, histograms, mini-TOML, property-test harness |
+//! | [`config`] | experiment / server configuration |
+//! | [`data`] | `.bin`/`.meta` tensor loader, manifest, datasets |
+//! | [`tensor`] | minimal f32 matrix substrate |
+//! | [`quant`] | truncated-mantissa FP emulation (rust twin of the L1 kernel) |
+//! | [`sc`] | exact bitstream stochastic-computing simulator (LFSR → SNG → XNOR → APC) |
+//! | [`mlp`] | pure-rust MLP engine over [`quant`]/[`sc`] — the cross-check baseline |
+//! | [`energy`] | per-inference energy model calibrated to the paper's Tables I & II |
+//! | [`margin`] | margin statistics + threshold calibration (Mmax / M99 / M95) |
+//! | [`runtime`] | PJRT client wrapper: load HLO text, compile, execute, cache |
+//! | [`coordinator`] | the ARI cascade: batcher, escalation, energy accounting |
+//! | [`server`] | threaded request loop + workload generators |
+//! | [`metrics`] | counters + latency histograms |
+//! | [`experiments`] | regeneration drivers for every paper table & figure |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod experiments;
+pub mod margin;
+pub mod metrics;
+pub mod mlp;
+pub mod quant;
+pub mod runtime;
+pub mod sc;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,197 @@
+//! `ari` — the ARI serving and experiment CLI.
+//!
+//! ```text
+//! ari info       [--artifacts DIR]
+//! ari calibrate  [--artifacts DIR] [overrides…]      threshold table for one cascade
+//! ari serve      [--artifacts DIR] [--config FILE] [--deferred] [overrides…]
+//! ari experiment <id|all> [--artifacts DIR] [--out DIR]
+//! ari bench-exec [--artifacts DIR] [overrides…]      raw PJRT execute timing
+//! ```
+//!
+//! Overrides are `key=value` / `section.key=value` pairs applied on top of
+//! the config file (hand-rolled arg parsing — clap is not in the sandbox's
+//! vendored crate set).
+
+use std::path::PathBuf;
+
+use ari::config::AriConfig;
+use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
+use ari::runtime::Engine;
+use ari::server::{run_serving, ServeOptions};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Cli {
+    artifacts: PathBuf,
+    config: Option<PathBuf>,
+    out: Option<PathBuf>,
+    deferred: bool,
+    positional: Vec<String>,
+    overrides: Vec<String>,
+}
+
+fn parse_cli(args: &[String]) -> ari::Result<Cli> {
+    let mut cli = Cli {
+        artifacts: PathBuf::from("artifacts"),
+        config: None,
+        out: None,
+        deferred: false,
+        positional: Vec::new(),
+        overrides: Vec::new(),
+    };
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--artifacts" => cli.artifacts = PathBuf::from(next_val(&mut it, "--artifacts")?),
+            "--config" => cli.config = Some(PathBuf::from(next_val(&mut it, "--config")?)),
+            "--out" => cli.out = Some(PathBuf::from(next_val(&mut it, "--out")?)),
+            "--deferred" => cli.deferred = true,
+            "--help" | "-h" => {
+                println!("{}", HELP);
+                std::process::exit(0);
+            }
+            s if s.contains('=') => cli.overrides.push(s.to_string()),
+            s => cli.positional.push(s.to_string()),
+        }
+    }
+    Ok(cli)
+}
+
+fn next_val<'a>(it: &mut std::iter::Peekable<std::slice::Iter<'a, String>>, flag: &str) -> ari::Result<&'a str> {
+    it.next().map(|s| s.as_str()).ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+}
+
+const HELP: &str = "ari — Adaptive Resolution Inference\n\
+commands:\n  info | calibrate | serve | experiment <id|all> | bench-exec\n\
+flags: --artifacts DIR  --config FILE  --out DIR  --deferred\n\
+overrides: dataset=… mode=fp|sc reduced_level=… threshold=mmax|m99|m95|<f> server.batch_size=… server.requests=… server.arrival_rate=…";
+
+fn load_config(cli: &Cli) -> ari::Result<AriConfig> {
+    let mut cfg = match &cli.config {
+        Some(p) => AriConfig::from_file(p)?,
+        None => AriConfig::default(),
+    };
+    cfg.artifacts = cli.artifacts.clone();
+    cfg.apply_overrides(&cli.overrides)?;
+    Ok(cfg)
+}
+
+fn build_cascade(engine: &mut Engine, cfg: &AriConfig) -> ari::Result<(Cascade, ari::data::EvalData, usize)> {
+    let data = engine.eval_data(&cfg.dataset)?;
+    let n_calib = ((data.n as f64) * cfg.calib_fraction) as usize;
+    let spec = CascadeSpec::from_config(cfg);
+    let cascade = Cascade::calibrate(engine, spec, &data, n_calib.max(1))?;
+    Ok((cascade, data, n_calib))
+}
+
+fn dispatch(args: &[String]) -> ari::Result<()> {
+    let cli = parse_cli(args)?;
+    let cmd = cli.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "help" => println!("{HELP}"),
+        "info" => {
+            let engine = Engine::new(&cli.artifacts)?;
+            println!("artifacts: {:?}", cli.artifacts);
+            for d in &engine.manifest.datasets {
+                println!(
+                    "dataset {} (stand-in for {}): input_dim={} n_eval={} train_acc={:.4}",
+                    d.name, d.paper_name, d.input_dim, d.n_eval, d.train_acc
+                );
+            }
+            println!("variants: {}", engine.manifest.variants.len());
+        }
+        "calibrate" => {
+            let cfg = load_config(&cli)?;
+            let mut engine = Engine::new(&cfg.artifacts)?;
+            let (cascade, _, n_calib) = build_cascade(&mut engine, &cfg)?;
+            println!(
+                "cascade {}/{:?} reduced={} full={} (calibrated on {n_calib} rows)",
+                cfg.dataset, cfg.mode, cfg.reduced_level, cfg.full_level
+            );
+            println!(
+                "changed elements: {} / {} ({:.3}%)",
+                cascade.calibration.changed_margins.len(),
+                cascade.calibration.n,
+                100.0 * cascade.calibration.change_rate()
+            );
+            for p in [ari::config::ThresholdPolicy::MMax, ari::config::ThresholdPolicy::M99, ari::config::ThresholdPolicy::M95] {
+                println!("  T({p}) = {:.4}", cascade.calibration.threshold(p));
+            }
+            println!("selected T = {:.4} ({})", cascade.threshold, cfg.threshold);
+            println!("E_reduced = {:.3} µJ, E_full = {:.3} µJ", cascade.e_reduced, cascade.e_full);
+        }
+        "serve" => {
+            let cfg = load_config(&cli)?;
+            let mut engine = Engine::new(&cfg.artifacts)?;
+            let (cascade, data, n_calib) = build_cascade(&mut engine, &cfg)?;
+            // Baseline full-model predictions for parity reporting.
+            let kind = cfg.mode.kind();
+            let full_v = engine.manifest.variant(&cfg.dataset, kind, cfg.full_level, cfg.batch_size)?.clone();
+            let full_out = engine.run_dataset(&full_v, &data, cfg.seed as u32)?;
+            let opts = ServeOptions {
+                escalation: if cli.deferred { EscalationPolicy::Deferred } else { EscalationPolicy::Immediate },
+            };
+            println!(
+                "serving {}: {:?} reduced={} full={} T={:.4} ({}) calib_rows={n_calib}",
+                cfg.dataset, cfg.mode, cfg.reduced_level, cfg.full_level, cascade.threshold, cfg.threshold
+            );
+            let report = run_serving(&mut engine, &cascade, &cfg, &data, Some(&full_out.pred), opts)?;
+            println!("{}", report.summary());
+        }
+        "experiment" => {
+            let id = cli.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let mut engine = Engine::new(&cli.artifacts)?;
+            let ids: Vec<&str> = if id == "all" { ari::experiments::ALL.to_vec() } else { vec![id] };
+            for id in ids {
+                eprintln!("[experiment {id}] running…");
+                let t0 = std::time::Instant::now();
+                let report = ari::experiments::run_experiment(&mut engine, id)?;
+                eprintln!("[experiment {id}] done in {:.1?}", t0.elapsed());
+                match &cli.out {
+                    Some(dir) => {
+                        std::fs::create_dir_all(dir)?;
+                        let path = dir.join(format!("{id}.txt"));
+                        std::fs::write(&path, &report)?;
+                        println!("wrote {path:?}");
+                    }
+                    None => println!("{report}"),
+                }
+            }
+        }
+        "bench-exec" => {
+            let cfg = load_config(&cli)?;
+            let mut engine = Engine::new(&cfg.artifacts)?;
+            let data = engine.eval_data(&cfg.dataset)?;
+            let kind = cfg.mode.kind();
+            let v = engine.manifest.variant(&cfg.dataset, kind, cfg.reduced_level, cfg.batch_size)?.clone();
+            let x = data.rows(0, cfg.batch_size.min(data.n)).to_vec();
+            let key = match cfg.mode {
+                ari::config::Mode::Sc => Some([1u32, 2u32]),
+                ari::config::Mode::Fp => None,
+            };
+            engine.execute(&v, &x, key)?; // warm (compile)
+            let iters = 20;
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                engine.execute(&v, &x, key)?;
+            }
+            let dt = t0.elapsed() / iters;
+            println!(
+                "{} batch={} : {:?}/batch = {:.1} µs/sample (compile {} ms)",
+                v.key(),
+                cfg.batch_size,
+                dt,
+                dt.as_micros() as f64 / cfg.batch_size as f64,
+                engine.stats.compile_ms
+            );
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
+    }
+    Ok(())
+}

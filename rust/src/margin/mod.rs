@@ -1,0 +1,145 @@
+//! Margin statistics and threshold calibration — the heart of ARI
+//! (paper §III-B/C).
+//!
+//! Given paired outputs of the full and reduced models over a calibration
+//! set, [`Calibration`] collects the reduced-model margins of exactly the
+//! elements whose predicted class differs, and derives the threshold
+//! `T` for a [`ThresholdPolicy`]: `T = Mmax` reproduces the full model's
+//! predictions on the calibration set exactly; `M99`/`M95` trade a
+//! bounded sliver of coverage for lower T (and hence fewer escalations).
+
+use crate::config::ThresholdPolicy;
+use crate::util::stats::margin_threshold;
+
+/// Paired full/reduced predictions over a calibration set.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Margins (reduced model) of elements whose class changed.
+    pub changed_margins: Vec<f64>,
+    /// Total calibration elements.
+    pub n: usize,
+    /// Count with identical predictions.
+    pub agree: usize,
+}
+
+impl Calibration {
+    /// Build from paired predictions and the reduced model's margins.
+    pub fn from_pairs(full_pred: &[i32], reduced_pred: &[i32], reduced_margin: &[f32]) -> Self {
+        assert_eq!(full_pred.len(), reduced_pred.len());
+        assert_eq!(full_pred.len(), reduced_margin.len());
+        let mut changed = Vec::new();
+        let mut agree = 0;
+        for i in 0..full_pred.len() {
+            if full_pred[i] == reduced_pred[i] {
+                agree += 1;
+            } else {
+                changed.push(reduced_margin[i] as f64);
+            }
+        }
+        Self { changed_margins: changed, n: full_pred.len(), agree }
+    }
+
+    /// Fraction of elements whose class changed under quantisation.
+    pub fn change_rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.changed_margins.len() as f64 / self.n as f64
+        }
+    }
+
+    /// The calibrated threshold for a policy.
+    pub fn threshold(&self, policy: ThresholdPolicy) -> f64 {
+        match policy {
+            ThresholdPolicy::Fixed(t) => t,
+            p => margin_threshold(&self.changed_margins, p.coverage().unwrap()),
+        }
+    }
+
+    /// Fraction of (calibration) elements that would escalate at T, given
+    /// all reduced-model margins.  This is the paper's F (Fig. 13).
+    pub fn escalation_fraction(all_reduced_margins: &[f32], t: f64) -> f64 {
+        if all_reduced_margins.is_empty() {
+            return 0.0;
+        }
+        let k = all_reduced_margins.iter().filter(|&&m| (m as f64) <= t).count();
+        k as f64 / all_reduced_margins.len() as f64
+    }
+}
+
+/// The runtime decision (paper Fig. 7b): accept the reduced result when
+/// its margin clears the threshold, otherwise escalate.
+#[inline]
+pub fn accepts(margin: f32, threshold: f64) -> bool {
+    (margin as f64) > threshold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_counts() {
+        let full = [0, 1, 2, 3];
+        let red = [0, 1, 9, 3];
+        let marg = [0.9f32, 0.8, 0.1, 0.7];
+        let c = Calibration::from_pairs(&full, &red, &marg);
+        assert_eq!(c.n, 4);
+        assert_eq!(c.agree, 3);
+        assert_eq!(c.changed_margins.len(), 1);
+        assert!((c.changed_margins[0] - 0.1f32 as f64).abs() < 1e-9);
+        assert!((c.change_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mmax_threshold_covers_all_changes() {
+        let full = [0, 0, 0, 0, 0];
+        let red = [1, 1, 0, 1, 0];
+        let marg = [0.30f32, 0.10, 0.9, 0.20, 0.8];
+        let c = Calibration::from_pairs(&full, &red, &marg);
+        let t = c.threshold(ThresholdPolicy::MMax);
+        assert!((t - 0.30).abs() < 1e-7);
+        // Every changed element must fail the accept test at T.
+        for (i, &m) in marg.iter().enumerate() {
+            if full[i] != red[i] {
+                assert!(!accepts(m, t), "changed element {i} accepted");
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_thresholds_below_mmax() {
+        let full: Vec<i32> = vec![0; 1000];
+        let red: Vec<i32> = (0..1000).map(|i| if i < 100 { 1 } else { 0 }).collect();
+        let marg: Vec<f32> = (0..1000).map(|i| if i < 100 { i as f32 / 100.0 } else { 0.99 }).collect();
+        let c = Calibration::from_pairs(&full, &red, &marg);
+        let mmax = c.threshold(ThresholdPolicy::MMax);
+        let m99 = c.threshold(ThresholdPolicy::M99);
+        let m95 = c.threshold(ThresholdPolicy::M95);
+        assert!(m95 < m99 && m99 < mmax);
+    }
+
+    #[test]
+    fn fixed_threshold_passthrough() {
+        let c = Calibration::from_pairs(&[0], &[0], &[0.5]);
+        assert_eq!(c.threshold(ThresholdPolicy::Fixed(0.123)), 0.123);
+    }
+
+    #[test]
+    fn no_changes_means_zero_threshold() {
+        let c = Calibration::from_pairs(&[1, 2], &[1, 2], &[0.4, 0.6]);
+        assert_eq!(c.threshold(ThresholdPolicy::MMax), 0.0);
+        // and nothing escalates except exact-zero margins
+        assert!(accepts(0.4, 0.0));
+    }
+
+    #[test]
+    fn escalation_fraction_matches_definition() {
+        let margins = [0.1f32, 0.2, 0.3, 0.4, 0.5];
+        assert!((Calibration::escalation_fraction(&margins, 0.25) - 0.4).abs() < 1e-12);
+        assert_eq!(Calibration::escalation_fraction(&[], 0.5), 0.0);
+        // boundary: margin == T escalates (strict >); note the f32->f64
+        // widening must match the accept path's
+        assert!((Calibration::escalation_fraction(&margins, 0.3f32 as f64) - 0.6).abs() < 1e-12);
+    }
+}

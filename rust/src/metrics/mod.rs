@@ -1,0 +1,211 @@
+//! Serving metrics: counters and latency histograms.
+//!
+//! Lock-free atomic counters for the hot path; histograms are merged at
+//! report time.  A [`MetricsRegistry`] is shared by the coordinator and
+//! the server threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fixed log-spaced latency histogram: 1 µs .. ~100 s.
+const LAT_BUCKETS: usize = 64;
+
+fn bucket_of(d: Duration) -> usize {
+    let us = d.as_micros().max(1) as f64;
+    // 64 log buckets over [1 µs, 1e8 µs): ~3.45 buckets per decade.
+    let idx = (us.log10() * 8.0) as usize;
+    idx.min(LAT_BUCKETS - 1)
+}
+
+fn bucket_upper_us(idx: usize) -> f64 {
+    10f64.powf((idx as f64 + 1.0) / 8.0)
+}
+
+/// A latency histogram (log-spaced buckets) with exact count/sum.
+pub struct LatencyHist {
+    buckets: [AtomicU64; LAT_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHist {
+    pub fn record(&self, d: Duration) {
+        self.buckets[bucket_of(d)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count().max(1);
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate quantile (bucket upper bound).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(bucket_upper_us(i) as u64);
+            }
+        }
+        Duration::from_micros(bucket_upper_us(LAT_BUCKETS - 1) as u64)
+    }
+}
+
+/// Shared registry of everything the server reports.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    /// Requests fully served.
+    pub completed: AtomicU64,
+    /// Requests that ran the full model (escalations).
+    pub escalated: AtomicU64,
+    /// Batches dispatched to the reduced model.
+    pub reduced_batches: AtomicU64,
+    /// Batches dispatched to the full model.
+    pub full_batches: AtomicU64,
+    /// Padding waste: slots in dispatched batches not carrying a request.
+    pub padded_slots: AtomicU64,
+    /// Modelled energy spent, in nano-joules (µJ * 1000 for integer atomics).
+    pub energy_nj: AtomicU64,
+    /// End-to-end request latency.
+    pub latency: LatencyHist,
+    /// Queue wait before the reduced pass.
+    pub queue_wait: LatencyHist,
+    /// Named counters for anything else (failure injection, retries…).
+    extra: Mutex<std::collections::BTreeMap<String, u64>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bump(&self, name: &str, by: u64) {
+        *self.extra.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn add_energy_uj(&self, uj: f64) {
+        self.energy_nj.fetch_add((uj * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_nj.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    pub fn escalation_fraction(&self) -> f64 {
+        let done = self.completed.load(Ordering::Relaxed);
+        if done == 0 {
+            return 0.0;
+        }
+        self.escalated.load(Ordering::Relaxed) as f64 / done as f64
+    }
+
+    /// Multi-line human report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests: {} (escalated {} = {:.2}%)\n",
+            self.completed.load(Ordering::Relaxed),
+            self.escalated.load(Ordering::Relaxed),
+            100.0 * self.escalation_fraction()
+        ));
+        s.push_str(&format!(
+            "batches: reduced {} full {} padded_slots {}\n",
+            self.reduced_batches.load(Ordering::Relaxed),
+            self.full_batches.load(Ordering::Relaxed),
+            self.padded_slots.load(Ordering::Relaxed)
+        ));
+        s.push_str(&format!(
+            "latency: mean {:?} p50 {:?} p99 {:?}\n",
+            self.latency.mean(),
+            self.latency.quantile(0.50),
+            self.latency.quantile(0.99)
+        ));
+        s.push_str(&format!("modelled energy: {:.2} µJ\n", self.energy_uj()));
+        for (k, v) in self.extra.lock().unwrap().iter() {
+            s.push_str(&format!("{k}: {v}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHist::default();
+        for us in [10u64, 20, 30, 40, 50, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) >= Duration::from_micros(500));
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHist::default();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let h = LatencyHist::default();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn registry_energy_and_fraction() {
+        let m = MetricsRegistry::new();
+        m.completed.store(10, Ordering::Relaxed);
+        m.escalated.store(3, Ordering::Relaxed);
+        m.add_energy_uj(1.5);
+        m.add_energy_uj(0.25);
+        assert!((m.escalation_fraction() - 0.3).abs() < 1e-12);
+        assert!((m.energy_uj() - 1.75).abs() < 1e-3);
+    }
+
+    #[test]
+    fn extra_counters_in_report() {
+        let m = MetricsRegistry::new();
+        m.bump("retries", 2);
+        m.bump("retries", 1);
+        assert!(m.report().contains("retries: 3"));
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        let mut last = 0;
+        for us in [1u64, 10, 100, 1000, 10_000, 100_000, 1_000_000] {
+            let b = bucket_of(Duration::from_micros(us));
+            assert!(b >= last);
+            last = b;
+        }
+    }
+}

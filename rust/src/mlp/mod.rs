@@ -1,0 +1,265 @@
+//! Pure-rust MLP inference engines — the cross-check baseline for the
+//! PJRT path and the host of the exact-SC backend.
+//!
+//! Three engines share the [`Weights`] loaded from artifacts:
+//!
+//! * [`FpEngine`] — truncated-mantissa forward, mirroring the L1
+//!   `quant_matmul` kernel (same quantisation points), used to validate
+//!   the PJRT executables and as the fallback when artifacts lack a
+//!   precision level.
+//! * [`ScNoiseEngine`] — the SC noise model on the rust substrate (same
+//!   maths as the `sc_matmul` kernel, seeded Gaussians + grid snap).
+//! * [`sc_exact_forward`] — bitstream-exact single-sample forward on the
+//!   [`crate::sc`] simulator (slow; case studies and validation only).
+
+use crate::data::Weights;
+use crate::quant::FpFormat;
+use crate::sc::ScConfig;
+use crate::tensor::{top2_margin, Matrix};
+use crate::util::Pcg64;
+
+/// Output of a forward pass over a batch.
+#[derive(Clone, Debug)]
+pub struct Outputs {
+    /// (batch, n_classes) L2-normalised scores, row-major.
+    pub scores: Matrix,
+    pub pred: Vec<i32>,
+    pub margin: Vec<f32>,
+}
+
+impl Outputs {
+    /// Scores = L2-normalised logits — mirrors the L2 jax model's
+    /// `_normalize` (see `python/compile/model.py`): the paper's scores
+    /// are raw bounded outputs, not softmax, which is what gives changed
+    /// elements their small margins.
+    fn from_logits(mut logits: Matrix) -> Self {
+        logits.l2_normalize_rows();
+        let mut pred = Vec::with_capacity(logits.rows);
+        let mut margin = Vec::with_capacity(logits.rows);
+        for r in 0..logits.rows {
+            let (p, m) = top2_margin(logits.row(r));
+            pred.push(p as i32);
+            margin.push(m);
+        }
+        Self { scores: logits, pred, margin }
+    }
+
+    /// Bipolar counter readout: snap to the 2/L grid on the normalised
+    /// range (mirrors the SC entry in the jax model).
+    fn snap_scores_to_grid(&mut self, l: usize) {
+        let half = l as f32 / 2.0;
+        self.scores.map_inplace(|v| (v * half).round() / half);
+        for r in 0..self.scores.rows {
+            let (p, m) = top2_margin(self.scores.row(r));
+            self.pred[r] = p as i32;
+            self.margin[r] = m;
+        }
+    }
+}
+
+/// Truncated-mantissa floating-point engine.
+pub struct FpEngine<'w> {
+    weights: &'w Weights,
+    pub fmt: FpFormat,
+}
+
+impl<'w> FpEngine<'w> {
+    pub fn new(weights: &'w Weights, fmt: FpFormat) -> Self {
+        Self { weights, fmt }
+    }
+
+    /// Forward a (batch, input_dim) row-major slice.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Outputs {
+        let input_dim = self.weights.layers[0].in_dim;
+        assert_eq!(x.len(), batch * input_dim, "input shape mismatch");
+        let mut h = Matrix::from_vec(batch, input_dim, x.to_vec());
+        let n = self.weights.layers.len();
+        for (i, l) in self.weights.layers.iter().enumerate() {
+            let w = Matrix::from_vec(l.in_dim, l.out_dim, l.w.clone());
+            h = crate::quant::quant_layer(&h, &w, &l.b, l.alpha, self.fmt, i + 1 < n);
+        }
+        Outputs::from_logits(h)
+    }
+}
+
+/// SC noise-model engine (rust twin of the `sc_matmul` kernel maths).
+pub struct ScNoiseEngine<'w> {
+    weights: &'w Weights,
+    pub cfg: ScConfig,
+}
+
+/// Bernoulli-regime noise constant shared with the python kernel
+/// (`SC_NOISE_C`) — validated against the exact bitstream simulator.
+pub const SC_NOISE_C: f64 = 0.72;
+
+/// LFSR low-discrepancy variance-reduction factor (python twin:
+/// `SC_LFSR_LOW_DISCREPANCY_K`).  Full-period LFSR-driven SNGs behave
+/// like stratified samplers, not i.i.d. Bernoulli draws; calibrated to
+/// the paper's §III-B anchor (~1.3% class changes, SVHN 4096→512).
+pub const SC_LFSR_K: f64 = 48.0;
+
+impl<'w> ScNoiseEngine<'w> {
+    pub fn new(weights: &'w Weights, cfg: ScConfig) -> Self {
+        Self { weights, cfg }
+    }
+
+    /// Forward with explicit noise seed (deterministic).
+    pub fn forward(&self, x: &[f32], batch: usize, seed: u64) -> Outputs {
+        let input_dim = self.weights.layers[0].in_dim;
+        assert_eq!(x.len(), batch * input_dim, "input shape mismatch");
+        let mut h = Matrix::from_vec(batch, input_dim, x.to_vec());
+        let n = self.weights.layers.len();
+        let mut rng = Pcg64::new(seed, 17);
+        for (i, l) in self.weights.layers.iter().enumerate() {
+            let w = Matrix::from_vec(l.in_dim, l.out_dim, l.w.clone());
+            let mut pre = h.matmul(&w);
+            pre.add_row(&l.b);
+            // Same scale as the kernel: the SC hardware encodes x/max|x|
+            // and w/max|w|, so the APC readout error converts back by
+            // max|x| * max|w|.
+            let xmax = h.data.iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
+            let wmax = l.w.iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
+            let scale = xmax * wmax;
+            let sigma = SC_NOISE_C / SC_LFSR_K * (l.in_dim as f64 / self.cfg.seq_len as f64).sqrt() * scale;
+            let step = self.cfg.grid_step() * scale;
+            for v in &mut pre.data {
+                let noisy = *v as f64 + sigma * rng.normal();
+                *v = ((noisy / step).round() * step) as f32;
+            }
+            if i + 1 < n {
+                pre.prelu(l.alpha);
+            }
+            h = pre;
+        }
+        let mut out = Outputs::from_logits(h);
+        out.snap_scores_to_grid(self.cfg.seq_len);
+        out
+    }
+}
+
+/// Bitstream-exact SC forward of ONE sample (values normalised per layer
+/// into the bipolar range, like the paper's hardware).  Slow — case
+/// studies, validation and benches only.
+pub fn sc_exact_forward(weights: &Weights, x: &[f32], cfg: ScConfig, seed: u64) -> Outputs {
+    let n = weights.layers.len();
+    let mut h: Vec<f32> = x.to_vec();
+    for (i, l) in weights.layers.iter().enumerate() {
+        // Normalise inputs and weights into [-1, 1] (per-layer scales, as
+        // the SC hardware does), run the bitstream dot, then undo scales.
+        let xmax = h.iter().fold(1e-6f32, |a, &v| a.max(v.abs()));
+        let wmax = l.w.iter().fold(1e-6f32, |a, &v| a.max(v.abs()));
+        let xn: Vec<f32> = h.iter().map(|&v| v / xmax).collect();
+        let wn: Vec<f32> = l.w.iter().map(|&v| v / wmax).collect();
+        let est = crate::sc::sc_dot(&xn, &wn, l.out_dim, cfg, seed.wrapping_add(i as u64 * 7919));
+        let scale = (xmax * wmax) as f64;
+        let mut out: Vec<f32> = est
+            .iter()
+            .zip(&l.b)
+            .map(|(&e, &b)| (e * scale) as f32 + b)
+            .collect();
+        if i + 1 < n {
+            for v in &mut out {
+                if *v < 0.0 {
+                    *v *= l.alpha;
+                }
+            }
+        }
+        h = out;
+    }
+    Outputs::from_logits(Matrix::from_vec(1, h.len(), h))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LayerWeights;
+
+    fn tiny_weights() -> Weights {
+        // 4 -> 3 -> 2, hand-set so class 0 wins for positive inputs.
+        Weights {
+            layers: vec![
+                LayerWeights {
+                    in_dim: 4,
+                    out_dim: 3,
+                    w: vec![0.5, -0.2, 0.1, 0.3, 0.4, -0.1, -0.3, 0.2, 0.5, 0.1, -0.4, 0.2],
+                    b: vec![0.05, -0.05, 0.0],
+                    alpha: 0.25,
+                },
+                LayerWeights {
+                    in_dim: 3,
+                    out_dim: 2,
+                    w: vec![0.8, -0.8, 0.5, -0.5, 0.3, -0.3],
+                    b: vec![0.1, -0.1],
+                    alpha: 0.25,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn fp_engine_full_vs_coarse() {
+        let w = tiny_weights();
+        let x = vec![1.0f32, 0.5, -0.5, 0.25, -1.0, 0.7, 0.2, -0.3];
+        let full = FpEngine::new(&w, FpFormat::FP16).forward(&x, 2);
+        let coarse = FpEngine::new(&w, FpFormat::fp(8)).forward(&x, 2);
+        assert_eq!(full.pred.len(), 2);
+        // scores are L2-normalised rows
+        for out in [&full, &coarse] {
+            for r in 0..2 {
+                let n: f32 = out.scores.row(r).iter().map(|v| v * v).sum();
+                assert!((n - 1.0).abs() < 1e-4, "{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp_engine_margin_consistent() {
+        let w = tiny_weights();
+        let x = vec![0.3f32, -0.2, 0.8, 0.1];
+        let out = FpEngine::new(&w, FpFormat::FP16).forward(&x, 1);
+        let row = out.scores.row(0);
+        let mut sorted: Vec<f32> = row.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!((out.margin[0] - (sorted[0] - sorted[1])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sc_noise_engine_deterministic_and_grid() {
+        let w = tiny_weights();
+        let x = vec![0.3f32, -0.2, 0.8, 0.1];
+        let eng = ScNoiseEngine::new(&w, ScConfig::new(256));
+        let a = eng.forward(&x, 1, 42);
+        let b = eng.forward(&x, 1, 42);
+        assert_eq!(a.scores.data, b.scores.data);
+        // (note: with the low-discrepancy noise constant and this tiny
+        // fan-in the per-layer noise is far below the counter grid, so
+        // different seeds may legitimately snap to identical scores —
+        // determinism is the contract here, seed-sensitivity is exercised
+        // at realistic fan-in by the PJRT golden tests.)
+        // scores on the bipolar 2/L grid
+        for &s in &a.scores.data {
+            assert!((s * 128.0 - (s * 128.0).round()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sc_noise_converges_to_fp_with_length() {
+        let w = tiny_weights();
+        let x = vec![0.9f32, -0.4, 0.6, 0.2];
+        let fp = FpEngine::new(&w, FpFormat::FP16).forward(&x, 1);
+        let long = ScNoiseEngine::new(&w, ScConfig::new(1 << 20)).forward(&x, 1, 7);
+        for (a, b) in long.scores.data.iter().zip(&fp.scores.data) {
+            assert!((a - b).abs() < 0.02, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sc_exact_forward_reasonable() {
+        let w = tiny_weights();
+        let x = vec![0.9f32, -0.4, 0.6, 0.2];
+        let fp = FpEngine::new(&w, FpFormat::FP16).forward(&x, 1);
+        let exact = sc_exact_forward(&w, &x, ScConfig::new(8192), 3);
+        // Long streams: prediction should agree with the exact engine.
+        assert_eq!(exact.pred[0], fp.pred[0]);
+    }
+}

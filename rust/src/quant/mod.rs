@@ -1,0 +1,208 @@
+//! Truncated-mantissa floating-point emulation — the rust twin of the L1
+//! `quant_matmul` Pallas kernel.
+//!
+//! The paper derives every reduced FP model from the FP16 full model by
+//! removing mantissa LSBs (Fig. 2).  `FpFormat` mirrors
+//! `python/compile/kernels/quant_matmul.QuantSpec` exactly: the python
+//! tests and `rust/tests/quant_parity.rs` pin both implementations to the
+//! same golden values, so the pure-rust [`crate::mlp`] baseline and the
+//! PJRT executables agree bit-for-bit on quantisation.
+
+/// An FP16-family format: 1 sign bit, `e_bits` exponent bits, `m_bits`
+/// mantissa bits.  The paper's "FPk" is `FpFormat::fp(k)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    pub m_bits: u32,
+    pub e_bits: u32,
+}
+
+impl FpFormat {
+    pub const fn new(m_bits: u32, e_bits: u32) -> Self {
+        assert!(m_bits >= 1 && m_bits <= 23);
+        assert!(e_bits >= 2 && e_bits <= 8);
+        Self { m_bits, e_bits }
+    }
+
+    /// Paper notation: FP16 = full model, FP10 = 6 mantissa bits removed…
+    /// (total = 1 sign + 5 exponent + mantissa).
+    pub const fn fp(total_bits: u32) -> Self {
+        Self::new(total_bits - 6, 5)
+    }
+
+    pub const FP16: FpFormat = FpFormat::fp(16);
+
+    pub fn total_bits(&self) -> u32 {
+        1 + self.e_bits + self.m_bits
+    }
+
+    /// Largest finite magnitude: (2 - 2^-m) * 2^emax.
+    pub fn max_value(&self) -> f32 {
+        let emax = ((1u32 << (self.e_bits - 1)) - 1) as i32;
+        (2.0 - (-(self.m_bits as f32)).exp2()) * (emax as f32).exp2()
+    }
+
+    /// Smallest normal magnitude: 2^emin.
+    pub fn min_normal(&self) -> f32 {
+        let emin = 2 - (1i32 << (self.e_bits - 1));
+        (emin as f32).exp2()
+    }
+
+    /// Quantise one f32 (round-to-nearest-even on the mantissa, clamp to
+    /// the format range, flush subnormals to zero, NaN passes through).
+    /// Bit-identical to the python `quantize_fp`.
+    pub fn quantize(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return x;
+        }
+        let shift = 23 - self.m_bits;
+        let i = x.to_bits();
+        let lsb = (i >> shift) & 1;
+        let bias = lsb + ((1u32 << (shift - 1)) - 1);
+        let i = i.wrapping_add(bias) & !((1u32 << shift) - 1);
+        let q = f32::from_bits(i);
+        let q = q.clamp(-self.max_value(), self.max_value());
+        if q.abs() < self.min_normal() {
+            0.0
+        } else {
+            q
+        }
+    }
+
+    /// Quantise a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+}
+
+/// Reduced-precision MLP layer on the pure-rust substrate — mirrors the
+/// pallas kernel: quantised operands, f32 accumulator, quantised epilogue.
+pub fn quant_layer(
+    x: &crate::tensor::Matrix,
+    w: &crate::tensor::Matrix,
+    b: &[f32],
+    alpha: f32,
+    fmt: FpFormat,
+    activate: bool,
+) -> crate::tensor::Matrix {
+    let mut xq = x.clone();
+    fmt.quantize_slice(&mut xq.data);
+    let mut wq = w.clone();
+    fmt.quantize_slice(&mut wq.data);
+    let mut out = xq.matmul(&wq);
+    let bq: Vec<f32> = b.iter().map(|&v| fmt.quantize(v)).collect();
+    out.add_row(&bq);
+    fmt.quantize_slice(&mut out.data);
+    if activate {
+        out.prelu(alpha);
+        fmt.quantize_slice(&mut out.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp16_constants() {
+        let f = FpFormat::FP16;
+        assert_eq!(f.m_bits, 10);
+        assert_eq!(f.e_bits, 5);
+        assert_eq!(f.total_bits(), 16);
+        assert!((f.max_value() - 65504.0).abs() < 1.0);
+        assert!((f.min_normal() - 2f32.powi(-14)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_exact_values_fixed() {
+        // FP16 can represent 1.0, 1.5, 0.25 exactly.
+        let f = FpFormat::FP16;
+        for v in [0.0f32, 1.0, -1.0, 1.5, 0.25, 2048.0] {
+            assert_eq!(f.quantize(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn quantize_idempotent_random() {
+        let mut rng = crate::util::Pcg64::seeded(5);
+        for fmt in [FpFormat::fp(8), FpFormat::fp(10), FpFormat::fp(12), FpFormat::fp(16)] {
+            for _ in 0..1000 {
+                let x = (rng.next_f32() - 0.5) * rng.range_f64(1e-3, 1e3) as f32;
+                let q = fmt.quantize(x);
+                assert_eq!(fmt.quantize(q), q);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_error_bound() {
+        let mut rng = crate::util::Pcg64::seeded(6);
+        for m in [2u32, 4, 6, 8, 10] {
+            let fmt = FpFormat::new(m, 5);
+            for _ in 0..1000 {
+                let x = (rng.next_f32() - 0.5) * 100.0;
+                if x.abs() < fmt.min_normal() * 2.0 || x.abs() > fmt.max_value() / 2.0 {
+                    continue;
+                }
+                let rel = ((fmt.quantize(x) - x) / x).abs();
+                assert!(rel <= 0.5f32.powi(m as i32 + 1) + 1e-7, "m={m} x={x} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_and_flush() {
+        let f = FpFormat::fp(10); // max 2^15*(2-2^-4)=~63488? (m=4)
+        assert_eq!(f.quantize(1e9), f.max_value());
+        assert_eq!(f.quantize(-1e9), -f.max_value());
+        assert_eq!(f.quantize(1e-9), 0.0);
+    }
+
+    #[test]
+    fn rne_halfway_rounds_to_even() {
+        // FP16: 1 + 2^-11 is halfway between 1 and 1 + 2^-10 -> 1 (even).
+        let f = FpFormat::FP16;
+        assert_eq!(f.quantize(1.0 + 2f32.powi(-11)), 1.0);
+        assert_eq!(f.quantize(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 1.0 + 2f32.powi(-10));
+    }
+
+    #[test]
+    fn nan_passthrough() {
+        assert!(FpFormat::FP16.quantize(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn coarser_format_never_more_accurate() {
+        let mut rng = crate::util::Pcg64::seeded(8);
+        for _ in 0..200 {
+            let x = (rng.next_f32() - 0.5) * 10.0;
+            let mut last = f32::INFINITY;
+            for m in [2u32, 4, 6, 8, 10] {
+                let err = (FpFormat::new(m, 5).quantize(x) - x).abs();
+                assert!(err <= last + 1e-9);
+                last = err;
+            }
+        }
+    }
+
+    #[test]
+    fn quant_layer_shapes_and_effect() {
+        use crate::tensor::Matrix;
+        let mut rng = crate::util::Pcg64::seeded(9);
+        let x = Matrix::from_fn(4, 8, |_, _| rng.next_f32() - 0.5);
+        let w = Matrix::from_fn(8, 3, |_, _| (rng.next_f32() - 0.5) * 0.2);
+        let b = vec![0.01f32, -0.02, 0.03];
+        let full = quant_layer(&x, &w, &b, 0.25, FpFormat::fp(16), true);
+        let coarse = quant_layer(&x, &w, &b, 0.25, FpFormat::fp(8), true);
+        assert_eq!(full.rows, 4);
+        assert_eq!(full.cols, 3);
+        // coarse output must be on a coarser grid: every value q(q)=q at fp8
+        for &v in &coarse.data {
+            assert_eq!(FpFormat::fp(8).quantize(v), v);
+        }
+        // and differ somewhere from the fp16 result
+        assert_ne!(full.data, coarse.data);
+    }
+}

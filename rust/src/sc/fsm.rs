@@ -1,0 +1,119 @@
+//! Linear finite-state-machine activation (stochastic tanh).
+//!
+//! The paper's neuron (Fig. 4) applies its activation with a linear FSM
+//! operating directly on the bitstream: a saturating up/down counter with
+//! `n_states` states whose output bit is 1 in the upper half.  For an
+//! input stream encoding x, the output stream approximates
+//! `tanh(n_states/2 * x)` (Brown & Card's classic stanh construction).
+//!
+//! The exact-simulator layers apply PReLU on the counter readout instead
+//! (matching the calibration twin); this module provides the
+//! fully-stochastic activation for the ablation bench
+//! (`bench_sc` --fsm) and for completeness of the substrate.
+
+/// Saturating up/down counter FSM producing a stochastic tanh.
+#[derive(Clone, Debug)]
+pub struct StanhFsm {
+    n_states: u32,
+    state: u32,
+}
+
+impl StanhFsm {
+    /// `n_states` must be even and >= 2; the FSM starts at the midpoint.
+    pub fn new(n_states: u32) -> Self {
+        assert!(n_states >= 2 && n_states % 2 == 0, "n_states must be even >= 2");
+        Self { n_states, state: n_states / 2 }
+    }
+
+    /// Consume one input bit, emit one output bit.
+    #[inline]
+    pub fn step(&mut self, input: bool) -> bool {
+        if input {
+            if self.state < self.n_states - 1 {
+                self.state += 1;
+            }
+        } else if self.state > 0 {
+            self.state -= 1;
+        }
+        self.state >= self.n_states / 2
+    }
+
+    /// Run over a packed stream, returning the packed output stream.
+    pub fn run_packed(&mut self, words: &[u64], n: usize) -> Vec<u64> {
+        let mut out = vec![0u64; words.len()];
+        for t in 0..n {
+            let bit = (words[t / 64] >> (t % 64)) & 1 == 1;
+            if self.step(bit) {
+                out[t / 64] |= 1u64 << (t % 64);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::sng::{count_ones, Sng};
+
+    fn stanh_decode(value: f64, n_states: u32, l: usize, seed: u64) -> f64 {
+        let mut sng = Sng::bipolar(value, 16, seed);
+        let bits = sng.bits_packed(l);
+        let mut fsm = StanhFsm::new(n_states);
+        let out = fsm.run_packed(&bits, l);
+        2.0 * count_ones(&out, l) as f64 / l as f64 - 1.0
+    }
+
+    #[test]
+    fn approximates_tanh() {
+        // Ideal stanh(n, x) = tanh(n/2 * x) assumes i.i.d. input bits; an
+        // LFSR comparator's serial correlation softens the effective gain
+        // (a known SC effect), so the structural contract is: odd-symmetric
+        // sigmoid bracketed between tanh(x) and tanh(n/2 * x).
+        let l = 65535;
+        assert!(stanh_decode(0.0, 8, l, 42).abs() < 0.1);
+        for &v in &[-0.8, -0.3, 0.3, 0.8] {
+            let got = stanh_decode(v, 8, l, 42);
+            let lo = (v as f64).tanh();
+            let hi = (4.0 * v as f64).tanh();
+            let (lo, hi) = if lo < hi { (lo, hi) } else { (hi, lo) };
+            assert!(got >= lo - 0.1 && got <= hi + 0.1, "v={v} got={got} range [{lo},{hi}]");
+            assert_eq!(got.signum(), (v as f64).signum(), "sign mismatch at {v}");
+        }
+    }
+
+    #[test]
+    fn saturates_at_extremes() {
+        let l = 16384;
+        assert!(stanh_decode(0.9, 8, l, 1) > 0.95);
+        assert!(stanh_decode(-0.9, 8, l, 1) < -0.95);
+    }
+
+    #[test]
+    fn monotone_in_input() {
+        let l = 32768;
+        let vals: Vec<f64> = [-0.6, -0.2, 0.2, 0.6].iter().map(|&v| stanh_decode(v, 8, l, 3)).collect();
+        for w in vals.windows(2) {
+            assert!(w[0] < w[1], "{vals:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn odd_states_rejected() {
+        StanhFsm::new(5);
+    }
+
+    #[test]
+    fn counter_saturates_not_wraps() {
+        let mut fsm = StanhFsm::new(4);
+        for _ in 0..10 {
+            fsm.step(true);
+        }
+        assert_eq!(fsm.state, 3);
+        for _ in 0..10 {
+            fsm.step(false);
+        }
+        assert_eq!(fsm.state, 0);
+    }
+}

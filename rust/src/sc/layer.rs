@@ -1,0 +1,156 @@
+//! Bitstream-exact SC dot product and MLP layer.
+//!
+//! Stream seeding is bit-identical to the python twin
+//! (`ref.sc_exact_dot`): input stream `i` uses seed
+//! `seed * 2654435761 + i + 1`; weight stream `(i, j)` uses
+//! `(seed + 7919) * 40503 + i * n_out + j + 1`.  Python computes these in
+//! arbitrary precision and masks to the LFSR width; wrapping u64
+//! arithmetic preserves exactly the low bits the mask keeps.
+
+use super::sng::Sng;
+use super::ScConfig;
+
+/// LFSR width used by the exact simulator (same as the python twin).
+pub const STREAM_WIDTH: u32 = 16;
+
+/// Bitstream-exact bipolar SC dot product.
+///
+/// `x`: fan_in values in [-1, 1]; `w`: row-major (fan_in, n_out) values in
+/// [-1, 1].  Returns the n_out estimates of `x @ w`.
+pub fn sc_dot(x: &[f32], w: &[f32], n_out: usize, cfg: ScConfig, seed: u64) -> Vec<f64> {
+    let fan_in = x.len();
+    assert_eq!(w.len(), fan_in * n_out, "weight shape mismatch");
+    let l = cfg.seq_len;
+    // Pre-generate packed input streams (reused across all outputs).
+    let x_bits: Vec<Vec<u64>> = (0..fan_in)
+        .map(|i| {
+            let s = seed.wrapping_mul(2654435761).wrapping_add(i as u64 + 1);
+            Sng::bipolar(x[i] as f64, STREAM_WIDTH, s).bits_packed(l)
+        })
+        .collect();
+    let wseed = seed.wrapping_add(7919).wrapping_mul(40503);
+    let mut out = Vec::with_capacity(n_out);
+    for j in 0..n_out {
+        let mut total_ones = 0u64;
+        for i in 0..fan_in {
+            let s = wseed.wrapping_add((i * n_out + j) as u64 + 1);
+            let w_bits = Sng::bipolar(w[i * n_out + j] as f64, STREAM_WIDTH, s).bits_packed(l);
+            total_ones += super::ops::product_ones(&x_bits[i], &w_bits, l) as u64;
+        }
+        out.push(super::ops::apc_decode(total_ones, fan_in, l));
+    }
+    out
+}
+
+/// Bitstream-exact SC layer: SC dot + exact bias + PReLU on the counter
+/// readout (the paper's LFSM applies the activation in the stochastic
+/// domain; [`super::fsm`] provides that variant — the readout-domain
+/// activation here matches the python twin used for calibration).
+pub fn sc_layer(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    n_out: usize,
+    alpha: f32,
+    cfg: ScConfig,
+    seed: u64,
+    activate: bool,
+) -> Vec<f64> {
+    let mut pre = sc_dot(x, w, n_out, cfg, seed);
+    assert_eq!(b.len(), n_out);
+    for (p, &bi) in pre.iter_mut().zip(b) {
+        *p += bi as f64;
+        if activate && *p < 0.0 {
+            *p *= alpha as f64;
+        }
+    }
+    pre
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_converges_to_true_value() {
+        let mut rng = crate::util::Pcg64::seeded(21);
+        let fan_in = 32;
+        let n_out = 4;
+        let x: Vec<f32> = (0..fan_in).map(|_| (rng.next_f32() * 2.0 - 1.0) * 0.8).collect();
+        let w: Vec<f32> = (0..fan_in * n_out).map(|_| (rng.next_f32() * 2.0 - 1.0) * 0.8).collect();
+        let mut truth = vec![0.0f64; n_out];
+        for i in 0..fan_in {
+            for j in 0..n_out {
+                truth[j] += x[i] as f64 * w[i * n_out + j] as f64;
+            }
+        }
+        let short = sc_dot(&x, &w, n_out, ScConfig::new(256), 9);
+        let long = sc_dot(&x, &w, n_out, ScConfig::new(8192), 9);
+        let err_short: f64 = short.iter().zip(&truth).map(|(a, b)| (a - b).abs()).sum::<f64>() / n_out as f64;
+        let err_long: f64 = long.iter().zip(&truth).map(|(a, b)| (a - b).abs()).sum::<f64>() / n_out as f64;
+        assert!(err_long < err_short, "short {err_short} long {err_long}");
+        assert!(err_long < 0.35, "{err_long}");
+    }
+
+    #[test]
+    fn error_scales_with_model() {
+        // Empirical MAC std within [0.5, 2] x the c*sqrt(fan_in/L) noise
+        // model — the same calibration contract as the python twin.
+        let mut rng = crate::util::Pcg64::seeded(22);
+        let fan_in = 24;
+        let l = 512;
+        let x: Vec<f32> = (0..fan_in).map(|_| rng.next_f32() * 1.6 - 0.8).collect();
+        let w: Vec<f32> = (0..fan_in * 3).map(|_| rng.next_f32() * 1.6 - 0.8).collect();
+        let mut truth = vec![0.0f64; 3];
+        for i in 0..fan_in {
+            for j in 0..3 {
+                truth[j] += x[i] as f64 * w[i * 3 + j] as f64;
+            }
+        }
+        let mut errs = Vec::new();
+        for seed in 0..12u64 {
+            let est = sc_dot(&x, &w, 3, ScConfig::new(l), seed * 131 + 7);
+            errs.extend(est.iter().zip(&truth).map(|(a, b)| a - b));
+        }
+        let std = crate::util::Summary::of(&errs).std;
+        let model = 0.72 * ((fan_in as f64) / l as f64).sqrt();
+        assert!(std > 0.5 * model && std < 2.0 * model, "std {std} model {model}");
+    }
+
+    #[test]
+    fn layer_bias_and_activation() {
+        let x = [0.5f32, -0.5];
+        let w = [0.5f32, -0.5, 0.25, 0.25];
+        let b = [0.1f32, -0.6];
+        let cfg = ScConfig::new(4096);
+        let no_act = sc_layer(&x, &w, &b, 2, 0.25, cfg, 3, false);
+        let act = sc_layer(&x, &w, &b, 2, 0.25, cfg, 3, true);
+        assert!((no_act[0] - act[0]).abs() < 1e-12); // positive: unchanged
+        assert!(no_act[1] < 0.0);
+        assert!((act[1] - no_act[1] * 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_parity_with_python() {
+        // Values produced by python's ref.sc_exact_dot on the same inputs
+        // (see python/tests/test_sc_exact.py) — the cross-language
+        // contract for the whole exact simulator.
+        let x = [0.5f32, -0.25, 0.75, -0.875];
+        let w = [0.5f32, -0.5, 0.25, 0.125, -0.75, 0.375, 0.0625, -0.9375];
+        let got = sc_dot(&x, &w, 2, ScConfig::new(256), 3);
+        assert_eq!(got, vec![-0.3359375, 0.578125]);
+        let got = sc_dot(&x, &w, 2, ScConfig::new(1024), 11);
+        assert_eq!(got, vec![-0.361328125, 0.744140625]);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let x = [0.3f32, 0.7];
+        let w = [0.2f32, -0.1, 0.4, 0.9];
+        let a = sc_dot(&x, &w, 2, ScConfig::new(1024), 5);
+        let b = sc_dot(&x, &w, 2, ScConfig::new(1024), 5);
+        let c = sc_dot(&x, &w, 2, ScConfig::new(1024), 6);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

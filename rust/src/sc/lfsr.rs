@@ -1,0 +1,117 @@
+//! Maximal-length Fibonacci LFSRs — the randomness source of every SNG.
+//!
+//! Taps are identical to the python twin (`ref.lfsr_sequence`); the golden
+//! vectors below are pinned on both sides of the language boundary, so any
+//! drift fails one of the two test suites.
+
+/// Maximal XOR-form taps, indexed by register width.
+fn taps(width: u32) -> &'static [u32] {
+    match width {
+        8 => &[8, 6, 5, 4],
+        10 => &[10, 7],
+        12 => &[12, 11, 10, 4],
+        16 => &[16, 15, 13, 4],
+        _ => panic!("unsupported LFSR width {width} (supported: 8, 10, 12, 16)"),
+    }
+}
+
+/// A Fibonacci LFSR over `width` bits.  Seed 0 is remapped to 1 (the
+/// all-zero state is absorbing).
+#[derive(Clone, Debug)]
+pub struct Lfsr {
+    state: u32,
+    width: u32,
+    mask: u32,
+}
+
+impl Lfsr {
+    /// `seed` may be any u64 (e.g. a hashed stream id); only the low
+    /// `width` bits are kept, matching the python twin exactly.
+    pub fn new(width: u32, seed: u64) -> Self {
+        let _ = taps(width); // validate width eagerly
+        let mask = (1u32 << width) - 1;
+        let state = (seed as u32) & mask;
+        Self { state: if state == 0 { 1 } else { state }, width, mask }
+    }
+
+    /// Current state, then advance.  States are in [1, 2^width - 1].
+    #[inline]
+    pub fn next_state(&mut self) -> u32 {
+        let out = self.state;
+        let mut fb = 0u32;
+        for &t in taps(self.width) {
+            fb ^= self.state >> (t - 1);
+        }
+        self.state = ((self.state << 1) | (fb & 1)) & self.mask;
+        out
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Full period of a maximal LFSR of this width: 2^width - 1.
+    pub fn period(&self) -> usize {
+        (1usize << self.width) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sequence(width: u32, seed: u64, n: usize) -> Vec<u32> {
+        let mut l = Lfsr::new(width, seed);
+        (0..n).map(|_| l.next_state()).collect()
+    }
+
+    #[test]
+    fn golden_vectors_match_python() {
+        // Pinned in python/tests/test_sc_exact.py::test_lfsr_golden_vectors.
+        assert_eq!(sequence(8, 1, 8), vec![1, 2, 4, 8, 17, 35, 71, 142]);
+        assert_eq!(sequence(10, 1, 8), vec![1, 2, 4, 8, 16, 32, 64, 129]);
+        assert_eq!(sequence(16, 0xACE1, 4), vec![44257, 22979, 45958, 26380]);
+    }
+
+    #[test]
+    fn maximal_period_8() {
+        let seq = sequence(8, 1, 255);
+        let mut seen = [false; 256];
+        for s in seq {
+            assert!(s > 0 && s < 256);
+            assert!(!seen[s as usize], "state {s} repeated early");
+            seen[s as usize] = true;
+        }
+    }
+
+    #[test]
+    fn maximal_period_10() {
+        let seq = sequence(10, 7, 1023);
+        let distinct: std::collections::HashSet<u32> = seq.into_iter().collect();
+        assert_eq!(distinct.len(), 1023);
+    }
+
+    #[test]
+    fn maximal_period_16() {
+        let seq = sequence(16, 0xACE1, 65535);
+        let distinct: std::collections::HashSet<u32> = seq.into_iter().collect();
+        assert_eq!(distinct.len(), 65535);
+    }
+
+    #[test]
+    fn zero_seed_remapped() {
+        assert_eq!(sequence(8, 0, 1)[0], 1);
+    }
+
+    #[test]
+    fn seed_masked_to_width() {
+        // python: state = seed & mask -> identical truncation semantics
+        assert_eq!(sequence(8, 0x1_02, 1)[0], 0x02);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported LFSR width")]
+    fn unsupported_width_panics() {
+        Lfsr::new(9, 1);
+    }
+}

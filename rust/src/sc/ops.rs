@@ -1,0 +1,76 @@
+//! Bitstream arithmetic: XNOR multiply and APC accumulate.
+//!
+//! Bipolar SC multiplication is a single XNOR gate per bit pair:
+//! decode(a XNOR b) = decode(a) * decode(b) when the streams are
+//! uncorrelated.  The accurate parallel counter (APC) replaces the
+//! classic (lossy) mux-tree scaled adder with an exact popcount over all
+//! product streams — the design the paper's MLP uses.
+
+use super::sng::count_ones;
+
+/// XNOR of two packed streams (bipolar multiply).  Both must cover `n`
+/// bits; trailing bits of the last word are left dirty and must be masked
+/// by the consumer (count_ones does).
+pub fn xnor_mul(a: &[u64], b: &[u64]) -> Vec<u64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| !(x ^ y)).collect()
+}
+
+/// Popcount of the first `n` bits of an XNOR product stream.
+pub fn product_ones(a: &[u64], b: &[u64], n: usize) -> u32 {
+    let prod = xnor_mul(a, b);
+    count_ones(&prod, n)
+}
+
+/// APC accumulation of `fan_in` product streams over `n` bits: the exact
+/// sum of all product bits.  Decoded: each product stream contributes
+/// 2*ones/n - 1; summing over streams gives the dot-product estimate.
+pub fn apc_decode(total_ones: u64, fan_in: usize, n: usize) -> f64 {
+    2.0 * total_ones as f64 / n as f64 - fan_in as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sc::sng::Sng;
+
+    #[test]
+    fn xnor_identity() {
+        let a = vec![0b1100u64];
+        assert_eq!(xnor_mul(&a, &a), vec![!0u64]);
+    }
+
+    #[test]
+    fn xnor_is_bipolar_multiply() {
+        // Uncorrelated streams (different LFSR seeds): decode(a xnor b)
+        // ~= decode(a) * decode(b).
+        let n = 4095;
+        let (va, vb) = (0.6, -0.4);
+        let mut a = Sng::bipolar(va, 12, 17);
+        let mut b = Sng::bipolar(vb, 12, 7919 * 41 + 3);
+        let pa = a.bits_packed(n);
+        let pb = b.bits_packed(n);
+        let ones = product_ones(&pa, &pb, n);
+        let decoded = 2.0 * ones as f64 / n as f64 - 1.0;
+        assert!((decoded - va * vb).abs() < 0.05, "decoded {decoded} expected {}", va * vb);
+    }
+
+    #[test]
+    fn correlated_streams_bias() {
+        // Same LFSR seed => maximally correlated => decode(a xnor a) = 1,
+        // NOT va*va.  This is the classic SC correlation hazard; the test
+        // documents why every SNG gets an independent seed.
+        let n = 1023;
+        let mut a1 = Sng::bipolar(0.5, 10, 5);
+        let mut a2 = Sng::bipolar(0.5, 10, 5);
+        let ones = product_ones(&a1.bits_packed(n), &a2.bits_packed(n), n);
+        assert_eq!(ones as usize, n);
+    }
+
+    #[test]
+    fn apc_decode_bounds() {
+        assert_eq!(apc_decode(0, 4, 100), -4.0);
+        assert_eq!(apc_decode(400, 4, 100), 4.0);
+        assert_eq!(apc_decode(200, 4, 100), 0.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Stochastic number generators: value -> bitstream.
+//!
+//! A bipolar SNG encodes v in [-1, 1] as a Bernoulli stream with
+//! P(bit = 1) = (v + 1) / 2, by comparing the probability threshold
+//! against successive LFSR states — exactly the comparator circuit of the
+//! paper's Fig. 4, and bit-identical to the python twin
+//! (`ref.sng_bipolar`): bit = (state < floor(p * 2^width)).
+
+use super::lfsr::Lfsr;
+
+/// Generator of one bipolar stochastic stream.
+#[derive(Clone, Debug)]
+pub struct Sng {
+    lfsr: Lfsr,
+    threshold: u32,
+}
+
+impl Sng {
+    /// Encode `value` (clamped into [-1, 1]) using an LFSR of `width`
+    /// bits seeded with `seed`.
+    pub fn bipolar(value: f64, width: u32, seed: u64) -> Self {
+        let v = value.clamp(-1.0, 1.0);
+        let p = (v + 1.0) / 2.0;
+        let denom = (1u64 << width) as f64;
+        let threshold = (p * denom).floor() as u32;
+        Self { lfsr: Lfsr::new(width, seed), threshold }
+    }
+
+    /// Next bit of the stream.
+    #[inline]
+    pub fn next_bit(&mut self) -> bool {
+        self.lfsr.next_state() < self.threshold
+    }
+
+    /// Generate `n` bits packed into u64 words (LSB-first within a word).
+    pub fn bits_packed(&mut self, n: usize) -> Vec<u64> {
+        let mut words = vec![0u64; n.div_ceil(64)];
+        for t in 0..n {
+            if self.next_bit() {
+                words[t / 64] |= 1u64 << (t % 64);
+            }
+        }
+        words
+    }
+
+    /// Decode a packed stream of `n` bits back to a bipolar value.
+    pub fn decode_bipolar(words: &[u64], n: usize) -> f64 {
+        let ones: u32 = count_ones(words, n);
+        2.0 * ones as f64 / n as f64 - 1.0
+    }
+}
+
+/// Popcount over the first `n` bits of a packed stream.
+pub fn count_ones(words: &[u64], n: usize) -> u32 {
+    let full = n / 64;
+    let mut ones: u32 = words[..full].iter().map(|w| w.count_ones()).sum();
+    let rem = n % 64;
+    if rem > 0 {
+        ones += (words[full] & ((1u64 << rem) - 1)).count_ones();
+    }
+    ones
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_mean_tracks_value() {
+        for (value, seed) in [(0.0, 3u64), (0.5, 5), (-0.7, 7), (0.97, 11)] {
+            let width = 12;
+            let n = (1usize << width) - 1; // full period
+            let mut sng = Sng::bipolar(value, width, seed);
+            let words = sng.bits_packed(n);
+            let decoded = Sng::decode_bipolar(&words, n);
+            assert!((decoded - value).abs() < 3.5 / (1 << width) as f64 + 1e-9, "{value} -> {decoded}");
+        }
+    }
+
+    #[test]
+    fn extreme_values() {
+        let mut all_ones = Sng::bipolar(1.0, 8, 1);
+        let w = all_ones.bits_packed(255);
+        assert_eq!(count_ones(&w, 255), 255);
+        let mut all_zeros = Sng::bipolar(-1.0, 8, 1);
+        let w = all_zeros.bits_packed(255);
+        assert_eq!(count_ones(&w, 255), 0);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let mut s = Sng::bipolar(5.0, 8, 1);
+        let w = s.bits_packed(64);
+        assert_eq!(count_ones(&w, 64), 64);
+    }
+
+    #[test]
+    fn packing_roundtrip() {
+        let mut s = Sng::bipolar(0.3, 10, 9);
+        let packed = s.bits_packed(130);
+        let mut s2 = Sng::bipolar(0.3, 10, 9);
+        for t in 0..130 {
+            let bit = (packed[t / 64] >> (t % 64)) & 1 == 1;
+            assert_eq!(bit, s2.next_bit(), "bit {t}");
+        }
+    }
+
+    #[test]
+    fn count_ones_partial_word() {
+        let words = vec![u64::MAX, u64::MAX];
+        assert_eq!(count_ones(&words, 64), 64);
+        assert_eq!(count_ones(&words, 65), 65);
+        assert_eq!(count_ones(&words, 128), 128);
+        assert_eq!(count_ones(&words, 3), 3);
+    }
+
+    #[test]
+    fn matches_python_semantics() {
+        // bit = state < floor(p * 2^w); v=0 -> threshold = 2^(w-1).
+        let mut s = Sng::bipolar(0.0, 8, 1);
+        // states: 1,2,4,8,17,35,71,142 -> threshold 128 -> bits: all < 128
+        // except 142.
+        let bits: Vec<bool> = (0..8).map(|_| s.next_bit()).collect();
+        assert_eq!(bits, vec![true, true, true, true, true, true, true, false]);
+    }
+}

@@ -1,0 +1,329 @@
+//! The serving loop: workload generation, request queueing, cascade
+//! dispatch and reporting.
+//!
+//! Threading model: PJRT is not `Send` (see [`crate::runtime`]), so the
+//! coordinator loop — batcher + cascade + engine — runs on the calling
+//! thread, while a generator thread produces timestamped requests into an
+//! `mpsc` channel (open-loop Poisson or closed-loop).  This mirrors the
+//! single-accelerator IoT deployment the paper targets: one device, one
+//! inference queue.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::config::AriConfig;
+use crate::coordinator::{Batcher, BatcherPolicy, Cascade, EscalationPolicy};
+use crate::data::EvalData;
+use crate::metrics::MetricsRegistry;
+use crate::runtime::Engine;
+use crate::util::Pcg64;
+
+/// One request: a row index into the workload dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub row: usize,
+    pub submitted: Instant,
+}
+
+/// Completed request with its outcome.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub row: usize,
+    pub pred: i32,
+    pub escalated: bool,
+    pub latency: Duration,
+}
+
+/// Aggregated serving report.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub wall: Duration,
+    pub throughput_rps: f64,
+    pub accuracy: f64,
+    /// Agreement with the always-full baseline predictions, if provided.
+    pub full_parity: Option<f64>,
+    pub escalation_fraction: f64,
+    pub energy_uj: f64,
+    pub energy_full_uj: f64,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub mean_latency: Duration,
+}
+
+/// Serving options beyond the config.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    pub escalation: EscalationPolicy,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { escalation: EscalationPolicy::Immediate }
+    }
+}
+
+/// Run a serving session: `cfg.requests` requests drawn (with repetition
+/// if needed) from `data`, at `cfg.arrival_rate` req/s Poisson (or
+/// closed-loop when 0), through the calibrated cascade.
+pub fn run_serving(
+    engine: &mut Engine,
+    cascade: &Cascade,
+    cfg: &AriConfig,
+    data: &EvalData,
+    full_pred: Option<&[i32]>,
+    opts: ServeOptions,
+) -> crate::Result<ServeReport> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let n_requests = cfg.requests;
+    let n_rows = data.n;
+    let rate = cfg.arrival_rate;
+    let seed = cfg.seed;
+    // Generator thread: open-loop Poisson arrivals (or back-to-back).
+    let gen = std::thread::spawn(move || {
+        let mut rng = Pcg64::new(seed, 99);
+        for id in 0..n_requests as u64 {
+            if rate > 0.0 {
+                let gap = rng.exponential(rate);
+                std::thread::sleep(Duration::from_secs_f64(gap));
+            }
+            let row = rng.below(n_rows as u64) as usize;
+            if tx.send(Request { id, row, submitted: Instant::now() }).is_err() {
+                return;
+            }
+        }
+    });
+
+    let metrics = MetricsRegistry::new();
+    let policy = BatcherPolicy::new(cfg.batch_size, Duration::from_micros(cfg.batch_timeout_us));
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    // Deferred-escalation queue (row-gathered inputs + request meta).
+    let mut esc_queue: Vec<(Request, Vec<f32>)> = Vec::new();
+    let mut completions: Vec<Completion> = Vec::with_capacity(n_requests);
+    let mut received = 0usize;
+    let mut chunk = 0u32;
+    let t_start = Instant::now();
+
+    // Helper: dispatch one reduced batch through the cascade.
+    let dispatch = |batch: crate::coordinator::Batch<Request>,
+                        engine: &mut Engine,
+                        esc_queue: &mut Vec<(Request, Vec<f32>)>,
+                        completions: &mut Vec<Completion>,
+                        chunk: &mut u32|
+     -> crate::Result<()> {
+        let n = batch.items.len();
+        let mut x = Vec::with_capacity(n * data.input_dim);
+        for p in &batch.items {
+            x.extend_from_slice(data.row(p.payload.row));
+        }
+        *chunk += 1;
+        metrics.reduced_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        metrics.padded_slots.fetch_add((cascade.reduced.batch - n) as u64, std::sync::atomic::Ordering::Relaxed);
+        match opts.escalation {
+            EscalationPolicy::Immediate => {
+                let out = cascade.infer_batch(engine, &x, n, *chunk)?;
+                metrics.add_energy_uj(out.energy_uj);
+                if out.escalated.iter().any(|&e| e) {
+                    metrics.full_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                let now = Instant::now();
+                for (i, p) in batch.items.iter().enumerate() {
+                    let lat = now.duration_since(p.payload.submitted);
+                    metrics.latency.record(lat);
+                    metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
+                    metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if out.escalated[i] {
+                        metrics.escalated.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    completions.push(Completion {
+                        id: p.payload.id,
+                        row: p.payload.row,
+                        pred: out.pred[i],
+                        escalated: out.escalated[i],
+                        latency: lat,
+                    });
+                }
+            }
+            EscalationPolicy::Deferred => {
+                let red = cascade.run_reduced(engine, &x, n, *chunk)?;
+                metrics.add_energy_uj(n as f64 * cascade.e_reduced);
+                let now = Instant::now();
+                for (i, p) in batch.items.iter().enumerate() {
+                    if crate::margin::accepts(red.margin[i], cascade.threshold) {
+                        let lat = now.duration_since(p.payload.submitted);
+                        metrics.latency.record(lat);
+                        metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        completions.push(Completion {
+                            id: p.payload.id,
+                            row: p.payload.row,
+                            pred: red.pred[i],
+                            escalated: false,
+                            latency: lat,
+                        });
+                    } else {
+                        esc_queue.push((p.payload, data.row(p.payload.row).to_vec()));
+                    }
+                }
+                // Flush the escalation queue when a full batch is ready.
+                while esc_queue.len() >= cascade.full.batch {
+                    flush_escalations(engine, cascade, esc_queue, cascade.full.batch, &metrics, completions, *chunk)?;
+                }
+            }
+        }
+        Ok(())
+    };
+
+    // Main loop: recv with deadline-aware timeout, fire batches.
+    loop {
+        let now = Instant::now();
+        let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                batcher.push_at(req, req.submitted.max(now));
+                received += 1;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Generator finished (or died): flush and exit.
+                if let Some(batch) = batcher.drain() {
+                    dispatch(batch, engine, &mut esc_queue, &mut completions, &mut chunk)?;
+                }
+                break;
+            }
+        }
+        let now = Instant::now();
+        while let Some(batch) = batcher.try_fire(now) {
+            dispatch(batch, engine, &mut esc_queue, &mut completions, &mut chunk)?;
+        }
+        if received >= n_requests && rx.try_recv().is_err() {
+            // Drain the tail.
+            if let Some(batch) = batcher.drain() {
+                dispatch(batch, engine, &mut esc_queue, &mut completions, &mut chunk)?;
+            }
+            if batcher.is_empty() {
+                break;
+            }
+        }
+    }
+    // Flush any deferred escalations left over.
+    while !esc_queue.is_empty() {
+        let take = esc_queue.len().min(cascade.full.batch);
+        flush_escalations(engine, cascade, &mut esc_queue, take, &metrics, &mut completions, chunk)?;
+    }
+    gen.join().ok();
+
+    let wall = t_start.elapsed();
+    let mut accuracy = 0.0;
+    let mut parity_ok = 0usize;
+    for c in &completions {
+        if c.pred == data.y[c.row] {
+            accuracy += 1.0;
+        }
+        if let Some(fp) = full_pred {
+            if c.pred == fp[c.row] {
+                parity_ok += 1;
+            }
+        }
+    }
+    accuracy /= completions.len().max(1) as f64;
+    let energy_uj = metrics.energy_uj();
+    Ok(ServeReport {
+        throughput_rps: completions.len() as f64 / wall.as_secs_f64(),
+        accuracy,
+        full_parity: full_pred.map(|_| parity_ok as f64 / completions.len().max(1) as f64),
+        escalation_fraction: metrics.escalation_fraction(),
+        energy_uj,
+        energy_full_uj: completions.len() as f64 * cascade.e_full,
+        p50: metrics.latency.quantile(0.5),
+        p99: metrics.latency.quantile(0.99),
+        mean_latency: metrics.latency.mean(),
+        completions,
+        wall,
+    })
+}
+
+fn flush_escalations(
+    engine: &mut Engine,
+    cascade: &Cascade,
+    esc_queue: &mut Vec<(Request, Vec<f32>)>,
+    take: usize,
+    metrics: &MetricsRegistry,
+    completions: &mut Vec<Completion>,
+    chunk: u32,
+) -> crate::Result<()> {
+    let drained: Vec<_> = esc_queue.drain(..take).collect();
+    let mut x = Vec::with_capacity(take * drained[0].1.len());
+    for (_, row) in &drained {
+        x.extend_from_slice(row);
+    }
+    let out = cascade.run_full(engine, &x, take, chunk ^ 0x8000_0000)?;
+    metrics.add_energy_uj(take as f64 * cascade.e_full);
+    metrics.full_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let now = Instant::now();
+    for (i, (req, _)) in drained.iter().enumerate() {
+        let lat = now.duration_since(req.submitted);
+        metrics.latency.record(lat);
+        metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        metrics.escalated.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        completions.push(Completion { id: req.id, row: req.row, pred: out.pred[i], escalated: true, latency: lat });
+    }
+    Ok(())
+}
+
+impl ServeReport {
+    /// Savings vs running every request on the full model (eq. 2 realised).
+    pub fn savings(&self) -> f64 {
+        if self.energy_full_uj == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.energy_uj / self.energy_full_uj
+    }
+
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "served {} requests in {:.2?} ({:.0} req/s)\n\
+             accuracy {:.4}{}  escalation {:.2}%\n\
+             latency mean {:?} p50 {:?} p99 {:?}\n\
+             energy {:.1} µJ vs always-full {:.1} µJ -> savings {:.1}%",
+            self.completions.len(),
+            self.wall,
+            self.throughput_rps,
+            self.accuracy,
+            self.full_parity.map(|p| format!(" (parity with full: {p:.4})")).unwrap_or_default(),
+            100.0 * self.escalation_fraction,
+            self.mean_latency,
+            self.p50,
+            self.p99,
+            self.energy_uj,
+            self.energy_full_uj,
+            100.0 * self.savings(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_savings() {
+        let r = ServeReport {
+            completions: vec![],
+            wall: Duration::from_secs(1),
+            throughput_rps: 0.0,
+            accuracy: 0.0,
+            full_parity: None,
+            escalation_fraction: 0.0,
+            energy_uj: 45.0,
+            energy_full_uj: 100.0,
+            p50: Duration::ZERO,
+            p99: Duration::ZERO,
+            mean_latency: Duration::ZERO,
+        };
+        assert!((r.savings() - 0.55).abs() < 1e-12);
+        assert!(r.summary().contains("55.0%"));
+    }
+}

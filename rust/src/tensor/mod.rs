@@ -1,0 +1,228 @@
+//! Minimal f32 matrix substrate for the pure-rust inference engine.
+//!
+//! This is deliberately small: row-major storage, matmul with a blocked
+//! inner loop, and the handful of elementwise ops the MLP needs.  The
+//! PJRT path (`runtime`) is the production engine; this substrate exists
+//! so the SC bitstream simulator and the cross-check baseline (`mlp`)
+//! need no external BLAS.
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self (m,k) @ other (k,n)` — ikj loop order (cache-friendly: the
+    /// inner loop streams a row of `other` and a row of the output).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let o_row = out.row_mut(i);
+            for (p, &a) in a_row.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Add a row vector to every row.
+    pub fn add_row(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            for (v, b) in self.row_mut(r).iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// PReLU with slope `alpha`.
+    pub fn prelu(&mut self, alpha: f32) {
+        self.map_inplace(|v| if v >= 0.0 { v } else { alpha * v });
+    }
+
+    /// Row-wise L2 normalisation (the score mapping of the ARI models).
+    pub fn l2_normalize_rows(&mut self) {
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            let norm = (row.iter().map(|v| v * v).sum::<f32>() + 1e-12).sqrt();
+            for v in row.iter_mut() {
+                *v /= norm;
+            }
+        }
+    }
+
+    /// Row-wise softmax (numerically stable).
+    pub fn softmax_rows(&mut self) {
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+}
+
+/// (pred, margin) of one score row: argmax class and top1 - top2 gap.
+pub fn top2_margin(scores: &[f32]) -> (usize, f32) {
+    assert!(scores.len() >= 2);
+    let (mut i1, mut s1, mut s2) = (0usize, f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for (i, &s) in scores.iter().enumerate() {
+        if s > s1 {
+            s2 = s1;
+            s1 = s;
+            i1 = i;
+        } else if s > s2 {
+            s2 = s;
+        }
+    }
+    (i1, s1 - s2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let eye = Matrix::from_fn(2, 2, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_rejects_bad_shapes() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn bias_and_prelu() {
+        let mut m = Matrix::from_vec(1, 3, vec![-2.0, 0.0, 2.0]);
+        m.add_row(&[1.0, 1.0, 1.0]);
+        m.prelu(0.25);
+        assert_eq!(m.data, vec![-0.25, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalised() {
+        let mut m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        m.softmax_rows();
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(m.get(0, 2) > m.get(0, 1));
+    }
+
+    #[test]
+    fn softmax_handles_large_logits() {
+        let mut m = Matrix::from_vec(1, 2, vec![1000.0, 999.0]);
+        m.softmax_rows();
+        assert!(m.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn top2_margin_basic() {
+        let (pred, margin) = top2_margin(&[0.1, 0.6, 0.3]);
+        assert_eq!(pred, 1);
+        assert!((margin - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top2_margin_ties() {
+        let (pred, margin) = top2_margin(&[0.5, 0.5]);
+        assert_eq!(pred, 0);
+        assert_eq!(margin, 0.0);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut rng = crate::util::Pcg64::seeded(77);
+        for _ in 0..10 {
+            let (m, k, n) = (1 + rng.below(8) as usize, 1 + rng.below(8) as usize, 1 + rng.below(8) as usize);
+            let a = Matrix::from_fn(m, k, |_, _| rng.next_f32() - 0.5);
+            let b = Matrix::from_fn(k, n, |_, _| rng.next_f32() - 0.5);
+            let c = a.matmul(&b);
+            for i in 0..m {
+                for j in 0..n {
+                    let naive: f32 = (0..k).map(|p| a.get(i, p) * b.get(p, j)).sum();
+                    assert!((c.get(i, j) - naive).abs() < 1e-4);
+                }
+            }
+        }
+    }
+}

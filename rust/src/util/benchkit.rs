@@ -1,0 +1,85 @@
+//! Minimal benchmarking kit for the `harness = false` bench targets
+//! (criterion is not in the sandbox's vendored crate set).
+//!
+//! Measures wall time over warmup + timed iterations and prints one
+//! aligned row per case, criterion-style: mean ± std, plus derived
+//! throughput when the caller provides an items-per-iteration count.
+
+use std::time::Instant;
+
+/// One benchmark case result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub iters: usize,
+}
+
+/// Run `f` for `warmup + iters` iterations, timing the last `iters`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / iters as f64;
+    BenchResult { name: name.to_string(), mean_ns: mean, std_ns: var.sqrt(), iters }
+}
+
+fn human_time(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2} s", ns / 1_000_000_000.0)
+    }
+}
+
+impl BenchResult {
+    /// Print `name  mean ± std  [throughput]`.
+    pub fn report(&self, items_per_iter: Option<(u64, &str)>) {
+        let mut line = format!("{:<44} {:>12} ± {:<10}", self.name, human_time(self.mean_ns), human_time(self.std_ns));
+        if let Some((items, unit)) = items_per_iter {
+            let per_sec = items as f64 / (self.mean_ns / 1e9);
+            line.push_str(&format!("  {per_sec:>12.0} {unit}/s"));
+        }
+        println!("{line}");
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(500.0).contains("ns"));
+        assert!(human_time(5_000.0).contains("µs"));
+        assert!(human_time(5_000_000.0).contains("ms"));
+        assert!(human_time(5e9).contains(" s"));
+    }
+}

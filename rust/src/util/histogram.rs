@@ -1,0 +1,157 @@
+//! Fixed-bin histogram used for margin densities (paper Figs. 8/10/11)
+//! and for latency distributions in the server metrics.
+
+/// A fixed-range, fixed-bin-count histogram over f64 samples.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    /// Samples below `lo` / above `hi`.
+    pub underflow: u64,
+    pub overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    /// `n_bins` equal-width bins covering [lo, hi).
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Self { lo, hi, bins: vec![0; n_bins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn record_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.record(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.bins.len() as f64
+    }
+
+    /// (bin_center, count) pairs.
+    pub fn bins(&self) -> Vec<(f64, u64)> {
+        let w = self.bin_width();
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + (i as f64 + 0.5) * w, c))
+            .collect()
+    }
+
+    /// Density per the paper's Fig. 8 definition: count in the bin divided
+    /// by the bin width (and by the total count, to make it a pdf).
+    pub fn densities(&self) -> Vec<(f64, f64)> {
+        let w = self.bin_width();
+        let n = self.count.max(1) as f64;
+        self.bins().into_iter().map(|(c, cnt)| (c, cnt as f64 / (n * w))).collect()
+    }
+
+    /// Quantile from the binned data (approximate, bin-resolution).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let in_range: u64 = self.bins.iter().sum();
+        if in_range == 0 {
+            return self.lo;
+        }
+        let target = (q.clamp(0.0, 1.0) * in_range as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.lo + (i as f64 + 1.0) * self.bin_width();
+            }
+        }
+        self.hi
+    }
+
+    /// Render a compact ASCII bar chart (used by the experiment drivers to
+    /// print figure panels into EXPERIMENTS.md).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let rows = self.bins();
+        let mut out = String::new();
+        for (center, cnt) in rows {
+            let bar = "#".repeat((cnt as usize * width).div_ceil(max as usize).min(width));
+            out.push_str(&format!("{center:8.4} |{bar:<width$}| {cnt}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_binning() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.record(0.05);
+        h.record(0.15);
+        h.record(0.151);
+        assert_eq!(h.bins()[0].1, 1);
+        assert_eq!(h.bins()[1].1, 2);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn under_overflow() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.record(-0.1);
+        h.record(1.0); // hi is exclusive
+        h.record(2.0);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+    }
+
+    #[test]
+    fn densities_integrate_to_one() {
+        let mut h = Histogram::new(0.0, 1.0, 20);
+        let mut p = crate::util::Pcg64::seeded(3);
+        for _ in 0..5000 {
+            h.record(p.next_f64());
+        }
+        let integral: f64 = h.densities().iter().map(|(_, d)| d * h.bin_width()).sum();
+        assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_monotone() {
+        let mut h = Histogram::new(0.0, 1.0, 100);
+        let mut p = crate::util::Pcg64::seeded(4);
+        for _ in 0..10_000 {
+            h.record(p.next_f64());
+        }
+        let q50 = h.quantile(0.5);
+        let q95 = h.quantile(0.95);
+        assert!(q50 < q95);
+        assert!((q50 - 0.5).abs() < 0.05);
+        assert!((q95 - 0.95).abs() < 0.05);
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.record(0.1);
+        let s = h.ascii(10);
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.contains('#'));
+    }
+}

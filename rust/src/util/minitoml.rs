@@ -1,0 +1,247 @@
+//! A deliberately small TOML-subset parser for configuration files.
+//!
+//! Supported: `[section]` headers, `key = value` pairs with string
+//! (`"..."`), integer, float, boolean and flat array (`[1, 2, 3]`)
+//! values, `#` comments and blank lines.  This covers everything the ARI
+//! configs need; the full `toml`/`serde` stack is not in the sandbox's
+//! vendored crate set (DESIGN.md §7).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("minitoml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: section name -> key -> value.  Keys outside any
+/// section land in the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                return Err(ParseError { line: lineno + 1, msg: format!("expected key = value, got {line:?}") });
+            };
+            let value = parse_value(val.trim()).map_err(|msg| ParseError { line: lineno + 1, msg })?;
+            doc.sections.entry(section.clone()).or_default().insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key)?.as_int()
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_float()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            return Err(format!("unterminated string: {s:?}"));
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            return Err(format!("unterminated array: {s:?}"));
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        return inner.split(',').map(|p| parse_value(p.trim())).collect::<Result<Vec<_>, _>>().map(Value::Array);
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = Doc::parse(
+            r#"
+# global
+name = "ari"
+[server]
+port = 8080          # inline comment
+rate = 2.5
+verbose = true
+lens = [64, 128, 256]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("ari"));
+        assert_eq!(doc.get_int("server", "port"), Some(8080));
+        assert_eq!(doc.get_float("server", "rate"), Some(2.5));
+        assert_eq!(doc.get_bool("server", "verbose"), Some(true));
+        let lens = doc.get("server", "lens").unwrap().as_array().unwrap();
+        assert_eq!(lens.len(), 3);
+        assert_eq!(lens[0].as_int(), Some(64));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_float("", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Doc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("", "s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Doc::parse("x = nope").is_err());
+        assert!(Doc::parse("x = \"unterminated").is_err());
+        assert!(Doc::parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = Doc::parse("a = []").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let doc = Doc::parse("a = [1, 2.5, \"x\", true]").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().to_string(), "[1, 2.5, \"x\", true]");
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The sandbox's vendored crate set has no `rand`, `serde`, `toml` or
+//! `proptest`, so this module carries minimal, well-tested replacements:
+//! a PCG-family PRNG, descriptive statistics, a streaming histogram, a
+//! line-oriented mini-TOML parser and a tiny property-testing harness.
+
+pub mod benchkit;
+pub mod histogram;
+pub mod minitoml;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+
+pub use histogram::Histogram;
+pub use prng::Pcg64;
+pub use stats::Summary;

@@ -1,0 +1,169 @@
+//! PCG64 (XSL-RR 128/64) pseudo-random generator.
+//!
+//! Deterministic, seedable and fast; used by workload generators, the SC
+//! simulator's auxiliary seeding and the property-test harness.  Not a
+//! cryptographic RNG.
+
+/// PCG XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const MUL: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed with a stream id; different `(seed, stream)` pairs give
+    /// independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut p = Self { state: 0, inc };
+        p.step();
+        p.state = p.state.wrapping_add(seed as u128);
+        p.step();
+        p
+    }
+
+    /// Seed with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+    }
+
+    /// Next u64.
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Next u32.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).  `n` must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free-enough for our uses: widen-multiply.
+        let m = (self.next_u64() as u128) * (n as u128);
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.next_f64().max(1e-300).ln() / lambda
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut p = Pcg64::seeded(7);
+        let mut mean = 0.0;
+        for _ in 0..10_000 {
+            let v = p.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            mean += v;
+        }
+        mean /= 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut p = Pcg64::seeded(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = p.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Pcg64::seeded(11);
+        let xs: Vec<f64> = (0..20_000).map(|_| p.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut p = Pcg64::seeded(13);
+        let mean: f64 = (0..20_000).map(|_| p.exponential(2.0)).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Pcg64::seeded(15);
+        let mut xs: Vec<u32> = (0..50).collect();
+        p.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

@@ -1,0 +1,123 @@
+//! Descriptive statistics used throughout the experiment harness.
+
+/// Summary statistics of a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute over a slice (empty slices give a zeroed summary).
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Self {
+            n: xs.len(),
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    pub fn of_f32(xs: &[f32]) -> Self {
+        Self::of(&xs.iter().map(|&x| x as f64).collect::<Vec<_>>())
+    }
+}
+
+/// Percentile by linear interpolation on a *sorted* slice; `q` in [0, 1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Percentile of an unsorted slice (copies + sorts).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// The paper's threshold rule (§III-C): given the reduced-model margins of
+/// the elements whose class *changed* between reduced and full model,
+/// return the margin that covers fraction `coverage` of them.
+/// `coverage = 1.0` is `M_max`, `0.99` is `M_99`, `0.95` is `M_95`.
+pub fn margin_threshold(changed_margins: &[f64], coverage: f64) -> f64 {
+    if changed_margins.is_empty() {
+        // No element changes class: any threshold works; 0 accepts all.
+        return 0.0;
+    }
+    percentile(changed_margins, coverage)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(Summary::of(&[]).n, 0);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 3.0);
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_mmax_is_max() {
+        let margins = [0.1, 0.5, 0.3];
+        assert_eq!(margin_threshold(&margins, 1.0), 0.5);
+    }
+
+    #[test]
+    fn threshold_percentiles_ordered() {
+        let margins: Vec<f64> = (0..1000).map(|i| i as f64 / 1000.0).collect();
+        let m95 = margin_threshold(&margins, 0.95);
+        let m99 = margin_threshold(&margins, 0.99);
+        let mmax = margin_threshold(&margins, 1.0);
+        assert!(m95 < m99 && m99 < mmax);
+        assert!((m95 - 0.949).abs() < 0.005);
+    }
+
+    #[test]
+    fn threshold_empty_is_zero() {
+        assert_eq!(margin_threshold(&[], 1.0), 0.0);
+    }
+}

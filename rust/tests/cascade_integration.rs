@@ -1,0 +1,136 @@
+//! Cascade-level integration: calibration + cascaded inference against
+//! real artifacts.  The key ARI invariant — T = Mmax reproduces the full
+//! model's predictions on the calibration set exactly — is checked here
+//! end to end, through PJRT.
+
+use std::path::PathBuf;
+
+use ari::config::{AriConfig, Mode, ThresholdPolicy};
+use ari::coordinator::{Cascade, CascadeSpec};
+use ari::data::VariantKind;
+use ari::runtime::Engine;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        None
+    }
+}
+
+fn spec(dataset: &str, mode: Mode, reduced: usize, threshold: ThresholdPolicy) -> CascadeSpec {
+    let mut cfg = AriConfig::default();
+    cfg.dataset = dataset.into();
+    cfg.mode = mode;
+    cfg.reduced_level = reduced;
+    cfg.full_level = if mode == Mode::Sc { 4096 } else { 16 };
+    cfg.threshold = threshold;
+    cfg.batch_size = 32;
+    CascadeSpec::from_config(&cfg)
+}
+
+#[test]
+fn mmax_gives_exact_full_parity_on_calibration_set() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let n_calib = 1024;
+    let cascade = Cascade::calibrate(
+        &mut engine,
+        spec("fashion_syn", Mode::Fp, 10, ThresholdPolicy::MMax),
+        &data,
+        n_calib,
+    )
+    .unwrap();
+    // Run the cascade over the calibration rows and compare to the full
+    // model run directly.
+    let calib = ari::data::EvalData {
+        x: data.rows(0, n_calib).to_vec(),
+        y: data.y[..n_calib].to_vec(),
+        n: n_calib,
+        input_dim: data.input_dim,
+    };
+    let (served, _) = cascade.infer_dataset(&mut engine, &calib).unwrap();
+    let full_v = engine.manifest.variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
+    let full = engine.run_dataset(&full_v, &calib, 0).unwrap();
+    assert_eq!(served.pred, full.pred, "ARI@Mmax must equal the full model on the calibration set");
+}
+
+#[test]
+fn escalation_fraction_reasonable_and_energy_accounted() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let cascade =
+        Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Fp, 10, ThresholdPolicy::MMax), &data, 2048)
+            .unwrap();
+    let (served, _) = cascade.infer_dataset(&mut engine, &data).unwrap();
+    let f = Cascade::escalation_fraction(&served);
+    assert!(f > 0.0 && f < 0.5, "escalation fraction {f} outside sane band");
+    // Energy accounting identity: E = n*e_r + n_esc*e_f.
+    let n = data.n as f64;
+    let n_esc = served.escalated.iter().filter(|&&e| e).count() as f64;
+    let expect = n * cascade.e_reduced + n_esc * cascade.e_full;
+    assert!((served.energy_uj - expect).abs() < 1e-6);
+    // Savings must be positive at this operating point.
+    assert!(cascade.realised_savings(&served) > 0.2);
+}
+
+#[test]
+fn lower_threshold_escalates_less() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let mut fractions = Vec::new();
+    for policy in [ThresholdPolicy::MMax, ThresholdPolicy::M99, ThresholdPolicy::M95] {
+        let cascade =
+            Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Fp, 10, policy), &data, 2048).unwrap();
+        let (served, _) = cascade.infer_dataset(&mut engine, &data).unwrap();
+        fractions.push(Cascade::escalation_fraction(&served));
+    }
+    assert!(fractions[0] >= fractions[1] && fractions[1] >= fractions[2], "{fractions:?}");
+}
+
+#[test]
+fn sc_cascade_works_and_accuracy_close_to_full() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let cascade =
+        Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Sc, 512, ThresholdPolicy::MMax), &data, 2048)
+            .unwrap();
+    let (served, _) = cascade.infer_dataset(&mut engine, &data).unwrap();
+    let acc: f64 = served.pred.iter().zip(&data.y).filter(|(a, b)| a == b).count() as f64 / data.n as f64;
+    let full_v = engine.manifest.variant("fashion_syn", VariantKind::Sc, 4096, 256).unwrap().clone();
+    let full = engine.run_dataset(&full_v, &data, 512).unwrap();
+    let acc_full = full.accuracy(&data.y);
+    assert!((acc - acc_full).abs() < 0.02, "SC cascade accuracy {acc} vs full {acc_full}");
+}
+
+#[test]
+fn fixed_threshold_zero_never_escalates() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    // T = 0 accepts everything with margin > 0 (ties are escalated).
+    let cascade = Cascade::calibrate(
+        &mut engine,
+        spec("fashion_syn", Mode::Fp, 10, ThresholdPolicy::Fixed(0.0)),
+        &data,
+        256,
+    )
+    .unwrap();
+    let small = ari::data::EvalData {
+        x: data.rows(0, 128).to_vec(),
+        y: data.y[..128].to_vec(),
+        n: 128,
+        input_dim: data.input_dim,
+    };
+    let (served, _) = cascade.infer_dataset(&mut engine, &small).unwrap();
+    let f = Cascade::escalation_fraction(&served);
+    assert!(f < 0.05, "T=0 should accept almost everything, got F={f}");
+    // And energy ≈ n * e_reduced.
+    assert!(served.energy_uj <= 128.0 * cascade.e_reduced + 8.0 * cascade.e_full);
+}

@@ -1,0 +1,131 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! state) via the in-crate proptest harness — no PJRT needed, so these
+//! run in any checkout.
+
+use std::time::{Duration, Instant};
+
+use ari::coordinator::{Batcher, BatcherPolicy};
+use ari::margin::{accepts, Calibration};
+use ari::util::proptest::{run, Config};
+use ari::util::stats::margin_threshold;
+
+/// Batching: any interleaving of pushes and fires conserves requests and
+/// preserves FIFO order, and no fired batch ever exceeds max_batch.
+#[test]
+fn batcher_conservation_and_bounds() {
+    run(Config::cases(128), |rng| {
+        let cap = 1 + rng.below(16) as usize;
+        let mut b = Batcher::new(BatcherPolicy::new(cap, Duration::from_micros(rng.below(5000))));
+        let total = rng.below(300) as usize;
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        let mut pushed = 0;
+        while pushed < total || !b.is_empty() {
+            if pushed < total && rng.next_f64() < 0.7 {
+                b.push_at(pushed, t0 + Duration::from_micros(pushed as u64));
+                pushed += 1;
+            } else if let Some(batch) = b.try_fire(t0 + Duration::from_secs(3600)) {
+                assert!(batch.items.len() <= cap, "batch exceeded cap");
+                out.extend(batch.items.iter().map(|p| p.payload));
+            }
+        }
+        assert_eq!(out.len(), total);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i, "FIFO violated");
+        }
+    });
+}
+
+/// Routing: the accept/escalate decision is a threshold function — for
+/// any margins and any T, the set of accepted margins is exactly
+/// {m : m > T}, and escalation_fraction is its complement's measure.
+#[test]
+fn routing_partition_property() {
+    run(Config::cases(256), |rng| {
+        let n = 1 + rng.below(500) as usize;
+        let margins: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let t = rng.next_f64();
+        let accepted = margins.iter().filter(|&&m| accepts(m, t)).count();
+        let f = Calibration::escalation_fraction(&margins, t);
+        assert!((f - (n - accepted) as f64 / n as f64).abs() < 1e-12);
+    });
+}
+
+/// Calibration state: thresholds are monotone in coverage, and Mmax
+/// dominates every changed margin.
+#[test]
+fn threshold_monotone_in_coverage() {
+    run(Config::cases(256), |rng| {
+        let n = 1 + rng.below(300) as usize;
+        let margins: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let mut last = f64::NEG_INFINITY;
+        for cov in [0.5, 0.9, 0.95, 0.99, 1.0] {
+            let t = margin_threshold(&margins, cov);
+            assert!(t >= last - 1e-12, "threshold not monotone in coverage");
+            last = t;
+        }
+        let mmax = margin_threshold(&margins, 1.0);
+        for &m in &margins {
+            assert!(m <= mmax + 1e-12);
+        }
+    });
+}
+
+/// Calibration bookkeeping: agree + changed == n, and every margin kept
+/// comes from a changed element.
+#[test]
+fn calibration_bookkeeping() {
+    run(Config::cases(256), |rng| {
+        let n = rng.below(400) as usize;
+        let full: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+        let red: Vec<i32> = full
+            .iter()
+            .map(|&p| if rng.next_f64() < 0.1 { (p + 1) % 10 } else { p })
+            .collect();
+        let margins: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let cal = Calibration::from_pairs(&full, &red, &margins);
+        assert_eq!(cal.agree + cal.changed_margins.len(), n);
+        let expected_changed = full.iter().zip(&red).filter(|(a, b)| a != b).count();
+        assert_eq!(cal.changed_margins.len(), expected_changed);
+    });
+}
+
+/// The ARI acceptance rule at T = Mmax can never accept an element that
+/// the calibration saw change class (soundness of the paper's rule).
+#[test]
+fn mmax_soundness_property() {
+    run(Config::cases(256), |rng| {
+        let n = 1 + rng.below(300) as usize;
+        let full: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+        let red: Vec<i32> = full
+            .iter()
+            .map(|&p| if rng.next_f64() < 0.2 { (p + 1 + rng.below(8) as i32) % 10 } else { p })
+            .collect();
+        let margins: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let cal = Calibration::from_pairs(&full, &red, &margins);
+        let t = cal.threshold(ari::config::ThresholdPolicy::MMax);
+        for i in 0..n {
+            if full[i] != red[i] {
+                assert!(!accepts(margins[i], t), "changed element {i} accepted at Mmax");
+            }
+        }
+    });
+}
+
+/// Energy equations: E_ARI is monotone in F and in E_R; savings is the
+/// exact complement of E_ARI/E_F (eq. 1 vs eq. 2 consistency).
+#[test]
+fn energy_equation_properties() {
+    use ari::energy::EnergyModel;
+    run(Config::cases(256), |rng| {
+        let e_f = rng.range_f64(0.1, 5.0);
+        let e_r = rng.range_f64(0.001, e_f);
+        let f1 = rng.next_f64();
+        let f2 = rng.next_f64();
+        let (lo, hi) = if f1 < f2 { (f1, f2) } else { (f2, f1) };
+        assert!(EnergyModel::ari_energy(e_r, e_f, lo) <= EnergyModel::ari_energy(e_r, e_f, hi));
+        let s = EnergyModel::ari_savings(e_r, e_f, lo);
+        let e = EnergyModel::ari_energy(e_r, e_f, lo);
+        assert!((s - (1.0 - e / e_f)).abs() < 1e-12);
+    });
+}

@@ -1,0 +1,134 @@
+//! Failure injection: every loader/runtime error path must fail loudly
+//! with a useful message, never panic or silently mis-serve.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use ari::data::{EvalData, Manifest, VariantKind, Weights};
+use ari::runtime::Engine;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        None
+    }
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ari-fail-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let dir = scratch("nomanifest");
+    let err = match Engine::new(&dir) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected an error"),
+    };
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn corrupt_hlo_file_fails_at_compile_not_at_execute() {
+    let Some(root) = artifacts() else { return };
+    // Build a scratch artifact dir with a valid manifest + weights but a
+    // garbage HLO file.
+    let dir = scratch("badhlo");
+    let ds = dir.join("fashion_syn");
+    std::fs::create_dir_all(&ds).unwrap();
+    for f in ["weights.bin", "weights.meta", "eval.bin", "eval.meta"] {
+        std::fs::copy(root.join("fashion_syn").join(f), ds.join(f)).unwrap();
+    }
+    std::fs::File::create(ds.join("bad.hlo.txt")).unwrap().write_all(b"this is not HLO").unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "ari-manifest v1\n\
+         dataset fashion_syn paper=F input_dim=784 n_classes=10 n_eval=4096 train_acc=0.9\n\
+         variant fashion_syn kind=fp level=16 batch=32 file=bad.hlo.txt\n",
+    )
+    .unwrap();
+    let mut engine = Engine::new(&dir).unwrap();
+    let v = engine.manifest.variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
+    let err = engine.ensure_compiled(&v).unwrap_err().to_string();
+    assert!(err.contains("bad.hlo.txt") || err.contains("parsing"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn truncated_weights_blob_rejected() {
+    let Some(root) = artifacts() else { return };
+    let dir = scratch("truncw");
+    let src = root.join("fashion_syn");
+    let blob = std::fs::read(src.join("weights.bin")).unwrap();
+    std::fs::write(dir.join("weights.bin"), &blob[..blob.len() / 2]).unwrap();
+    std::fs::copy(src.join("weights.meta"), dir.join("weights.meta")).unwrap();
+    let err = Weights::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("overruns"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn eval_label_count_mismatch_rejected() {
+    let dir = scratch("badlabels");
+    // x: (2, 3) f32, y: (3,) i32 — count mismatch.
+    let mut bin = Vec::new();
+    for v in [0f32; 6] {
+        bin.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in [0i32; 3] {
+        bin.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(dir.join("eval.bin"), &bin).unwrap();
+    std::fs::write(
+        dir.join("eval.meta"),
+        "ari-meta v1\ntensor x f32 2 2 3 0 24\ntensor y i32 1 3 24 12\n",
+    )
+    .unwrap();
+    let err = EvalData::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("label count"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn wrong_input_length_rejected_before_reaching_pjrt() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let v = engine.manifest.variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
+    let err = engine.execute(&v, &[0.0f32; 10], None).unwrap_err().to_string();
+    assert!(err.contains("input length"), "{err}");
+}
+
+#[test]
+fn sc_variant_without_key_rejected() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let v = engine.manifest.variant("fashion_syn", VariantKind::Sc, 512, 32).unwrap().clone();
+    let x = vec![0.0f32; 32 * 784];
+    let err = engine.execute(&v, &x, None).unwrap_err().to_string();
+    assert!(err.contains("key"), "{err}");
+}
+
+#[test]
+fn padded_run_bounds_checked() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let v = engine.manifest.variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
+    // n = 0 and n > batch both rejected
+    assert!(engine.run_padded(&v, &[], 0, None).is_err());
+    let x = vec![0.0f32; 33 * 784];
+    assert!(engine.run_padded(&v, &x, 33, None).is_err());
+}
+
+#[test]
+fn manifest_rejects_unknown_kind_and_bad_lines() {
+    let bad = "ari-manifest v1\n\
+               dataset d paper=P input_dim=4 n_classes=2 n_eval=1 train_acc=0.5\n\
+               variant d kind=quantum level=1 batch=1 file=x.hlo.txt\n";
+    assert!(Manifest::parse(Path::new("/tmp"), bad).is_err());
+}

@@ -1,0 +1,184 @@
+//! Cross-language parity: the PJRT runtime executing the AOT-lowered HLO
+//! must reproduce the jax-side golden outputs recorded at export time.
+//!
+//! This is THE correctness signal of the whole bridge: L1 pallas kernel →
+//! L2 jax model → HLO text → xla-crate parse → PJRT compile → execute.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so plain
+//! `cargo test` works in a fresh checkout).
+
+use std::path::{Path, PathBuf};
+
+use ari::data::{TensorFile, VariantKind};
+use ari::runtime::Engine;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        None
+    }
+}
+
+struct GoldenCfg {
+    fp_bits: Vec<usize>,
+    sc_len: usize,
+    key: [u32; 2],
+    batch: usize,
+}
+
+fn read_golden_cfg(dir: &Path) -> GoldenCfg {
+    let text = std::fs::read_to_string(dir.join("golden.cfg")).unwrap();
+    let mut fp_bits = Vec::new();
+    let mut sc_len = 0;
+    let mut key = [0u32; 2];
+    let mut batch = 0;
+    for line in text.lines() {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts.first() {
+            Some(&"fp_bits") => fp_bits = parts[1..].iter().map(|p| p.parse().unwrap()).collect(),
+            Some(&"sc_len") => sc_len = parts[1].parse().unwrap(),
+            Some(&"key") => key = [parts[1].parse().unwrap(), parts[2].parse().unwrap()],
+            Some(&"batch") => batch = parts[1].parse().unwrap(),
+            _ => {}
+        }
+    }
+    GoldenCfg { fp_bits, sc_len, key, batch }
+}
+
+/// Tolerances: the artifacts are executed here by xla_extension 0.5.1,
+/// while the goldens were produced by jax 0.8's bundled XLA.  The two
+/// accumulate dot products in different orders, and the quantising
+/// epilogue turns a 1-ULP pre-rounding difference into a full grid step
+/// (~2^-m relative), which then propagates through 5 layers + softmax.
+/// So: small mean deviation, bounded worst-case deviation, and identical
+/// predictions wherever the margin is not razor-thin.
+fn assert_close(a: &[f32], b: &[f32], atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    let mut sum = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs());
+        sum += (x - y).abs() as f64;
+    }
+    let mean = sum / a.len() as f64;
+    assert!(worst <= atol, "{what}: worst |diff| = {worst} > {atol}");
+    assert!(mean <= atol as f64 / 4.0, "{what}: mean |diff| = {mean} too high");
+}
+
+#[test]
+fn fp_variants_match_jax_golden() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    for ds in engine.manifest.dataset_names().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let dir = root.join(&ds);
+        let cfg = read_golden_cfg(&dir);
+        let golden = TensorFile::open(&dir.join("golden")).unwrap();
+        let eval = engine.eval_data(&ds).unwrap();
+        let x = eval.rows(0, cfg.batch).to_vec();
+        for &bits in &cfg.fp_bits {
+            let v = engine.manifest.variant(&ds, VariantKind::Fp, bits, cfg.batch).unwrap().clone();
+            let out = engine.execute(&v, &x, None).unwrap();
+            let g_scores = golden.get(&format!("fp{bits}.scores")).unwrap().as_f32().unwrap();
+            let g_pred = golden.get(&format!("fp{bits}.pred")).unwrap().as_i32().unwrap();
+            let g_margin = golden.get(&format!("fp{bits}.margin")).unwrap().as_f32().unwrap();
+            assert_close(&out.scores, &g_scores, 2e-2, &format!("{ds}/fp{bits} scores"));
+            assert_close(&out.margin, &g_margin, 4e-2, &format!("{ds}/fp{bits} margin"));
+            // predictions may only differ where the margin is razor-thin
+            let mism = out
+                .pred
+                .iter()
+                .zip(&g_pred)
+                .enumerate()
+                .filter(|(i, (a, b))| a != b && g_margin[*i] > 5e-2)
+                .count();
+            assert_eq!(mism, 0, "{ds}/fp{bits}: solid-margin prediction mismatches");
+        }
+    }
+}
+
+#[test]
+fn sc_variant_matches_jax_golden() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    for ds in engine.manifest.dataset_names().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let dir = root.join(&ds);
+        let cfg = read_golden_cfg(&dir);
+        let golden = TensorFile::open(&dir.join("golden")).unwrap();
+        let eval = engine.eval_data(&ds).unwrap();
+        let x = eval.rows(0, cfg.batch).to_vec();
+        let l = cfg.sc_len;
+        let v = engine.manifest.variant(&ds, VariantKind::Sc, l, cfg.batch).unwrap().clone();
+        let out = engine.execute(&v, &x, Some(cfg.key)).unwrap();
+        let g_scores = golden.get(&format!("sc{l}.scores")).unwrap().as_f32().unwrap();
+        let g_margin = golden.get(&format!("sc{l}.margin")).unwrap().as_f32().unwrap();
+        // Same key -> same threefry stream -> same noise; tolerance covers
+        // XLA-version float differences only.
+        assert_close(&out.scores, &g_scores, 2e-2, &format!("{ds}/sc{l} scores"));
+        assert_close(&out.margin, &g_margin, 4e-2, &format!("{ds}/sc{l} margin"));
+    }
+}
+
+#[test]
+fn pjrt_matches_pure_rust_engine_fp16() {
+    // Independent implementation cross-check: the pure-rust FpEngine and
+    // the PJRT executable must agree on FP16 (both emulate the same
+    // datapath; tolerance covers accumulation-order ULPs through softmax).
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let ds = "fashion_syn";
+    engine.load_dataset(ds).unwrap();
+    let eval = engine.eval_data(ds).unwrap();
+    let n = 32;
+    let x = eval.rows(0, n).to_vec();
+    let v = engine.manifest.variant(ds, VariantKind::Fp, 16, 32).unwrap().clone();
+    let pjrt = engine.execute(&v, &x, None).unwrap();
+    let weights = engine.weights(ds).unwrap();
+    let rust = ari::mlp::FpEngine::new(weights, ari::quant::FpFormat::FP16).forward(&x, n);
+    let mut agree = 0;
+    for i in 0..n {
+        if pjrt.pred[i] == rust.pred[i] {
+            agree += 1;
+        }
+    }
+    assert!(agree >= n - 1, "pure-rust vs PJRT FP16: only {agree}/{n} prediction agreement");
+    assert_close(&pjrt.scores, &rust.scores.data, 5e-3, "fp16 scores rust-vs-pjrt");
+}
+
+#[test]
+fn run_dataset_chunking_consistent() {
+    // Chunked full-dataset run must equal a manual single-batch run on
+    // the first rows (FP is deterministic).
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let ds = "fashion_syn";
+    let eval = engine.eval_data(ds).unwrap();
+    let small = ari::data::EvalData {
+        x: eval.rows(0, 40).to_vec(),
+        y: eval.y[..40].to_vec(),
+        n: 40,
+        input_dim: eval.input_dim,
+    };
+    let v = engine.manifest.variant(ds, VariantKind::Fp, 10, 32).unwrap().clone();
+    let all = engine.run_dataset(&v, &small, 0).unwrap();
+    assert_eq!(all.pred.len(), 40);
+    let first = engine.execute(&v, eval.rows(0, 32), None).unwrap();
+    assert_eq!(&all.pred[..32], &first.pred[..]);
+    assert_close(&all.margin[..32], &first.margin, 1e-6, "chunk margins");
+}
+
+#[test]
+fn padding_does_not_change_results() {
+    let Some(root) = artifacts() else { return };
+    let mut engine = Engine::new(&root).unwrap();
+    let ds = "fashion_syn";
+    let eval = engine.eval_data(ds).unwrap();
+    let v = engine.manifest.variant(ds, VariantKind::Fp, 10, 32).unwrap().clone();
+    let full = engine.execute(&v, eval.rows(0, 32), None).unwrap();
+    let (padded, waste) = engine.run_padded(&v, eval.rows(0, 7), 7, None).unwrap();
+    assert_eq!(waste, 25);
+    assert_eq!(&padded.pred[..], &full.pred[..7]);
+    assert_close(&padded.margin, &full.margin[..7], 1e-6, "padded margins");
+}
