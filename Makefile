@@ -1,0 +1,38 @@
+# ARI build entry points.
+#
+# The rust workspace is fully self-contained (offline, no artifacts
+# needed) with default features; `make artifacts` runs the python
+# build layer to train + AOT-lower the real models for the PJRT path.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test doc fmt bench artifacts artifacts-quick clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+doc:
+	$(CARGO) doc --no-deps
+
+fmt:
+	$(CARGO) fmt --check
+
+bench:
+	$(CARGO) bench
+
+# Train the MLPs and AOT-lower every resolution variant to HLO text
+# (L1/L2 python layer; needs jax).  Output: ./artifacts/
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+# Tiny artifacts for smoke tests (one dataset, two FP levels).
+artifacts-quick:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts --quick
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts

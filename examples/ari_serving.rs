@@ -1,20 +1,21 @@
 //! End-to-end serving driver — the repo's E2E validation (DESIGN.md §5).
 //!
-//! Loads the trained fashion_syn model (full + reduced), prints its
-//! build-time training loss curve, calibrates the ARI threshold, serves
-//! batched requests through the full three-layer stack (rust coordinator
-//! -> PJRT -> AOT-lowered JAX/Pallas HLO), and reports
-//! latency/throughput, escalation fraction, accuracy parity with the
-//! always-full baseline, and modelled energy savings.  The run is
-//! recorded in EXPERIMENTS.md §E2E.
+//! Loads the fashion_syn model (full + reduced), prints its build-time
+//! training loss curve when artifacts exist, calibrates the ARI
+//! threshold, serves batched requests through the stack (rust
+//! coordinator -> active backend), and reports latency/throughput,
+//! escalation fraction, accuracy parity with the always-full baseline,
+//! and modelled energy savings.  The run is recorded in EXPERIMENTS.md
+//! §E2E.
 //!
-//! ```bash
-//! make artifacts && cargo run --release --example ari_serving
-//! ```
+//! Works out of the box on the synthetic fixture suite
+//! (`cargo run --release --example ari_serving`); with `make artifacts`
+//! and `--features pjrt` the same driver exercises the full three-layer
+//! PJRT stack.
 
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
-use ari::runtime::Engine;
+use ari::runtime::{open_backend, Backend, BackendKind};
 use ari::server::{run_serving, ServeOptions};
 
 fn main() -> ari::Result<()> {
@@ -42,10 +43,11 @@ fn main() -> ari::Result<()> {
     }
 
     // 2. Load + calibrate.
-    let mut engine = Engine::new(&cfg.artifacts)?;
+    let mut engine = open_backend(&cfg.artifacts, BackendKind::Auto)?;
+    println!("backend: {}\n", engine.name());
     let data = engine.eval_data(&cfg.dataset)?;
     let t0 = std::time::Instant::now();
-    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, data.n / 2)?;
+    let cascade = Cascade::calibrate(engine.as_mut(), CascadeSpec::from_config(&cfg), &data, data.n / 2)?;
     println!(
         "calibration: {:?} over {} rows -> T = {:.4} ({} changed elements)",
         t0.elapsed(),
@@ -56,7 +58,7 @@ fn main() -> ari::Result<()> {
 
     // 3. Baseline: always-full predictions (for parity + energy compare).
     let full_v = engine
-        .manifest
+        .manifest()
         .variant(&cfg.dataset, cfg.mode.kind(), cfg.full_level, cfg.batch_size)?
         .clone();
     let full_out = engine.run_dataset(&full_v, &data, cfg.seed as u32)?;
@@ -65,7 +67,7 @@ fn main() -> ari::Result<()> {
     // 4. Serve, both escalation policies.
     for (name, esc) in [("immediate", EscalationPolicy::Immediate), ("deferred", EscalationPolicy::Deferred)] {
         let report = run_serving(
-            &mut engine,
+            engine.as_mut(),
             &cascade,
             &cfg,
             &data,
@@ -77,13 +79,14 @@ fn main() -> ari::Result<()> {
     }
 
     // 5. Runtime statistics.
+    let stats = engine.stats();
     println!(
         "engine: {} compiles ({} ms), {} executes, mean {:.0} µs/batch, {:.1} MiB host->device",
-        engine.stats.compiles,
-        engine.stats.compile_ms,
-        engine.stats.executes,
+        stats.compiles,
+        stats.compile_ms,
+        stats.executes,
         engine.mean_execute_us(),
-        engine.stats.h2d_bytes as f64 / (1024.0 * 1024.0)
+        stats.h2d_bytes as f64 / (1024.0 * 1024.0)
     );
     Ok(())
 }

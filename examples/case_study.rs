@@ -2,15 +2,15 @@
 //! cascade reproduces the full model's dataset accuracy exactly, and
 //! report the energy savings at the paper's chosen operating points.
 //!
-//! ```bash
-//! make artifacts && cargo run --release --example case_study
-//! ```
+//! Works out of the box on the synthetic fixture suite
+//! (`cargo run --release --example case_study`); with `make artifacts`
+//! the same driver reproduces the tables on the trained models.
 
-use ari::runtime::Engine;
+use ari::runtime::{open_backend, BackendKind};
 
 fn main() -> ari::Result<()> {
-    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
-    println!("{}", ari::experiments::run_experiment(&mut engine, "table3")?);
-    println!("{}", ari::experiments::run_experiment(&mut engine, "table4")?);
+    let mut engine = open_backend(std::path::Path::new("artifacts"), BackendKind::Auto)?;
+    println!("{}", ari::experiments::run_experiment(engine.as_mut(), "table3")?);
+    println!("{}", ari::experiments::run_experiment(engine.as_mut(), "table4")?);
     Ok(())
 }

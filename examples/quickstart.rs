@@ -1,13 +1,18 @@
-//! Quickstart: load artifacts, calibrate an ARI cascade, classify a few
+//! Quickstart: open a backend, calibrate an ARI cascade, classify a few
 //! samples, and print what the cascade decided.
 //!
+//! Works out of the box on the synthetic fixture suite:
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! or against real artifacts (`make artifacts`, optionally with
+//! `--features pjrt` for the PJRT engine).
 
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{Cascade, CascadeSpec};
-use ari::runtime::Engine;
+use ari::runtime::{open_backend, Backend, BackendKind};
 
 fn main() -> ari::Result<()> {
     let mut cfg = AriConfig::default();
@@ -17,11 +22,12 @@ fn main() -> ari::Result<()> {
     cfg.threshold = ThresholdPolicy::MMax;
     cfg.batch_size = 32;
 
-    let mut engine = Engine::new(&cfg.artifacts)?;
+    let mut engine = open_backend(&cfg.artifacts, BackendKind::Auto)?;
+    println!("backend: {}", engine.name());
     let data = engine.eval_data(&cfg.dataset)?;
 
     // Calibrate the threshold on the first half of the eval split.
-    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, data.n / 2)?;
+    let cascade = Cascade::calibrate(engine.as_mut(), CascadeSpec::from_config(&cfg), &data, data.n / 2)?;
     println!(
         "calibrated: T = {:.4} (Mmax over {} changed elements of {})",
         cascade.threshold,
@@ -34,7 +40,7 @@ fn main() -> ari::Result<()> {
     );
 
     // Classify the first 32 samples with the cascade.
-    let out = cascade.infer_batch(&mut engine, data.rows(0, 32), 32, 0)?;
+    let out = cascade.infer_batch(engine.as_mut(), data.rows(0, 32), 32, 0)?;
     println!("\n sample  label  pred  margin   path");
     for i in 0..32 {
         println!(

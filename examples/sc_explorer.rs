@@ -6,17 +6,17 @@
 //! `c*sqrt(fan_in/L)` model the L1 Pallas kernel uses — the calibration
 //! contract of DESIGN.md §2, on production weights rather than toy data.
 //!
-//! ```bash
-//! make artifacts && cargo run --release --example sc_explorer
-//! ```
+//! Works out of the box on the synthetic fixture suite
+//! (`cargo run --release --example sc_explorer`); with `make artifacts`
+//! the same driver runs on the trained weights.
 
 use ari::mlp::{sc_exact_forward, FpEngine, ScNoiseEngine};
 use ari::quant::FpFormat;
-use ari::runtime::Engine;
+use ari::runtime::{open_backend, Backend, BackendKind};
 use ari::sc::ScConfig;
 
 fn main() -> ari::Result<()> {
-    let mut engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let mut engine = open_backend(std::path::Path::new("artifacts"), BackendKind::Auto)?;
     let ds = "fashion_syn";
     engine.load_dataset(ds)?;
     let data = engine.eval_data(ds)?;

@@ -3,22 +3,19 @@
 //! always-full baseline, plus the batching-policy ablation (batch size ×
 //! escalation policy) called out in DESIGN.md §8.
 //!
-//! Requires `make artifacts`; skips gracefully otherwise.
+//! Runs against `artifacts/` when present (PJRT with `--features pjrt`),
+//! else the synthetic fixture on the native backend.
 
 use std::path::PathBuf;
 
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
-use ari::runtime::Engine;
+use ari::runtime::{open_backend, Backend, BackendKind};
 use ari::server::{run_serving, ServeOptions};
 use ari::util::benchkit::section;
 
 fn main() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !root.join("manifest.txt").exists() {
-        eprintln!("SKIP bench_cascade: run `make artifacts` first");
-        return;
-    }
 
     section("ARI cascade vs always-full, fashion_syn FP10 (closed loop, 1024 req)");
     println!(
@@ -41,10 +38,11 @@ fn main() {
         cfg.threshold = threshold;
         cfg.batch_size = 32;
         cfg.requests = 1024;
-        let mut engine = Engine::new(&root).unwrap();
+        let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
         let data = engine.eval_data(&cfg.dataset).unwrap();
-        let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, 2048).unwrap();
-        let r = run_serving(&mut engine, &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
+        let n_calib = data.n / 2;
+        let cascade = Cascade::calibrate(engine.as_mut(), CascadeSpec::from_config(&cfg), &data, n_calib).unwrap();
+        let r = run_serving(engine.as_mut(), &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
         println!(
             "{:<34} {:>10.0} {:>9.1?} {:>9.1?} {:>10.1} {:>7.1}%",
             name,
@@ -66,10 +64,11 @@ fn main() {
             cfg.reduced_level = 10;
             cfg.batch_size = batch;
             cfg.requests = 512;
-            let mut engine = Engine::new(&root).unwrap();
+            let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
             let data = engine.eval_data(&cfg.dataset).unwrap();
-            let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, 2048).unwrap();
-            let r = run_serving(&mut engine, &cascade, &cfg, &data, None, ServeOptions { escalation: policy }).unwrap();
+            let n_calib = data.n / 2;
+            let cascade = Cascade::calibrate(engine.as_mut(), CascadeSpec::from_config(&cfg), &data, n_calib).unwrap();
+            let r = run_serving(engine.as_mut(), &cascade, &cfg, &data, None, ServeOptions { escalation: policy }).unwrap();
             println!("{:<34} {:>10.0} {:>9.1?} {:>9.1?}", format!("b={batch} {pname}"), r.throughput_rps, r.p50, r.p99);
         }
     }
@@ -83,9 +82,10 @@ fn main() {
     cfg.full_level = 4096;
     cfg.batch_size = 32;
     cfg.requests = 512;
-    let mut engine = Engine::new(&root).unwrap();
+    let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
     let data = engine.eval_data(&cfg.dataset).unwrap();
-    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, 2048).unwrap();
-    let r = run_serving(&mut engine, &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
+    let n_calib = data.n / 2;
+    let cascade = Cascade::calibrate(engine.as_mut(), CascadeSpec::from_config(&cfg), &data, n_calib).unwrap();
+    let r = run_serving(engine.as_mut(), &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
     println!("{}", r.summary());
 }

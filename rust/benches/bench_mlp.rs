@@ -1,33 +1,30 @@
-//! Pure-rust MLP engine vs the PJRT path on the same weights — the
-//! cross-check baseline's cost, and the justification for serving through
-//! PJRT (XLA's fused matmuls win at batch).
+//! Pure-rust MLP engine vs the backend execute path on the same weights —
+//! the cross-check baseline's cost next to whatever substrate is active
+//! (native in the default build, PJRT with `--features pjrt` + real
+//! artifacts: XLA's fused matmuls win at batch).
 //!
-//! Requires `make artifacts`; skips gracefully otherwise.
+//! Runs against `artifacts/` when present, else the synthetic fixture.
 
 use std::path::PathBuf;
 
 use ari::data::VariantKind;
 use ari::mlp::{FpEngine, ScNoiseEngine};
 use ari::quant::FpFormat;
-use ari::runtime::Engine;
+use ari::runtime::{open_backend, Backend, BackendKind};
 use ari::sc::ScConfig;
 use ari::util::benchkit::{bench, section};
 
 fn main() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !root.join("manifest.txt").exists() {
-        eprintln!("SKIP bench_mlp: run `make artifacts` first");
-        return;
-    }
-    let mut engine = Engine::new(&root).unwrap();
-    let ds = "fashion_syn";
-    engine.load_dataset(ds).unwrap();
-    let data = engine.eval_data(ds).unwrap();
+    let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
+    let ds = engine.manifest().datasets[0].name.clone();
+    engine.load_dataset(&ds).unwrap();
+    let data = engine.eval_data(&ds).unwrap();
 
-    section("pure-rust engines, batch 32 (fashion topology)");
+    section(&format!("pure-rust engines, batch 32 ({ds} topology)"));
     let x = data.rows(0, 32).to_vec();
     {
-        let weights = engine.weights(ds).unwrap();
+        let weights = engine.weights(&ds).unwrap();
         for bits in [16u32, 8] {
             let eng = FpEngine::new(weights, FpFormat::fp(bits));
             bench(&format!("rust FpEngine FP{bits}"), 1, 5, || {
@@ -42,13 +39,13 @@ fn main() {
         .report(Some((32, "samples")));
     }
 
-    section("PJRT path, batch 32 (same model)");
+    section(&format!("backend execute path ({}), batch 32 (same model)", engine.name()));
     for (kind, level, key) in
         [(VariantKind::Fp, 16usize, None), (VariantKind::Fp, 8, None), (VariantKind::Sc, 512, Some([1u32, 2u32]))]
     {
-        let v = engine.manifest.variant(ds, kind, level, 32).unwrap().clone();
+        let v = engine.manifest().variant(&ds, kind, level, 32).unwrap().clone();
         engine.execute(&v, &x, key).unwrap(); // warm compile
-        bench(&format!("pjrt {:?} level={level}", kind), 2, 10, || {
+        bench(&format!("{} {:?} level={level}", engine.name(), kind), 2, 10, || {
             std::hint::black_box(engine.execute(&v, &x, key).unwrap());
         })
         .report(Some((32, "samples")));

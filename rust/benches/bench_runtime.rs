@@ -1,32 +1,29 @@
-//! PJRT execute-path bench: per-batch and per-sample cost across
+//! Backend execute-path bench: per-batch and per-sample cost across
 //! resolution variants and batch sizes — the serving-side analogue of the
-//! paper's Tables I/II cost axes (here wall time on the CPU PJRT client;
+//! paper's Tables I/II cost axes (wall time on the active backend;
 //! energy comes from the calibrated model, see bench_energy_model).
 //!
-//! Requires `make artifacts`; skips gracefully otherwise.
+//! Runs against `artifacts/` when present (PJRT with `--features pjrt`),
+//! else the synthetic fixture on the native backend.
 
 use std::path::PathBuf;
 
 use ari::data::VariantKind;
-use ari::runtime::Engine;
+use ari::runtime::{open_backend, Backend, BackendKind};
 use ari::util::benchkit::{bench, section};
 
 fn main() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !root.join("manifest.txt").exists() {
-        eprintln!("SKIP bench_runtime: run `make artifacts` first");
-        return;
-    }
-    let mut engine = Engine::new(&root).unwrap();
-    let ds = "fashion_syn";
-    let data = engine.eval_data(ds).unwrap();
+    let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
+    let ds = engine.manifest().datasets[0].name.clone();
+    let data = engine.eval_data(&ds).unwrap();
 
     for batch in [32usize, 256] {
-        section(&format!("execute, batch {batch} (fashion_syn)"));
+        section(&format!("execute, batch {batch} ({ds}, backend {})", engine.name()));
         let x = data.rows(0, batch).to_vec();
         for (kind, levels) in [(VariantKind::Fp, vec![16usize, 12, 8]), (VariantKind::Sc, vec![4096, 512, 64])] {
             for level in levels {
-                let v = engine.manifest.variant(ds, kind, level, batch).unwrap().clone();
+                let v = engine.manifest().variant(&ds, kind, level, batch).unwrap().clone();
                 let key = match kind {
                     VariantKind::Sc => Some([1u32, 2u32]),
                     VariantKind::Fp => None,
@@ -40,19 +37,20 @@ fn main() {
         }
     }
 
-    section("host->device + padding overhead (batch 32, n=5)");
-    let v = engine.manifest.variant(ds, VariantKind::Fp, 16, 32).unwrap().clone();
+    section("padding overhead (batch 32, n=5)");
+    let v = engine.manifest().variant(&ds, VariantKind::Fp, 16, 32).unwrap().clone();
     let x5 = data.rows(0, 5).to_vec();
     bench("run_padded n=5 into b=32", 1, 8, || {
         std::hint::black_box(engine.run_padded(&v, &x5, 5, None).unwrap());
     })
     .report(Some((5, "samples")));
 
+    let stats = engine.stats();
     println!(
         "\nengine totals: {} compiles / {} ms, {} executes, mean {:.0} µs/execute",
-        engine.stats.compiles,
-        engine.stats.compile_ms,
-        engine.stats.executes,
+        stats.compiles,
+        stats.compile_ms,
+        stats.executes,
         engine.mean_execute_us()
     );
 }

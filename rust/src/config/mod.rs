@@ -34,6 +34,7 @@ pub enum ThresholdPolicy {
 }
 
 impl ThresholdPolicy {
+    /// Parse `mmax | m99 | m95 | <float>`.
     pub fn parse(s: &str) -> crate::Result<Self> {
         Ok(match s {
             "mmax" => ThresholdPolicy::MMax,
@@ -70,11 +71,14 @@ impl std::fmt::Display for ThresholdPolicy {
 /// Resolution family.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
+    /// Truncated-mantissa floating point (levels are bit widths).
     Fp,
+    /// Stochastic computing (levels are sequence lengths).
     Sc,
 }
 
 impl Mode {
+    /// Parse `fp | sc`.
     pub fn parse(s: &str) -> crate::Result<Self> {
         match s {
             "fp" => Ok(Mode::Fp),
@@ -83,6 +87,7 @@ impl Mode {
         }
     }
 
+    /// The manifest [`crate::data::VariantKind`] of this mode.
     pub fn kind(&self) -> crate::data::VariantKind {
         match self {
             Mode::Fp => crate::data::VariantKind::Fp,
@@ -94,21 +99,29 @@ impl Mode {
 /// Full server/cascade configuration.
 #[derive(Clone, Debug)]
 pub struct AriConfig {
+    /// Artifacts directory (manifest + datasets).
     pub artifacts: PathBuf,
+    /// Dataset to serve.
     pub dataset: String,
+    /// Resolution family of the cascade.
     pub mode: Mode,
     /// FP bit width or SC sequence length of the reduced model.
     pub reduced_level: usize,
     /// Level of the full model (FP16 / L=4096 by default).
     pub full_level: usize,
+    /// Threshold selection policy.
     pub threshold: ThresholdPolicy,
     /// Fraction of the eval split used for threshold calibration.
     pub calib_fraction: f64,
+    /// Serving batch size (must match a compiled variant batch).
     pub batch_size: usize,
+    /// Batcher deadline: max microseconds a request waits for a batch.
     pub batch_timeout_us: u64,
+    /// Number of requests a serving session generates.
     pub requests: usize,
     /// Open-loop Poisson arrival rate (req/s); 0 = closed loop.
     pub arrival_rate: f64,
+    /// Workload / SC-key seed.
     pub seed: u64,
 }
 

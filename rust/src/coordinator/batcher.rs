@@ -13,11 +13,14 @@ use std::time::{Duration, Instant};
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherPolicy {
+    /// Fire as soon as this many requests are waiting.
     pub max_batch: usize,
+    /// Fire when the oldest request has waited this long.
     pub max_wait: Duration,
 }
 
 impl BatcherPolicy {
+    /// Validate and build a policy (`max_batch` must be > 0).
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch > 0);
         Self { max_batch, max_wait }
@@ -27,22 +30,29 @@ impl BatcherPolicy {
 /// One pending request.
 #[derive(Debug)]
 pub struct Pending<T> {
+    /// The queued request.
     pub payload: T,
+    /// When it entered the queue.
     pub enqueued: Instant,
 }
 
 /// A drained batch.
 #[derive(Debug)]
 pub struct Batch<T> {
+    /// The drained requests, FIFO order.
     pub items: Vec<Pending<T>>,
     /// Why the batch fired.
     pub reason: FireReason,
 }
 
+/// Why a batch was released.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FireReason {
+    /// `max_batch` requests were waiting.
     Size,
+    /// The oldest request hit `max_wait`.
     Deadline,
+    /// Unconditional shutdown flush.
     Drain,
 }
 
@@ -54,22 +64,27 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// Empty queue under a policy.
     pub fn new(policy: BatcherPolicy) -> Self {
         Self { policy, queue: VecDeque::new() }
     }
 
+    /// Enqueue a request now.
     pub fn push(&mut self, payload: T) {
         self.queue.push_back(Pending { payload, enqueued: Instant::now() });
     }
 
+    /// Enqueue a request with an explicit enqueue time.
     pub fn push_at(&mut self, payload: T, enqueued: Instant) {
         self.queue.push_back(Pending { payload, enqueued });
     }
 
+    /// Requests currently waiting.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

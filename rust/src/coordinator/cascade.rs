@@ -14,21 +14,29 @@ use crate::config::{AriConfig, Mode, ThresholdPolicy};
 use crate::data::{EvalData, VariantRef};
 use crate::energy::EnergyModel;
 use crate::margin::{accepts, Calibration};
-use crate::runtime::{BatchOutputs, Engine};
+use crate::runtime::{Backend, BatchOutputs};
 
 /// Static description of a cascade (what to build from the manifest).
 #[derive(Clone, Debug)]
 pub struct CascadeSpec {
+    /// Dataset to serve.
     pub dataset: String,
+    /// Resolution family.
     pub mode: Mode,
+    /// Level of the reduced (first-pass) model.
     pub reduced_level: usize,
+    /// Level of the full (escalation) model.
     pub full_level: usize,
+    /// Batch size both variants are compiled at.
     pub batch: usize,
+    /// Threshold selection policy.
     pub threshold: ThresholdPolicy,
+    /// SC key seed (ignored for FP).
     pub seed: u32,
 }
 
 impl CascadeSpec {
+    /// Derive a spec from the server configuration.
     pub fn from_config(cfg: &AriConfig) -> Self {
         Self {
             dataset: cfg.dataset.clone(),
@@ -57,7 +65,9 @@ pub enum EscalationPolicy {
 /// Result of one cascaded batch.
 #[derive(Clone, Debug)]
 pub struct CascadeBatch {
+    /// Final predictions (reduced, overwritten by full where escalated).
     pub pred: Vec<i32>,
+    /// Final margins (same overwrite rule).
     pub margin: Vec<f32>,
     /// Which rows were escalated to the full model.
     pub escalated: Vec<bool>,
@@ -69,13 +79,19 @@ pub struct CascadeBatch {
 
 /// A calibrated, servable cascade.
 pub struct Cascade {
+    /// The spec this cascade was built from.
     pub spec: CascadeSpec,
+    /// The reduced (first-pass) variant.
     pub reduced: VariantRef,
+    /// The full (escalation) variant.
     pub full: VariantRef,
+    /// The calibrated margin threshold T.
     pub threshold: f64,
+    /// Calibration statistics T was derived from.
     pub calibration: Calibration,
-    /// Energy per inference of the reduced / full models (µJ).
+    /// Energy per inference of the reduced model (µJ).
     pub e_reduced: f64,
+    /// Energy per inference of the full model (µJ).
     pub e_full: f64,
 }
 
@@ -83,15 +99,15 @@ impl Cascade {
     /// Build and calibrate: runs full + reduced over `calib` rows
     /// [0, n_calib) of the eval split.
     pub fn calibrate(
-        engine: &mut Engine,
+        engine: &mut dyn Backend,
         spec: CascadeSpec,
         data: &EvalData,
         n_calib: usize,
     ) -> crate::Result<Self> {
         anyhow::ensure!(n_calib > 0 && n_calib <= data.n, "bad calibration size {n_calib}");
         let kind = spec.mode.kind();
-        let reduced = engine.manifest.variant(&spec.dataset, kind, spec.reduced_level, spec.batch)?.clone();
-        let full = engine.manifest.variant(&spec.dataset, kind, spec.full_level, spec.batch)?.clone();
+        let reduced = engine.manifest().variant(&spec.dataset, kind, spec.reduced_level, spec.batch)?.clone();
+        let full = engine.manifest().variant(&spec.dataset, kind, spec.full_level, spec.batch)?.clone();
         let calib_slice = EvalData {
             x: data.rows(0, n_calib).to_vec(),
             y: data.y[..n_calib].to_vec(),
@@ -128,12 +144,12 @@ impl Cascade {
 
     /// Reduced-model pass only (used by the server's deferred-escalation
     /// policy, which manages its own escalation queue).
-    pub fn run_reduced(&self, engine: &mut Engine, x: &[f32], n: usize, key_seed: u32) -> crate::Result<BatchOutputs> {
+    pub fn run_reduced(&self, engine: &mut dyn Backend, x: &[f32], n: usize, key_seed: u32) -> crate::Result<BatchOutputs> {
         Ok(engine.run_padded(&self.reduced, x, n, self.key_for(key_seed))?.0)
     }
 
     /// Full-model pass only.
-    pub fn run_full(&self, engine: &mut Engine, x: &[f32], n: usize, key_seed: u32) -> crate::Result<BatchOutputs> {
+    pub fn run_full(&self, engine: &mut dyn Backend, x: &[f32], n: usize, key_seed: u32) -> crate::Result<BatchOutputs> {
         let key = self.key_for(key_seed).map(|[a, b]| [a ^ 0x5A5A_5A5A, b]);
         Ok(engine.run_padded(&self.full, x, n, key)?.0)
     }
@@ -142,7 +158,7 @@ impl Cascade {
     /// `key_seed` feeds SC key derivation (ignored for FP).
     pub fn infer_batch(
         &self,
-        engine: &mut Engine,
+        engine: &mut dyn Backend,
         x: &[f32],
         n: usize,
         key_seed: u32,
@@ -180,7 +196,7 @@ impl Cascade {
     }
 
     /// Run a whole dataset through the cascade (experiment path).
-    pub fn infer_dataset(&self, engine: &mut Engine, data: &EvalData) -> crate::Result<(CascadeBatch, BatchOutputs)> {
+    pub fn infer_dataset(&self, engine: &mut dyn Backend, data: &EvalData) -> crate::Result<(CascadeBatch, BatchOutputs)> {
         let mut agg = CascadeBatch {
             pred: Vec::with_capacity(data.n),
             margin: Vec::with_capacity(data.n),

@@ -25,10 +25,15 @@ impl VariantKind {
 /// One lowered executable: (dataset, kind, level, batch) -> HLO file.
 #[derive(Clone, Debug)]
 pub struct VariantRef {
+    /// Owning dataset name.
     pub dataset: String,
+    /// Resolution family.
     pub kind: VariantKind,
+    /// FP bit width or SC sequence length.
     pub level: usize,
+    /// Compiled batch size.
     pub batch: usize,
+    /// HLO file name inside the dataset directory.
     pub file: String,
 }
 
@@ -42,19 +47,28 @@ impl VariantRef {
 /// One exported dataset.
 #[derive(Clone, Debug)]
 pub struct DatasetEntry {
+    /// Dataset name (directory name under the artifacts root).
     pub name: String,
+    /// The paper dataset this stands in for.
     pub paper_name: String,
+    /// Input feature dimension.
     pub input_dim: usize,
+    /// Number of classes.
     pub n_classes: usize,
+    /// Eval split size.
     pub n_eval: usize,
+    /// Training accuracy recorded at export time.
     pub train_acc: f64,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifacts root directory.
     pub root: PathBuf,
+    /// Exported datasets.
     pub datasets: Vec<DatasetEntry>,
+    /// Lowered executables.
     pub variants: Vec<VariantRef>,
 }
 
@@ -139,6 +153,7 @@ impl Manifest {
         Ok(Self { root: root.to_path_buf(), datasets, variants })
     }
 
+    /// Find a dataset entry by name.
     pub fn dataset(&self, name: &str) -> crate::Result<&DatasetEntry> {
         self.datasets
             .iter()
@@ -146,6 +161,7 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("dataset {name:?} not in manifest (have {:?})", self.dataset_names()))
     }
 
+    /// All dataset names, manifest order.
     pub fn dataset_names(&self) -> Vec<&str> {
         self.datasets.iter().map(|d| d.name.as_str()).collect()
     }

@@ -16,9 +16,13 @@ use std::path::Path;
 /// An evaluation dataset: inputs (n, input_dim) and labels (n,).
 #[derive(Clone, Debug)]
 pub struct EvalData {
+    /// Row-major (n, input_dim) inputs.
     pub x: Vec<f32>,
+    /// Labels, `n` long.
     pub y: Vec<i32>,
+    /// Number of rows.
     pub n: usize,
+    /// Features per row.
     pub input_dim: usize,
 }
 
@@ -48,16 +52,22 @@ impl EvalData {
 /// MLP weights in exporter order: (w, b, alpha) per layer.
 #[derive(Clone, Debug)]
 pub struct Weights {
+    /// Layers in forward order.
     pub layers: Vec<LayerWeights>,
 }
 
+/// One dense layer's parameters.
 #[derive(Clone, Debug)]
 pub struct LayerWeights {
     /// Row-major (in_dim, out_dim).
     pub w: Vec<f32>,
+    /// Input width.
     pub in_dim: usize,
+    /// Output width.
     pub out_dim: usize,
+    /// Bias, `out_dim` long.
     pub b: Vec<f32>,
+    /// PReLU negative slope (applied between hidden layers).
     pub alpha: f32,
 }
 

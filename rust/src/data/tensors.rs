@@ -12,8 +12,11 @@ use std::path::{Path, PathBuf};
 /// Supported element types.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
@@ -27,6 +30,7 @@ impl DType {
         })
     }
 
+    /// Bytes per element.
     pub fn size(&self) -> usize {
         4
     }
@@ -35,22 +39,28 @@ impl DType {
 /// One tensor view into the container.
 #[derive(Clone, Debug)]
 pub struct Tensor {
+    /// Tensor name (header key).
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Shape.
     pub dims: Vec<usize>,
     raw: Vec<u8>,
 }
 
 impl Tensor {
+    /// Product of the dims.
     pub fn element_count(&self) -> usize {
         self.dims.iter().product()
     }
 
+    /// Decode as f32 (errors on dtype mismatch).
     pub fn as_f32(&self) -> crate::Result<Vec<f32>> {
         anyhow::ensure!(self.dtype == DType::F32, "{} is not f32", self.name);
         Ok(self.raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 
+    /// Decode as i32 (errors on dtype mismatch).
     pub fn as_i32(&self) -> crate::Result<Vec<i32>> {
         anyhow::ensure!(self.dtype == DType::I32, "{} is not i32", self.name);
         Ok(self.raw.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
@@ -60,6 +70,7 @@ impl Tensor {
 /// A parsed container: all tensors of one `<base>.bin`/`<base>.meta` pair.
 #[derive(Clone, Debug)]
 pub struct TensorFile {
+    /// Path of the pair without extension.
     pub base: PathBuf,
     entries: BTreeMap<String, Tensor>,
 }
@@ -102,12 +113,14 @@ impl TensorFile {
         Ok(Self { base: base.to_path_buf(), entries })
     }
 
+    /// Look up a tensor by name (error lists what exists).
     pub fn get(&self, name: &str) -> crate::Result<&Tensor> {
         self.entries
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("tensor {name:?} not in {:?} (have: {:?})", self.base, self.names()))
     }
 
+    /// All tensor names in the container.
     pub fn names(&self) -> Vec<&str> {
         self.entries.keys().map(|s| s.as_str()).collect()
     }

@@ -11,7 +11,7 @@ use crate::data::VariantKind;
 use crate::energy::EnergyModel;
 use crate::margin::Calibration;
 use crate::quant::FpFormat;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::sc::ScConfig;
 
 use super::sweep::Sweep;
@@ -22,7 +22,7 @@ struct Row {
 }
 
 fn savings_at_mmax(
-    engine: &mut Engine,
+    engine: &mut dyn Backend,
     sweep: &mut Sweep,
     ds: &str,
     kind: VariantKind,
@@ -43,7 +43,7 @@ fn savings_at_mmax(
     Ok(EnergyModel::ari_savings(e_r, e_f, f))
 }
 
-fn case_study(engine: &mut Engine, kind: VariantKind, paper_rows: &[(&str, usize, f64)]) -> crate::Result<String> {
+fn case_study(engine: &mut dyn Backend, kind: VariantKind, paper_rows: &[(&str, usize, f64)]) -> crate::Result<String> {
     let mut s = String::new();
     s.push_str("dataset        paper_point      paper_savings  ours_at_paper_point  best_point  best_savings\n");
     for &(ds, paper_level, paper_savings) in paper_rows {
@@ -76,7 +76,7 @@ fn case_study(engine: &mut Engine, kind: VariantKind, paper_rows: &[(&str, usize
 }
 
 /// Table III — floating point, no accuracy loss.
-pub fn table3(engine: &mut Engine) -> crate::Result<String> {
+pub fn table3(engine: &mut dyn Backend) -> crate::Result<String> {
     let mut s = String::from("TABLE III — FP energy savings with no dataset accuracy loss (T = Mmax)\n");
     s.push_str(&case_study(
         engine,
@@ -87,7 +87,7 @@ pub fn table3(engine: &mut Engine) -> crate::Result<String> {
 }
 
 /// Table IV — stochastic computing, no accuracy loss.
-pub fn table4(engine: &mut Engine) -> crate::Result<String> {
+pub fn table4(engine: &mut dyn Backend) -> crate::Result<String> {
     let mut s = String::from("TABLE IV — SC energy savings with no dataset accuracy loss (T = Mmax)\n");
     s.push_str(&case_study(
         engine,

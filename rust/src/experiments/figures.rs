@@ -7,7 +7,7 @@ use crate::data::VariantKind;
 use crate::energy::EnergyModel;
 use crate::margin::Calibration;
 use crate::quant::FpFormat;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::sc::ScConfig;
 use crate::util::Histogram;
 
@@ -15,11 +15,11 @@ use super::sweep::{level_label, Sweep};
 
 const POLICIES: [ThresholdPolicy; 3] = [ThresholdPolicy::MMax, ThresholdPolicy::M99, ThresholdPolicy::M95];
 
-fn dataset_names(engine: &Engine) -> Vec<String> {
-    engine.manifest.dataset_names().iter().map(|s| s.to_string()).collect()
+fn dataset_names(engine: &dyn Backend) -> Vec<String> {
+    engine.manifest().dataset_names().iter().map(|s| s.to_string()).collect()
 }
 
-fn energy_for(engine: &mut Engine, ds: &str, kind: VariantKind, level: usize) -> crate::Result<f64> {
+fn energy_for(engine: &mut dyn Backend, ds: &str, kind: VariantKind, level: usize) -> crate::Result<f64> {
     engine.load_dataset(ds)?;
     let dims = engine.weights(ds)?.dims();
     let m = EnergyModel::for_dims(&dims);
@@ -31,12 +31,12 @@ fn energy_for(engine: &mut Engine, ds: &str, kind: VariantKind, level: usize) ->
 
 /// Fig. 5 — accuracy (top) and relative energy per inference (bottom) of
 /// the SC MLP vs sequence length, SVHN.
-pub fn fig5(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig5(engine: &mut dyn Backend) -> crate::Result<String> {
     let ds = "svhn_syn";
     let mut sweep = Sweep::new();
     let mut s = String::from("FIG 5 — SC accuracy & relative energy vs sequence length (SVHN-like)\n");
     s.push_str("seq_len  accuracy  rel_energy_vs_L128\n");
-    let levels = engine.manifest.levels(ds, VariantKind::Sc);
+    let levels = engine.manifest().levels(ds, VariantKind::Sc);
     let e128 = energy_for(engine, ds, VariantKind::Sc, 128)?;
     for &l in levels.iter().rev() {
         let y = sweep.eval(engine, ds)?.y.clone();
@@ -50,7 +50,7 @@ pub fn fig5(engine: &mut Engine) -> crate::Result<String> {
 }
 
 /// Fig. 6 — classification scores of one element at L=4096 vs L=512.
-pub fn fig6(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig6(engine: &mut dyn Backend) -> crate::Result<String> {
     let ds = "svhn_syn";
     let mut sweep = Sweep::new();
     let full = sweep.outputs(engine, ds, VariantKind::Sc, 4096)?.clone();
@@ -105,7 +105,7 @@ fn margin_panel(cal: &Calibration, title: &str) -> String {
 
 /// Fig. 8 — distribution of reduced-model margins over elements that
 /// change class (the paper's SVHN SC L=512 example), with thresholds.
-pub fn fig8(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig8(engine: &mut dyn Backend) -> crate::Result<String> {
     let mut sweep = Sweep::new();
     let cal = sweep.calibration(engine, "svhn_syn", VariantKind::Sc, 4096, 512)?;
     let mut s = String::from("FIG 8 — margin density of class-changing elements (SVHN-like, SC 4096->512)\n");
@@ -114,7 +114,7 @@ pub fn fig8(engine: &mut Engine) -> crate::Result<String> {
     Ok(s)
 }
 
-fn margin_grid(engine: &mut Engine, kind: VariantKind, levels: &[usize], title: &str) -> crate::Result<String> {
+fn margin_grid(engine: &mut dyn Backend, kind: VariantKind, levels: &[usize], title: &str) -> crate::Result<String> {
     let mut sweep = Sweep::new();
     let full = Sweep::full_level(kind);
     let mut s = format!("{title}\n");
@@ -129,7 +129,7 @@ fn margin_grid(engine: &mut Engine, kind: VariantKind, levels: &[usize], title: 
 }
 
 /// Fig. 10 — margin distributions, floating point, removing 4/6/8 bits.
-pub fn fig10(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig10(engine: &mut dyn Backend) -> crate::Result<String> {
     margin_grid(
         engine,
         VariantKind::Fp,
@@ -139,7 +139,7 @@ pub fn fig10(engine: &mut Engine) -> crate::Result<String> {
 }
 
 /// Fig. 11 — margin distributions, stochastic computing, L=1024/256/64.
-pub fn fig11(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig11(engine: &mut dyn Backend) -> crate::Result<String> {
     margin_grid(
         engine,
         VariantKind::Sc,
@@ -150,8 +150,8 @@ pub fn fig11(engine: &mut Engine) -> crate::Result<String> {
 
 /// Threshold/F/savings/accuracy sweeps share this walk.
 fn sweep_rows(
-    engine: &mut Engine,
-    mut row: impl FnMut(&mut Engine, &mut Sweep, &str, VariantKind, usize, &Calibration) -> crate::Result<String>,
+    engine: &mut dyn Backend,
+    mut row: impl FnMut(&mut dyn Backend, &mut Sweep, &str, VariantKind, usize, &Calibration) -> crate::Result<String>,
 ) -> crate::Result<String> {
     let mut s = String::new();
     for kind in [VariantKind::Fp, VariantKind::Sc] {
@@ -169,7 +169,7 @@ fn sweep_rows(
 }
 
 /// Fig. 12 — thresholds Mmax/M99/M95 vs quantisation level.
-pub fn fig12(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig12(engine: &mut dyn Backend) -> crate::Result<String> {
     let mut s = String::from("FIG 12 — margin thresholds vs quantisation level\nlevel  Mmax  M99  M95\n");
     s.push_str(&sweep_rows(engine, |_, _, _, kind, level, cal| {
         Ok(format!(
@@ -185,7 +185,7 @@ pub fn fig12(engine: &mut Engine) -> crate::Result<String> {
 }
 
 /// Fig. 13 — fraction F of inferences that must run the full model.
-pub fn fig13(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig13(engine: &mut dyn Backend) -> crate::Result<String> {
     let mut s = String::from("FIG 13 — escalation fraction F vs quantisation level\nlevel  F@Mmax  F@M99  F@M95\n");
     s.push_str(&sweep_rows(engine, |engine, sweep, ds, kind, level, cal| {
         let margins = sweep.outputs(engine, ds, kind, level)?.margin.clone();
@@ -201,7 +201,7 @@ pub fn fig13(engine: &mut Engine) -> crate::Result<String> {
 }
 
 /// Fig. 14 — energy savings (eq. 2) vs quantisation level.
-pub fn fig14(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig14(engine: &mut dyn Backend) -> crate::Result<String> {
     let mut s = String::from("FIG 14 — ARI energy savings vs quantisation level (eq. 2)\nlevel  savings@Mmax  savings@M99  savings@M95\n");
     s.push_str(&sweep_rows(engine, |engine, sweep, ds, kind, level, cal| {
         let margins = sweep.outputs(engine, ds, kind, level)?.margin.clone();
@@ -220,7 +220,7 @@ pub fn fig14(engine: &mut Engine) -> crate::Result<String> {
 }
 
 /// Fig. 15 — accuracy drop of ARI vs the plain quantised model.
-pub fn fig15(engine: &mut Engine) -> crate::Result<String> {
+pub fn fig15(engine: &mut dyn Backend) -> crate::Result<String> {
     let mut s = String::from(
         "FIG 15 — accuracy drop (percentage points vs full model)\nlevel  ari@Mmax  ari@M99  ari@M95  plain_quantised\n",
     );

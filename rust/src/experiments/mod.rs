@@ -11,7 +11,7 @@ pub mod figures;
 pub mod sweep;
 pub mod tables;
 
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
@@ -20,7 +20,7 @@ pub const ALL: &[&str] = &[
 ];
 
 /// Run one experiment by id.
-pub fn run_experiment(engine: &mut Engine, id: &str) -> crate::Result<String> {
+pub fn run_experiment(engine: &mut dyn Backend, id: &str) -> crate::Result<String> {
     match id {
         "table1" => tables::table1(),
         "table2" => tables::table2(),

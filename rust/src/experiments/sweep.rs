@@ -6,7 +6,7 @@ use std::collections::HashMap;
 
 use crate::data::{EvalData, VariantKind};
 use crate::margin::Calibration;
-use crate::runtime::{BatchOutputs, Engine};
+use crate::runtime::{Backend, BatchOutputs};
 
 /// Batch size used for dataset sweeps (the larger compiled batch).
 pub const SWEEP_BATCH: usize = 256;
@@ -24,12 +24,13 @@ impl Default for Sweep {
 }
 
 impl Sweep {
+    /// Empty cache.
     pub fn new() -> Self {
         Self { outputs: HashMap::new(), eval: HashMap::new() }
     }
 
     /// Eval split of a dataset (cached).
-    pub fn eval<'a>(&'a mut self, engine: &Engine, ds: &str) -> crate::Result<&'a EvalData> {
+    pub fn eval<'a>(&'a mut self, engine: &dyn Backend, ds: &str) -> crate::Result<&'a EvalData> {
         if !self.eval.contains_key(ds) {
             self.eval.insert(ds.to_string(), engine.eval_data(ds)?);
         }
@@ -39,7 +40,7 @@ impl Sweep {
     /// Outputs of (ds, kind, level) over the whole eval split (cached).
     pub fn outputs<'a>(
         &'a mut self,
-        engine: &mut Engine,
+        engine: &mut dyn Backend,
         ds: &str,
         kind: VariantKind,
         level: usize,
@@ -50,7 +51,7 @@ impl Sweep {
                 self.eval.insert(ds.to_string(), engine.eval_data(ds)?);
             }
             let data = &self.eval[ds];
-            let v = engine.manifest.variant(ds, kind, level, SWEEP_BATCH)?.clone();
+            let v = engine.manifest().variant(ds, kind, level, SWEEP_BATCH)?.clone();
             // Seed depends on the level so different SC lengths get
             // independent streams (as independent hardware runs would).
             let out = engine.run_dataset(&v, data, level as u32)?;
@@ -63,7 +64,7 @@ impl Sweep {
     /// paper's protocol (margins of changed elements over "the dataset").
     pub fn calibration(
         &mut self,
-        engine: &mut Engine,
+        engine: &mut dyn Backend,
         ds: &str,
         kind: VariantKind,
         full_level: usize,
@@ -84,9 +85,9 @@ impl Sweep {
 
     /// Reduced levels available in the manifest, descending, excluding
     /// the full model.
-    pub fn reduced_levels(engine: &Engine, ds: &str, kind: VariantKind) -> Vec<usize> {
+    pub fn reduced_levels(engine: &dyn Backend, ds: &str, kind: VariantKind) -> Vec<usize> {
         engine
-            .manifest
+            .manifest()
             .levels(ds, kind)
             .into_iter()
             .filter(|&l| l != Self::full_level(kind))

@@ -9,14 +9,18 @@
 //!   reduced-resolution variants (truncated-mantissa floating point and
 //!   stochastic-computing noise model) are authored in JAX + Pallas and
 //!   AOT-lowered to HLO text (`make artifacts`).
-//! * **L3 (this crate)** — the serving system: a PJRT runtime that loads
-//!   the lowered executables, and the ARI cascade coordinator that runs
-//!   every request on the reduced model first, checks the score margin
-//!   against a calibrated threshold, and escalates only low-margin
-//!   requests to the full model (paper Fig. 7b).
+//! * **L3 (this crate)** — the serving system: a pluggable inference
+//!   [`runtime`] (pure-rust [`runtime::NativeBackend`] by default, a
+//!   PJRT engine for the lowered executables behind the `pjrt` cargo
+//!   feature) and the ARI cascade coordinator that runs every request on
+//!   the reduced model first, checks the score margin against a
+//!   calibrated threshold, and escalates only low-margin requests to the
+//!   full model (paper Fig. 7b).
 //!
-//! Python never runs on the request path; the binary is self-contained
-//! once `artifacts/` exists.
+//! Python never runs on the request path.  With default features the
+//! crate is fully self-contained: no `artifacts/` directory, no native
+//! libraries — the [`runtime::fixture`] module synthesises deterministic
+//! datasets so every test, bench and example runs offline.
 //!
 //! ## Module map
 //!
@@ -28,14 +32,16 @@
 //! | [`tensor`] | minimal f32 matrix substrate |
 //! | [`quant`] | truncated-mantissa FP emulation (rust twin of the L1 kernel) |
 //! | [`sc`] | exact bitstream stochastic-computing simulator (LFSR → SNG → XNOR → APC) |
-//! | [`mlp`] | pure-rust MLP engine over [`quant`]/[`sc`] — the cross-check baseline |
+//! | [`mlp`] | pure-rust MLP engines over [`quant`]/[`sc`] |
 //! | [`energy`] | per-inference energy model calibrated to the paper's Tables I & II |
 //! | [`margin`] | margin statistics + threshold calibration (Mmax / M99 / M95) |
-//! | [`runtime`] | PJRT client wrapper: load HLO text, compile, execute, cache |
+//! | [`runtime`] | the [`runtime::Backend`] trait, native + PJRT backends, fixtures |
 //! | [`coordinator`] | the ARI cascade: batcher, escalation, energy accounting |
 //! | [`server`] | threaded request loop + workload generators |
 //! | [`metrics`] | counters + latency histograms |
 //! | [`experiments`] | regeneration drivers for every paper table & figure |
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

@@ -1,22 +1,29 @@
 //! `ari` — the ARI serving and experiment CLI.
 //!
 //! ```text
-//! ari info       [--artifacts DIR]
-//! ari calibrate  [--artifacts DIR] [overrides…]      threshold table for one cascade
-//! ari serve      [--artifacts DIR] [--config FILE] [--deferred] [overrides…]
-//! ari experiment <id|all> [--artifacts DIR] [--out DIR]
-//! ari bench-exec [--artifacts DIR] [overrides…]      raw PJRT execute timing
+//! ari info       [--artifacts DIR] [--backend B]
+//! ari calibrate  [--artifacts DIR] [--backend B] [overrides…]   threshold table for one cascade
+//! ari serve      [--artifacts DIR] [--backend B] [--config FILE] [--deferred] [overrides…]
+//! ari experiment <id|all> [--artifacts DIR] [--backend B] [--out DIR]
+//! ari bench-exec [--artifacts DIR] [--backend B] [overrides…]   raw execute timing
+//! ari fixture    --out DIR                                      write synthetic artifacts
 //! ```
+//!
+//! `--backend` selects the inference substrate: `auto` (default; PJRT
+//! when compiled in and artifacts exist, else native), `native`
+//! (pure rust; falls back to the deterministic synthetic fixture suite
+//! when there is no artifacts directory), or `pjrt` (requires building
+//! with `--features pjrt`).
 //!
 //! Overrides are `key=value` / `section.key=value` pairs applied on top of
 //! the config file (hand-rolled arg parsing — clap is not in the sandbox's
-//! vendored crate set).
+//! vendored crate set).  See `docs/CONFIG.md` for the full schema.
 
 use std::path::PathBuf;
 
 use ari::config::AriConfig;
 use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
-use ari::runtime::Engine;
+use ari::runtime::{open_backend, Backend, BackendKind};
 use ari::server::{run_serving, ServeOptions};
 
 fn main() {
@@ -29,6 +36,7 @@ fn main() {
 
 struct Cli {
     artifacts: PathBuf,
+    backend: BackendKind,
     config: Option<PathBuf>,
     out: Option<PathBuf>,
     deferred: bool,
@@ -39,6 +47,7 @@ struct Cli {
 fn parse_cli(args: &[String]) -> ari::Result<Cli> {
     let mut cli = Cli {
         artifacts: PathBuf::from("artifacts"),
+        backend: BackendKind::Auto,
         config: None,
         out: None,
         deferred: false,
@@ -49,6 +58,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
     while let Some(a) = it.next() {
         match a.as_str() {
             "--artifacts" => cli.artifacts = PathBuf::from(next_val(&mut it, "--artifacts")?),
+            "--backend" => cli.backend = BackendKind::parse(next_val(&mut it, "--backend")?)?,
             "--config" => cli.config = Some(PathBuf::from(next_val(&mut it, "--config")?)),
             "--out" => cli.out = Some(PathBuf::from(next_val(&mut it, "--out")?)),
             "--deferred" => cli.deferred = true,
@@ -68,8 +78,8 @@ fn next_val<'a>(it: &mut std::iter::Peekable<std::slice::Iter<'a, String>>, flag
 }
 
 const HELP: &str = "ari — Adaptive Resolution Inference\n\
-commands:\n  info | calibrate | serve | experiment <id|all> | bench-exec\n\
-flags: --artifacts DIR  --config FILE  --out DIR  --deferred\n\
+commands:\n  info | calibrate | serve | experiment <id|all> | bench-exec | fixture\n\
+flags: --artifacts DIR  --backend auto|native|pjrt  --config FILE  --out DIR  --deferred\n\
 overrides: dataset=… mode=fp|sc reduced_level=… threshold=mmax|m99|m95|<f> server.batch_size=… server.requests=… server.arrival_rate=…";
 
 fn load_config(cli: &Cli) -> ari::Result<AriConfig> {
@@ -82,7 +92,7 @@ fn load_config(cli: &Cli) -> ari::Result<AriConfig> {
     Ok(cfg)
 }
 
-fn build_cascade(engine: &mut Engine, cfg: &AriConfig) -> ari::Result<(Cascade, ari::data::EvalData, usize)> {
+fn build_cascade(engine: &mut dyn Backend, cfg: &AriConfig) -> ari::Result<(Cascade, ari::data::EvalData, usize)> {
     let data = engine.eval_data(&cfg.dataset)?;
     let n_calib = ((data.n as f64) * cfg.calib_fraction) as usize;
     let spec = CascadeSpec::from_config(cfg);
@@ -96,23 +106,27 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
     match cmd {
         "help" => println!("{HELP}"),
         "info" => {
-            let engine = Engine::new(&cli.artifacts)?;
-            println!("artifacts: {:?}", cli.artifacts);
-            for d in &engine.manifest.datasets {
+            let engine = open_backend(&cli.artifacts, cli.backend)?;
+            println!("artifacts: {:?} (backend: {})", cli.artifacts, engine.name());
+            for d in &engine.manifest().datasets {
                 println!(
                     "dataset {} (stand-in for {}): input_dim={} n_eval={} train_acc={:.4}",
                     d.name, d.paper_name, d.input_dim, d.n_eval, d.train_acc
                 );
             }
-            println!("variants: {}", engine.manifest.variants.len());
+            println!("variants: {}", engine.manifest().variants.len());
         }
         "calibrate" => {
             let cfg = load_config(&cli)?;
-            let mut engine = Engine::new(&cfg.artifacts)?;
-            let (cascade, _, n_calib) = build_cascade(&mut engine, &cfg)?;
+            let mut engine = open_backend(&cfg.artifacts, cli.backend)?;
+            let (cascade, _, n_calib) = build_cascade(engine.as_mut(), &cfg)?;
             println!(
-                "cascade {}/{:?} reduced={} full={} (calibrated on {n_calib} rows)",
-                cfg.dataset, cfg.mode, cfg.reduced_level, cfg.full_level
+                "cascade {}/{:?} reduced={} full={} (calibrated on {n_calib} rows, backend {})",
+                cfg.dataset,
+                cfg.mode,
+                cfg.reduced_level,
+                cfg.full_level,
+                engine.name()
             );
             println!(
                 "changed elements: {} / {} ({:.3}%)",
@@ -128,30 +142,36 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
         }
         "serve" => {
             let cfg = load_config(&cli)?;
-            let mut engine = Engine::new(&cfg.artifacts)?;
-            let (cascade, data, n_calib) = build_cascade(&mut engine, &cfg)?;
+            let mut engine = open_backend(&cfg.artifacts, cli.backend)?;
+            let (cascade, data, n_calib) = build_cascade(engine.as_mut(), &cfg)?;
             // Baseline full-model predictions for parity reporting.
             let kind = cfg.mode.kind();
-            let full_v = engine.manifest.variant(&cfg.dataset, kind, cfg.full_level, cfg.batch_size)?.clone();
+            let full_v = engine.manifest().variant(&cfg.dataset, kind, cfg.full_level, cfg.batch_size)?.clone();
             let full_out = engine.run_dataset(&full_v, &data, cfg.seed as u32)?;
             let opts = ServeOptions {
                 escalation: if cli.deferred { EscalationPolicy::Deferred } else { EscalationPolicy::Immediate },
             };
             println!(
-                "serving {}: {:?} reduced={} full={} T={:.4} ({}) calib_rows={n_calib}",
-                cfg.dataset, cfg.mode, cfg.reduced_level, cfg.full_level, cascade.threshold, cfg.threshold
+                "serving {}: {:?} reduced={} full={} T={:.4} ({}) calib_rows={n_calib} backend={}",
+                cfg.dataset,
+                cfg.mode,
+                cfg.reduced_level,
+                cfg.full_level,
+                cascade.threshold,
+                cfg.threshold,
+                engine.name()
             );
-            let report = run_serving(&mut engine, &cascade, &cfg, &data, Some(&full_out.pred), opts)?;
+            let report = run_serving(engine.as_mut(), &cascade, &cfg, &data, Some(&full_out.pred), opts)?;
             println!("{}", report.summary());
         }
         "experiment" => {
             let id = cli.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
-            let mut engine = Engine::new(&cli.artifacts)?;
+            let mut engine = open_backend(&cli.artifacts, cli.backend)?;
             let ids: Vec<&str> = if id == "all" { ari::experiments::ALL.to_vec() } else { vec![id] };
             for id in ids {
                 eprintln!("[experiment {id}] running…");
                 let t0 = std::time::Instant::now();
-                let report = ari::experiments::run_experiment(&mut engine, id)?;
+                let report = ari::experiments::run_experiment(engine.as_mut(), id)?;
                 eprintln!("[experiment {id}] done in {:.1?}", t0.elapsed());
                 match &cli.out {
                     Some(dir) => {
@@ -166,10 +186,10 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
         }
         "bench-exec" => {
             let cfg = load_config(&cli)?;
-            let mut engine = Engine::new(&cfg.artifacts)?;
+            let mut engine = open_backend(&cfg.artifacts, cli.backend)?;
             let data = engine.eval_data(&cfg.dataset)?;
             let kind = cfg.mode.kind();
-            let v = engine.manifest.variant(&cfg.dataset, kind, cfg.reduced_level, cfg.batch_size)?.clone();
+            let v = engine.manifest().variant(&cfg.dataset, kind, cfg.reduced_level, cfg.batch_size)?.clone();
             let x = data.rows(0, cfg.batch_size.min(data.n)).to_vec();
             let key = match cfg.mode {
                 ari::config::Mode::Sc => Some([1u32, 2u32]),
@@ -183,13 +203,19 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
             }
             let dt = t0.elapsed() / iters;
             println!(
-                "{} batch={} : {:?}/batch = {:.1} µs/sample (compile {} ms)",
+                "{} batch={} ({}): {:?}/batch = {:.1} µs/sample (compile {} ms)",
                 v.key(),
                 cfg.batch_size,
+                engine.name(),
                 dt,
                 dt.as_micros() as f64 / cfg.batch_size as f64,
-                engine.stats.compile_ms
+                engine.stats().compile_ms
             );
+        }
+        "fixture" => {
+            let out = cli.out.clone().ok_or_else(|| anyhow::anyhow!("fixture needs --out DIR"))?;
+            ari::runtime::fixture::write_artifacts(&out, &ari::runtime::fixture::default_specs())?;
+            println!("wrote synthetic artifacts to {out:?}");
         }
         other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
     }

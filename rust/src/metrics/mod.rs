@@ -40,16 +40,19 @@ impl Default for LatencyHist {
 }
 
 impl LatencyHist {
+    /// Record one latency sample.
     pub fn record(&self, d: Duration) {
         self.buckets[bucket_of(d)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Exact mean latency.
     pub fn mean(&self) -> Duration {
         let c = self.count().max(1);
         Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
@@ -97,22 +100,27 @@ pub struct MetricsRegistry {
 }
 
 impl MetricsRegistry {
+    /// Fresh registry with all counters at zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Increment a named ad-hoc counter.
     pub fn bump(&self, name: &str, by: u64) {
         *self.extra.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Account modelled energy (µJ, stored as integer nJ).
     pub fn add_energy_uj(&self, uj: f64) {
         self.energy_nj.fetch_add((uj * 1000.0) as u64, Ordering::Relaxed);
     }
 
+    /// Total modelled energy spent (µJ).
     pub fn energy_uj(&self) -> f64 {
         self.energy_nj.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
+    /// Escalated / completed so far.
     pub fn escalation_fraction(&self) -> f64 {
         let done = self.completed.load(Ordering::Relaxed);
         if done == 0 {

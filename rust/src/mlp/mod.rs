@@ -23,7 +23,9 @@ use crate::util::Pcg64;
 pub struct Outputs {
     /// (batch, n_classes) L2-normalised scores, row-major.
     pub scores: Matrix,
+    /// Predicted class per row.
     pub pred: Vec<i32>,
+    /// Top-1 minus top-2 score gap per row.
     pub margin: Vec<f32>,
 }
 
@@ -60,10 +62,12 @@ impl Outputs {
 /// Truncated-mantissa floating-point engine.
 pub struct FpEngine<'w> {
     weights: &'w Weights,
+    /// The reduced-precision format this engine emulates.
     pub fmt: FpFormat,
 }
 
 impl<'w> FpEngine<'w> {
+    /// Engine over borrowed weights at a fixed format.
     pub fn new(weights: &'w Weights, fmt: FpFormat) -> Self {
         Self { weights, fmt }
     }
@@ -85,6 +89,7 @@ impl<'w> FpEngine<'w> {
 /// SC noise-model engine (rust twin of the `sc_matmul` kernel maths).
 pub struct ScNoiseEngine<'w> {
     weights: &'w Weights,
+    /// The SC configuration (sequence length) being modelled.
     pub cfg: ScConfig,
 }
 
@@ -99,6 +104,7 @@ pub const SC_NOISE_C: f64 = 0.72;
 pub const SC_LFSR_K: f64 = 48.0;
 
 impl<'w> ScNoiseEngine<'w> {
+    /// Engine over borrowed weights at a fixed sequence length.
     pub fn new(weights: &'w Weights, cfg: ScConfig) -> Self {
         Self { weights, cfg }
     }

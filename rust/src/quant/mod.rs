@@ -12,11 +12,14 @@
 /// mantissa bits.  The paper's "FPk" is `FpFormat::fp(k)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct FpFormat {
+    /// Mantissa bits kept (1..=23).
     pub m_bits: u32,
+    /// Exponent bits (2..=8; the paper's family uses 5).
     pub e_bits: u32,
 }
 
 impl FpFormat {
+    /// Build a format from explicit mantissa/exponent widths.
     pub const fn new(m_bits: u32, e_bits: u32) -> Self {
         assert!(m_bits >= 1 && m_bits <= 23);
         assert!(e_bits >= 2 && e_bits <= 8);
@@ -29,8 +32,10 @@ impl FpFormat {
         Self::new(total_bits - 6, 5)
     }
 
+    /// The full model's format (IEEE half precision).
     pub const FP16: FpFormat = FpFormat::fp(16);
 
+    /// Total storage bits: 1 sign + exponent + mantissa.
     pub fn total_bits(&self) -> u32 {
         1 + self.e_bits + self.m_bits
     }

@@ -1,0 +1,302 @@
+//! The [`Backend`] abstraction: everything the cascade, server and
+//! experiment layers need from an inference substrate.
+//!
+//! The ARI decision policy (margin thresholding, escalation, energy
+//! accounting) is independent of *how* a resolution variant is executed.
+//! This trait captures the execution contract — compile-by-variant,
+//! execute a fixed-size batch into [`BatchOutputs`], weight/dataset
+//! lifecycle — so the same coordinator serves:
+//!
+//! * [`crate::runtime::NativeBackend`] — pure rust, self-contained,
+//!   builds and tests offline with zero native dependencies; and
+//! * `pjrt::Engine` (behind the `pjrt` cargo feature) — the PJRT client
+//!   executing the AOT-lowered JAX/Pallas HLO artifacts.
+//!
+//! The trait is object-safe: runtime backend selection goes through
+//! `Box<dyn Backend>` (see [`open_backend`]).
+
+use std::path::Path;
+
+use crate::data::{EvalData, Manifest, VariantKind, VariantRef, Weights};
+
+/// Outputs of one executed batch.
+#[derive(Clone, Debug)]
+pub struct BatchOutputs {
+    /// Row-major `(batch, n_classes)` scores (L2-normalised logits).
+    pub scores: Vec<f32>,
+    /// Predicted class per row.
+    pub pred: Vec<i32>,
+    /// Top-1 minus top-2 score gap per row — the ARI decision signal.
+    pub margin: Vec<f32>,
+    /// Number of rows.
+    pub batch: usize,
+    /// Number of classes per row.
+    pub n_classes: usize,
+}
+
+impl BatchOutputs {
+    /// Accuracy against labels.
+    pub fn accuracy(&self, labels: &[i32]) -> f64 {
+        assert_eq!(labels.len(), self.pred.len());
+        if labels.is_empty() {
+            return 0.0;
+        }
+        let ok = self.pred.iter().zip(labels).filter(|(a, b)| a == b).count();
+        ok as f64 / labels.len() as f64
+    }
+
+    /// One row of scores.
+    pub fn score_row(&self, i: usize) -> &[f32] {
+        &self.scores[i * self.n_classes..(i + 1) * self.n_classes]
+    }
+}
+
+/// Compile/execute statistics (perf accounting), shared by all backends.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Variants compiled (or prepared) so far.
+    pub compiles: u64,
+    /// Total wall time spent compiling, in milliseconds.
+    pub compile_ms: u128,
+    /// Batches executed.
+    pub executes: u64,
+    /// Total wall time spent executing, in microseconds.
+    pub execute_us: u128,
+    /// Host-to-device bytes uploaded (0 for host-resident backends).
+    pub h2d_bytes: u64,
+}
+
+/// An inference substrate the ARI coordinator can serve from.
+///
+/// Implementations provide dataset/weight lifecycle, per-variant
+/// compilation and fixed-size batch execution; the padding/chunking
+/// conveniences ([`Backend::run_padded`], [`Backend::run_dataset`]) are
+/// provided methods shared by every backend.
+///
+/// ```
+/// use ari::data::VariantKind;
+/// use ari::runtime::{Backend, NativeBackend};
+///
+/// let mut backend = NativeBackend::synthetic();
+/// let ds = backend.manifest().datasets[0].name.clone();
+/// let v = backend.manifest().variant(&ds, VariantKind::Fp, 16, 32).unwrap().clone();
+/// let eval = backend.eval_data(&ds).unwrap();
+/// let (out, waste) = backend.run_padded(&v, eval.rows(0, 4), 4, None).unwrap();
+/// assert_eq!(out.pred.len(), 4);
+/// assert_eq!(waste, 28); // 4 rows padded into the compiled batch of 32
+/// ```
+pub trait Backend {
+    /// Short human-readable backend name (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// The variant/dataset manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Ensure a dataset's weights (and eval data, where applicable) are
+    /// loaded and ready for execution.  Idempotent.
+    fn load_dataset(&mut self, name: &str) -> crate::Result<()>;
+
+    /// Loaded weights of a dataset (for cross-check engines and the
+    /// energy model's topology scaling).  The dataset must have been
+    /// loaded via [`Backend::load_dataset`] first.
+    fn weights(&self, name: &str) -> crate::Result<&Weights>;
+
+    /// The eval split of a dataset.
+    fn eval_data(&self, name: &str) -> crate::Result<EvalData>;
+
+    /// Compile (or fetch from cache) a variant's executable.  Idempotent.
+    fn ensure_compiled(&mut self, v: &VariantRef) -> crate::Result<()>;
+
+    /// Execute one batch on a variant.  `x` must be exactly
+    /// `v.batch * input_dim` long (use [`Backend::run_padded`] for
+    /// partial batches).  `sc_key` is required for SC variants (the same
+    /// key always reproduces the same stochastic stream) and ignored for
+    /// FP variants.
+    fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs>;
+
+    /// Compile/execute statistics accumulated so far.
+    fn stats(&self) -> EngineStats;
+
+    /// Execute `n <= v.batch` rows by zero-padding to the compiled batch
+    /// size; outputs are truncated back to `n`.  Returns the padding
+    /// waste (unused slots) for the metrics.
+    fn run_padded(
+        &mut self,
+        v: &VariantRef,
+        x: &[f32],
+        n: usize,
+        sc_key: Option<[u32; 2]>,
+    ) -> crate::Result<(BatchOutputs, usize)> {
+        let input_dim = self.manifest().dataset(&v.dataset)?.input_dim;
+        anyhow::ensure!(n > 0 && n <= v.batch, "n={n} out of range for batch {}", v.batch);
+        anyhow::ensure!(x.len() == n * input_dim, "input length mismatch");
+        let waste = v.batch - n;
+        let out = if waste == 0 {
+            self.execute(v, x, sc_key)?
+        } else {
+            let mut padded = vec![0.0f32; v.batch * input_dim];
+            padded[..x.len()].copy_from_slice(x);
+            let mut o = self.execute(v, &padded, sc_key)?;
+            o.scores.truncate(n * o.n_classes);
+            o.pred.truncate(n);
+            o.margin.truncate(n);
+            o.batch = n;
+            o
+        };
+        Ok((out, waste))
+    }
+
+    /// Run a whole dataset through a variant (chunked by the variant's
+    /// batch size, last chunk padded).  For SC variants each chunk gets
+    /// key `[seed, chunk_index]` — deterministic and chunk-decorrelated.
+    fn run_dataset(&mut self, v: &VariantRef, data: &EvalData, seed: u32) -> crate::Result<BatchOutputs> {
+        let mut scores = Vec::with_capacity(data.n * 10);
+        let mut pred = Vec::with_capacity(data.n);
+        let mut margin = Vec::with_capacity(data.n);
+        let mut n_classes = 0;
+        let mut chunk = 0u32;
+        let mut lo = 0usize;
+        while lo < data.n {
+            let hi = (lo + v.batch).min(data.n);
+            let key = match v.kind {
+                VariantKind::Sc => Some([seed, chunk]),
+                VariantKind::Fp => None,
+            };
+            let (out, _) = self.run_padded(v, data.rows(lo, hi), hi - lo, key)?;
+            n_classes = out.n_classes;
+            scores.extend_from_slice(&out.scores);
+            pred.extend_from_slice(&out.pred);
+            margin.extend_from_slice(&out.margin);
+            lo = hi;
+            chunk += 1;
+        }
+        Ok(BatchOutputs { scores, pred, margin, batch: data.n, n_classes })
+    }
+
+    /// Mean execute time per batch (µs).
+    fn mean_execute_us(&self) -> f64 {
+        let stats = self.stats();
+        if stats.executes == 0 {
+            0.0
+        } else {
+            stats.execute_us as f64 / stats.executes as f64
+        }
+    }
+}
+
+/// Which backend [`open_backend`] should construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when compiled in and artifacts exist, else native.
+    Auto,
+    /// The pure-rust [`crate::runtime::NativeBackend`].
+    Native,
+    /// The PJRT engine (requires the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse `auto | native | pjrt`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => anyhow::bail!("unknown backend {other:?} (auto|native|pjrt)"),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendKind::Auto => write!(f, "auto"),
+            BackendKind::Native => write!(f, "native"),
+            BackendKind::Pjrt => write!(f, "pjrt"),
+        }
+    }
+}
+
+/// Construct a backend.
+///
+/// * [`BackendKind::Native`] — artifacts directory if it has a manifest,
+///   otherwise the deterministic synthetic fixture suite (fully offline).
+/// * [`BackendKind::Pjrt`] — the PJRT engine over `artifacts` (errors
+///   unless built with `--features pjrt`).
+/// * [`BackendKind::Auto`] — PJRT when compiled in *and* artifacts
+///   exist; else native.
+pub fn open_backend(artifacts: &Path, kind: BackendKind) -> crate::Result<Box<dyn Backend>> {
+    let have_artifacts = artifacts.join("manifest.txt").exists();
+    #[cfg(feature = "pjrt")]
+    {
+        if kind == BackendKind::Pjrt {
+            return Ok(Box::new(crate::runtime::pjrt::Engine::new(artifacts)?));
+        }
+        if kind == BackendKind::Auto && have_artifacts {
+            // Auto means "PJRT when available": a failed client
+            // construction (e.g. the compile-only xla stub is linked, or
+            // libxla_extension is missing) falls back to native rather
+            // than failing the whole run.
+            match crate::runtime::pjrt::Engine::new(artifacts) {
+                Ok(engine) => return Ok(Box::new(engine)),
+                Err(e) => eprintln!("[ari] PJRT unavailable ({e}); falling back to the native backend"),
+            }
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    if kind == BackendKind::Pjrt {
+        anyhow::bail!("this binary was built without the `pjrt` feature; rebuild with --features pjrt");
+    }
+    // Native path (explicit, or the auto fallback).
+    if have_artifacts {
+        Ok(Box::new(crate::runtime::NativeBackend::from_artifacts(artifacts)?))
+    } else {
+        Ok(Box::new(crate::runtime::NativeBackend::synthetic()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_outputs_accuracy() {
+        let o = BatchOutputs { scores: vec![0.0; 6], pred: vec![1, 2, 3], margin: vec![0.1; 3], batch: 3, n_classes: 2 };
+        assert!((o.accuracy(&[1, 2, 0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn score_row_indexing() {
+        let o = BatchOutputs {
+            scores: vec![0.1, 0.9, 0.8, 0.2],
+            pred: vec![1, 0],
+            margin: vec![0.8, 0.6],
+            batch: 2,
+            n_classes: 2,
+        };
+        assert_eq!(o.score_row(1), &[0.8, 0.2]);
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("xla").is_err());
+        assert_eq!(BackendKind::Native.to_string(), "native");
+    }
+
+    #[test]
+    fn open_backend_native_falls_back_to_synthetic() {
+        let b = open_backend(Path::new("/nonexistent-artifacts"), BackendKind::Native).unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(!b.manifest().datasets.is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn open_backend_pjrt_errors_without_feature() {
+        let err = open_backend(Path::new("/nonexistent-artifacts"), BackendKind::Pjrt).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+    }
+}

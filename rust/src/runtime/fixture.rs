@@ -1,0 +1,364 @@
+//! Deterministic synthetic fixtures: datasets + weights + manifest that
+//! make the whole stack (backend, cascade, server, experiments) runnable
+//! with **no** `artifacts/` directory and no build-time python step.
+//!
+//! The generator is seeded ([`crate::util::Pcg64`]) and uses no wall
+//! clock, so every run — test, doctest, CI — sees bit-identical data.
+//!
+//! The construction mirrors the paper's setting at miniature scale:
+//! class prototypes are unit-norm gaussian directions; the first layer's
+//! leading columns embed the prototypes (so the network is a working
+//! classifier out of the box); deeper layers are near-identity with
+//! small gaussian mixing.  Eval rows are scaled prototypes plus noise,
+//! with a configurable fraction of "hard" rows (prototype mixtures)
+//! whose margins sit near zero — exactly the elements that change class
+//! under resolution reduction and drive the ARI escalation machinery.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::data::{DatasetEntry, EvalData, LayerWeights, Manifest, VariantKind, VariantRef, Weights};
+use crate::util::Pcg64;
+
+/// FP bit widths every fixture manifest exposes (paper Table I axis).
+pub const FP_LEVELS: [usize; 5] = [16, 14, 12, 10, 8];
+
+/// SC sequence lengths every fixture manifest exposes (Table II axis).
+pub const SC_LEVELS: [usize; 7] = [4096, 2048, 1024, 512, 256, 128, 64];
+
+/// Compiled batch sizes every fixture manifest exposes.
+pub const BATCHES: [usize; 2] = [32, 256];
+
+/// Description of one synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct FixtureSpec {
+    /// Dataset name (manifest key, e.g. `fashion_syn`).
+    pub name: String,
+    /// Paper dataset this stands in for (underscores become spaces).
+    pub paper_name: String,
+    /// Input feature dimension.
+    pub input_dim: usize,
+    /// Number of classes.
+    pub n_classes: usize,
+    /// Hidden layer widths (each must be >= `n_classes`).
+    pub hidden: Vec<usize>,
+    /// Eval split size.
+    pub n_eval: usize,
+    /// Fraction of eval rows built as two-prototype mixtures (the
+    /// near-zero-margin tail that escalates under ARI).
+    pub hard_fraction: f64,
+    /// PRNG seed; same seed, same bytes.
+    pub seed: u64,
+}
+
+impl FixtureSpec {
+    /// A small (fast even in debug builds) spec with sane defaults.
+    pub fn small(name: &str, paper_name: &str, input_dim: usize, seed: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            paper_name: paper_name.to_string(),
+            input_dim,
+            n_classes: 10,
+            hidden: vec![32, 16],
+            n_eval: 512,
+            hard_fraction: 0.12,
+            seed,
+        }
+    }
+}
+
+/// The default three-dataset suite mirroring the paper's evaluation
+/// (Fashion-MNIST / SVHN / CIFAR-10 stand-ins, miniature topologies).
+pub fn default_specs() -> Vec<FixtureSpec> {
+    vec![
+        FixtureSpec::small("fashion_syn", "Fashion-MNIST", 24, 0xF517_0001),
+        FixtureSpec::small("svhn_syn", "SVHN", 28, 0xF517_0002),
+        FixtureSpec::small("cifar10_syn", "CIFAR-10", 32, 0xF517_0003),
+    ]
+}
+
+/// One generated dataset: weights + eval split.
+#[derive(Clone, Debug)]
+pub struct Fixture {
+    /// The spec this was generated from.
+    pub spec: FixtureSpec,
+    /// Trained-looking MLP weights.
+    pub weights: Weights,
+    /// Eval inputs and labels.
+    pub eval: EvalData,
+}
+
+/// Generate the weights and eval split for a spec (deterministic).
+pub fn generate(spec: &FixtureSpec) -> Fixture {
+    let mut rng = Pcg64::new(spec.seed, 7);
+    let n_classes = spec.n_classes;
+
+    // Unit-norm class prototypes.
+    let mut prototypes: Vec<Vec<f32>> = Vec::with_capacity(n_classes);
+    for _ in 0..n_classes {
+        let mut p: Vec<f32> = (0..spec.input_dim).map(|_| rng.normal() as f32).collect();
+        let norm = (p.iter().map(|v| v * v).sum::<f32>()).sqrt().max(1e-6);
+        for v in &mut p {
+            *v /= norm;
+        }
+        prototypes.push(p);
+    }
+
+    // Layer widths: input -> hidden... -> classes.
+    let mut dims = vec![spec.input_dim];
+    dims.extend(spec.hidden.iter().copied());
+    dims.push(n_classes);
+
+    let mut layers = Vec::with_capacity(dims.len() - 1);
+    for li in 0..dims.len() - 1 {
+        let (in_dim, out_dim) = (dims[li], dims[li + 1]);
+        // Background mixing weights.
+        let mut w: Vec<f32> = (0..in_dim * out_dim).map(|_| (rng.normal() as f32) * 0.05).collect();
+        if li == 0 {
+            // Leading columns carry the class prototypes.
+            for (j, proto) in prototypes.iter().enumerate().take(out_dim.min(n_classes)) {
+                for i in 0..in_dim {
+                    w[i * out_dim + j] = proto[i] + (rng.normal() as f32) * 0.01;
+                }
+            }
+        } else {
+            // Near-identity on the class coordinates.
+            for j in 0..in_dim.min(out_dim).min(n_classes) {
+                w[j * out_dim + j] += 1.0;
+            }
+        }
+        let b: Vec<f32> = (0..out_dim).map(|_| rng.range_f64(-0.05, 0.05) as f32).collect();
+        layers.push(LayerWeights { w, in_dim, out_dim, b, alpha: 0.25 });
+    }
+    let weights = Weights { layers };
+
+    // Eval split: scaled prototypes + noise, with a hard-row tail.
+    let mut x = Vec::with_capacity(spec.n_eval * spec.input_dim);
+    let mut y = Vec::with_capacity(spec.n_eval);
+    for _ in 0..spec.n_eval {
+        let c = rng.below(n_classes as u64) as usize;
+        let scale = rng.range_f64(0.6, 1.4) as f32;
+        let difficulty = rng.range_f64(0.02, 0.25) as f32;
+        let hard = rng.next_f64() < spec.hard_fraction;
+        let c2 = (c + 1 + rng.below(n_classes as u64 - 1) as usize) % n_classes;
+        for i in 0..spec.input_dim {
+            let base = if hard {
+                0.5 * prototypes[c][i] + 0.5 * prototypes[c2][i]
+            } else {
+                prototypes[c][i]
+            };
+            x.push(scale * base + difficulty * rng.normal() as f32);
+        }
+        y.push(c as i32);
+    }
+    let eval = EvalData { x, y, n: spec.n_eval, input_dim: spec.input_dim };
+
+    Fixture { spec: spec.clone(), weights, eval }
+}
+
+/// The manifest entry for a spec.
+pub fn dataset_entry(spec: &FixtureSpec) -> DatasetEntry {
+    DatasetEntry {
+        name: spec.name.clone(),
+        paper_name: spec.paper_name.clone(),
+        input_dim: spec.input_dim,
+        n_classes: spec.n_classes,
+        n_eval: spec.n_eval,
+        train_acc: 0.9,
+    }
+}
+
+/// All variant records for a spec (full FP/SC level × batch grid).
+pub fn variants(spec: &FixtureSpec) -> Vec<VariantRef> {
+    let mut out = Vec::new();
+    for &batch in &BATCHES {
+        for &level in &FP_LEVELS {
+            out.push(VariantRef {
+                dataset: spec.name.clone(),
+                kind: VariantKind::Fp,
+                level,
+                batch,
+                file: format!("fp{level}_b{batch}.hlo.txt"),
+            });
+        }
+        for &level in &SC_LEVELS {
+            out.push(VariantRef {
+                dataset: spec.name.clone(),
+                kind: VariantKind::Sc,
+                level,
+                batch,
+                file: format!("sc{level}_b{batch}.hlo.txt"),
+            });
+        }
+    }
+    out
+}
+
+/// Build an in-memory manifest over a fixture suite.
+pub fn manifest(specs: &[FixtureSpec]) -> Manifest {
+    Manifest {
+        root: PathBuf::from("<synthetic>"),
+        datasets: specs.iter().map(dataset_entry).collect(),
+        variants: specs.iter().flat_map(|s| variants(s)).collect(),
+    }
+}
+
+/// Serialise tensors in the exporter's `.bin`/`.meta` container format
+/// (the rust twin of `python/compile/aot.py::BinWriter`).
+struct BinWriter {
+    bin: Vec<u8>,
+    meta: String,
+}
+
+impl BinWriter {
+    fn new() -> Self {
+        Self { bin: Vec::new(), meta: String::from("ari-meta v1\n") }
+    }
+
+    fn add_f32(&mut self, name: &str, dims: &[usize], vals: &[f32]) {
+        let off = self.bin.len();
+        for v in vals {
+            self.bin.extend_from_slice(&v.to_le_bytes());
+        }
+        self.push_meta(name, "f32", dims, off, vals.len() * 4);
+    }
+
+    fn add_i32(&mut self, name: &str, dims: &[usize], vals: &[i32]) {
+        let off = self.bin.len();
+        for v in vals {
+            self.bin.extend_from_slice(&v.to_le_bytes());
+        }
+        self.push_meta(name, "i32", dims, off, vals.len() * 4);
+    }
+
+    fn push_meta(&mut self, name: &str, dtype: &str, dims: &[usize], off: usize, len: usize) {
+        let dimstr = dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(" ");
+        self.meta.push_str(&format!("tensor {name} {dtype} {} {dimstr} {off} {len}\n", dims.len()));
+    }
+
+    fn write(&self, base: &Path) -> crate::Result<()> {
+        let mut f = std::fs::File::create(base.with_extension("bin"))?;
+        f.write_all(&self.bin)?;
+        let mut f = std::fs::File::create(base.with_extension("meta"))?;
+        f.write_all(self.meta.as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Write a fixture suite to disk as a real artifacts directory
+/// (`manifest.txt` + per-dataset `weights.*` / `eval.*`), loadable by
+/// [`crate::data::Manifest::load`], [`crate::data::Weights::load`] and
+/// [`crate::data::EvalData::load`] — used by loader/failure tests and by
+/// `ari fixture --out DIR`.
+pub fn write_artifacts(dir: &Path, specs: &[FixtureSpec]) -> crate::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut manifest_text = String::from("ari-manifest v1\n");
+    for spec in specs {
+        let fx = generate(spec);
+        let ds_dir = dir.join(&spec.name);
+        std::fs::create_dir_all(&ds_dir)?;
+
+        let mut w = BinWriter::new();
+        for (i, l) in fx.weights.layers.iter().enumerate() {
+            w.add_f32(&format!("layer{i}.w"), &[l.in_dim, l.out_dim], &l.w);
+            w.add_f32(&format!("layer{i}.b"), &[l.out_dim], &l.b);
+            w.add_f32(&format!("layer{i}.alpha"), &[1], &[l.alpha]);
+        }
+        w.write(&ds_dir.join("weights"))?;
+
+        let mut e = BinWriter::new();
+        e.add_f32("x", &[fx.eval.n, fx.eval.input_dim], &fx.eval.x);
+        e.add_i32("y", &[fx.eval.n], &fx.eval.y);
+        e.write(&ds_dir.join("eval"))?;
+
+        manifest_text.push_str(&format!(
+            "dataset {} paper={} input_dim={} n_classes={} n_eval={} train_acc=0.9\n",
+            spec.name,
+            spec.paper_name.replace(' ', "_"),
+            spec.input_dim,
+            spec.n_classes,
+            spec.n_eval
+        ));
+        for v in variants(spec) {
+            let kind = match v.kind {
+                VariantKind::Fp => "fp",
+                VariantKind::Sc => "sc",
+            };
+            manifest_text.push_str(&format!(
+                "variant {} kind={kind} level={} batch={} file={}\n",
+                v.dataset, v.level, v.batch, v.file
+            ));
+        }
+    }
+    std::fs::write(dir.join("manifest.txt"), manifest_text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = FixtureSpec::small("d", "D", 16, 42);
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.weights.layers[0].w, b.weights.layers[0].w);
+        assert_eq!(a.eval.x, b.eval.x);
+        assert_eq!(a.eval.y, b.eval.y);
+    }
+
+    #[test]
+    fn dims_chain_and_labels_in_range() {
+        let spec = FixtureSpec::small("d", "D", 16, 1);
+        let fx = generate(&spec);
+        assert_eq!(fx.weights.dims(), vec![16, 32, 16, 10]);
+        assert_eq!(fx.eval.n, spec.n_eval);
+        assert!(fx.eval.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn classifier_is_better_than_chance() {
+        // The embedded-prototype construction must give a working
+        // classifier (the numpy design study puts full-model accuracy
+        // around 0.9; assert a generous floor).
+        let spec = FixtureSpec::small("d", "D", 24, 3);
+        let fx = generate(&spec);
+        let eng = crate::mlp::FpEngine::new(&fx.weights, crate::quant::FpFormat::FP16);
+        let out = eng.forward(&fx.eval.x, fx.eval.n);
+        let ok = out.pred.iter().zip(&fx.eval.y).filter(|(a, b)| a == b).count();
+        let acc = ok as f64 / fx.eval.n as f64;
+        assert!(acc > 0.6, "synthetic full-model accuracy {acc} too low");
+    }
+
+    #[test]
+    fn manifest_covers_grid() {
+        let specs = default_specs();
+        let m = manifest(&specs);
+        assert_eq!(m.datasets.len(), 3);
+        for spec in &specs {
+            for &b in &BATCHES {
+                assert!(m.variant(&spec.name, VariantKind::Fp, 16, b).is_ok());
+                assert!(m.variant(&spec.name, VariantKind::Sc, 4096, b).is_ok());
+            }
+            assert_eq!(m.levels(&spec.name, VariantKind::Fp), FP_LEVELS.to_vec());
+            assert_eq!(m.levels(&spec.name, VariantKind::Sc), SC_LEVELS.to_vec());
+        }
+    }
+
+    #[test]
+    fn written_artifacts_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ari-fixture-rt-{}", std::process::id()));
+        let specs = vec![FixtureSpec::small("tiny", "Tiny", 12, 9)];
+        write_artifacts(&dir, &specs).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.datasets[0].name, "tiny");
+        let w = Weights::load(&dir.join("tiny")).unwrap();
+        let fx = generate(&specs[0]);
+        assert_eq!(w.layers[0].w, fx.weights.layers[0].w);
+        let e = EvalData::load(&dir.join("tiny")).unwrap();
+        assert_eq!(e.x, fx.eval.x);
+        assert_eq!(e.y, fx.eval.y);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

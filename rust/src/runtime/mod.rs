@@ -1,324 +1,30 @@
-//! PJRT runtime: load AOT-lowered HLO text, compile once, execute from
-//! the serving hot path.
+//! Inference runtime: the [`Backend`] abstraction and its
+//! implementations.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU client).  Weights are uploaded
-//! to device buffers **once per dataset** at startup; each inference call
-//! only uploads the activation batch (and, for SC variants, the 8-byte
-//! threefry key).  Executables are compiled lazily and cached by variant
-//! key.
+//! The cascade, server and experiment layers program against the
+//! [`Backend`] trait (compile-by-variant, execute batch →
+//! [`BatchOutputs`], dataset/weight lifecycle).  Two substrates
+//! implement it:
 //!
-//! `PjRtClient` is `Rc`-based (not `Send`), so an [`Engine`] must stay on
-//! the thread that created it — the server keeps all PJRT work on the
-//! coordinator thread and feeds it through channels (see
-//! [`crate::server`]).
+//! * [`NativeBackend`] ([`native`]) — pure rust over the
+//!   [`crate::mlp`]/[`crate::quant`]/[`crate::sc`] modules.  Needs no
+//!   `artifacts/` directory (it can synthesise a deterministic fixture
+//!   suite, see [`fixture`]) and no external libraries; this is the
+//!   default and what CI exercises.
+//! * `pjrt::Engine` (behind the `pjrt` cargo feature) — the PJRT CPU
+//!   client executing AOT-lowered JAX/Pallas HLO artifacts, the paper's
+//!   production path.
+//!
+//! [`open_backend`] selects between them at runtime (`ari --backend
+//! auto|native|pjrt`).
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::time::Instant;
+pub mod backend;
+pub mod fixture;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use crate::data::{EvalData, Manifest, VariantKind, VariantRef, Weights};
-
-/// Outputs of one executed batch.
-#[derive(Clone, Debug)]
-pub struct BatchOutputs {
-    /// Row-major (batch, n_classes) softmax scores.
-    pub scores: Vec<f32>,
-    pub pred: Vec<i32>,
-    pub margin: Vec<f32>,
-    pub batch: usize,
-    pub n_classes: usize,
-}
-
-struct DatasetState {
-    weights: Weights,
-    /// Device-resident raw (f32) weight buffers, exporter order — used by
-    /// SC variants (which never quantise weights).
-    bufs: Vec<xla::PjRtBuffer>,
-    /// Per-FP-level pre-quantised weight buffers.  The L1 kernel contract
-    /// is that FP weights arrive already quantised (quantisation is
-    /// idempotent and batch-independent, so it is hoisted off the
-    /// per-call hot path — §Perf in EXPERIMENTS.md).
-    fp_bufs: HashMap<u32, Vec<xla::PjRtBuffer>>,
-    input_dim: usize,
-}
-
-/// Compile/execute statistics (perf accounting).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct EngineStats {
-    pub compiles: u64,
-    pub compile_ms: u128,
-    pub executes: u64,
-    pub execute_us: u128,
-    pub h2d_bytes: u64,
-}
-
-/// The PJRT engine: one per process/thread.
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    datasets: HashMap<String, DatasetState>,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub stats: EngineStats,
-}
-
-impl Engine {
-    /// Create a CPU PJRT client and parse the artifact manifest.
-    /// Weights/eval data load lazily per dataset.
-    pub fn new(artifacts: &Path) -> crate::Result<Self> {
-        let manifest = Manifest::load(artifacts)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Self { client, manifest, datasets: HashMap::new(), executables: HashMap::new(), stats: EngineStats::default() })
-    }
-
-    /// Ensure a dataset's weights are loaded and device-resident.
-    pub fn load_dataset(&mut self, name: &str) -> crate::Result<()> {
-        if self.datasets.contains_key(name) {
-            return Ok(());
-        }
-        let entry = self.manifest.dataset(name)?.clone();
-        let dir = self.manifest.dataset_dir(name);
-        let weights = Weights::load(&dir)?;
-        anyhow::ensure!(
-            weights.layers[0].in_dim == entry.input_dim,
-            "weights/manifest input_dim mismatch for {name}"
-        );
-        let mut bufs = Vec::new();
-        for (_, dims, data) in weights.flat() {
-            let buf = self
-                .client
-                .buffer_from_host_buffer::<f32>(data, &dims, None)
-                .map_err(|e| anyhow::anyhow!("uploading weights for {name}: {e}"))?;
-            self.stats.h2d_bytes += (data.len() * 4) as u64;
-            bufs.push(buf);
-        }
-        self.datasets.insert(
-            name.to_string(),
-            DatasetState { weights, bufs, fp_bufs: HashMap::new(), input_dim: entry.input_dim },
-        );
-        Ok(())
-    }
-
-    /// Ensure pre-quantised weight buffers exist for an FP level.
-    /// Quantises w tensors host-side (bit-identical to the L1 kernel's
-    /// `quantize_fp`); b/alpha stay raw (the kernel quantises the bias in
-    /// its epilogue).
-    fn ensure_fp_weights(&mut self, name: &str, level: u32) -> crate::Result<()> {
-        let ds = self.datasets.get(name).ok_or_else(|| anyhow::anyhow!("dataset {name} not loaded"))?;
-        if ds.fp_bufs.contains_key(&level) {
-            return Ok(());
-        }
-        let fmt = crate::quant::FpFormat::fp(level);
-        let mut bufs = Vec::new();
-        let mut h2d = 0u64;
-        for (i, (_, dims, data)) in ds.weights.flat().into_iter().enumerate() {
-            // flat() order is (w, b, alpha) per layer: quantise only w.
-            let owned: Vec<f32> = if i % 3 == 0 {
-                data.iter().map(|&v| fmt.quantize(v)).collect()
-            } else {
-                data.to_vec()
-            };
-            let buf = self
-                .client
-                .buffer_from_host_buffer::<f32>(&owned, &dims, None)
-                .map_err(|e| anyhow::anyhow!("uploading FP{level} weights for {name}: {e}"))?;
-            h2d += (owned.len() * 4) as u64;
-            bufs.push(buf);
-        }
-        self.stats.h2d_bytes += h2d;
-        self.datasets.get_mut(name).unwrap().fp_bufs.insert(level, bufs);
-        Ok(())
-    }
-
-    /// Loaded weights of a dataset (for the pure-rust cross-check engines).
-    pub fn weights(&self, name: &str) -> crate::Result<&Weights> {
-        Ok(&self.datasets.get(name).ok_or_else(|| anyhow::anyhow!("dataset {name} not loaded"))?.weights)
-    }
-
-    /// Load the eval split of a dataset.
-    pub fn eval_data(&self, name: &str) -> crate::Result<EvalData> {
-        EvalData::load(&self.manifest.dataset_dir(name))
-    }
-
-    /// Compile (or fetch from cache) a variant's executable.
-    pub fn ensure_compiled(&mut self, v: &VariantRef) -> crate::Result<()> {
-        let key = v.key();
-        if self.executables.contains_key(&key) {
-            return Ok(());
-        }
-        let path = self.manifest.hlo_path(v);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {key}: {e}"))?;
-        self.stats.compiles += 1;
-        self.stats.compile_ms += t0.elapsed().as_millis();
-        self.executables.insert(key, exe);
-        Ok(())
-    }
-
-    /// Execute one batch on a variant.  `x` must be exactly
-    /// `v.batch * input_dim` long (use [`Engine::run_padded`] for partial
-    /// batches).  `sc_key` is required for SC variants.
-    pub fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs> {
-        self.ensure_compiled(v)?;
-        self.load_dataset(&v.dataset)?;
-        if v.kind == VariantKind::Fp {
-            self.ensure_fp_weights(&v.dataset, v.level as u32)?;
-        }
-        let ds = &self.datasets[&v.dataset];
-        anyhow::ensure!(
-            x.len() == v.batch * ds.input_dim,
-            "input length {} != batch {} * input_dim {}",
-            x.len(),
-            v.batch,
-            ds.input_dim
-        );
-        let t0 = Instant::now();
-        let xbuf = self
-            .client
-            .buffer_from_host_buffer::<f32>(x, &[v.batch, ds.input_dim], None)
-            .map_err(|e| anyhow::anyhow!("uploading batch: {e}"))?;
-        self.stats.h2d_bytes += (x.len() * 4) as u64;
-        let kbuf = match (v.kind, sc_key) {
-            (VariantKind::Sc, Some(k)) => Some(
-                self.client
-                    .buffer_from_host_buffer::<u32>(&k, &[2], None)
-                    .map_err(|e| anyhow::anyhow!("uploading key: {e}"))?,
-            ),
-            (VariantKind::Sc, None) => anyhow::bail!("SC variant requires a key"),
-            (VariantKind::Fp, _) => None,
-        };
-        let wbufs: &Vec<xla::PjRtBuffer> = match v.kind {
-            VariantKind::Fp => &ds.fp_bufs[&(v.level as u32)],
-            VariantKind::Sc => &ds.bufs,
-        };
-        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + wbufs.len());
-        inputs.push(&xbuf);
-        if let Some(ref k) = kbuf {
-            inputs.push(k);
-        }
-        inputs.extend(wbufs.iter());
-        let exe = &self.executables[&v.key()];
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(&inputs)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e}", v.key()))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
-        self.stats.executes += 1;
-        self.stats.execute_us += t0.elapsed().as_micros();
-        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
-        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
-        let scores = parts[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("scores: {e}"))?;
-        let pred = parts[1].to_vec::<i32>().map_err(|e| anyhow::anyhow!("pred: {e}"))?;
-        let margin = parts[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("margin: {e}"))?;
-        let n_classes = scores.len() / v.batch;
-        Ok(BatchOutputs { scores, pred, margin, batch: v.batch, n_classes })
-    }
-
-    /// Execute `n <= v.batch` rows by zero-padding to the compiled batch
-    /// size; outputs are truncated back to `n`.  Returns the padding
-    /// waste for the metrics.
-    pub fn run_padded(
-        &mut self,
-        v: &VariantRef,
-        x: &[f32],
-        n: usize,
-        sc_key: Option<[u32; 2]>,
-    ) -> crate::Result<(BatchOutputs, usize)> {
-        self.load_dataset(&v.dataset)?;
-        let input_dim = self.datasets[&v.dataset].input_dim;
-        anyhow::ensure!(n > 0 && n <= v.batch, "n={n} out of range for batch {}", v.batch);
-        anyhow::ensure!(x.len() == n * input_dim, "input length mismatch");
-        let waste = v.batch - n;
-        let out = if waste == 0 {
-            self.execute(v, x, sc_key)?
-        } else {
-            let mut padded = vec![0.0f32; v.batch * input_dim];
-            padded[..x.len()].copy_from_slice(x);
-            let mut o = self.execute(v, &padded, sc_key)?;
-            o.scores.truncate(n * o.n_classes);
-            o.pred.truncate(n);
-            o.margin.truncate(n);
-            o.batch = n;
-            o
-        };
-        Ok((out, waste))
-    }
-
-    /// Run a whole dataset through a variant (chunked by the variant's
-    /// batch size, last chunk padded).  For SC variants each chunk gets
-    /// key `[seed, chunk_index]` — deterministic and chunk-decorrelated.
-    pub fn run_dataset(&mut self, v: &VariantRef, data: &EvalData, seed: u32) -> crate::Result<BatchOutputs> {
-        let mut scores = Vec::with_capacity(data.n * 10);
-        let mut pred = Vec::with_capacity(data.n);
-        let mut margin = Vec::with_capacity(data.n);
-        let mut n_classes = 0;
-        let mut chunk = 0u32;
-        let mut lo = 0usize;
-        while lo < data.n {
-            let hi = (lo + v.batch).min(data.n);
-            let key = match v.kind {
-                VariantKind::Sc => Some([seed, chunk]),
-                VariantKind::Fp => None,
-            };
-            let (out, _) = self.run_padded(v, data.rows(lo, hi), hi - lo, key)?;
-            n_classes = out.n_classes;
-            scores.extend_from_slice(&out.scores);
-            pred.extend_from_slice(&out.pred);
-            margin.extend_from_slice(&out.margin);
-            lo = hi;
-            chunk += 1;
-        }
-        Ok(BatchOutputs { scores, pred, margin, batch: data.n, n_classes })
-    }
-
-    /// Mean device execute time per batch (µs).
-    pub fn mean_execute_us(&self) -> f64 {
-        if self.stats.executes == 0 {
-            0.0
-        } else {
-            self.stats.execute_us as f64 / self.stats.executes as f64
-        }
-    }
-}
-
-impl BatchOutputs {
-    /// Accuracy against labels.
-    pub fn accuracy(&self, labels: &[i32]) -> f64 {
-        assert_eq!(labels.len(), self.pred.len());
-        if labels.is_empty() {
-            return 0.0;
-        }
-        let ok = self.pred.iter().zip(labels).filter(|(a, b)| a == b).count();
-        ok as f64 / labels.len() as f64
-    }
-
-    /// One row of scores.
-    pub fn score_row(&self, i: usize) -> &[f32] {
-        &self.scores[i * self.n_classes..(i + 1) * self.n_classes]
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn batch_outputs_accuracy() {
-        let o = BatchOutputs { scores: vec![0.0; 6], pred: vec![1, 2, 3], margin: vec![0.1; 3], batch: 3, n_classes: 2 };
-        assert!((o.accuracy(&[1, 2, 0]) - 2.0 / 3.0).abs() < 1e-12);
-    }
-
-    #[test]
-    fn score_row_indexing() {
-        let o = BatchOutputs {
-            scores: vec![0.1, 0.9, 0.8, 0.2],
-            pred: vec![1, 0],
-            margin: vec![0.8, 0.6],
-            batch: 2,
-            n_classes: 2,
-        };
-        assert_eq!(o.score_row(1), &[0.8, 0.2]);
-    }
-}
+pub use backend::{open_backend, Backend, BackendKind, BatchOutputs, EngineStats};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;

@@ -1,0 +1,254 @@
+//! The pure-rust inference backend: the [`crate::mlp`] engines behind
+//! the [`Backend`] trait.
+//!
+//! `NativeBackend` is fully self-contained — no PJRT library, no
+//! `artifacts/` directory required.  It serves either a real artifacts
+//! directory (same `.bin`/`.meta` contract as the PJRT engine) or the
+//! deterministic in-memory fixture suite from
+//! [`crate::runtime::fixture`], which is what makes `cargo test -q`
+//! green on a fresh offline checkout.
+//!
+//! FP variants run the truncated-mantissa [`crate::mlp::FpEngine`]
+//! (bit-identical quantisation to the L1 Pallas kernel); SC variants run
+//! the calibrated [`crate::mlp::ScNoiseEngine`], seeded from the
+//! caller's `[u32; 2]` key exactly like the PJRT path's threefry key —
+//! same key, same stream.
+//!
+//! Unlike the PJRT client (`Rc`-based, thread-pinned), `NativeBackend`
+//! owns plain host memory and is `Send`.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::data::{EvalData, Manifest, VariantKind, VariantRef, Weights};
+use crate::mlp::{FpEngine, ScNoiseEngine};
+use crate::quant::FpFormat;
+use crate::runtime::fixture::{self, FixtureSpec};
+use crate::runtime::{Backend, BatchOutputs, EngineStats};
+use crate::sc::ScConfig;
+
+struct LoadedDataset {
+    weights: Weights,
+    eval: EvalData,
+}
+
+/// Pure-rust [`Backend`] over the `mlp`/`quant`/`sc` modules.
+///
+/// ```
+/// use ari::runtime::{Backend, NativeBackend};
+/// let backend = NativeBackend::synthetic();
+/// assert_eq!(backend.name(), "native");
+/// assert_eq!(backend.manifest().datasets.len(), 3);
+/// ```
+pub struct NativeBackend {
+    manifest: Manifest,
+    /// Artifacts root for lazily loaded datasets (None = synthetic).
+    root: Option<PathBuf>,
+    datasets: HashMap<String, LoadedDataset>,
+    compiled: HashSet<String>,
+    stats: EngineStats,
+}
+
+impl NativeBackend {
+    /// Open an artifacts directory (as written by `make artifacts` or by
+    /// [`fixture::write_artifacts`]).  Weights/eval data load lazily per
+    /// dataset, mirroring the PJRT engine's lifecycle.
+    pub fn from_artifacts(artifacts: &Path) -> crate::Result<Self> {
+        let manifest = Manifest::load(artifacts)?;
+        Ok(Self {
+            manifest,
+            root: Some(artifacts.to_path_buf()),
+            datasets: HashMap::new(),
+            compiled: HashSet::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// The default deterministic fixture suite
+    /// ([`fixture::default_specs`]) — three miniature datasets with the
+    /// full FP/SC variant grid, entirely in memory.
+    pub fn synthetic() -> Self {
+        Self::from_fixtures(&fixture::default_specs())
+    }
+
+    /// Build from explicit fixture specs (generated eagerly, in memory).
+    pub fn from_fixtures(specs: &[FixtureSpec]) -> Self {
+        let manifest = fixture::manifest(specs);
+        let mut datasets = HashMap::new();
+        for spec in specs {
+            let fx = fixture::generate(spec);
+            datasets.insert(spec.name.clone(), LoadedDataset { weights: fx.weights, eval: fx.eval });
+        }
+        Self { manifest, root: None, datasets, compiled: HashSet::new(), stats: EngineStats::default() }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_dataset(&mut self, name: &str) -> crate::Result<()> {
+        if self.datasets.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.dataset(name)?.clone();
+        if self.root.is_none() {
+            anyhow::bail!("dataset {name} not in this synthetic backend");
+        }
+        let dir = self.manifest.dataset_dir(name);
+        let weights = Weights::load(&dir)?;
+        anyhow::ensure!(
+            weights.layers[0].in_dim == entry.input_dim,
+            "weights/manifest input_dim mismatch for {name}"
+        );
+        let eval = EvalData::load(&dir)?;
+        self.datasets.insert(name.to_string(), LoadedDataset { weights, eval });
+        Ok(())
+    }
+
+    fn weights(&self, name: &str) -> crate::Result<&Weights> {
+        Ok(&self.datasets.get(name).ok_or_else(|| anyhow::anyhow!("dataset {name} not loaded"))?.weights)
+    }
+
+    fn eval_data(&self, name: &str) -> crate::Result<EvalData> {
+        if let Some(ds) = self.datasets.get(name) {
+            return Ok(ds.eval.clone());
+        }
+        match &self.root {
+            Some(_) => EvalData::load(&self.manifest.dataset_dir(name)),
+            None => anyhow::bail!("dataset {name} not in this synthetic backend"),
+        }
+    }
+
+    fn ensure_compiled(&mut self, v: &VariantRef) -> crate::Result<()> {
+        // Nothing to compile natively; validate the variant and account
+        // it once so stats stay comparable across backends.
+        if self.compiled.contains(&v.key()) {
+            return Ok(());
+        }
+        self.manifest.dataset(&v.dataset)?;
+        if v.kind == VariantKind::Sc {
+            // Fails loudly on non-power-of-two lengths, like the
+            // exporter would at lowering time.
+            anyhow::ensure!(
+                v.level >= 2 && v.level.is_power_of_two(),
+                "SC sequence length {} must be a power of two >= 2",
+                v.level
+            );
+        }
+        self.compiled.insert(v.key());
+        self.stats.compiles += 1;
+        Ok(())
+    }
+
+    fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs> {
+        self.ensure_compiled(v)?;
+        self.load_dataset(&v.dataset)?;
+        let ds = &self.datasets[&v.dataset];
+        let input_dim = ds.weights.layers[0].in_dim;
+        anyhow::ensure!(
+            x.len() == v.batch * input_dim,
+            "input length {} != batch {} * input_dim {}",
+            x.len(),
+            v.batch,
+            input_dim
+        );
+        let t0 = Instant::now();
+        let out = match v.kind {
+            VariantKind::Fp => FpEngine::new(&ds.weights, FpFormat::fp(v.level as u32)).forward(x, v.batch),
+            VariantKind::Sc => {
+                let Some(key) = sc_key else {
+                    anyhow::bail!("SC variant requires a key");
+                };
+                let seed = ((key[0] as u64) << 32) | key[1] as u64;
+                ScNoiseEngine::new(&ds.weights, ScConfig::new(v.level)).forward(x, v.batch, seed)
+            }
+        };
+        self.stats.executes += 1;
+        self.stats.execute_us += t0.elapsed().as_micros();
+        let n_classes = out.scores.cols;
+        Ok(BatchOutputs { scores: out.scores.data, pred: out.pred, margin: out.margin, batch: v.batch, n_classes })
+    }
+
+    fn stats(&self) -> EngineStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::from_fixtures(&[FixtureSpec::small("d", "D", 16, 11)])
+    }
+
+    fn fp_variant(b: &NativeBackend, level: usize, batch: usize) -> VariantRef {
+        b.manifest().variant("d", VariantKind::Fp, level, batch).unwrap().clone()
+    }
+
+    #[test]
+    fn executes_fp_batch() {
+        let mut b = backend();
+        let v = fp_variant(&b, 16, 32);
+        let eval = b.eval_data("d").unwrap();
+        let out = b.execute(&v, eval.rows(0, 32), None).unwrap();
+        assert_eq!(out.batch, 32);
+        assert_eq!(out.pred.len(), 32);
+        assert_eq!(out.n_classes, 10);
+        assert_eq!(out.scores.len(), 320);
+        assert!(b.stats().executes == 1 && b.stats().compiles == 1);
+    }
+
+    #[test]
+    fn fp_is_deterministic() {
+        let mut b = backend();
+        let v = fp_variant(&b, 10, 32);
+        let eval = b.eval_data("d").unwrap();
+        let a = b.execute(&v, eval.rows(0, 32), None).unwrap();
+        let c = b.execute(&v, eval.rows(0, 32), None).unwrap();
+        assert_eq!(a.pred, c.pred);
+        assert_eq!(a.scores, c.scores);
+    }
+
+    #[test]
+    fn sc_same_key_same_stream() {
+        let mut b = backend();
+        let v = b.manifest().variant("d", VariantKind::Sc, 512, 32).unwrap().clone();
+        let eval = b.eval_data("d").unwrap();
+        let a = b.execute(&v, eval.rows(0, 32), Some([3, 4])).unwrap();
+        let c = b.execute(&v, eval.rows(0, 32), Some([3, 4])).unwrap();
+        assert_eq!(a.scores, c.scores);
+    }
+
+    #[test]
+    fn sc_without_key_rejected() {
+        let mut b = backend();
+        let v = b.manifest().variant("d", VariantKind::Sc, 512, 32).unwrap().clone();
+        let eval = b.eval_data("d").unwrap();
+        let err = b.execute(&v, eval.rows(0, 32), None).unwrap_err().to_string();
+        assert!(err.contains("key"), "{err}");
+    }
+
+    #[test]
+    fn wrong_input_length_rejected() {
+        let mut b = backend();
+        let v = fp_variant(&b, 16, 32);
+        let err = b.execute(&v, &[0.0; 10], None).unwrap_err().to_string();
+        assert!(err.contains("input length"), "{err}");
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let mut b = backend();
+        assert!(b.load_dataset("nope").is_err());
+        assert!(b.weights("nope").is_err());
+        assert!(b.eval_data("nope").is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! PJRT runtime (the `pjrt` cargo feature): load AOT-lowered HLO text,
+//! compile once, execute from the serving hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client).  Weights are uploaded
+//! to device buffers **once per dataset** at startup; each inference call
+//! only uploads the activation batch (and, for SC variants, the 8-byte
+//! threefry key).  Executables are compiled lazily and cached by variant
+//! key.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so an [`Engine`] must stay on
+//! the thread that created it — the server keeps all PJRT work on the
+//! coordinator thread and feeds it through channels (see
+//! [`crate::server`]).
+//!
+//! The default (offline) build links the compile-only stub in
+//! `rust/vendor/xla`; see that crate's docs for swapping in the real
+//! PJRT bindings.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::data::{EvalData, Manifest, VariantKind, VariantRef, Weights};
+use crate::runtime::{Backend, BatchOutputs, EngineStats};
+
+struct DatasetState {
+    weights: Weights,
+    /// Device-resident raw (f32) weight buffers, exporter order — used by
+    /// SC variants (which never quantise weights).
+    bufs: Vec<xla::PjRtBuffer>,
+    /// Per-FP-level pre-quantised weight buffers.  The L1 kernel contract
+    /// is that FP weights arrive already quantised (quantisation is
+    /// idempotent and batch-independent, so it is hoisted off the
+    /// per-call hot path — §Perf in EXPERIMENTS.md).
+    fp_bufs: HashMap<u32, Vec<xla::PjRtBuffer>>,
+    input_dim: usize,
+}
+
+/// The PJRT engine: one per process/thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    /// The artifact manifest this engine serves.
+    pub manifest: Manifest,
+    datasets: HashMap<String, DatasetState>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compile/execute statistics (perf accounting).
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and parse the artifact manifest.
+    /// Weights/eval data load lazily per dataset.
+    pub fn new(artifacts: &Path) -> crate::Result<Self> {
+        let manifest = Manifest::load(artifacts)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Self { client, manifest, datasets: HashMap::new(), executables: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    /// Ensure a dataset's weights are loaded and device-resident.
+    pub fn load_dataset(&mut self, name: &str) -> crate::Result<()> {
+        if self.datasets.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.dataset(name)?.clone();
+        let dir = self.manifest.dataset_dir(name);
+        let weights = Weights::load(&dir)?;
+        anyhow::ensure!(
+            weights.layers[0].in_dim == entry.input_dim,
+            "weights/manifest input_dim mismatch for {name}"
+        );
+        let mut bufs = Vec::new();
+        for (_, dims, data) in weights.flat() {
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(data, &dims, None)
+                .map_err(|e| anyhow::anyhow!("uploading weights for {name}: {e}"))?;
+            self.stats.h2d_bytes += (data.len() * 4) as u64;
+            bufs.push(buf);
+        }
+        self.datasets.insert(
+            name.to_string(),
+            DatasetState { weights, bufs, fp_bufs: HashMap::new(), input_dim: entry.input_dim },
+        );
+        Ok(())
+    }
+
+    /// Ensure pre-quantised weight buffers exist for an FP level.
+    /// Quantises w tensors host-side (bit-identical to the L1 kernel's
+    /// `quantize_fp`); b/alpha stay raw (the kernel quantises the bias in
+    /// its epilogue).
+    fn ensure_fp_weights(&mut self, name: &str, level: u32) -> crate::Result<()> {
+        let ds = self.datasets.get(name).ok_or_else(|| anyhow::anyhow!("dataset {name} not loaded"))?;
+        if ds.fp_bufs.contains_key(&level) {
+            return Ok(());
+        }
+        let fmt = crate::quant::FpFormat::fp(level);
+        let mut bufs = Vec::new();
+        let mut h2d = 0u64;
+        for (i, (_, dims, data)) in ds.weights.flat().into_iter().enumerate() {
+            // flat() order is (w, b, alpha) per layer: quantise only w.
+            let owned: Vec<f32> = if i % 3 == 0 {
+                data.iter().map(|&v| fmt.quantize(v)).collect()
+            } else {
+                data.to_vec()
+            };
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(&owned, &dims, None)
+                .map_err(|e| anyhow::anyhow!("uploading FP{level} weights for {name}: {e}"))?;
+            h2d += (owned.len() * 4) as u64;
+            bufs.push(buf);
+        }
+        self.stats.h2d_bytes += h2d;
+        self.datasets.get_mut(name).unwrap().fp_bufs.insert(level, bufs);
+        Ok(())
+    }
+
+    /// Loaded weights of a dataset (for the pure-rust cross-check engines).
+    pub fn weights(&self, name: &str) -> crate::Result<&Weights> {
+        Ok(&self.datasets.get(name).ok_or_else(|| anyhow::anyhow!("dataset {name} not loaded"))?.weights)
+    }
+
+    /// Load the eval split of a dataset.
+    pub fn eval_data(&self, name: &str) -> crate::Result<EvalData> {
+        EvalData::load(&self.manifest.dataset_dir(name))
+    }
+
+    /// Compile (or fetch from cache) a variant's executable.
+    pub fn ensure_compiled(&mut self, v: &VariantRef) -> crate::Result<()> {
+        let key = v.key();
+        if self.executables.contains_key(&key) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(v);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {key}: {e}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_ms += t0.elapsed().as_millis();
+        self.executables.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute one batch on a variant.  `x` must be exactly
+    /// `v.batch * input_dim` long (use [`Backend::run_padded`] for
+    /// partial batches).  `sc_key` is required for SC variants.
+    pub fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs> {
+        self.ensure_compiled(v)?;
+        self.load_dataset(&v.dataset)?;
+        if v.kind == VariantKind::Fp {
+            self.ensure_fp_weights(&v.dataset, v.level as u32)?;
+        }
+        let ds = &self.datasets[&v.dataset];
+        anyhow::ensure!(
+            x.len() == v.batch * ds.input_dim,
+            "input length {} != batch {} * input_dim {}",
+            x.len(),
+            v.batch,
+            ds.input_dim
+        );
+        let t0 = Instant::now();
+        let xbuf = self
+            .client
+            .buffer_from_host_buffer::<f32>(x, &[v.batch, ds.input_dim], None)
+            .map_err(|e| anyhow::anyhow!("uploading batch: {e}"))?;
+        self.stats.h2d_bytes += (x.len() * 4) as u64;
+        let kbuf = match (v.kind, sc_key) {
+            (VariantKind::Sc, Some(k)) => Some(
+                self.client
+                    .buffer_from_host_buffer::<u32>(&k, &[2], None)
+                    .map_err(|e| anyhow::anyhow!("uploading key: {e}"))?,
+            ),
+            (VariantKind::Sc, None) => anyhow::bail!("SC variant requires a key"),
+            (VariantKind::Fp, _) => None,
+        };
+        let wbufs: &Vec<xla::PjRtBuffer> = match v.kind {
+            VariantKind::Fp => &ds.fp_bufs[&(v.level as u32)],
+            VariantKind::Sc => &ds.bufs,
+        };
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + wbufs.len());
+        inputs.push(&xbuf);
+        if let Some(ref k) = kbuf {
+            inputs.push(k);
+        }
+        inputs.extend(wbufs.iter());
+        let exe = &self.executables[&v.key()];
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", v.key()))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        self.stats.executes += 1;
+        self.stats.execute_us += t0.elapsed().as_micros();
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        let scores = parts[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("scores: {e}"))?;
+        let pred = parts[1].to_vec::<i32>().map_err(|e| anyhow::anyhow!("pred: {e}"))?;
+        let margin = parts[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("margin: {e}"))?;
+        let n_classes = scores.len() / v.batch;
+        Ok(BatchOutputs { scores, pred, margin, batch: v.batch, n_classes })
+    }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load_dataset(&mut self, name: &str) -> crate::Result<()> {
+        Engine::load_dataset(self, name)
+    }
+
+    fn weights(&self, name: &str) -> crate::Result<&Weights> {
+        Engine::weights(self, name)
+    }
+
+    fn eval_data(&self, name: &str) -> crate::Result<EvalData> {
+        Engine::eval_data(self, name)
+    }
+
+    fn ensure_compiled(&mut self, v: &VariantRef) -> crate::Result<()> {
+        Engine::ensure_compiled(self, v)
+    }
+
+    fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs> {
+        Engine::execute(self, v, x, sc_key)
+    }
+
+    fn stats(&self) -> EngineStats {
+        self.stats
+    }
+}

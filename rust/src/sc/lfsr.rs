@@ -46,6 +46,7 @@ impl Lfsr {
         out
     }
 
+    /// Register width in bits.
     pub fn width(&self) -> u32 {
         self.width
     }

@@ -1,9 +1,10 @@
 //! The serving loop: workload generation, request queueing, cascade
 //! dispatch and reporting.
 //!
-//! Threading model: PJRT is not `Send` (see [`crate::runtime`]), so the
-//! coordinator loop — batcher + cascade + engine — runs on the calling
-//! thread, while a generator thread produces timestamped requests into an
+//! Threading model: backends may be thread-pinned (the PJRT client is
+//! `Rc`-based, not `Send` — see [`crate::runtime`]), so the coordinator
+//! loop — batcher + cascade + backend — runs on the calling thread,
+//! while a generator thread produces timestamped requests into an
 //! `mpsc` channel (open-loop Poisson or closed-loop).  This mirrors the
 //! single-accelerator IoT deployment the paper targets: one device, one
 //! inference queue.
@@ -15,47 +16,66 @@ use crate::config::AriConfig;
 use crate::coordinator::{Batcher, BatcherPolicy, Cascade, EscalationPolicy};
 use crate::data::EvalData;
 use crate::metrics::MetricsRegistry;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::util::Pcg64;
 
 /// One request: a row index into the workload dataset.
 #[derive(Clone, Copy, Debug)]
 pub struct Request {
+    /// Unique request id (generation order).
     pub id: u64,
+    /// Row index into the workload dataset.
     pub row: usize,
+    /// When the generator produced the request.
     pub submitted: Instant,
 }
 
 /// Completed request with its outcome.
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// The request's id.
     pub id: u64,
+    /// The request's dataset row.
     pub row: usize,
+    /// Predicted class served back.
     pub pred: i32,
+    /// Whether the full model ran for this request.
     pub escalated: bool,
+    /// Submit-to-complete latency.
     pub latency: Duration,
 }
 
 /// Aggregated serving report.
 #[derive(Debug)]
 pub struct ServeReport {
+    /// Every served request with its outcome.
     pub completions: Vec<Completion>,
+    /// Wall time of the whole serving session.
     pub wall: Duration,
+    /// Completions per second of wall time.
     pub throughput_rps: f64,
+    /// Accuracy of the served predictions against labels.
     pub accuracy: f64,
     /// Agreement with the always-full baseline predictions, if provided.
     pub full_parity: Option<f64>,
+    /// Fraction of requests that ran the full model.
     pub escalation_fraction: f64,
+    /// Modelled energy actually spent (µJ).
     pub energy_uj: f64,
+    /// Modelled energy an always-full policy would have spent (µJ).
     pub energy_full_uj: f64,
+    /// Median request latency.
     pub p50: Duration,
+    /// 99th-percentile request latency.
     pub p99: Duration,
+    /// Mean request latency.
     pub mean_latency: Duration,
 }
 
 /// Serving options beyond the config.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
+    /// When escalated rows run on the full model.
     pub escalation: EscalationPolicy,
 }
 
@@ -69,7 +89,7 @@ impl Default for ServeOptions {
 /// if needed) from `data`, at `cfg.arrival_rate` req/s Poisson (or
 /// closed-loop when 0), through the calibrated cascade.
 pub fn run_serving(
-    engine: &mut Engine,
+    engine: &mut dyn Backend,
     cascade: &Cascade,
     cfg: &AriConfig,
     data: &EvalData,
@@ -108,7 +128,7 @@ pub fn run_serving(
 
     // Helper: dispatch one reduced batch through the cascade.
     let dispatch = |batch: crate::coordinator::Batch<Request>,
-                        engine: &mut Engine,
+                        engine: &mut dyn Backend,
                         esc_queue: &mut Vec<(Request, Vec<f32>)>,
                         completions: &mut Vec<Completion>,
                         chunk: &mut u32|
@@ -245,7 +265,7 @@ pub fn run_serving(
 }
 
 fn flush_escalations(
-    engine: &mut Engine,
+    engine: &mut dyn Backend,
     cascade: &Cascade,
     esc_queue: &mut Vec<(Request, Vec<f32>)>,
     take: usize,

@@ -10,9 +10,13 @@ use std::time::Instant;
 /// One benchmark case result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name, as printed.
     pub name: String,
+    /// Mean wall time per iteration (ns).
     pub mean_ns: f64,
+    /// Standard deviation over timed iterations (ns).
     pub std_ns: f64,
+    /// Number of timed iterations.
     pub iters: usize,
 }
 

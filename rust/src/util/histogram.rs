@@ -7,8 +7,9 @@ pub struct Histogram {
     lo: f64,
     hi: f64,
     bins: Vec<u64>,
-    /// Samples below `lo` / above `hi`.
+    /// Samples below `lo`.
     pub underflow: u64,
+    /// Samples at or above `hi`.
     pub overflow: u64,
     count: u64,
 }
@@ -20,6 +21,7 @@ impl Histogram {
         Self { lo, hi, bins: vec![0; n_bins], underflow: 0, overflow: 0, count: 0 }
     }
 
+    /// Record one sample.
     pub fn record(&mut self, x: f64) {
         self.count += 1;
         if x < self.lo {
@@ -33,16 +35,19 @@ impl Histogram {
         }
     }
 
+    /// Record every sample in a slice.
     pub fn record_all(&mut self, xs: &[f64]) {
         for &x in xs {
             self.record(x);
         }
     }
 
+    /// Total samples recorded (including under/overflow).
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Width of one bin.
     pub fn bin_width(&self) -> f64 {
         (self.hi - self.lo) / self.bins.len() as f64
     }

@@ -12,26 +12,34 @@ use std::fmt;
 /// A parsed value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
+    /// A flat array of values.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer payload, if this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// The numeric payload as f64 (integers promote).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -39,12 +47,14 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean payload, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The array payload, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -75,21 +85,32 @@ impl fmt::Display for Value {
 }
 
 /// Parse error with line information.
-#[derive(Debug, thiserror::Error)]
-#[error("minitoml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
+    /// 1-based line number of the offending line.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "minitoml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// A parsed document: section name -> key -> value.  Keys outside any
 /// section land in the "" section.
 #[derive(Clone, Debug, Default)]
 pub struct Doc {
+    /// Section name -> key -> value.
     pub sections: BTreeMap<String, BTreeMap<String, Value>>,
 }
 
 impl Doc {
+    /// Parse a document from text.
     pub fn parse(text: &str) -> Result<Self, ParseError> {
         let mut doc = Doc::default();
         let mut section = String::new();
@@ -112,22 +133,27 @@ impl Doc {
         Ok(doc)
     }
 
+    /// Look up a value (`""` is the top-level section).
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section)?.get(key)
     }
 
+    /// Typed lookup: string.
     pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
         self.get(section, key)?.as_str()
     }
 
+    /// Typed lookup: integer.
     pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
         self.get(section, key)?.as_int()
     }
 
+    /// Typed lookup: float (integers promote).
     pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
         self.get(section, key)?.as_float()
     }
 
+    /// Typed lookup: boolean.
     pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
         self.get(section, key)?.as_bool()
     }

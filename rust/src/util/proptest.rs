@@ -25,15 +25,19 @@ use super::prng::Pcg64;
 /// Harness configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: u64,
+    /// Base seed; each case derives its own stream from it.
     pub seed: u64,
 }
 
 impl Config {
+    /// Run `cases` cases with the default seed.
     pub fn cases(cases: u64) -> Self {
         Self { cases, seed: 0xA51_5EED }
     }
 
+    /// Override the base seed (for reproducing a failing case).
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self

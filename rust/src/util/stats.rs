@@ -3,10 +3,15 @@
 /// Summary statistics of a sample.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
@@ -28,6 +33,7 @@ impl Summary {
         }
     }
 
+    /// Compute over an f32 slice (widened to f64).
     pub fn of_f32(xs: &[f32]) -> Self {
         Self::of(&xs.iter().map(|&x| x as f64).collect::<Vec<_>>())
     }

@@ -1,24 +1,13 @@
-//! Cascade-level integration: calibration + cascaded inference against
-//! real artifacts.  The key ARI invariant — T = Mmax reproduces the full
-//! model's predictions on the calibration set exactly — is checked here
-//! end to end, through PJRT.
-
-use std::path::PathBuf;
+//! Cascade-level integration on the pure-rust backend: calibration +
+//! cascaded inference over the deterministic synthetic fixture suite —
+//! no artifacts, no PJRT, runs in every checkout.  The key ARI
+//! invariant — T = Mmax reproduces the full model's predictions on the
+//! calibration set exactly — is checked here end to end.
 
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{Cascade, CascadeSpec};
 use ari::data::VariantKind;
-use ari::runtime::Engine;
-
-fn artifacts() -> Option<PathBuf> {
-    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if p.join("manifest.txt").exists() {
-        Some(p)
-    } else {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        None
-    }
-}
+use ari::runtime::{Backend, NativeBackend};
 
 fn spec(dataset: &str, mode: Mode, reduced: usize, threshold: ThresholdPolicy) -> CascadeSpec {
     let mut cfg = AriConfig::default();
@@ -33,19 +22,19 @@ fn spec(dataset: &str, mode: Mode, reduced: usize, threshold: ThresholdPolicy) -
 
 #[test]
 fn mmax_gives_exact_full_parity_on_calibration_set() {
-    let Some(root) = artifacts() else { return };
-    let mut engine = Engine::new(&root).unwrap();
+    let mut engine = NativeBackend::synthetic();
     let data = engine.eval_data("fashion_syn").unwrap();
-    let n_calib = 1024;
+    let n_calib = 256;
     let cascade = Cascade::calibrate(
         &mut engine,
-        spec("fashion_syn", Mode::Fp, 10, ThresholdPolicy::MMax),
+        spec("fashion_syn", Mode::Fp, 8, ThresholdPolicy::MMax),
         &data,
         n_calib,
     )
     .unwrap();
     // Run the cascade over the calibration rows and compare to the full
-    // model run directly.
+    // model run directly (the FP path is deterministic, so parity at
+    // Mmax is exact by the paper's construction).
     let calib = ari::data::EvalData {
         x: data.rows(0, n_calib).to_vec(),
         y: data.y[..n_calib].to_vec(),
@@ -53,19 +42,26 @@ fn mmax_gives_exact_full_parity_on_calibration_set() {
         input_dim: data.input_dim,
     };
     let (served, _) = cascade.infer_dataset(&mut engine, &calib).unwrap();
-    let full_v = engine.manifest.variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
+    let full_v = engine.manifest().variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
     let full = engine.run_dataset(&full_v, &calib, 0).unwrap();
     assert_eq!(served.pred, full.pred, "ARI@Mmax must equal the full model on the calibration set");
 }
 
 #[test]
 fn escalation_fraction_reasonable_and_energy_accounted() {
-    let Some(root) = artifacts() else { return };
-    let mut engine = Engine::new(&root).unwrap();
+    let mut engine = NativeBackend::synthetic();
     let data = engine.eval_data("fashion_syn").unwrap();
+    // FP8 over the whole eval split guarantees a non-empty
+    // changed-element set on the fixture (FP10's change rate can be a
+    // handful of rows).
+    let n = data.n;
     let cascade =
-        Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Fp, 10, ThresholdPolicy::MMax), &data, 2048)
+        Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Fp, 8, ThresholdPolicy::MMax), &data, n)
             .unwrap();
+    assert!(
+        !cascade.calibration.changed_margins.is_empty(),
+        "fixture must produce changed elements at FP8"
+    );
     let (served, _) = cascade.infer_dataset(&mut engine, &data).unwrap();
     let f = Cascade::escalation_fraction(&served);
     assert!(f > 0.0 && f < 0.5, "escalation fraction {f} outside sane band");
@@ -74,19 +70,19 @@ fn escalation_fraction_reasonable_and_energy_accounted() {
     let n_esc = served.escalated.iter().filter(|&&e| e).count() as f64;
     let expect = n * cascade.e_reduced + n_esc * cascade.e_full;
     assert!((served.energy_uj - expect).abs() < 1e-6);
-    // Savings must be positive at this operating point.
+    // Savings must be positive at this operating point (the numpy design
+    // study puts it near 0.5; assert a generous floor).
     assert!(cascade.realised_savings(&served) > 0.2);
 }
 
 #[test]
 fn lower_threshold_escalates_less() {
-    let Some(root) = artifacts() else { return };
-    let mut engine = Engine::new(&root).unwrap();
+    let mut engine = NativeBackend::synthetic();
     let data = engine.eval_data("fashion_syn").unwrap();
     let mut fractions = Vec::new();
     for policy in [ThresholdPolicy::MMax, ThresholdPolicy::M99, ThresholdPolicy::M95] {
         let cascade =
-            Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Fp, 10, policy), &data, 2048).unwrap();
+            Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Fp, 8, policy), &data, 256).unwrap();
         let (served, _) = cascade.infer_dataset(&mut engine, &data).unwrap();
         fractions.push(Cascade::escalation_fraction(&served));
     }
@@ -95,24 +91,22 @@ fn lower_threshold_escalates_less() {
 
 #[test]
 fn sc_cascade_works_and_accuracy_close_to_full() {
-    let Some(root) = artifacts() else { return };
-    let mut engine = Engine::new(&root).unwrap();
+    let mut engine = NativeBackend::synthetic();
     let data = engine.eval_data("fashion_syn").unwrap();
     let cascade =
-        Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Sc, 512, ThresholdPolicy::MMax), &data, 2048)
+        Cascade::calibrate(&mut engine, spec("fashion_syn", Mode::Sc, 512, ThresholdPolicy::MMax), &data, 256)
             .unwrap();
     let (served, _) = cascade.infer_dataset(&mut engine, &data).unwrap();
     let acc: f64 = served.pred.iter().zip(&data.y).filter(|(a, b)| a == b).count() as f64 / data.n as f64;
-    let full_v = engine.manifest.variant("fashion_syn", VariantKind::Sc, 4096, 256).unwrap().clone();
+    let full_v = engine.manifest().variant("fashion_syn", VariantKind::Sc, 4096, 256).unwrap().clone();
     let full = engine.run_dataset(&full_v, &data, 512).unwrap();
     let acc_full = full.accuracy(&data.y);
-    assert!((acc - acc_full).abs() < 0.02, "SC cascade accuracy {acc} vs full {acc_full}");
+    assert!((acc - acc_full).abs() < 0.05, "SC cascade accuracy {acc} vs full {acc_full}");
 }
 
 #[test]
 fn fixed_threshold_zero_never_escalates() {
-    let Some(root) = artifacts() else { return };
-    let mut engine = Engine::new(&root).unwrap();
+    let mut engine = NativeBackend::synthetic();
     let data = engine.eval_data("fashion_syn").unwrap();
     // T = 0 accepts everything with margin > 0 (ties are escalated).
     let cascade = Cascade::calibrate(
@@ -133,4 +127,16 @@ fn fixed_threshold_zero_never_escalates() {
     assert!(f < 0.05, "T=0 should accept almost everything, got F={f}");
     // And energy ≈ n * e_reduced.
     assert!(served.energy_uj <= 128.0 * cascade.e_reduced + 8.0 * cascade.e_full);
+}
+
+#[test]
+fn cascade_calibrates_on_every_fixture_dataset() {
+    let mut engine = NativeBackend::synthetic();
+    for ds in ["fashion_syn", "svhn_syn", "cifar10_syn"] {
+        let data = engine.eval_data(ds).unwrap();
+        let cascade =
+            Cascade::calibrate(&mut engine, spec(ds, Mode::Fp, 10, ThresholdPolicy::MMax), &data, 256).unwrap();
+        assert!(cascade.e_reduced < cascade.e_full, "{ds}: reduced model must be cheaper");
+        assert!(cascade.threshold >= 0.0);
+    }
 }

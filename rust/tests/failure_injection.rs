@@ -1,21 +1,13 @@
 //! Failure injection: every loader/runtime error path must fail loudly
-//! with a useful message, never panic or silently mis-serve.
+//! with a useful message, never panic or silently mis-serve.  Runs
+//! entirely offline: artifact directories are produced on the fly by the
+//! deterministic fixture writer.
 
-use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use ari::data::{EvalData, Manifest, VariantKind, Weights};
-use ari::runtime::Engine;
-
-fn artifacts() -> Option<PathBuf> {
-    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if p.join("manifest.txt").exists() {
-        Some(p)
-    } else {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        None
-    }
-}
+use ari::runtime::fixture::{write_artifacts, FixtureSpec};
+use ari::runtime::{Backend, NativeBackend};
 
 fn scratch(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("ari-fail-{name}-{}", std::process::id()));
@@ -23,10 +15,17 @@ fn scratch(name: &str) -> PathBuf {
     dir
 }
 
+/// Write a one-dataset synthetic artifacts dir and return its path.
+fn fixture_artifacts(name: &str) -> PathBuf {
+    let dir = scratch(name);
+    write_artifacts(&dir, &[FixtureSpec::small("tiny", "Tiny", 12, 77)]).unwrap();
+    dir
+}
+
 #[test]
 fn missing_manifest_is_a_clear_error() {
     let dir = scratch("nomanifest");
-    let err = match Engine::new(&dir) {
+    let err = match NativeBackend::from_artifacts(&dir) {
         Err(e) => e.to_string(),
         Ok(_) => panic!("expected an error"),
     };
@@ -35,40 +34,24 @@ fn missing_manifest_is_a_clear_error() {
 }
 
 #[test]
-fn corrupt_hlo_file_fails_at_compile_not_at_execute() {
-    let Some(root) = artifacts() else { return };
-    // Build a scratch artifact dir with a valid manifest + weights but a
-    // garbage HLO file.
-    let dir = scratch("badhlo");
-    let ds = dir.join("fashion_syn");
-    std::fs::create_dir_all(&ds).unwrap();
-    for f in ["weights.bin", "weights.meta", "eval.bin", "eval.meta"] {
-        std::fs::copy(root.join("fashion_syn").join(f), ds.join(f)).unwrap();
-    }
-    std::fs::File::create(ds.join("bad.hlo.txt")).unwrap().write_all(b"this is not HLO").unwrap();
-    std::fs::write(
-        dir.join("manifest.txt"),
-        "ari-manifest v1\n\
-         dataset fashion_syn paper=F input_dim=784 n_classes=10 n_eval=4096 train_acc=0.9\n\
-         variant fashion_syn kind=fp level=16 batch=32 file=bad.hlo.txt\n",
-    )
-    .unwrap();
-    let mut engine = Engine::new(&dir).unwrap();
-    let v = engine.manifest.variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
-    let err = engine.ensure_compiled(&v).unwrap_err().to_string();
-    assert!(err.contains("bad.hlo.txt") || err.contains("parsing"), "{err}");
+fn truncated_weights_blob_rejected() {
+    let dir = fixture_artifacts("truncw");
+    let ds = dir.join("tiny");
+    let blob = std::fs::read(ds.join("weights.bin")).unwrap();
+    std::fs::write(ds.join("weights.bin"), &blob[..blob.len() / 2]).unwrap();
+    let err = Weights::load(&ds).unwrap_err().to_string();
+    assert!(err.contains("overruns"), "{err}");
     std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]
-fn truncated_weights_blob_rejected() {
-    let Some(root) = artifacts() else { return };
-    let dir = scratch("truncw");
-    let src = root.join("fashion_syn");
-    let blob = std::fs::read(src.join("weights.bin")).unwrap();
-    std::fs::write(dir.join("weights.bin"), &blob[..blob.len() / 2]).unwrap();
-    std::fs::copy(src.join("weights.meta"), dir.join("weights.meta")).unwrap();
-    let err = Weights::load(&dir).unwrap_err().to_string();
+fn corrupt_weights_surface_through_the_backend() {
+    let dir = fixture_artifacts("backendtrunc");
+    let ds = dir.join("tiny");
+    let blob = std::fs::read(ds.join("weights.bin")).unwrap();
+    std::fs::write(ds.join("weights.bin"), &blob[..blob.len() / 2]).unwrap();
+    let mut backend = NativeBackend::from_artifacts(&dir).unwrap();
+    let err = backend.load_dataset("tiny").unwrap_err().to_string();
     assert!(err.contains("overruns"), "{err}");
     std::fs::remove_dir_all(dir).ok();
 }
@@ -96,32 +79,31 @@ fn eval_label_count_mismatch_rejected() {
 }
 
 #[test]
-fn wrong_input_length_rejected_before_reaching_pjrt() {
-    let Some(root) = artifacts() else { return };
-    let mut engine = Engine::new(&root).unwrap();
-    let v = engine.manifest.variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
+fn wrong_input_length_rejected_before_execution() {
+    let mut engine = NativeBackend::synthetic();
+    let v = engine.manifest().variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
     let err = engine.execute(&v, &[0.0f32; 10], None).unwrap_err().to_string();
     assert!(err.contains("input length"), "{err}");
 }
 
 #[test]
 fn sc_variant_without_key_rejected() {
-    let Some(root) = artifacts() else { return };
-    let mut engine = Engine::new(&root).unwrap();
-    let v = engine.manifest.variant("fashion_syn", VariantKind::Sc, 512, 32).unwrap().clone();
-    let x = vec![0.0f32; 32 * 784];
+    let mut engine = NativeBackend::synthetic();
+    let v = engine.manifest().variant("fashion_syn", VariantKind::Sc, 512, 32).unwrap().clone();
+    let input_dim = engine.manifest().dataset("fashion_syn").unwrap().input_dim;
+    let x = vec![0.0f32; 32 * input_dim];
     let err = engine.execute(&v, &x, None).unwrap_err().to_string();
     assert!(err.contains("key"), "{err}");
 }
 
 #[test]
 fn padded_run_bounds_checked() {
-    let Some(root) = artifacts() else { return };
-    let mut engine = Engine::new(&root).unwrap();
-    let v = engine.manifest.variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
+    let mut engine = NativeBackend::synthetic();
+    let v = engine.manifest().variant("fashion_syn", VariantKind::Fp, 16, 32).unwrap().clone();
+    let input_dim = engine.manifest().dataset("fashion_syn").unwrap().input_dim;
     // n = 0 and n > batch both rejected
     assert!(engine.run_padded(&v, &[], 0, None).is_err());
-    let x = vec![0.0f32; 33 * 784];
+    let x = vec![0.0f32; 33 * input_dim];
     assert!(engine.run_padded(&v, &x, 33, None).is_err());
 }
 
@@ -131,4 +113,40 @@ fn manifest_rejects_unknown_kind_and_bad_lines() {
                dataset d paper=P input_dim=4 n_classes=2 n_eval=1 train_acc=0.5\n\
                variant d kind=quantum level=1 batch=1 file=x.hlo.txt\n";
     assert!(Manifest::parse(Path::new("/tmp"), bad).is_err());
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_failures {
+    //! PJRT-specific error paths (need the `pjrt` feature; skip without
+    //! real artifacts — the HLO compile path needs a weights/eval pair
+    //! to exist, which the fixture writer provides).
+
+    use super::*;
+    use ari::runtime::Engine;
+    use std::io::Write as _;
+
+    #[test]
+    fn corrupt_hlo_file_fails_at_compile_not_at_execute() {
+        let dir = super::fixture_artifacts("badhlo");
+        let ds = dir.join("tiny");
+        std::fs::File::create(ds.join("bad.hlo.txt")).unwrap().write_all(b"this is not HLO").unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "ari-manifest v1\n\
+             dataset tiny paper=Tiny input_dim=12 n_classes=10 n_eval=512 train_acc=0.9\n\
+             variant tiny kind=fp level=16 batch=32 file=bad.hlo.txt\n",
+        )
+        .unwrap();
+        // Engine::new only needs the manifest; if no PJRT client is
+        // available in this build (stub), that is also an acceptable
+        // loud failure.
+        let Ok(mut engine) = Engine::new(&dir) else {
+            std::fs::remove_dir_all(dir).ok();
+            return;
+        };
+        let v = engine.manifest.variant("tiny", VariantKind::Fp, 16, 32).unwrap().clone();
+        let err = engine.ensure_compiled(&v).unwrap_err().to_string();
+        assert!(err.contains("bad.hlo.txt") || err.contains("parsing"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
 }

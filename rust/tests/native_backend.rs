@@ -1,0 +1,130 @@
+//! Native-backend ports of the runtime parity suite: the [`Backend`]
+//! contract (execute/run_padded/run_dataset semantics, determinism,
+//! margin consistency) exercised on the pure-rust engine over the
+//! deterministic fixture suite.  Always runs — no artifacts, no PJRT.
+//!
+//! The cross-language golden checks against jax live in
+//! `runtime_parity.rs` (behind the `pjrt` feature); here the golden is
+//! the in-process [`ari::mlp`] engine the backend is built from, which
+//! must agree *bit-for-bit*.
+
+use ari::data::VariantKind;
+use ari::mlp::{FpEngine, ScNoiseEngine};
+use ari::quant::FpFormat;
+use ari::runtime::{Backend, NativeBackend};
+use ari::sc::ScConfig;
+
+fn backend() -> NativeBackend {
+    NativeBackend::synthetic()
+}
+
+const DS: &str = "fashion_syn";
+
+#[test]
+fn fp_variants_match_mlp_engine_exactly() {
+    let mut engine = backend();
+    engine.load_dataset(DS).unwrap();
+    let eval = engine.eval_data(DS).unwrap();
+    let x = eval.rows(0, 32).to_vec();
+    for bits in [16usize, 12, 10, 8] {
+        let v = engine.manifest().variant(DS, VariantKind::Fp, bits, 32).unwrap().clone();
+        let out = engine.execute(&v, &x, None).unwrap();
+        let weights = engine.weights(DS).unwrap();
+        let golden = FpEngine::new(weights, FpFormat::fp(bits as u32)).forward(&x, 32);
+        assert_eq!(out.pred, golden.pred, "FP{bits} predictions");
+        assert_eq!(out.scores, golden.scores.data, "FP{bits} scores");
+        assert_eq!(out.margin, golden.margin, "FP{bits} margins");
+    }
+}
+
+#[test]
+fn sc_variant_matches_noise_engine_with_same_key() {
+    let mut engine = backend();
+    engine.load_dataset(DS).unwrap();
+    let eval = engine.eval_data(DS).unwrap();
+    let x = eval.rows(0, 32).to_vec();
+    let key = [5u32, 9u32];
+    let v = engine.manifest().variant(DS, VariantKind::Sc, 512, 32).unwrap().clone();
+    let out = engine.execute(&v, &x, Some(key)).unwrap();
+    let weights = engine.weights(DS).unwrap();
+    let seed = ((key[0] as u64) << 32) | key[1] as u64;
+    let golden = ScNoiseEngine::new(weights, ScConfig::new(512)).forward(&x, 32, seed);
+    assert_eq!(out.pred, golden.pred);
+    assert_eq!(out.scores, golden.scores.data);
+}
+
+#[test]
+fn margins_are_top2_gaps_of_scores() {
+    let mut engine = backend();
+    let eval = engine.eval_data(DS).unwrap();
+    let v = engine.manifest().variant(DS, VariantKind::Fp, 16, 32).unwrap().clone();
+    let out = engine.execute(&v, eval.rows(0, 32), None).unwrap();
+    for i in 0..32 {
+        let row = out.score_row(i);
+        let mut sorted: Vec<f32> = row.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!((out.margin[i] - (sorted[0] - sorted[1])).abs() < 1e-6, "row {i}");
+        assert_eq!(out.pred[i] as usize, (0..row.len()).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap());
+    }
+}
+
+#[test]
+fn run_dataset_chunking_consistent() {
+    // Chunked full-dataset run must equal a manual single-batch run on
+    // the first rows (FP is deterministic).
+    let mut engine = backend();
+    let eval = engine.eval_data(DS).unwrap();
+    let small = ari::data::EvalData {
+        x: eval.rows(0, 40).to_vec(),
+        y: eval.y[..40].to_vec(),
+        n: 40,
+        input_dim: eval.input_dim,
+    };
+    let v = engine.manifest().variant(DS, VariantKind::Fp, 10, 32).unwrap().clone();
+    let all = engine.run_dataset(&v, &small, 0).unwrap();
+    assert_eq!(all.pred.len(), 40);
+    let first = engine.execute(&v, eval.rows(0, 32), None).unwrap();
+    assert_eq!(&all.pred[..32], &first.pred[..]);
+    assert_eq!(&all.margin[..32], &first.margin[..]);
+}
+
+#[test]
+fn padding_does_not_change_results() {
+    let mut engine = backend();
+    let eval = engine.eval_data(DS).unwrap();
+    let v = engine.manifest().variant(DS, VariantKind::Fp, 10, 32).unwrap().clone();
+    let full = engine.execute(&v, eval.rows(0, 32), None).unwrap();
+    let (padded, waste) = engine.run_padded(&v, eval.rows(0, 7), 7, None).unwrap();
+    assert_eq!(waste, 25);
+    assert_eq!(&padded.pred[..], &full.pred[..7]);
+    assert_eq!(&padded.margin[..], &full.margin[..7]);
+}
+
+#[test]
+fn full_model_is_accurate_on_fixture() {
+    // The fixture's embedded-prototype classifier must be well above
+    // chance at FP16 (design target ~0.9; see runtime::fixture docs).
+    let mut engine = backend();
+    let eval = engine.eval_data(DS).unwrap();
+    let v = engine.manifest().variant(DS, VariantKind::Fp, 16, 256).unwrap().clone();
+    let out = engine.run_dataset(&v, &eval, 0).unwrap();
+    assert!(out.accuracy(&eval.y) > 0.6, "accuracy {}", out.accuracy(&eval.y));
+}
+
+#[test]
+fn artifacts_dir_and_synthetic_agree() {
+    // Writing the fixture suite to disk and loading it back must give
+    // the same outputs as the in-memory backend (the two construction
+    // paths share one generator).
+    let dir = std::env::temp_dir().join(format!("ari-native-rt-{}", std::process::id()));
+    ari::runtime::fixture::write_artifacts(&dir, &ari::runtime::fixture::default_specs()).unwrap();
+    let mut from_disk = NativeBackend::from_artifacts(&dir).unwrap();
+    let mut in_memory = backend();
+    let eval = in_memory.eval_data(DS).unwrap();
+    let v = in_memory.manifest().variant(DS, VariantKind::Fp, 10, 32).unwrap().clone();
+    let a = in_memory.execute(&v, eval.rows(0, 32), None).unwrap();
+    let b = from_disk.execute(&v, eval.rows(0, 32), None).unwrap();
+    assert_eq!(a.pred, b.pred);
+    assert_eq!(a.scores, b.scores);
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -1,0 +1,101 @@
+//! Native-backend ports of the server integration suite: the threaded
+//! request loop end to end over the synthetic fixture, under both
+//! escalation policies and both arrival modes.  Always runs — no
+//! artifacts, no PJRT.
+
+use ari::config::{AriConfig, Mode, ThresholdPolicy};
+use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
+use ari::runtime::{Backend, NativeBackend};
+use ari::server::{run_serving, ServeOptions};
+
+fn base_cfg() -> AriConfig {
+    let mut cfg = AriConfig::default();
+    cfg.dataset = "fashion_syn".into();
+    cfg.mode = Mode::Fp;
+    cfg.reduced_level = 10;
+    cfg.threshold = ThresholdPolicy::MMax;
+    cfg.batch_size = 32;
+    cfg.requests = 256;
+    cfg.batch_timeout_us = 1000;
+    cfg
+}
+
+fn serve_with(cfg: &AriConfig, opts: ServeOptions) -> ari::server::ServeReport {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data(&cfg.dataset).unwrap();
+    let n_calib = data.n / 2;
+    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(cfg), &data, n_calib).unwrap();
+    run_serving(&mut engine, &cascade, cfg, &data, None, opts).unwrap()
+}
+
+#[test]
+fn closed_loop_serves_every_request_exactly_once() {
+    let cfg = base_cfg();
+    let report = serve_with(&cfg, ServeOptions::default());
+    assert_eq!(report.completions.len(), cfg.requests);
+    let mut ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), cfg.requests, "duplicate or missing request ids");
+    assert!(report.accuracy > 0.7, "accuracy {} too low", report.accuracy);
+    assert!(report.savings() > 0.2, "savings {} too low", report.savings());
+}
+
+#[test]
+fn open_loop_poisson_also_completes() {
+    let mut cfg = base_cfg();
+    cfg.requests = 96;
+    cfg.arrival_rate = 3000.0;
+    let report = serve_with(&cfg, ServeOptions::default());
+    assert_eq!(report.completions.len(), cfg.requests);
+    // Open loop with a sane rate: mean latency should be bounded (batches
+    // fire on deadline, 1 ms).
+    assert!(report.mean_latency < std::time::Duration::from_secs(2));
+}
+
+#[test]
+fn deferred_escalation_preserves_results() {
+    let cfg = base_cfg();
+    let imm = serve_with(&cfg, ServeOptions { escalation: EscalationPolicy::Immediate });
+    let def = serve_with(&cfg, ServeOptions { escalation: EscalationPolicy::Deferred });
+    assert_eq!(imm.completions.len(), def.completions.len());
+    // Same rows escalate under both policies (same threshold, same data,
+    // deterministic FP path) -> same escalation fraction and accuracy.
+    assert!((imm.escalation_fraction - def.escalation_fraction).abs() < 1e-9);
+    assert!((imm.accuracy - def.accuracy).abs() < 1e-9);
+    // And the modelled energy agrees (per-inference accounting; the
+    // metrics store energy as integer nanojoules, so each add_energy_uj
+    // call truncates <1 nJ — the two policies make different numbers of
+    // accounting calls, hence the small tolerance).
+    assert!((imm.energy_uj - def.energy_uj).abs() < 0.1, "imm {} vs def {}", imm.energy_uj, def.energy_uj);
+}
+
+#[test]
+fn tiny_batch_timeout_works() {
+    let mut cfg = base_cfg();
+    cfg.requests = 8;
+    cfg.batch_size = 32; // compiled size; the batcher may fire partial batches
+    cfg.batch_timeout_us = 1; // force per-request batches
+    let report = serve_with(&cfg, ServeOptions::default());
+    assert_eq!(report.completions.len(), 8);
+}
+
+#[test]
+fn parity_with_full_reported_when_baseline_given() {
+    let cfg = base_cfg();
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data(&cfg.dataset).unwrap();
+    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, data.n / 2).unwrap();
+    let full_v = engine
+        .manifest()
+        .variant(&cfg.dataset, cfg.mode.kind(), cfg.full_level, cfg.batch_size)
+        .unwrap()
+        .clone();
+    let full = engine.run_dataset(&full_v, &data, cfg.seed as u32).unwrap();
+    let report =
+        run_serving(&mut engine, &cascade, &cfg, &data, Some(&full.pred), ServeOptions::default()).unwrap();
+    let parity = report.full_parity.expect("parity must be reported");
+    // Mmax guarantees parity on the calibration half; the serve half can
+    // drift only on unseen low-margin rows.
+    assert!(parity > 0.9, "full-model parity {parity} too low");
+}

@@ -1,0 +1,116 @@
+//! Vendored, dependency-free subset of the `anyhow` crate.
+//!
+//! The build environment for this repository must work fully offline (no
+//! crates.io access), so the workspace carries this minimal drop-in
+//! replacement as a path dependency.  It implements exactly the surface
+//! the `ari` crate uses:
+//!
+//! * [`Error`] — a boxed, `Display`-able error value,
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros,
+//! * a blanket `From<E: std::error::Error>` so `?` converts std errors.
+//!
+//! Swapping this for the real `anyhow` crate is a one-line change in
+//! `rust/Cargo.toml` (replace the `path` dependency with a version) and
+//! requires no source changes.
+
+use std::fmt;
+
+/// A string-backed error value, API-compatible (for this crate's usage)
+/// with `anyhow::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+
+    /// Wrap the error with additional context, anyhow-style.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`
+// (exactly like the real anyhow) — that is what makes the blanket
+// conversion below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // From<ParseIntError>
+        ensure!(v > 0, "value {v} must be positive");
+        if v > 100 {
+            bail!("value {v} too large");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").unwrap_err().to_string().contains("invalid digit"));
+        assert!(parse("-1").unwrap_err().to_string().contains("positive"));
+        assert!(parse("500").unwrap_err().to_string().contains("too large"));
+        let e = anyhow!("code {}", 42);
+        assert_eq!(e.to_string(), "code 42");
+        assert_eq!(format!("{e:?}"), "code 42");
+        assert_eq!(e.context("outer").to_string(), "outer: code 42");
+    }
+}
