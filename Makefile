@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test doc fmt bench artifacts artifacts-quick clean
+.PHONY: build test doc fmt bench bench-json artifacts artifacts-quick clean
 
 build:
 	$(CARGO) build --release
@@ -24,6 +24,19 @@ fmt:
 bench:
 	$(CARGO) bench
 
+# Machine-readable perf record: short smoke iterations of the mlp /
+# runtime / cascade benches, each emitting an `ari-bench v1` JSON
+# document, concatenated into BENCH_native.json (one document per
+# line).  CI uploads the result as an artifact so the perf trajectory
+# accumulates per commit; see docs/PERF.md for how to read it.
+bench-json:
+	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_mlp.json) $(CARGO) bench --bench bench_mlp
+	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_runtime.json) $(CARGO) bench --bench bench_runtime
+	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_cascade.json) $(CARGO) bench --bench bench_cascade
+	cat BENCH_native.bench_mlp.json BENCH_native.bench_runtime.json BENCH_native.bench_cascade.json > BENCH_native.json
+	rm -f BENCH_native.bench_mlp.json BENCH_native.bench_runtime.json BENCH_native.bench_cascade.json
+	@echo "wrote BENCH_native.json"
+
 # Train the MLPs and AOT-lower every resolution variant to HLO text
 # (L1/L2 python layer; needs jax).  Output: ./artifacts/
 artifacts:
@@ -36,3 +49,4 @@ artifacts-quick:
 clean:
 	$(CARGO) clean
 	rm -rf artifacts
+	rm -f BENCH_native.json BENCH_native.bench_*.json

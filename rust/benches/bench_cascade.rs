@@ -4,18 +4,44 @@
 //! escalation policy) called out in DESIGN.md §8.
 //!
 //! Runs against `artifacts/` when present (PJRT with `--features pjrt`),
-//! else the synthetic fixture on the native backend.
+//! else the synthetic fixture on the native backend.  `ARI_BENCH_JSON`
+//! additionally records each serving session (ns/request, req/s) in the
+//! machine-readable `ari-bench v1` document; `ARI_BENCH_SMOKE=1` shrinks
+//! the request counts.
 
 use std::path::PathBuf;
 
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
 use ari::runtime::{open_backend, Backend, BackendKind};
-use ari::server::{run_serving, ServeOptions};
-use ari::util::benchkit::section;
+use ari::server::{run_serving, ServeOptions, ServeReport};
+use ari::util::benchkit::{section, smoke, BenchResult, JsonReport};
+
+/// Shrink a request count for smoke runs.
+fn req(n: usize) -> usize {
+    if smoke() {
+        n / 8
+    } else {
+        n
+    }
+}
+
+/// Record one serving session as a bench entry: one "iteration" of
+/// `completions` items, so ns_per_item is ns/request and items_per_sec
+/// is req/s.
+fn record(json: &mut JsonReport, name: &str, r: &ServeReport) {
+    let result = BenchResult {
+        name: name.to_string(),
+        mean_ns: r.wall.as_nanos() as f64,
+        std_ns: 0.0,
+        iters: 1,
+    };
+    json.add(&result, Some(r.completions.len() as u64));
+}
 
 fn main() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut json = JsonReport::new("bench_cascade");
 
     section("ARI cascade vs always-full, fashion_syn FP10 (closed loop, 1024 req)");
     println!(
@@ -37,12 +63,13 @@ fn main() {
         cfg.reduced_level = reduced;
         cfg.threshold = threshold;
         cfg.batch_size = 32;
-        cfg.requests = 1024;
+        cfg.requests = req(1024);
         let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
         let data = engine.eval_data(&cfg.dataset).unwrap();
         let n_calib = data.n / 2;
         let cascade = Cascade::calibrate(engine.as_mut(), CascadeSpec::from_config(&cfg), &data, n_calib).unwrap();
         let r = run_serving(engine.as_mut(), &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
+        record(&mut json, name, &r);
         println!(
             "{:<34} {:>10.0} {:>9.1?} {:>9.1?} {:>10.1} {:>7.1}%",
             name,
@@ -63,12 +90,13 @@ fn main() {
             cfg.dataset = "fashion_syn".into();
             cfg.reduced_level = 10;
             cfg.batch_size = batch;
-            cfg.requests = 512;
+            cfg.requests = req(512);
             let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
             let data = engine.eval_data(&cfg.dataset).unwrap();
             let n_calib = data.n / 2;
             let cascade = Cascade::calibrate(engine.as_mut(), CascadeSpec::from_config(&cfg), &data, n_calib).unwrap();
             let r = run_serving(engine.as_mut(), &cascade, &cfg, &data, None, ServeOptions { escalation: policy }).unwrap();
+            record(&mut json, &format!("b={batch} {pname}"), &r);
             println!("{:<34} {:>10.0} {:>9.1?} {:>9.1?}", format!("b={batch} {pname}"), r.throughput_rps, r.p50, r.p99);
         }
     }
@@ -81,11 +109,13 @@ fn main() {
     cfg.reduced_level = 512;
     cfg.full_level = 4096;
     cfg.batch_size = 32;
-    cfg.requests = 512;
+    cfg.requests = req(512);
     let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
     let data = engine.eval_data(&cfg.dataset).unwrap();
     let n_calib = data.n / 2;
     let cascade = Cascade::calibrate(engine.as_mut(), CascadeSpec::from_config(&cfg), &data, n_calib).unwrap();
     let r = run_serving(engine.as_mut(), &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
+    record(&mut json, "SC L=512 @ Mmax", &r);
     println!("{}", r.summary());
+    json.write_if_requested();
 }

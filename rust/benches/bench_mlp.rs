@@ -4,6 +4,12 @@
 //! artifacts: XLA's fused matmuls win at batch).
 //!
 //! Runs against `artifacts/` when present, else the synthetic fixture.
+//!
+//! With `ARI_BENCH_JSON=path` every case is also written as a machine-
+//! readable `ari-bench v1` document (ns/sample and samples/s per
+//! engine/variant) — `make bench-json` uses this to record the perf
+//! trajectory in `BENCH_native.json`.  `ARI_BENCH_SMOKE=1` shrinks the
+//! iteration counts for CI.
 
 use std::path::PathBuf;
 
@@ -12,7 +18,7 @@ use ari::mlp::{FpEngine, ScNoiseEngine};
 use ari::quant::FpFormat;
 use ari::runtime::{open_backend, Backend, BackendKind};
 use ari::sc::ScConfig;
-use ari::util::benchkit::{bench, section};
+use ari::util::benchkit::{bench, iters, section, JsonReport};
 
 fn main() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -20,34 +26,57 @@ fn main() {
     let ds = engine.manifest().datasets[0].name.clone();
     engine.load_dataset(&ds).unwrap();
     let data = engine.eval_data(&ds).unwrap();
+    let mut json = JsonReport::new("bench_mlp");
 
     section(&format!("pure-rust engines, batch 32 ({ds} topology)"));
     let x = data.rows(0, 32).to_vec();
     {
         let weights = engine.weights(&ds).unwrap();
+        let (w, n) = iters(1, 5);
         for bits in [16u32, 8] {
             let eng = FpEngine::new(weights, FpFormat::fp(bits));
-            bench(&format!("rust FpEngine FP{bits}"), 1, 5, || {
+            let r = bench(&format!("rust FpEngine FP{bits} b=32"), w, n, || {
                 std::hint::black_box(eng.forward(&x, 32));
-            })
-            .report(Some((32, "samples")));
+            });
+            json.record(&r, Some((32, "samples")));
         }
         let sc = ScNoiseEngine::new(weights, ScConfig::new(512));
-        bench("rust ScNoiseEngine L=512", 1, 5, || {
+        let r = bench("rust ScNoiseEngine L=512 b=32", w, n, || {
             std::hint::black_box(sc.forward(&x, 32, 7));
-        })
-        .report(Some((32, "samples")));
+        });
+        json.record(&r, Some((32, "samples")));
     }
 
-    section(&format!("backend execute path ({}), batch 32 (same model)", engine.name()));
-    for (kind, level, key) in
-        [(VariantKind::Fp, 16usize, None), (VariantKind::Fp, 8, None), (VariantKind::Sc, 512, Some([1u32, 2u32]))]
-    {
-        let v = engine.manifest().variant(&ds, kind, level, 32).unwrap().clone();
-        engine.execute(&v, &x, key).unwrap(); // warm compile
-        bench(&format!("{} {:?} level={level}", engine.name(), kind), 2, 10, || {
-            std::hint::black_box(engine.execute(&v, &x, key).unwrap());
-        })
-        .report(Some((32, "samples")));
+    for batch in [32usize, 256] {
+        section(&format!(
+            "backend execute path ({}), batch {batch} (prepared plans, same model)",
+            engine.name()
+        ));
+        let xb = data.rows(0, batch).to_vec();
+        let (w, n) = iters(2, 10);
+        for (kind, level, key) in
+            [(VariantKind::Fp, 16usize, None), (VariantKind::Fp, 8, None), (VariantKind::Sc, 512, Some([1u32, 2u32]))]
+        {
+            let v = engine.manifest().variant(&ds, kind, level, batch).unwrap().clone();
+            engine.execute(&v, &xb, key).unwrap(); // warm compile / plan build
+            let r = bench(&format!("{} {:?} level={level} b={batch}", engine.name(), kind), w, n, || {
+                std::hint::black_box(engine.execute(&v, &xb, key).unwrap());
+            });
+            json.record(&r, Some((batch as u64, "samples")));
+        }
     }
+
+    section("per-variant accounting (backend variant_stats)");
+    for s in engine.variant_stats() {
+        println!(
+            "{:<28} prepared in {:>8.1} µs, {:>4} executes, {:>9.0} ns/sample, {:>12.0} samples/s",
+            s.key,
+            s.prepare_ns as f64 / 1e3,
+            s.executes,
+            s.ns_per_sample(),
+            s.samples_per_sec(),
+        );
+    }
+
+    json.write_if_requested();
 }

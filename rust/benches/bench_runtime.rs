@@ -4,19 +4,23 @@
 //! energy comes from the calibrated model, see bench_energy_model).
 //!
 //! Runs against `artifacts/` when present (PJRT with `--features pjrt`),
-//! else the synthetic fixture on the native backend.
+//! else the synthetic fixture on the native backend.  `ARI_BENCH_JSON`
+//! additionally writes the machine-readable `ari-bench v1` document;
+//! `ARI_BENCH_SMOKE=1` shrinks iterations.
 
 use std::path::PathBuf;
 
 use ari::data::VariantKind;
 use ari::runtime::{open_backend, Backend, BackendKind};
-use ari::util::benchkit::{bench, section};
+use ari::util::benchkit::{bench, iters, section, JsonReport};
 
 fn main() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut engine = open_backend(&root, BackendKind::Auto).unwrap();
     let ds = engine.manifest().datasets[0].name.clone();
     let data = engine.eval_data(&ds).unwrap();
+    let mut json = JsonReport::new("bench_runtime");
+    let (warm, timed) = iters(1, 8);
 
     for batch in [32usize, 256] {
         section(&format!("execute, batch {batch} ({ds}, backend {})", engine.name()));
@@ -29,10 +33,10 @@ fn main() {
                     VariantKind::Fp => None,
                 };
                 engine.execute(&v, &x, key).unwrap(); // warm compile
-                bench(&format!("{:?} level={level} b={batch}", kind), 1, 8, || {
+                let r = bench(&format!("{:?} level={level} b={batch}", kind), warm, timed, || {
                     std::hint::black_box(engine.execute(&v, &x, key).unwrap());
-                })
-                .report(Some((batch as u64, "samples")));
+                });
+                json.record(&r, Some((batch as u64, "samples")));
             }
         }
     }
@@ -40,10 +44,10 @@ fn main() {
     section("padding overhead (batch 32, n=5)");
     let v = engine.manifest().variant(&ds, VariantKind::Fp, 16, 32).unwrap().clone();
     let x5 = data.rows(0, 5).to_vec();
-    bench("run_padded n=5 into b=32", 1, 8, || {
+    let r = bench("run_padded n=5 into b=32", warm, timed, || {
         std::hint::black_box(engine.run_padded(&v, &x5, 5, None).unwrap());
-    })
-    .report(Some((5, "samples")));
+    });
+    json.record(&r, Some((5, "samples")));
 
     let stats = engine.stats();
     println!(
@@ -53,4 +57,5 @@ fn main() {
         stats.executes,
         engine.mean_execute_us()
     );
+    json.write_if_requested();
 }

@@ -75,6 +75,8 @@ pub struct CascadeBatch {
     pub energy_uj: f64,
     /// Reduced-model outputs (before any overwrite) — kept for analysis.
     pub reduced_pred: Vec<i32>,
+    /// Classes per row, as reported by the backend outputs.
+    pub n_classes: usize,
 }
 
 /// A calibrated, servable cascade.
@@ -192,7 +194,7 @@ impl Cascade {
             }
         }
         let energy_uj = n as f64 * self.e_reduced + esc_rows.len() as f64 * self.e_full;
-        Ok(CascadeBatch { pred, margin, escalated, energy_uj, reduced_pred: red.pred })
+        Ok(CascadeBatch { pred, margin, escalated, energy_uj, reduced_pred: red.pred, n_classes: red.n_classes })
     }
 
     /// Run a whole dataset through the cascade (experiment path).
@@ -203,6 +205,7 @@ impl Cascade {
             escalated: Vec::with_capacity(data.n),
             energy_uj: 0.0,
             reduced_pred: Vec::with_capacity(data.n),
+            n_classes: 0,
         };
         let mut chunkid = 0u32;
         let mut lo = 0;
@@ -214,16 +217,18 @@ impl Cascade {
             agg.escalated.extend(out.escalated);
             agg.energy_uj += out.energy_uj;
             agg.reduced_pred.extend(out.reduced_pred);
+            agg.n_classes = out.n_classes;
             lo = hi;
             chunkid += 1;
         }
-        let n_classes = 10;
+        // Class count comes from the backend outputs, not an assumption
+        // about the dataset (non-10-class datasets report correctly).
         let outputs = BatchOutputs {
             scores: Vec::new(),
             pred: agg.pred.clone(),
             margin: agg.margin.clone(),
             batch: data.n,
-            n_classes,
+            n_classes: agg.n_classes,
         };
         Ok((agg, outputs))
     }
@@ -270,6 +275,7 @@ mod tests {
             escalated: vec![true, false, true, false],
             energy_uj: 0.0,
             reduced_pred: vec![0; 4],
+            n_classes: 10,
         };
         assert!((Cascade::escalation_fraction(&b) - 0.5).abs() < 1e-12);
     }

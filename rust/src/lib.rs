@@ -26,13 +26,13 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`util`] | PRNG, stats, histograms, mini-TOML, property-test harness |
+//! | [`util`] | PRNG, stats, histograms, mini-TOML, worker pool, bench kit, property-test harness |
 //! | [`config`] | experiment / server configuration |
 //! | [`data`] | `.bin`/`.meta` tensor loader, manifest, datasets |
-//! | [`tensor`] | minimal f32 matrix substrate |
+//! | [`tensor`] | f32 matrix substrate with the tiled matmul kernel |
 //! | [`quant`] | truncated-mantissa FP emulation (rust twin of the L1 kernel) |
 //! | [`sc`] | exact bitstream stochastic-computing simulator (LFSR → SNG → XNOR → APC) |
-//! | [`mlp`] | pure-rust MLP engines over [`quant`]/[`sc`] |
+//! | [`mlp`] | pure-rust MLP engines + prepared execution plans over [`quant`]/[`sc`] |
 //! | [`energy`] | per-inference energy model calibrated to the paper's Tables I & II |
 //! | [`margin`] | margin statistics + threshold calibration (Mmax / M99 / M95) |
 //! | [`runtime`] | the [`runtime::Backend`] trait, native + PJRT backends, fixtures |

@@ -11,12 +11,22 @@
 //!   maths as the `sc_matmul` kernel, seeded Gaussians + grid snap).
 //! * [`sc_exact_forward`] — bitstream-exact single-sample forward on the
 //!   [`crate::sc`] simulator (slow; case studies and validation only).
+//!
+//! The FP and SC-noise forward passes run on prepared execution plans
+//! ([`plan`]): weights quantised/packed once into a padded
+//! kernel-friendly layout, reusable ping-pong activation scratch, and
+//! batch rows sharded across a scoped worker pool with bit-identical
+//! results for any thread count.  The engines above are thin wrappers;
+//! the serving backend caches [`FpPlan`]/[`ScPlan`] per variant.
+
+pub mod plan;
 
 use crate::data::Weights;
 use crate::quant::FpFormat;
 use crate::sc::ScConfig;
 use crate::tensor::{top2_margin, Matrix};
-use crate::util::Pcg64;
+
+pub use plan::{FpPlan, ScPlan, Scratch};
 
 /// Output of a forward pass over a batch.
 #[derive(Clone, Debug)]
@@ -59,36 +69,37 @@ impl Outputs {
     }
 }
 
-/// Truncated-mantissa floating-point engine.
-pub struct FpEngine<'w> {
-    weights: &'w Weights,
+/// Truncated-mantissa floating-point engine — a convenience wrapper
+/// that builds a prepared [`FpPlan`] at construction (weights quantised
+/// once, padded kernel layout) and forwards through it.  The serving
+/// path ([`crate::runtime::NativeBackend`]) caches plans and scratch
+/// directly; this wrapper allocates fresh scratch per call.
+pub struct FpEngine {
+    plan: FpPlan,
     /// The reduced-precision format this engine emulates.
     pub fmt: FpFormat,
 }
 
-impl<'w> FpEngine<'w> {
-    /// Engine over borrowed weights at a fixed format.
-    pub fn new(weights: &'w Weights, fmt: FpFormat) -> Self {
-        Self { weights, fmt }
+impl FpEngine {
+    /// Engine over `weights` at a fixed format (quantises and packs the
+    /// weights once, here).  The plan owns packed copies, so the engine
+    /// does not borrow `weights`.
+    pub fn new(weights: &Weights, fmt: FpFormat) -> Self {
+        Self { plan: FpPlan::new(weights, fmt), fmt }
     }
 
     /// Forward a (batch, input_dim) row-major slice.
     pub fn forward(&self, x: &[f32], batch: usize) -> Outputs {
-        let input_dim = self.weights.layers[0].in_dim;
-        assert_eq!(x.len(), batch * input_dim, "input shape mismatch");
-        let mut h = Matrix::from_vec(batch, input_dim, x.to_vec());
-        let n = self.weights.layers.len();
-        for (i, l) in self.weights.layers.iter().enumerate() {
-            let w = Matrix::from_vec(l.in_dim, l.out_dim, l.w.clone());
-            h = crate::quant::quant_layer(&h, &w, &l.b, l.alpha, self.fmt, i + 1 < n);
-        }
-        Outputs::from_logits(h)
+        let mut scratch = Scratch::new();
+        self.plan.forward(x, batch, &mut scratch, self.plan.auto_threads(batch))
     }
 }
 
-/// SC noise-model engine (rust twin of the `sc_matmul` kernel maths).
-pub struct ScNoiseEngine<'w> {
-    weights: &'w Weights,
+/// SC noise-model engine (rust twin of the `sc_matmul` kernel maths) —
+/// a convenience wrapper over a prepared [`ScPlan`] (raw padded
+/// weights, per-layer `max|w|` precomputed at construction).
+pub struct ScNoiseEngine {
+    plan: ScPlan,
     /// The SC configuration (sequence length) being modelled.
     pub cfg: ScConfig,
 }
@@ -103,43 +114,24 @@ pub const SC_NOISE_C: f64 = 0.72;
 /// the paper's §III-B anchor (~1.3% class changes, SVHN 4096→512).
 pub const SC_LFSR_K: f64 = 48.0;
 
-impl<'w> ScNoiseEngine<'w> {
-    /// Engine over borrowed weights at a fixed sequence length.
-    pub fn new(weights: &'w Weights, cfg: ScConfig) -> Self {
-        Self { weights, cfg }
+impl ScNoiseEngine {
+    /// Engine over `weights` at a fixed sequence length (packs the
+    /// weights and precomputes per-layer `max|w|` once, here).  The plan
+    /// owns packed copies, so the engine does not borrow `weights`.
+    pub fn new(weights: &Weights, cfg: ScConfig) -> Self {
+        Self { plan: ScPlan::new(weights, cfg), cfg }
     }
 
-    /// Forward with explicit noise seed (deterministic).
+    /// Forward with explicit noise seed (deterministic).  Row `r` draws
+    /// noise from its own `(seed, SC_ROW_STREAM + r)` PCG stream (see
+    /// [`plan::SC_ROW_STREAM`]) — per-row keying that makes results
+    /// independent of batch sharding across worker threads.  The operand
+    /// scale `max|x|` is
+    /// per row (as the exact bitstream simulator normalises per sample),
+    /// and the APC readout error converts back by `max|x| * max|w|`.
     pub fn forward(&self, x: &[f32], batch: usize, seed: u64) -> Outputs {
-        let input_dim = self.weights.layers[0].in_dim;
-        assert_eq!(x.len(), batch * input_dim, "input shape mismatch");
-        let mut h = Matrix::from_vec(batch, input_dim, x.to_vec());
-        let n = self.weights.layers.len();
-        let mut rng = Pcg64::new(seed, 17);
-        for (i, l) in self.weights.layers.iter().enumerate() {
-            let w = Matrix::from_vec(l.in_dim, l.out_dim, l.w.clone());
-            let mut pre = h.matmul(&w);
-            pre.add_row(&l.b);
-            // Same scale as the kernel: the SC hardware encodes x/max|x|
-            // and w/max|w|, so the APC readout error converts back by
-            // max|x| * max|w|.
-            let xmax = h.data.iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
-            let wmax = l.w.iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
-            let scale = xmax * wmax;
-            let sigma = SC_NOISE_C / SC_LFSR_K * (l.in_dim as f64 / self.cfg.seq_len as f64).sqrt() * scale;
-            let step = self.cfg.grid_step() * scale;
-            for v in &mut pre.data {
-                let noisy = *v as f64 + sigma * rng.normal();
-                *v = ((noisy / step).round() * step) as f32;
-            }
-            if i + 1 < n {
-                pre.prelu(l.alpha);
-            }
-            h = pre;
-        }
-        let mut out = Outputs::from_logits(h);
-        out.snap_scores_to_grid(self.cfg.seq_len);
-        out
+        let mut scratch = Scratch::new();
+        self.plan.forward(x, batch, seed, &mut scratch, self.plan.auto_threads(batch))
     }
 }
 

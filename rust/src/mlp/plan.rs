@@ -1,0 +1,448 @@
+//! Prepared execution plans: the per-variant state the native backend
+//! caches so a steady-state forward pass does no per-call weight work.
+//!
+//! The unprepared engines pay three per-batch costs the paper's hardware
+//! never would: every layer's weight matrix is cloned and re-quantised
+//! on every call, the matmul allocates a fresh output per layer, and the
+//! whole pass is single-threaded.  A plan hoists all of it to
+//! construction time:
+//!
+//! * weights are quantised **once** per [`FpFormat`] (FP) or copied raw
+//!   with the per-layer `max|w|` precomputed (SC noise model),
+//! * each layer's weight matrix is stored in a padded, kernel-friendly
+//!   layout — output width rounded up to [`KERNEL_NR`] with zero
+//!   columns, input rows extended with zero rows to the previous layer's
+//!   padded width — so the tiled kernel's full-register path runs edge
+//!   handling exactly never,
+//! * activations ping-pong through a reusable [`Scratch`] (two
+//!   `batch × stride` buffers), so steady-state forwards allocate only
+//!   the returned [`Outputs`].
+//!
+//! Forwards shard batch rows across scoped workers
+//! ([`crate::util::pool`]).  Everything per-row — kernel accumulation
+//! order, the quantisation epilogue, and the SC noise stream, which is
+//! keyed per row as `Pcg64::new(seed, SC_ROW_STREAM + row)` — is
+//! independent of the shard layout, so outputs are **bit-identical for
+//! any worker count** (pinned by `tests/kernel_parity.rs`).
+//!
+//! Zero padding is invisible to the numbers: padded columns carry zero
+//! weights and zero bias (so their activations are exactly `0.0`, which
+//! PReLU and quantisation both fix), and padded input rows are zero
+//! rows, so every extra kernel term is `0.0 * 0.0` appended *after* the
+//! real accumulation.
+
+use crate::data::Weights;
+use crate::quant::FpFormat;
+use crate::sc::ScConfig;
+use crate::tensor::{matmul_strided, Matrix, KERNEL_NR};
+use crate::util::{pool, Pcg64};
+
+use super::{Outputs, SC_LFSR_K, SC_NOISE_C};
+
+/// Stream-id base for per-row SC noise: row `r` of a batch draws from
+/// `Pcg64::new(seed, SC_ROW_STREAM + r)`, independent of every other
+/// row and of how rows are sharded across workers.
+pub const SC_ROW_STREAM: u64 = 17;
+
+/// One layer in packed, kernel-ready form.
+struct PlanLayer {
+    /// `(k, np)` row-major weights — quantised for FP plans, raw for SC.
+    w: Vec<f32>,
+    /// Bias, `np` long (padded with zeros; pre-quantised for FP plans).
+    b: Vec<f32>,
+    /// PReLU negative slope.
+    alpha: f32,
+    /// Kernel reduction depth: the real input width for the first layer,
+    /// the previous layer's padded width after that.
+    k: usize,
+    /// Padded output width (multiple of [`KERNEL_NR`]).
+    np: usize,
+    /// Real (unpadded) input width — the SC noise model's fan-in.
+    in_real: usize,
+    /// Real (unpadded) output width.
+    out_real: usize,
+    /// `max|w|` over the real weights (SC noise scale), `>= 1e-6`.
+    wmax: f64,
+}
+
+/// Packed layers plus the shared layout facts.
+struct Packed {
+    layers: Vec<PlanLayer>,
+    /// Row stride of the ping-pong buffers: `max(input_dim, max np)`.
+    stride: usize,
+    input_dim: usize,
+    n_classes: usize,
+    /// Kernel flops (2·k·np summed over layers) per batch row — the
+    /// work estimate behind [`pool::auto_threads_for`].
+    flops_per_row: usize,
+}
+
+fn pad_to(n: usize, q: usize) -> usize {
+    (n + q - 1) / q * q
+}
+
+fn pack(weights: &Weights, quant: Option<FpFormat>) -> Packed {
+    let mut layers = Vec::with_capacity(weights.layers.len());
+    let input_dim = weights.layers[0].in_dim;
+    let mut prev_np = input_dim; // kernel depth consumed by the next layer
+    let mut stride = input_dim;
+    for (li, l) in weights.layers.iter().enumerate() {
+        let k = if li == 0 { input_dim } else { prev_np };
+        let np = pad_to(l.out_dim, KERNEL_NR);
+        let mut w = vec![0.0f32; k * np];
+        for i in 0..l.in_dim {
+            for j in 0..l.out_dim {
+                let v = l.w[i * l.out_dim + j];
+                w[i * np + j] = match quant {
+                    Some(fmt) => fmt.quantize(v),
+                    None => v,
+                };
+            }
+        }
+        let mut b = vec![0.0f32; np];
+        for (bq, &bv) in b.iter_mut().zip(&l.b) {
+            *bq = match quant {
+                Some(fmt) => fmt.quantize(bv),
+                None => bv,
+            };
+        }
+        let wmax = l.w.iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
+        layers.push(PlanLayer { w, b, alpha: l.alpha, k, np, in_real: l.in_dim, out_real: l.out_dim, wmax });
+        stride = stride.max(np);
+        prev_np = np;
+    }
+    let n_classes = layers.last().expect("weights have at least one layer").out_real;
+    let flops_per_row = layers.iter().map(|l| 2 * l.k * l.np).sum();
+    Packed { layers, stride, input_dim, n_classes, flops_per_row }
+}
+
+/// Reusable ping-pong activation buffers.  Grows to the largest
+/// `batch × stride` seen and never shrinks, so the steady state of a
+/// serving loop allocates nothing per forward.
+#[derive(Default)]
+pub struct Scratch {
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+}
+
+impl Scratch {
+    /// Empty scratch (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, len: usize) {
+        if self.ping.len() < len {
+            self.ping.resize(len, 0.0);
+            self.pong.resize(len, 0.0);
+        }
+    }
+}
+
+/// Shared shard scaffolding of both plan forwards: size the scratch,
+/// split ping/pong/scores into per-shard slices, run `run(lo, rows,
+/// ping, pong, scores)` for every shard on the worker pool, and return
+/// the assembled scores.  Keeping this in one place keeps the
+/// bit-identical-across-threads contract uniform across engines.
+fn shard_forward<F>(packed: &Packed, batch: usize, scratch: &mut Scratch, threads: usize, run: F) -> Vec<f32>
+where
+    F: Fn(usize, usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+{
+    scratch.ensure(batch * packed.stride);
+    let mut scores = vec![0.0f32; batch * packed.n_classes];
+    {
+        let mut ping: &mut [f32] = &mut scratch.ping[..batch * packed.stride];
+        let mut pong: &mut [f32] = &mut scratch.pong[..batch * packed.stride];
+        let mut out: &mut [f32] = &mut scores;
+        let run = &run;
+        let mut jobs = Vec::new();
+        for (lo, rows) in pool::shards(batch, threads) {
+            let (a, rest) = std::mem::take(&mut ping).split_at_mut(rows * packed.stride);
+            ping = rest;
+            let (b, rest) = std::mem::take(&mut pong).split_at_mut(rows * packed.stride);
+            pong = rest;
+            let (o, rest) = std::mem::take(&mut out).split_at_mut(rows * packed.n_classes);
+            out = rest;
+            jobs.push(move || run(lo, rows, a, b, o));
+        }
+        pool::run_jobs(jobs);
+    }
+    scores
+}
+
+/// Prepared truncated-mantissa FP forward: weights and biases quantised
+/// once at construction, padded kernel layout, threaded forward.
+pub struct FpPlan {
+    packed: Packed,
+    /// The format this plan was quantised for.
+    pub fmt: FpFormat,
+}
+
+impl FpPlan {
+    /// Quantise + pack `weights` for `fmt`.
+    pub fn new(weights: &Weights, fmt: FpFormat) -> Self {
+        Self { packed: pack(weights, Some(fmt)), fmt }
+    }
+
+    /// Input feature width this plan consumes.
+    pub fn input_dim(&self) -> usize {
+        self.packed.input_dim
+    }
+
+    /// Classes per output row.
+    pub fn n_classes(&self) -> usize {
+        self.packed.n_classes
+    }
+
+    /// Work-aware worker count for a batch of `rows`: stays serial when
+    /// the whole forward is cheaper than thread spawns (tiny models),
+    /// scales toward [`pool::max_threads`] as per-row kernel work grows.
+    pub fn auto_threads(&self, rows: usize) -> usize {
+        pool::auto_threads_for(rows, self.packed.flops_per_row)
+    }
+
+    /// Forward a `(batch, input_dim)` row-major slice on up to `threads`
+    /// workers.  Outputs are bit-identical for every `threads` value.
+    pub fn forward(&self, x: &[f32], batch: usize, scratch: &mut Scratch, threads: usize) -> Outputs {
+        let p = &self.packed;
+        assert_eq!(x.len(), batch * p.input_dim, "input shape mismatch");
+        let scores = shard_forward(p, batch, scratch, threads, |lo, rows, ping, pong, out| {
+            self.run_rows(x, lo, rows, ping, pong, out)
+        });
+        Outputs::from_logits(Matrix::from_vec(batch, p.n_classes, scores))
+    }
+
+    /// One shard: rows `[lo, lo + rows)` of the batch, start to finish.
+    fn run_rows(&self, x: &[f32], lo: usize, rows: usize, ping: &mut [f32], pong: &mut [f32], scores: &mut [f32]) {
+        let p = &self.packed;
+        let stride = p.stride;
+        // Stage + quantise the input rows (the first layer's operand
+        // quantisation, hoisted out of the layer loop).
+        for r in 0..rows {
+            let src = &x[(lo + r) * p.input_dim..(lo + r + 1) * p.input_dim];
+            let dst = &mut ping[r * stride..r * stride + p.input_dim];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = self.fmt.quantize(s);
+            }
+        }
+        let (mut cur, mut nxt) = (ping, pong);
+        let n_layers = p.layers.len();
+        for (li, l) in p.layers.iter().enumerate() {
+            matmul_strided(cur, stride, &l.w, l.k, nxt, stride, rows, l.np);
+            let last = li + 1 == n_layers;
+            for r in 0..rows {
+                // Padded columns are skipped: the kernel already left
+                // exact zeros there (zero weight columns), and they only
+                // ever feed zero weight rows downstream.
+                let row = &mut nxt[r * stride..r * stride + l.out_real];
+                // Epilogue order matches `quant::quant_layer`: + bias,
+                // quantise, PReLU, quantise.  Non-negative values are
+                // already on the format grid after the first quantise,
+                // so the post-activation pass only touches negatives.
+                for (v, &b) in row.iter_mut().zip(&l.b) {
+                    *v = self.fmt.quantize(*v + b);
+                }
+                if !last {
+                    for v in row.iter_mut() {
+                        if *v < 0.0 {
+                            *v = self.fmt.quantize(l.alpha * *v);
+                        }
+                    }
+                }
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        for r in 0..rows {
+            scores[r * p.n_classes..(r + 1) * p.n_classes]
+                .copy_from_slice(&cur[r * stride..r * stride + p.n_classes]);
+        }
+    }
+}
+
+/// Prepared SC noise-model forward: raw padded weights, per-layer
+/// `max|w|` precomputed, per-row noise streams, threaded forward.
+pub struct ScPlan {
+    packed: Packed,
+    /// The SC configuration (sequence length) being modelled.
+    pub cfg: ScConfig,
+}
+
+impl ScPlan {
+    /// Pack `weights` for the SC noise model at `cfg`.
+    pub fn new(weights: &Weights, cfg: ScConfig) -> Self {
+        Self { packed: pack(weights, None), cfg }
+    }
+
+    /// Input feature width this plan consumes.
+    pub fn input_dim(&self) -> usize {
+        self.packed.input_dim
+    }
+
+    /// Classes per output row.
+    pub fn n_classes(&self) -> usize {
+        self.packed.n_classes
+    }
+
+    /// Work-aware worker count for a batch of `rows`.  SC rows carry the
+    /// kernel flops plus a Box–Muller normal draw and grid snap per
+    /// output (`ln`/`cos`-heavy — weighted at 256 flop-equivalents
+    /// each), so SC parallelises earlier than FP at equal topology.
+    pub fn auto_threads(&self, rows: usize) -> usize {
+        let noise: usize = self.packed.layers.iter().map(|l| 256 * l.out_real).sum();
+        pool::auto_threads_for(rows, self.packed.flops_per_row + noise)
+    }
+
+    /// Forward with an explicit noise seed on up to `threads` workers.
+    /// Row `r` draws noise from its own `(seed, SC_ROW_STREAM + r)`
+    /// stream, so outputs are bit-identical for every `threads` value.
+    pub fn forward(&self, x: &[f32], batch: usize, seed: u64, scratch: &mut Scratch, threads: usize) -> Outputs {
+        let p = &self.packed;
+        assert_eq!(x.len(), batch * p.input_dim, "input shape mismatch");
+        let scores = shard_forward(p, batch, scratch, threads, |lo, rows, ping, pong, out| {
+            self.run_rows(x, lo, rows, seed, ping, pong, out)
+        });
+        let mut out = Outputs::from_logits(Matrix::from_vec(batch, p.n_classes, scores));
+        out.snap_scores_to_grid(self.cfg.seq_len);
+        out
+    }
+
+    /// One shard, processed row-by-row so each row's noise stream runs
+    /// layer-sequentially without buffering PRNG state.
+    fn run_rows(
+        &self,
+        x: &[f32],
+        lo: usize,
+        rows: usize,
+        seed: u64,
+        ping: &mut [f32],
+        pong: &mut [f32],
+        scores: &mut [f32],
+    ) {
+        let p = &self.packed;
+        let stride = p.stride;
+        let n_layers = p.layers.len();
+        for r in 0..rows {
+            let mut rng = Pcg64::new(seed, SC_ROW_STREAM + (lo + r) as u64);
+            ping[r * stride..r * stride + p.input_dim]
+                .copy_from_slice(&x[(lo + r) * p.input_dim..(lo + r + 1) * p.input_dim]);
+            let (mut cur, mut nxt) = (&mut ping[r * stride..(r + 1) * stride], &mut pong[r * stride..(r + 1) * stride]);
+            for (li, l) in p.layers.iter().enumerate() {
+                // Per-row operand scale, matching the exact bitstream
+                // simulator's per-sample normalisation (the hardware
+                // encodes x / max|x| per input vector).
+                let xmax = cur[..l.k].iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
+                let scale = xmax * l.wmax;
+                let sigma = SC_NOISE_C / SC_LFSR_K * (l.in_real as f64 / self.cfg.seq_len as f64).sqrt() * scale;
+                let step = self.cfg.grid_step() * scale;
+                matmul_strided(cur, stride, &l.w, l.k, nxt, stride, 1, l.np);
+                let last = li + 1 == n_layers;
+                for j in 0..l.out_real {
+                    let v = nxt[j] + l.b[j];
+                    let noisy = v as f64 + sigma * rng.normal();
+                    let mut v = ((noisy / step).round() * step) as f32;
+                    if !last && v < 0.0 {
+                        v *= l.alpha;
+                    }
+                    nxt[j] = v;
+                }
+                // Padded outputs stay exactly zero (zero weights, zero
+                // bias, no noise): they feed zero rows downstream.
+                for v in &mut nxt[l.out_real..l.np] {
+                    *v = 0.0;
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+            scores[r * p.n_classes..(r + 1) * p.n_classes].copy_from_slice(&cur[..p.n_classes]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::LayerWeights;
+
+    fn weights(in_dim: usize, hidden: usize, classes: usize, seed: u64) -> Weights {
+        let mut rng = Pcg64::seeded(seed);
+        let mut mk = |i: usize, o: usize| LayerWeights {
+            w: (0..i * o).map(|_| (rng.next_f32() - 0.5) * 0.4).collect(),
+            in_dim: i,
+            out_dim: o,
+            b: (0..o).map(|_| (rng.next_f32() - 0.5) * 0.1).collect(),
+            alpha: 0.25,
+        };
+        Weights { layers: vec![mk(in_dim, hidden), mk(hidden, classes)] }
+    }
+
+    #[test]
+    fn fp_plan_matches_unprepared_reference() {
+        let w = weights(11, 13, 5, 1);
+        let mut rng = Pcg64::seeded(2);
+        let batch = 9;
+        let x: Vec<f32> = (0..batch * 11).map(|_| rng.next_f32() - 0.5).collect();
+        for fmt in [FpFormat::fp(16), FpFormat::fp(8)] {
+            // Reference: the unprepared per-call path (clone + requantise
+            // per layer) straight through quant_layer.
+            let mut h = Matrix::from_vec(batch, 11, x.clone());
+            let n = w.layers.len();
+            for (i, l) in w.layers.iter().enumerate() {
+                let wm = Matrix::from_vec(l.in_dim, l.out_dim, l.w.clone());
+                h = crate::quant::quant_layer(&h, &wm, &l.b, l.alpha, fmt, i + 1 < n);
+            }
+            let want = Outputs::from_logits(h);
+            let plan = FpPlan::new(&w, fmt);
+            for threads in [1usize, 2, 4] {
+                let mut scratch = Scratch::new();
+                let got = plan.forward(&x, batch, &mut scratch, threads);
+                assert_eq!(got.scores.data, want.scores.data, "threads={threads}");
+                assert_eq!(got.pred, want.pred);
+                assert_eq!(got.margin, want.margin);
+            }
+        }
+    }
+
+    #[test]
+    fn sc_plan_invariant_to_thread_count() {
+        let w = weights(12, 16, 6, 3);
+        let mut rng = Pcg64::seeded(4);
+        let batch = 11;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_f32() - 0.5).collect();
+        let plan = ScPlan::new(&w, ScConfig::new(256));
+        let mut scratch = Scratch::new();
+        let base = plan.forward(&x, batch, 42, &mut scratch, 1);
+        for threads in [2usize, 3, 4] {
+            let got = plan.forward(&x, batch, 42, &mut scratch, threads);
+            assert_eq!(got.scores.data, base.scores.data, "threads={threads}");
+            assert_eq!(got.pred, base.pred);
+        }
+        // Different seeds give different streams (statistically).
+        let other = plan.forward(&x, batch, 43, &mut scratch, 2);
+        assert_eq!(other.pred.len(), batch);
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        // A big batch followed by a small one must not see stale data.
+        let w = weights(10, 12, 4, 5);
+        let plan = FpPlan::new(&w, FpFormat::fp(10));
+        let mut rng = Pcg64::seeded(6);
+        let big: Vec<f32> = (0..32 * 10).map(|_| rng.next_f32() - 0.5).collect();
+        let small: Vec<f32> = big[..4 * 10].to_vec();
+        let mut scratch = Scratch::new();
+        let _ = plan.forward(&big, 32, &mut scratch, 2);
+        let a = plan.forward(&small, 4, &mut scratch, 2);
+        let b = plan.forward(&small, 4, &mut Scratch::new(), 1);
+        assert_eq!(a.scores.data, b.scores.data);
+    }
+
+    #[test]
+    fn plan_reports_topology() {
+        let w = weights(10, 12, 4, 7);
+        let plan = FpPlan::new(&w, FpFormat::FP16);
+        assert_eq!(plan.input_dim(), 10);
+        assert_eq!(plan.n_classes(), 4);
+        let sc = ScPlan::new(&w, ScConfig::new(64));
+        assert_eq!(sc.input_dim(), 10);
+        assert_eq!(sc.n_classes(), 4);
+    }
+}

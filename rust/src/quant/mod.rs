@@ -60,11 +60,19 @@ impl FpFormat {
             return x;
         }
         let shift = 23 - self.m_bits;
-        let i = x.to_bits();
-        let lsb = (i >> shift) & 1;
-        let bias = lsb + ((1u32 << (shift - 1)) - 1);
-        let i = i.wrapping_add(bias) & !((1u32 << shift) - 1);
-        let q = f32::from_bits(i);
+        let q = if shift == 0 {
+            // m_bits == 23 keeps the full f32 mantissa: rounding is the
+            // identity, and the bit trick below would underflow
+            // (`1 << (shift - 1)` with shift = 0).  Range clamp and
+            // subnormal flush still apply.
+            x
+        } else {
+            let i = x.to_bits();
+            let lsb = (i >> shift) & 1;
+            let bias = lsb + ((1u32 << (shift - 1)) - 1);
+            let i = i.wrapping_add(bias) & !((1u32 << shift) - 1);
+            f32::from_bits(i)
+        };
         let q = q.clamp(-self.max_value(), self.max_value());
         if q.abs() < self.min_normal() {
             0.0
@@ -155,6 +163,46 @@ mod tests {
                 assert!(rel <= 0.5f32.powi(m as i32 + 1) + 1e-7, "m={m} x={x} rel={rel}");
             }
         }
+    }
+
+    #[test]
+    fn quantize_every_constructible_mantissa_width() {
+        // Regression: m_bits = 23 gives shift = 0 and used to panic in
+        // debug (`1 << (shift - 1)`) / wrap in release even though
+        // `FpFormat::new(23, _)` is a legal constructor.  Sweep the full
+        // constructible range.
+        let mut rng = crate::util::Pcg64::seeded(23);
+        for m in 1..=23u32 {
+            for e in [2u32, 5, 8] {
+                let fmt = FpFormat::new(m, e);
+                for _ in 0..200 {
+                    let x = (rng.next_f32() - 0.5) * rng.range_f64(1e-4, 1e4) as f32;
+                    let q = fmt.quantize(x);
+                    assert!(q.is_finite(), "m={m} e={e} x={x}");
+                    assert_eq!(fmt.quantize(q), q, "idempotency m={m} e={e} x={x}");
+                    assert!(q.abs() <= fmt.max_value());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_mantissa_is_identity_in_range() {
+        // m_bits = 23, e_bits = 8 covers the whole normal f32 range:
+        // quantisation must be the identity there.
+        let fmt = FpFormat::new(23, 8);
+        let mut rng = crate::util::Pcg64::seeded(29);
+        for _ in 0..500 {
+            let x = (rng.next_f32() - 0.5) * 1e6;
+            assert_eq!(fmt.quantize(x), x, "{x}");
+        }
+        assert_eq!(fmt.quantize(0.0), 0.0);
+        assert_eq!(fmt.quantize(f32::MAX), f32::MAX);
+        // Narrower exponent still clamps/flushes with the full mantissa.
+        let half_range = FpFormat::new(23, 5);
+        assert_eq!(half_range.quantize(1e9), half_range.max_value());
+        assert_eq!(half_range.quantize(1e-9), 0.0);
+        assert_eq!(half_range.quantize(1.5), 1.5);
     }
 
     #[test]

@@ -51,6 +51,42 @@ impl BatchOutputs {
     }
 }
 
+/// Per-variant compile/execute accounting — the machine-readable perf
+/// record behind `BENCH_native.json` (see `util::benchkit`).
+#[derive(Clone, Debug, Default)]
+pub struct VariantStats {
+    /// Stable variant key (`dataset/Kind<level>`).
+    pub key: String,
+    /// Wall time spent preparing/compiling this variant (ns).
+    pub prepare_ns: u128,
+    /// Batches executed on this variant.
+    pub executes: u64,
+    /// Total execute wall time (ns).
+    pub execute_ns: u128,
+    /// Samples (rows) pushed through this variant.
+    pub samples: u64,
+}
+
+impl VariantStats {
+    /// Mean execute wall time per sample (ns); 0 before any execute.
+    pub fn ns_per_sample(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.execute_ns as f64 / self.samples as f64
+        }
+    }
+
+    /// Throughput in samples per second of execute wall time.
+    pub fn samples_per_sec(&self) -> f64 {
+        if self.execute_ns == 0 {
+            0.0
+        } else {
+            self.samples as f64 / (self.execute_ns as f64 / 1e9)
+        }
+    }
+}
+
 /// Compile/execute statistics (perf accounting), shared by all backends.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
@@ -116,6 +152,12 @@ pub trait Backend {
 
     /// Compile/execute statistics accumulated so far.
     fn stats(&self) -> EngineStats;
+
+    /// Per-variant timing breakdown, sorted by key.  Backends that do
+    /// not track per-variant timings return an empty vec.
+    fn variant_stats(&self) -> Vec<VariantStats> {
+        Vec::new()
+    }
 
     /// Execute `n <= v.batch` rows by zero-padding to the compiled batch
     /// size; outputs are truncated back to `n`.  Returns the padding
@@ -275,6 +317,18 @@ mod tests {
             n_classes: 2,
         };
         assert_eq!(o.score_row(1), &[0.8, 0.2]);
+    }
+
+    #[test]
+    fn variant_stats_rates() {
+        let mut s = VariantStats { key: "d/Fp16".into(), ..Default::default() };
+        assert_eq!(s.ns_per_sample(), 0.0);
+        assert_eq!(s.samples_per_sec(), 0.0);
+        s.executes = 2;
+        s.samples = 64;
+        s.execute_ns = 64_000;
+        assert!((s.ns_per_sample() - 1000.0).abs() < 1e-9);
+        assert!((s.samples_per_sec() - 1e6).abs() < 1e-3);
     }
 
     #[test]

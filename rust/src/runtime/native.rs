@@ -8,29 +8,58 @@
 //! [`crate::runtime::fixture`], which is what makes `cargo test -q`
 //! green on a fresh offline checkout.
 //!
-//! FP variants run the truncated-mantissa [`crate::mlp::FpEngine`]
-//! (bit-identical quantisation to the L1 Pallas kernel); SC variants run
-//! the calibrated [`crate::mlp::ScNoiseEngine`], seeded from the
+//! FP variants run a prepared [`FpPlan`] (bit-identical quantisation to
+//! the L1 Pallas kernel, pre-quantised at compile time); SC variants run
+//! a prepared [`ScPlan`] of the calibrated noise model, seeded from the
 //! caller's `[u32; 2]` key exactly like the PJRT path's threefry key —
 //! same key, same stream.
+//!
+//! "Compilation" ([`Backend::ensure_compiled`]) builds a prepared
+//! variant: per-layer weights quantised once per format,
+//! packed into the padded kernel layout, per-layer `max|w|` precomputed
+//! for the SC noise model, plus reusable ping-pong activation scratch —
+//! cached by `(dataset, kind, level)` and shared across batch sizes, so
+//! steady-state execution does no per-call weight work and allocates
+//! only the returned outputs.  Batch rows shard across the scoped
+//! worker pool ([`crate::util::pool`]) with bit-identical results for
+//! any thread count.
 //!
 //! Unlike the PJRT client (`Rc`-based, thread-pinned), `NativeBackend`
 //! owns plain host memory and is `Send`.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::data::{EvalData, Manifest, VariantKind, VariantRef, Weights};
-use crate::mlp::{FpEngine, ScNoiseEngine};
+use crate::mlp::{FpPlan, ScPlan, Scratch};
 use crate::quant::FpFormat;
 use crate::runtime::fixture::{self, FixtureSpec};
-use crate::runtime::{Backend, BatchOutputs, EngineStats};
+use crate::runtime::{Backend, BatchOutputs, EngineStats, VariantStats};
 use crate::sc::ScConfig;
 
 struct LoadedDataset {
     weights: Weights,
     eval: EvalData,
+}
+
+/// A compiled-for-native variant: the prepared plan plus its reusable
+/// scratch and per-variant timings.  One per `(dataset, kind, level)` —
+/// batch size only affects how much of the scratch is used.
+struct PreparedVariant {
+    kernel: PreparedKernel,
+    scratch: Scratch,
+    stats: VariantStats,
+}
+
+enum PreparedKernel {
+    Fp(FpPlan),
+    Sc(ScPlan),
+}
+
+/// Cache key: batch size deliberately excluded (plans are batch-agnostic).
+fn plan_key(v: &VariantRef) -> String {
+    format!("{}/{:?}{}", v.dataset, v.kind, v.level)
 }
 
 /// Pure-rust [`Backend`] over the `mlp`/`quant`/`sc` modules.
@@ -46,7 +75,9 @@ pub struct NativeBackend {
     /// Artifacts root for lazily loaded datasets (None = synthetic).
     root: Option<PathBuf>,
     datasets: HashMap<String, LoadedDataset>,
-    compiled: HashSet<String>,
+    /// The single compilation cache: one prepared plan (+ scratch +
+    /// timings) per `(dataset, kind, level)`.
+    plans: HashMap<String, PreparedVariant>,
     stats: EngineStats,
 }
 
@@ -60,7 +91,7 @@ impl NativeBackend {
             manifest,
             root: Some(artifacts.to_path_buf()),
             datasets: HashMap::new(),
-            compiled: HashSet::new(),
+            plans: HashMap::new(),
             stats: EngineStats::default(),
         })
     }
@@ -80,7 +111,40 @@ impl NativeBackend {
             let fx = fixture::generate(spec);
             datasets.insert(spec.name.clone(), LoadedDataset { weights: fx.weights, eval: fx.eval });
         }
-        Self { manifest, root: None, datasets, compiled: HashSet::new(), stats: EngineStats::default() }
+        Self { manifest, root: None, datasets, plans: HashMap::new(), stats: EngineStats::default() }
+    }
+
+    /// The prepared variant for `v`, building and caching it on first
+    /// use ("compilation"): validate against the manifest, load the
+    /// dataset, pre-quantise/pack the weights into the kernel layout.
+    /// One plan per `(dataset, kind, level)` — batch sizes share it.
+    fn prepared(&mut self, v: &VariantRef) -> crate::Result<&mut PreparedVariant> {
+        let key = plan_key(v);
+        if !self.plans.contains_key(&key) {
+            self.manifest.dataset(&v.dataset)?;
+            if v.kind == VariantKind::Sc {
+                // Fails loudly on non-power-of-two lengths, like the
+                // exporter would at lowering time.
+                anyhow::ensure!(
+                    v.level >= 2 && v.level.is_power_of_two(),
+                    "SC sequence length {} must be a power of two >= 2",
+                    v.level
+                );
+            }
+            self.load_dataset(&v.dataset)?;
+            let weights = &self.datasets[&v.dataset].weights;
+            let t0 = Instant::now();
+            let kernel = match v.kind {
+                VariantKind::Fp => PreparedKernel::Fp(FpPlan::new(weights, FpFormat::fp(v.level as u32))),
+                VariantKind::Sc => PreparedKernel::Sc(ScPlan::new(weights, ScConfig::new(v.level))),
+            };
+            let prepare_ns = t0.elapsed().as_nanos();
+            self.stats.compiles += 1;
+            self.stats.compile_ms += t0.elapsed().as_millis();
+            let stats = VariantStats { key: key.clone(), prepare_ns, ..Default::default() };
+            self.plans.insert(key.clone(), PreparedVariant { kernel, scratch: Scratch::new(), stats });
+        }
+        Ok(self.plans.get_mut(&key).expect("just prepared"))
     }
 }
 
@@ -127,57 +191,56 @@ impl Backend for NativeBackend {
     }
 
     fn ensure_compiled(&mut self, v: &VariantRef) -> crate::Result<()> {
-        // Nothing to compile natively; validate the variant and account
-        // it once so stats stay comparable across backends.
-        if self.compiled.contains(&v.key()) {
-            return Ok(());
-        }
-        self.manifest.dataset(&v.dataset)?;
-        if v.kind == VariantKind::Sc {
-            // Fails loudly on non-power-of-two lengths, like the
-            // exporter would at lowering time.
-            anyhow::ensure!(
-                v.level >= 2 && v.level.is_power_of_two(),
-                "SC sequence length {} must be a power of two >= 2",
-                v.level
-            );
-        }
-        self.compiled.insert(v.key());
-        self.stats.compiles += 1;
-        Ok(())
+        self.prepared(v).map(|_| ())
     }
 
     fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs> {
-        self.ensure_compiled(v)?;
-        self.load_dataset(&v.dataset)?;
-        let ds = &self.datasets[&v.dataset];
-        let input_dim = ds.weights.layers[0].in_dim;
-        anyhow::ensure!(
-            x.len() == v.batch * input_dim,
-            "input length {} != batch {} * input_dim {}",
-            x.len(),
-            v.batch,
-            input_dim
-        );
-        let t0 = Instant::now();
-        let out = match v.kind {
-            VariantKind::Fp => FpEngine::new(&ds.weights, FpFormat::fp(v.level as u32)).forward(x, v.batch),
-            VariantKind::Sc => {
-                let Some(key) = sc_key else {
-                    anyhow::bail!("SC variant requires a key");
-                };
-                let seed = ((key[0] as u64) << 32) | key[1] as u64;
-                ScNoiseEngine::new(&ds.weights, ScConfig::new(v.level)).forward(x, v.batch, seed)
-            }
+        let (out, batch, elapsed) = {
+            let plan = self.prepared(v)?;
+            // Work-aware worker count: tiny models stay serial (spawns
+            // would out-cost the kernel), big ones scale with cores.
+            let (input_dim, threads) = match &plan.kernel {
+                PreparedKernel::Fp(p) => (p.input_dim(), p.auto_threads(v.batch)),
+                PreparedKernel::Sc(p) => (p.input_dim(), p.auto_threads(v.batch)),
+            };
+            anyhow::ensure!(
+                x.len() == v.batch * input_dim,
+                "input length {} != batch {} * input_dim {}",
+                x.len(),
+                v.batch,
+                input_dim
+            );
+            let t0 = Instant::now();
+            let out = match &plan.kernel {
+                PreparedKernel::Fp(p) => p.forward(x, v.batch, &mut plan.scratch, threads),
+                PreparedKernel::Sc(p) => {
+                    let Some(key) = sc_key else {
+                        anyhow::bail!("SC variant requires a key");
+                    };
+                    let seed = ((key[0] as u64) << 32) | key[1] as u64;
+                    p.forward(x, v.batch, seed, &mut plan.scratch, threads)
+                }
+            };
+            let elapsed = t0.elapsed();
+            plan.stats.executes += 1;
+            plan.stats.execute_ns += elapsed.as_nanos();
+            plan.stats.samples += v.batch as u64;
+            (out, v.batch, elapsed)
         };
         self.stats.executes += 1;
-        self.stats.execute_us += t0.elapsed().as_micros();
+        self.stats.execute_us += elapsed.as_micros();
         let n_classes = out.scores.cols;
-        Ok(BatchOutputs { scores: out.scores.data, pred: out.pred, margin: out.margin, batch: v.batch, n_classes })
+        Ok(BatchOutputs { scores: out.scores.data, pred: out.pred, margin: out.margin, batch, n_classes })
     }
 
     fn stats(&self) -> EngineStats {
         self.stats
+    }
+
+    fn variant_stats(&self) -> Vec<VariantStats> {
+        let mut out: Vec<VariantStats> = self.plans.values().map(|p| p.stats.clone()).collect();
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
     }
 }
 
@@ -242,6 +305,38 @@ mod tests {
         let v = fp_variant(&b, 16, 32);
         let err = b.execute(&v, &[0.0; 10], None).unwrap_err().to_string();
         assert!(err.contains("input length"), "{err}");
+    }
+
+    #[test]
+    fn plan_cache_shared_across_batch_sizes() {
+        // (dataset, kind, level) keys the prepared plan: executing the
+        // same level at two compiled batch sizes builds it once.
+        let mut b = backend();
+        let eval = b.eval_data("d").unwrap();
+        let v32 = b.manifest().variant("d", VariantKind::Fp, 16, 32).unwrap().clone();
+        let v256 = b.manifest().variant("d", VariantKind::Fp, 16, 256).unwrap().clone();
+        b.execute(&v32, eval.rows(0, 32), None).unwrap();
+        b.execute(&v256, eval.rows(0, 256), None).unwrap();
+        assert_eq!(b.stats().compiles, 1, "one plan for both batch sizes");
+        assert_eq!(b.stats().executes, 2);
+        let vs = b.variant_stats();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].key, "d/Fp16");
+        assert_eq!(vs[0].executes, 2);
+        assert_eq!(vs[0].samples, 32 + 256);
+        assert!(vs[0].ns_per_sample() >= 0.0);
+    }
+
+    #[test]
+    fn variant_stats_sorted_and_per_level() {
+        let mut b = backend();
+        let eval = b.eval_data("d").unwrap();
+        for level in [16usize, 8] {
+            let v = fp_variant(&b, level, 32);
+            b.execute(&v, eval.rows(0, 32), None).unwrap();
+        }
+        let keys: Vec<String> = b.variant_stats().into_iter().map(|s| s.key).collect();
+        assert_eq!(keys, vec!["d/Fp16".to_string(), "d/Fp8".to_string()]);
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! while a generator thread produces timestamped requests into an
 //! `mpsc` channel (open-loop Poisson or closed-loop).  This mirrors the
 //! single-accelerator IoT deployment the paper targets: one device, one
-//! inference queue.
+//! inference queue.  Compute still scales with cores: the native
+//! backend shards each batch's rows across its scoped worker pool
+//! inside `execute` (see [`crate::mlp::plan`] and `docs/PERF.md`), so
+//! the serving loop stays single-queue while forwards are parallel.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};

@@ -1,10 +1,68 @@
 //! Minimal f32 matrix substrate for the pure-rust inference engine.
 //!
-//! This is deliberately small: row-major storage, matmul with a blocked
-//! inner loop, and the handful of elementwise ops the MLP needs.  The
-//! PJRT path (`runtime`) is the production engine; this substrate exists
-//! so the SC bitstream simulator and the cross-check baseline (`mlp`)
-//! need no external BLAS.
+//! This is deliberately small: row-major storage, a register-blocked
+//! tiled matmul kernel, and the handful of elementwise ops the MLP
+//! needs — no external BLAS.  The hot path is [`matmul_strided`]: an
+//! `MR`×`NR` register-tile kernel that accumulates each output element
+//! over `k` in ascending order, which makes it **bit-identical to the
+//! naive triple loop** ([`Matrix::matmul_naive`]) — the property
+//! `tests/kernel_parity.rs` pins, and what lets the prepared-plan
+//! forward pass shard batch rows across threads without changing a
+//! single bit of output.
+
+/// Row-register width of the tiled kernel (i-block).
+pub const KERNEL_MR: usize = 4;
+
+/// Column-register width of the tiled kernel (j-block).  Prepared plans
+/// pad weight matrices' output dimension to a multiple of this so the
+/// steady-state kernel never takes the ragged-edge path.
+pub const KERNEL_NR: usize = 8;
+
+/// Tiled matmul with explicit row strides: `out[i][j] = sum_p a[i][p] *
+/// b[p][j]` for `i < m`, `j < n`, `p < k`, where row `i` of `a` lives at
+/// `a[i*lda..i*lda+k]`, `b` is packed `(k, n)` row-major, and row `i` of
+/// `out` lives at `out[i*ldo..i*ldo+n]`.
+///
+/// Each output element accumulates over `p` in ascending order (register
+/// tiling only changes *which* elements are in flight, never the
+/// per-element summation order), so results are bit-identical to
+/// [`Matrix::matmul_naive`] and independent of the `MR`/`NR` blocking.
+pub fn matmul_strided(a: &[f32], lda: usize, b: &[f32], k: usize, out: &mut [f32], ldo: usize, m: usize, n: usize) {
+    debug_assert!(m == 0 || (m - 1) * lda + k <= a.len(), "a too short");
+    debug_assert!(k * n <= b.len(), "b too short");
+    debug_assert!(m == 0 || (m - 1) * ldo + n <= out.len(), "out too short");
+    let mut i = 0;
+    while i < m {
+        let ib = KERNEL_MR.min(m - i);
+        let mut j = 0;
+        while j < n {
+            let jb = KERNEL_NR.min(n - j);
+            let mut acc = [[0.0f32; KERNEL_NR]; KERNEL_MR];
+            for p in 0..k {
+                let brow = &b[p * n + j..p * n + j + jb];
+                for (mi, accr) in acc.iter_mut().enumerate().take(ib) {
+                    let av = a[(i + mi) * lda + p];
+                    if jb == KERNEL_NR {
+                        // Full tile: fixed trip count so the compiler can
+                        // unroll/vectorise with no bounds checks.
+                        for nj in 0..KERNEL_NR {
+                            accr[nj] += av * brow[nj];
+                        }
+                    } else {
+                        for (nj, &bv) in brow.iter().enumerate() {
+                            accr[nj] += av * bv;
+                        }
+                    }
+                }
+            }
+            for (mi, accr) in acc.iter().enumerate().take(ib) {
+                out[(i + mi) * ldo + j..(i + mi) * ldo + j + jb].copy_from_slice(&accr[..jb]);
+            }
+            j += jb;
+        }
+        i += ib;
+    }
+}
 
 /// Row-major 2-D f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -64,23 +122,30 @@ impl Matrix {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// `self (m,k) @ other (k,n)` — ikj loop order (cache-friendly: the
-    /// inner loop streams a row of `other` and a row of the output).
+    /// `self (m,k) @ other (k,n)` via the tiled [`matmul_strided`]
+    /// kernel (dense, branch-free, register-blocked).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
+        matmul_strided(&self.data, k, &other.data, k, &mut out.data, n, m, n);
+        out
+    }
+
+    /// Reference triple-loop matmul (`for i { for j { for p } }`).  Slow;
+    /// exists as the golden the tiled kernel is pinned against in
+    /// `tests/kernel_parity.rs`.
+    pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
         for i in 0..m {
-            let a_row = self.row(i);
-            let o_row = out.row_mut(i);
-            for (p, &a) in a_row.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += self.data[i * k + p] * other.data[p * n + j];
                 }
-                let b_row = &other.data[p * n..(p + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row) {
-                    *o += a * b;
-                }
+                out.data[i * n + j] = acc;
             }
         }
         out
@@ -217,6 +282,50 @@ mod tests {
         let (pred, margin) = top2_margin(&[0.5, 0.5]);
         assert_eq!(pred, 0);
         assert_eq!(margin, 0.0);
+    }
+
+    #[test]
+    fn tiled_kernel_bit_identical_to_naive() {
+        // Shapes straddling the MR/NR tile edges, including ragged ones.
+        let mut rng = crate::util::Pcg64::seeded(21);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 17), (32, 24, 32), (2, 100, 3)] {
+            let a = Matrix::from_fn(m, k, |_, _| rng.next_f32() - 0.5);
+            let b = Matrix::from_fn(k, n, |_, _| rng.next_f32() - 0.5);
+            let tiled = a.matmul(&b);
+            let naive = a.matmul_naive(&b);
+            assert_eq!(tiled.data, naive.data, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn strided_kernel_respects_strides() {
+        // Rows of a and out embedded in wider buffers; the gap bytes
+        // must never be read or written.
+        let (m, k, n, lda, ldo) = (3usize, 4usize, 5usize, 7usize, 9usize);
+        let mut rng = crate::util::Pcg64::seeded(22);
+        let mut a = vec![f32::NAN; (m - 1) * lda + k];
+        for i in 0..m {
+            for p in 0..k {
+                a[i * lda + p] = rng.next_f32() - 0.5;
+            }
+        }
+        let b = Matrix::from_fn(k, n, |_, _| rng.next_f32() - 0.5);
+        let sentinel = -123.0f32;
+        let mut out = vec![sentinel; (m - 1) * ldo + n];
+        matmul_strided(&a, lda, &b.data, k, &mut out, ldo, m, n);
+        let at = Matrix::from_fn(m, k, |i, p| a[i * lda + p]);
+        let want = at.matmul_naive(&b);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(out[i * ldo + j], want.get(i, j), "({i},{j})");
+            }
+            // Stride gap untouched.
+            if i + 1 < m {
+                for g in n..ldo {
+                    assert_eq!(out[i * ldo + g], sentinel);
+                }
+            }
+        }
     }
 
     #[test]

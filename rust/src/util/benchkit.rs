@@ -4,6 +4,13 @@
 //! Measures wall time over warmup + timed iterations and prints one
 //! aligned row per case, criterion-style: mean ± std, plus derived
 //! throughput when the caller provides an items-per-iteration count.
+//!
+//! Machine-readable output: a [`JsonReport`] collects results and, when
+//! the `ARI_BENCH_JSON` environment variable names a path, writes the
+//! `ari-bench v1` JSON document there (ns/sample and samples/s per
+//! case) — `make bench-json` drives this to record the perf trajectory
+//! in `BENCH_native.json`.  `ARI_BENCH_SMOKE=1` shrinks iteration
+//! counts for CI smoke runs (see [`iters`]).
 
 use std::time::Instant;
 
@@ -66,6 +73,143 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// True when `ARI_BENCH_SMOKE` is set (non-empty, not `0`): benches
+/// should run short smoke iterations.
+pub fn smoke() -> bool {
+    std::env::var("ARI_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// `(warmup, iters)` to use: the caller's defaults, shrunk to `(1, 2)`
+/// under [`smoke`].
+pub fn iters(warmup: usize, iters: usize) -> (usize, usize) {
+    if smoke() {
+        (1, iters.min(2).max(1))
+    } else {
+        (warmup, iters)
+    }
+}
+
+/// One recorded case of a [`JsonReport`].
+#[derive(Clone, Debug)]
+pub struct JsonEntry {
+    /// Case name.
+    pub name: String,
+    /// Mean wall time per iteration (ns).
+    pub mean_ns: f64,
+    /// Standard deviation over timed iterations (ns).
+    pub std_ns: f64,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Items (samples/elements) processed per iteration, if meaningful.
+    pub items_per_iter: Option<u64>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonEntry {
+    fn render(&self) -> String {
+        let (per_item, per_sec) = match self.items_per_iter {
+            Some(n) if n > 0 && self.mean_ns > 0.0 => (
+                json_f64(self.mean_ns / n as f64),
+                json_f64(n as f64 / (self.mean_ns / 1e9)),
+            ),
+            _ => ("null".to_string(), "null".to_string()),
+        };
+        let items = self.items_per_iter.map_or("null".to_string(), |n| n.to_string());
+        format!(
+            "{{\"name\":\"{}\",\"mean_ns\":{},\"std_ns\":{},\"iters\":{},\"items_per_iter\":{items},\"ns_per_item\":{per_item},\"items_per_sec\":{per_sec}}}",
+            json_escape(&self.name),
+            json_f64(self.mean_ns),
+            json_f64(self.std_ns),
+            self.iters,
+        )
+    }
+}
+
+/// Machine-readable bench collector: every recorded case becomes one
+/// entry of the `ari-bench v1` JSON document.
+pub struct JsonReport {
+    /// Bench binary name (document header).
+    pub bench: String,
+    entries: Vec<JsonEntry>,
+}
+
+impl JsonReport {
+    /// Empty report for one bench binary.
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one result (items per iteration as in
+    /// [`BenchResult::report`]).
+    pub fn add(&mut self, r: &BenchResult, items_per_iter: Option<u64>) {
+        self.entries.push(JsonEntry {
+            name: r.name.clone(),
+            mean_ns: r.mean_ns,
+            std_ns: r.std_ns,
+            iters: r.iters,
+            items_per_iter,
+        });
+    }
+
+    /// Print the human row *and* record it — the one-liner bench mains
+    /// use for every case.
+    pub fn record(&mut self, r: &BenchResult, items_per_iter: Option<(u64, &'static str)>) {
+        r.report(items_per_iter);
+        self.add(r, items_per_iter.map(|(n, _)| n));
+    }
+
+    /// The full JSON document.
+    pub fn render(&self) -> String {
+        let entries: Vec<String> = self.entries.iter().map(|e| e.render()).collect();
+        format!(
+            "{{\"schema\":\"ari-bench v1\",\"bench\":\"{}\",\"max_threads\":{},\"smoke\":{},\"entries\":[{}]}}\n",
+            json_escape(&self.bench),
+            crate::util::pool::max_threads(),
+            smoke(),
+            entries.join(",")
+        )
+    }
+
+    /// Write the document to the path named by `ARI_BENCH_JSON`, if set.
+    /// Returns the path written to.  Bench mains call this last.
+    ///
+    /// # Panics
+    ///
+    /// Panics (failing the bench run, and with it the CI step) if the
+    /// caller asked for JSON output but the write fails — a perf record
+    /// silently missing is worse than a loud bench failure.
+    pub fn write_if_requested(&self) -> Option<std::path::PathBuf> {
+        let path = std::path::PathBuf::from(std::env::var_os("ARI_BENCH_JSON")?);
+        match std::fs::write(&path, self.render()) {
+            Ok(()) => {
+                println!("\n[benchkit] wrote {} entries to {}", self.entries.len(), path.display());
+                Some(path)
+            }
+            Err(e) => panic!("[benchkit] failed to write requested {}: {e}", path.display()),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +229,37 @@ mod tests {
         assert!(human_time(5_000.0).contains("µs"));
         assert!(human_time(5_000_000.0).contains("ms"));
         assert!(human_time(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn json_report_renders_schema() {
+        let mut report = JsonReport::new("bench_test");
+        report.add(
+            &BenchResult { name: "case \"a\"".into(), mean_ns: 1000.0, std_ns: 10.0, iters: 5 },
+            Some(32),
+        );
+        report.add(&BenchResult { name: "plain".into(), mean_ns: 250.0, std_ns: 0.0, iters: 3 }, None);
+        let doc = report.render();
+        assert!(doc.starts_with("{\"schema\":\"ari-bench v1\""), "{doc}");
+        assert!(doc.contains("\"bench\":\"bench_test\""));
+        assert!(doc.contains("\\\"a\\\""), "quotes escaped: {doc}");
+        assert!(doc.contains("\"items_per_iter\":32"));
+        assert!(doc.contains("\"ns_per_item\":31.250"));
+        assert!(doc.contains("\"items_per_sec\":32000000.000"));
+        assert!(doc.contains("\"items_per_iter\":null"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
+    }
+
+    #[test]
+    fn smoke_iters_shrink() {
+        // Can't set env vars safely in tests (process-global), but the
+        // non-smoke path must pass defaults through.
+        if !smoke() {
+            assert_eq!(iters(3, 10), (3, 10));
+        } else {
+            assert_eq!(iters(3, 10), (1, 2));
+        }
     }
 }

@@ -3,11 +3,13 @@
 //! The sandbox's vendored crate set has no `rand`, `serde`, `toml` or
 //! `proptest`, so this module carries minimal, well-tested replacements:
 //! a PCG-family PRNG, descriptive statistics, a streaming histogram, a
-//! line-oriented mini-TOML parser and a tiny property-testing harness.
+//! line-oriented mini-TOML parser, a scoped worker pool and a tiny
+//! property-testing harness.
 
 pub mod benchkit;
 pub mod histogram;
 pub mod minitoml;
+pub mod pool;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

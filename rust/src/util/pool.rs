@@ -1,0 +1,199 @@
+//! Scoped worker pool for sharding batch rows across cores.
+//!
+//! The prepared-plan forward passes ([`crate::mlp::plan`]) are
+//! embarrassingly parallel over batch rows: every row's computation —
+//! kernel accumulation, quantisation epilogue, per-row SC noise stream —
+//! is independent of which worker runs it, so outputs are bit-identical
+//! for **any** shard count.  This module only decides *how many* workers
+//! to use and runs the per-shard jobs on `std::thread::scope` threads
+//! (no dependencies, no long-lived pool: scoped threads let jobs borrow
+//! the caller's buffers directly).
+//!
+//! Shards are contiguous row ranges of near-equal size.  Per-row work is
+//! uniform (same layer stack for every row), so static partitioning is
+//! within noise of work stealing here while staying allocation- and
+//! unsafe-free; the `ARI_THREADS` environment variable caps (or raises)
+//! the worker count, and `1` forces the serial path.
+
+use std::sync::OnceLock;
+
+/// Rows below which an extra worker is not worth its spawn cost.
+const MIN_ROWS_PER_WORKER: usize = 8;
+
+/// Floating-point-op-equivalents of work below which an extra worker is
+/// not worth its spawn cost (scoped spawn + join is ~tens of µs; a
+/// worker should amortise that many times over).
+const MIN_WORK_PER_WORKER: usize = 256 * 1024;
+
+/// Upper bound on worker threads: hardware parallelism (capped at 16),
+/// overridable via the `ARI_THREADS` environment variable.  Read once
+/// per process.
+pub fn max_threads() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        match std::env::var("ARI_THREADS").ok().and_then(|s| s.parse::<usize>().ok()) {
+            Some(n) if n >= 1 => n.min(64),
+            _ => hw.min(16),
+        }
+    })
+}
+
+/// Worker count for `rows` rows of roughly uniform per-row work: one
+/// worker per [`MIN_ROWS_PER_WORKER`] rows, capped by [`max_threads`],
+/// never zero.
+pub fn auto_threads(rows: usize) -> usize {
+    let by_rows = (rows + MIN_ROWS_PER_WORKER - 1) / MIN_ROWS_PER_WORKER;
+    max_threads().min(by_rows).max(1)
+}
+
+/// Work-aware worker count: like [`auto_threads`] but also requires
+/// each worker to amortise its spawn cost — at least
+/// `MIN_WORK_PER_WORKER` flop-equivalents of the `rows *
+/// flops_per_row` total per worker, so tiny models stay on the fast
+/// serial path (spawn + join would otherwise exceed the compute).
+pub fn auto_threads_for(rows: usize, flops_per_row: usize) -> usize {
+    let by_work = (rows.saturating_mul(flops_per_row) / MIN_WORK_PER_WORKER).max(1);
+    auto_threads(rows).min(by_work)
+}
+
+/// Partition `rows` into at most `threads` contiguous `(lo, len)` shards
+/// of near-equal size.  Deterministic; empty input gives no shards.
+pub fn shards(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    let t = threads.max(1).min(rows.max(1));
+    let chunk = (rows + t - 1) / t.max(1);
+    let mut out = Vec::with_capacity(t);
+    let mut lo = 0;
+    while lo < rows {
+        let len = chunk.min(rows - lo);
+        out.push((lo, len));
+        lo += len;
+    }
+    out
+}
+
+/// Run the jobs concurrently on scoped threads.  The first job always
+/// runs inline on the caller's thread (the caller is a worker, not an
+/// idle joiner), so `n` jobs cost `n - 1` spawns; the call returns once
+/// every job has finished.
+pub fn run_jobs<F: FnOnce() + Send>(jobs: Vec<F>) {
+    let mut jobs = jobs.into_iter();
+    let Some(first) = jobs.next() else { return };
+    if jobs.len() == 0 {
+        first();
+        return;
+    }
+    std::thread::scope(|s| {
+        for job in jobs {
+            s.spawn(job);
+        }
+        first();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_exactly() {
+        for rows in [0usize, 1, 7, 8, 31, 32, 33, 256] {
+            for threads in [1usize, 2, 3, 4, 16] {
+                let parts = shards(rows, threads);
+                assert!(parts.len() <= threads.max(1));
+                let mut expect_lo = 0;
+                for &(lo, len) in &parts {
+                    assert_eq!(lo, expect_lo);
+                    assert!(len > 0);
+                    expect_lo += len;
+                }
+                assert_eq!(expect_lo, rows, "rows={rows} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_jobs_executes_every_job() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..4)
+            .map(|_| {
+                let hits = &hits;
+                move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        run_jobs(jobs);
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn run_jobs_single_runs_inline() {
+        let main_id = std::thread::current().id();
+        let mut ran_on = None;
+        run_jobs(vec![|| {
+            ran_on = Some(std::thread::current().id());
+        }]);
+        assert_eq!(ran_on, Some(main_id));
+    }
+
+    #[test]
+    fn auto_threads_bounds() {
+        assert_eq!(auto_threads(1), 1);
+        assert!(auto_threads(256) >= 1);
+        assert!(auto_threads(256) <= max_threads());
+    }
+
+    #[test]
+    fn work_aware_threads_stay_serial_on_tiny_models() {
+        // A fixture-sized forward (32 rows × ~3k flops) must not pay
+        // thread spawns; heavy per-row work may.
+        assert_eq!(auto_threads_for(32, 3_000), 1);
+        assert_eq!(auto_threads_for(1, usize::MAX), 1);
+        let heavy = auto_threads_for(256, 4_000_000);
+        assert_eq!(heavy, auto_threads(256));
+        assert!(auto_threads_for(256, 3_000) <= 3);
+    }
+
+    #[test]
+    fn first_job_runs_on_caller_thread() {
+        use std::sync::Mutex;
+        let main_id = std::thread::current().id();
+        let ids = Mutex::new(Vec::new());
+        let jobs: Vec<_> = (0..3)
+            .map(|_| {
+                let ids = &ids;
+                move || ids.lock().unwrap().push(std::thread::current().id())
+            })
+            .collect();
+        run_jobs(jobs);
+        let ids = ids.into_inner().unwrap();
+        assert_eq!(ids.len(), 3);
+        assert!(ids.contains(&main_id), "caller must work, not idle");
+    }
+
+    #[test]
+    fn jobs_can_write_disjoint_slices() {
+        // The plan forward's usage pattern: split one buffer, let each
+        // scoped job fill its shard.
+        let mut buf = vec![0u32; 32];
+        {
+            let mut rest: &mut [u32] = &mut buf;
+            let mut jobs = Vec::new();
+            for (lo, len) in shards(32, 4) {
+                let (mine, r) = std::mem::take(&mut rest).split_at_mut(len);
+                rest = r;
+                jobs.push(move || {
+                    for (i, v) in mine.iter_mut().enumerate() {
+                        *v = (lo + i) as u32;
+                    }
+                });
+            }
+            run_jobs(jobs);
+        }
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+}

@@ -140,3 +140,21 @@ fn cascade_calibrates_on_every_fixture_dataset() {
         assert!(cascade.threshold >= 0.0);
     }
 }
+
+#[test]
+fn infer_dataset_reports_backend_class_count() {
+    // Regression: n_classes used to be hardcoded to 10 in
+    // Cascade::infer_dataset; a 6-class fixture must report 6.
+    use ari::runtime::fixture::FixtureSpec;
+    let mut fx = FixtureSpec::small("six", "Six", 20, 400);
+    fx.n_classes = 6;
+    let mut engine = NativeBackend::from_fixtures(&[fx]);
+    let data = engine.eval_data("six").unwrap();
+    assert!(data.y.iter().all(|&y| (0..6).contains(&y)));
+    let cascade =
+        Cascade::calibrate(&mut engine, spec("six", Mode::Fp, 8, ThresholdPolicy::MMax), &data, 128).unwrap();
+    let (batch, outputs) = cascade.infer_dataset(&mut engine, &data).unwrap();
+    assert_eq!(outputs.n_classes, 6);
+    assert_eq!(batch.n_classes, 6);
+    assert_eq!(outputs.pred.len(), data.n);
+}

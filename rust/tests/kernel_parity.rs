@@ -1,0 +1,179 @@
+//! Kernel-equivalence suite: the tiled/parallel prepared-plan path must
+//! be bit-identical to the naive reference implementations, and — under
+//! the per-row SC noise keying — invariant to the worker-pool size.
+//!
+//! This is the contract that makes the perf work safe: any blocking,
+//! padding or sharding change that alters a single output bit fails
+//! here before it can silently shift the ARI escalation statistics.
+
+use ari::data::VariantKind;
+use ari::mlp::{FpEngine, FpPlan, ScNoiseEngine, ScPlan, Scratch};
+use ari::quant::FpFormat;
+use ari::runtime::fixture::{self, FixtureSpec};
+use ari::runtime::{Backend, NativeBackend};
+use ari::sc::ScConfig;
+use ari::tensor::Matrix;
+use ari::util::Pcg64;
+
+/// Shapes that straddle the kernel's MR×NR tile edges.
+const SHAPES: [(usize, usize, usize); 7] =
+    [(1, 1, 1), (2, 3, 5), (4, 8, 8), (5, 9, 17), (7, 33, 10), (32, 24, 32), (256, 24, 40)];
+
+#[test]
+fn tiled_matmul_bit_identical_to_naive_reference() {
+    let mut rng = Pcg64::seeded(101);
+    for (m, k, n) in SHAPES {
+        let a = Matrix::from_fn(m, k, |_, _| (rng.next_f32() - 0.5) * 4.0);
+        let b = Matrix::from_fn(k, n, |_, _| (rng.next_f32() - 0.5) * 4.0);
+        let tiled = a.matmul(&b);
+        let naive = a.matmul_naive(&b);
+        assert_eq!(tiled.data, naive.data, "m={m} k={k} n={n}");
+    }
+}
+
+fn fixture_backend() -> (NativeBackend, ari::data::EvalData) {
+    let b = NativeBackend::from_fixtures(&[FixtureSpec::small("par", "Par", 24, 2024)]);
+    let eval = b.eval_data("par").unwrap();
+    (b, eval)
+}
+
+#[test]
+fn fp_plan_matches_unprepared_forward_every_level() {
+    // The prepared plan (pre-quantised padded weights, tiled kernel,
+    // fused epilogue) against the textbook per-call path: quantise
+    // operands, naive matmul, quantised epilogue — per layer, per call.
+    let (mut backend, eval) = fixture_backend();
+    backend.load_dataset("par").unwrap();
+    let weights = backend.weights("par").unwrap().clone();
+    let batch = 32;
+    let x = eval.rows(0, batch).to_vec();
+    for bits in fixture::FP_LEVELS {
+        let fmt = FpFormat::fp(bits as u32);
+        // Unprepared reference forward on the naive kernel.
+        let mut h = Matrix::from_vec(batch, eval.input_dim, x.clone());
+        let n = weights.layers.len();
+        for (i, l) in weights.layers.iter().enumerate() {
+            let mut xq = h.clone();
+            fmt.quantize_slice(&mut xq.data);
+            let mut wq = Matrix::from_vec(l.in_dim, l.out_dim, l.w.clone());
+            fmt.quantize_slice(&mut wq.data);
+            let mut out = xq.matmul_naive(&wq);
+            let bq: Vec<f32> = l.b.iter().map(|&v| fmt.quantize(v)).collect();
+            out.add_row(&bq);
+            fmt.quantize_slice(&mut out.data);
+            if i + 1 < n {
+                out.prelu(l.alpha);
+                fmt.quantize_slice(&mut out.data);
+            }
+            h = out;
+        }
+        h.l2_normalize_rows();
+
+        let plan = FpPlan::new(&weights, fmt);
+        for threads in [1usize, 2, 4] {
+            let got = plan.forward(&x, batch, &mut Scratch::new(), threads);
+            assert_eq!(got.scores.data, h.data, "FP{bits} threads={threads}");
+        }
+        // And the engine wrapper agrees with the plan.
+        let eng = FpEngine::new(&weights, fmt).forward(&x, batch);
+        assert_eq!(eng.scores.data, h.data, "FP{bits} engine wrapper");
+    }
+}
+
+#[test]
+fn fp_outputs_invariant_to_worker_pool_size() {
+    let (mut backend, eval) = fixture_backend();
+    backend.load_dataset("par").unwrap();
+    let weights = backend.weights("par").unwrap().clone();
+    let batch = 256;
+    let x = eval.rows(0, batch).to_vec();
+    let plan = FpPlan::new(&weights, FpFormat::fp(10));
+    let base = plan.forward(&x, batch, &mut Scratch::new(), 1);
+    for threads in [2usize, 3, 4, 7] {
+        let got = plan.forward(&x, batch, &mut Scratch::new(), threads);
+        assert_eq!(got.scores.data, base.scores.data, "threads={threads}");
+        assert_eq!(got.pred, base.pred, "threads={threads}");
+        assert_eq!(got.margin, base.margin, "threads={threads}");
+    }
+}
+
+#[test]
+fn sc_outputs_invariant_to_worker_pool_size() {
+    // The per-row (key, row_index) PCG keying is what makes this hold:
+    // every row's noise stream is independent of which worker runs it.
+    let (mut backend, eval) = fixture_backend();
+    backend.load_dataset("par").unwrap();
+    let weights = backend.weights("par").unwrap().clone();
+    let batch = 32;
+    let x = eval.rows(0, batch).to_vec();
+    for level in [64usize, 512] {
+        let plan = ScPlan::new(&weights, ScConfig::new(level));
+        let base = plan.forward(&x, batch, 99, &mut Scratch::new(), 1);
+        for threads in [2usize, 4] {
+            let got = plan.forward(&x, batch, 99, &mut Scratch::new(), threads);
+            assert_eq!(got.scores.data, base.scores.data, "L={level} threads={threads}");
+            assert_eq!(got.pred, base.pred);
+            assert_eq!(got.margin, base.margin);
+        }
+        // Engine wrapper (auto thread count) must agree too.
+        let eng = ScNoiseEngine::new(&weights, ScConfig::new(level)).forward(&x, batch, 99);
+        assert_eq!(eng.scores.data, base.scores.data, "L={level} engine wrapper");
+    }
+}
+
+#[test]
+fn sc_rows_have_independent_streams() {
+    // Same rows in a different batch composition keep their noise: row r
+    // alone must equal row r inside a batch (per-row keying, per-row
+    // operand scale).
+    let (mut backend, eval) = fixture_backend();
+    backend.load_dataset("par").unwrap();
+    let weights = backend.weights("par").unwrap().clone();
+    let plan = ScPlan::new(&weights, ScConfig::new(256));
+    let batch = 8;
+    let x = eval.rows(0, batch).to_vec();
+    let all = plan.forward(&x, batch, 7, &mut Scratch::new(), 2);
+    // Row 0 on its own: same (seed, row_index=0) stream.
+    let solo = plan.forward(eval.rows(0, 1), 1, 7, &mut Scratch::new(), 1);
+    assert_eq!(solo.scores.data, all.scores.data[..solo.scores.cols].to_vec());
+}
+
+#[test]
+fn backend_execute_matches_plan_outputs() {
+    // The served path (prepared-variant cache + scratch reuse) equals a
+    // fresh plan — executing twice also exercises scratch reuse.
+    let (mut backend, eval) = fixture_backend();
+    let x = eval.rows(0, 32).to_vec();
+    let v = backend.manifest().variant("par", VariantKind::Fp, 8, 32).unwrap().clone();
+    let a = backend.execute(&v, &x, None).unwrap();
+    let b = backend.execute(&v, &x, None).unwrap();
+    assert_eq!(a.scores, b.scores, "scratch reuse must not change results");
+    let weights = backend.weights("par").unwrap();
+    let plan = FpPlan::new(weights, FpFormat::fp(8));
+    let fresh = plan.forward(&x, 32, &mut Scratch::new(), 1);
+    assert_eq!(a.scores, fresh.scores.data);
+    assert_eq!(a.pred, fresh.pred);
+
+    let sv = backend.manifest().variant("par", VariantKind::Sc, 512, 32).unwrap().clone();
+    let key = [11u32, 13u32];
+    let sa = backend.execute(&sv, &x, Some(key)).unwrap();
+    let weights = backend.weights("par").unwrap();
+    let seed = ((key[0] as u64) << 32) | key[1] as u64;
+    let splan = ScPlan::new(weights, ScConfig::new(512));
+    let sfresh = splan.forward(&x, 32, seed, &mut Scratch::new(), 3);
+    assert_eq!(sa.scores, sfresh.scores.data);
+}
+
+#[test]
+fn full_mantissa_fp_level_usable_end_to_end() {
+    // m_bits = 23 (the former shift-underflow panic) through the whole
+    // plan path: FpFormat::new(23, 5) must forward cleanly.
+    let (mut backend, eval) = fixture_backend();
+    backend.load_dataset("par").unwrap();
+    let weights = backend.weights("par").unwrap().clone();
+    let fmt = FpFormat::new(23, 5);
+    let x = eval.rows(0, 32).to_vec();
+    let out = FpPlan::new(&weights, fmt).forward(&x, 32, &mut Scratch::new(), 2);
+    assert_eq!(out.pred.len(), 32);
+    assert!(out.scores.data.iter().all(|v| v.is_finite()));
+}
