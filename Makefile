@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test doc fmt bench bench-json artifacts artifacts-quick clean
+.PHONY: build test doc fmt bench bench-json serve-smoke artifacts artifacts-quick clean
 
 build:
 	$(CARGO) build --release
@@ -36,6 +36,14 @@ bench-json:
 	cat BENCH_native.bench_mlp.json BENCH_native.bench_runtime.json BENCH_native.bench_cascade.json > BENCH_native.json
 	rm -f BENCH_native.bench_mlp.json BENCH_native.bench_runtime.json BENCH_native.bench_cascade.json
 	@echo "wrote BENCH_native.json"
+
+# Short deferred-policy serving session on the synthetic fixtures: a
+# 3-level FP ladder under open-loop load, exercising the shutdown drain
+# and per-stage escalation-flush paths end to end (the paths the PR 3
+# batcher/SC-key fixes cover).
+serve-smoke:
+	$(CARGO) run --release --bin ari -- serve --deferred --backend native \
+		"levels=[8,12,16]" server.requests=512 server.batch_size=32 server.arrival_rate=6000
 
 # Train the MLPs and AOT-lower every resolution variant to HLO text
 # (L1/L2 python layer; needs jax).  Output: ./artifacts/

@@ -1,0 +1,61 @@
+//! N-level resolution ladder demo: a 3-stage FP8 → FP12 → FP16 ladder
+//! end to end — per-stage calibration, whole-dataset inference with
+//! per-stage escalation fractions and `E = Σ_i f_i · E_i` energy
+//! accounting, then a serving session under both escalation policies.
+//!
+//! Works out of the box on the synthetic fixture suite:
+//!
+//! ```bash
+//! cargo run --release --example ladder
+//! ```
+
+use ari::config::AriConfig;
+use ari::coordinator::{EscalationPolicy, Ladder, LadderSpec};
+use ari::runtime::{open_backend, Backend, BackendKind};
+use ari::server::{run_serving_ladder, ServeOptions};
+
+fn main() -> ari::Result<()> {
+    let mut cfg = AriConfig::default();
+    cfg.levels = vec![8, 12, 16]; // FP8 -> FP12 -> FP16
+    cfg.reduced_level = 8;
+    cfg.full_level = 16;
+    cfg.requests = 1024;
+    cfg.arrival_rate = 0.0; // closed loop
+
+    let mut engine = open_backend(&cfg.artifacts, BackendKind::Auto)?;
+    println!("=== ARI N-level ladder demo (backend: {}) ===\n", engine.name());
+    let data = engine.eval_data(&cfg.dataset)?;
+
+    // 1. Calibrate every non-final stage against the full model.
+    let ladder = Ladder::calibrate(engine.as_mut(), LadderSpec::from_config(&cfg), &data, data.n / 2)?;
+    println!("calibration ({} rows):", data.n / 2);
+    print!("{}", ladder.calibration_report());
+
+    // 2. Whole-dataset inference: where do rows stop on the ladder?
+    let (out, _) = ladder.infer_dataset(engine.as_mut(), &data)?;
+    let acc = out.pred.iter().zip(&data.y).filter(|(a, b)| a == b).count() as f64 / data.n as f64;
+    println!("\ninfer_dataset over {} rows: accuracy {acc:.4}", data.n);
+    for (i, (frac, count)) in out.stage_fractions().iter().zip(&out.stage_counts).enumerate() {
+        println!("  stage {i}: executed {count} rows (f_{i} = {frac:.3})");
+    }
+    println!(
+        "energy {:.3} µJ (= Σ f_i·E_i), savings vs always-full {:.1}%",
+        out.energy_uj,
+        100.0 * ladder.realised_savings(&out)
+    );
+
+    // 3. Serve the same ladder under both escalation policies.
+    for (name, esc) in [("immediate", EscalationPolicy::Immediate), ("deferred", EscalationPolicy::Deferred)] {
+        let report = run_serving_ladder(
+            engine.as_mut(),
+            &ladder,
+            &cfg,
+            &data,
+            None,
+            ServeOptions { escalation: esc },
+        )?;
+        println!("\n--- escalation policy: {name} ---");
+        println!("{}", report.summary());
+    }
+    Ok(())
+}

@@ -109,6 +109,11 @@ pub struct AriConfig {
     pub reduced_level: usize,
     /// Level of the full model (FP16 / L=4096 by default).
     pub full_level: usize,
+    /// Explicit N-level resolution ladder (strictly ascending; the last
+    /// entry is the full model).  Empty means the 2-level
+    /// `[reduced_level, full_level]` cascade — see
+    /// [`AriConfig::ladder_levels`].
+    pub levels: Vec<usize>,
     /// Threshold selection policy.
     pub threshold: ThresholdPolicy,
     /// Fraction of the eval split used for threshold calibration.
@@ -133,6 +138,7 @@ impl Default for AriConfig {
             mode: Mode::Fp,
             reduced_level: 10,
             full_level: 16,
+            levels: Vec::new(),
             threshold: ThresholdPolicy::MMax,
             calib_fraction: 0.5,
             batch_size: 32,
@@ -164,16 +170,65 @@ impl AriConfig {
         }
         if let Some(v) = doc.get_str("ari", "mode") {
             self.mode = Mode::parse(v)?;
-            // keep full_level consistent with the family default
-            if self.mode == Mode::Sc && self.full_level == 16 {
+            // keep full_level consistent with the family default — but
+            // never behind an explicit ladder's back: with `levels` set,
+            // full_level must keep mirroring its last rung (switching
+            // family then requires supplying matching levels).
+            if self.mode == Mode::Sc && self.full_level == 16 && self.levels.is_empty() {
                 self.full_level = 4096;
             }
         }
+        // `levels` is applied before the endpoint keys so that a
+        // document (or one batch of CLI overrides) carrying both a
+        // ladder and a reduced_level/full_level composes: the ladder is
+        // installed first, then the endpoint updates its rung.
+        if let Some(v) = doc.get("ari", "levels") {
+            let arr = v.as_array().ok_or_else(|| anyhow::anyhow!("ari.levels must be an array, got {v}"))?;
+            let mut levels = Vec::with_capacity(arr.len());
+            for item in arr {
+                let l = item.as_int().ok_or_else(|| anyhow::anyhow!("ari.levels entries must be integers, got {item}"))?;
+                anyhow::ensure!(l > 0, "ari.levels entries must be positive, got {l}");
+                levels.push(l as usize);
+            }
+            anyhow::ensure!(levels.len() >= 2, "ari.levels needs at least 2 stages, got {levels:?}");
+            anyhow::ensure!(
+                levels.windows(2).all(|w| w[0] < w[1]),
+                "ari.levels must be strictly increasing (reduced -> full), got {levels:?}"
+            );
+            self.reduced_level = levels[0];
+            self.full_level = *levels.last().unwrap();
+            self.levels = levels;
+        }
         if let Some(v) = doc.get_int("ari", "reduced_level") {
-            self.reduced_level = v as usize;
+            let v = v as usize;
+            // keep an explicit ladder's first rung in sync — validated
+            // on a candidate so a rejected override leaves the config
+            // untouched.
+            if !self.levels.is_empty() {
+                let mut candidate = self.levels.clone();
+                candidate[0] = v;
+                anyhow::ensure!(
+                    candidate.windows(2).all(|w| w[0] < w[1]),
+                    "reduced_level {v} breaks the configured ladder {:?} (must stay strictly increasing)",
+                    self.levels
+                );
+                self.levels = candidate;
+            }
+            self.reduced_level = v;
         }
         if let Some(v) = doc.get_int("ari", "full_level") {
-            self.full_level = v as usize;
+            let v = v as usize;
+            if !self.levels.is_empty() {
+                let mut candidate = self.levels.clone();
+                *candidate.last_mut().unwrap() = v;
+                anyhow::ensure!(
+                    candidate.windows(2).all(|w| w[0] < w[1]),
+                    "full_level {v} breaks the configured ladder {:?} (must stay strictly increasing)",
+                    self.levels
+                );
+                self.levels = candidate;
+            }
+            self.full_level = v;
         }
         if let Some(v) = doc.get_str("ari", "threshold") {
             self.threshold = ThresholdPolicy::parse(v)?;
@@ -200,6 +255,17 @@ impl AriConfig {
             self.seed = v as u64;
         }
         Ok(())
+    }
+
+    /// The resolution ladder this configuration describes: the explicit
+    /// `levels` when set, else the paper's 2-level
+    /// `[reduced_level, full_level]` cascade.
+    pub fn ladder_levels(&self) -> Vec<usize> {
+        if self.levels.is_empty() {
+            vec![self.reduced_level, self.full_level]
+        } else {
+            self.levels.clone()
+        }
     }
 
     /// Apply `section.key=value` command-line overrides.
@@ -300,5 +366,69 @@ arrival_rate = 1000.5
         assert!(c.apply_overrides(&["no-equals".into()]).is_err());
         assert!(c.apply_overrides(&["ari.mode=xyz".into()]).is_err());
         assert!(c.apply_overrides(&["ari.calib_fraction=1.5".into()]).is_err());
+    }
+
+    #[test]
+    fn ladder_levels_defaults_to_reduced_full_pair() {
+        let c = AriConfig::default();
+        assert!(c.levels.is_empty());
+        assert_eq!(c.ladder_levels(), vec![10, 16]);
+    }
+
+    #[test]
+    fn levels_parse_and_sync_endpoints() {
+        let mut c = AriConfig::default();
+        c.apply_overrides(&["levels=[8,12,16]".into()]).unwrap();
+        assert_eq!(c.levels, vec![8, 12, 16]);
+        assert_eq!(c.reduced_level, 8);
+        assert_eq!(c.full_level, 16);
+        assert_eq!(c.ladder_levels(), vec![8, 12, 16]);
+        // A later reduced_level override updates the first rung.
+        c.apply_overrides(&["reduced_level=10".into()]).unwrap();
+        assert_eq!(c.levels, vec![10, 12, 16]);
+        // Both keys in ONE batch compose too: the ladder is installed
+        // first, then the endpoint updates its rung.
+        let mut c = AriConfig::default();
+        c.apply_overrides(&["levels=[8,12,16]".into(), "reduced_level=10".into()]).unwrap();
+        assert_eq!(c.levels, vec![10, 12, 16]);
+        assert_eq!(c.reduced_level, 10);
+    }
+
+    /// Switching the resolution family must not re-default full_level
+    /// behind an explicit ladder's back.
+    #[test]
+    fn mode_switch_does_not_desync_explicit_ladder() {
+        let mut c = AriConfig::default();
+        c.apply_overrides(&["levels=[8,12,16]".into()]).unwrap();
+        c.apply_overrides(&["mode=sc".into()]).unwrap();
+        assert_eq!(c.full_level, 16, "full_level must keep mirroring the ladder's last rung");
+        assert_eq!(c.levels, vec![8, 12, 16]);
+        // Without a ladder the family default still applies.
+        let mut c = AriConfig::default();
+        c.apply_overrides(&["mode=sc".into()]).unwrap();
+        assert_eq!(c.full_level, 4096);
+    }
+
+    /// An endpoint override may not corrupt an explicit ladder's ascent —
+    /// and a rejected override must leave the config untouched.
+    #[test]
+    fn endpoint_overrides_cannot_break_ladder() {
+        for bad in ["reduced_level=14", "reduced_level=12", "full_level=11"] {
+            let mut c = AriConfig::default();
+            c.apply_overrides(&["levels=[8,12,16]".into()]).unwrap();
+            assert!(c.apply_overrides(&[bad.into()]).is_err(), "{bad} must be rejected");
+            assert_eq!(c.levels, vec![8, 12, 16], "{bad} must not corrupt the ladder");
+            assert_eq!(c.reduced_level, 8);
+            assert_eq!(c.full_level, 16);
+        }
+    }
+
+    #[test]
+    fn bad_levels_rejected() {
+        let mut c = AriConfig::default();
+        assert!(c.apply_overrides(&["levels=[16]".into()]).is_err(), "single-level ladder");
+        assert!(c.apply_overrides(&["levels=[16,8]".into()]).is_err(), "descending ladder");
+        assert!(c.apply_overrides(&["levels=[8,8,16]".into()]).is_err(), "duplicate level");
+        assert_eq!(c.levels, Vec::<usize>::new(), "rejected levels must not stick");
     }
 }

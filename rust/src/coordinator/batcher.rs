@@ -123,12 +123,18 @@ impl<T> Batcher<T> {
         None
     }
 
-    /// Unconditionally drain everything (shutdown path).
+    /// Unconditionally drain up to `max_batch` requests (shutdown path).
+    /// Call repeatedly until `None` to flush everything — chunking keeps
+    /// every yielded batch dispatchable at the compiled batch size (a
+    /// full drain used to return arbitrarily large batches, underflowing
+    /// the server's padding accounting and exceeding `run_padded`'s
+    /// `n <= batch` contract).
     pub fn drain(&mut self) -> Option<Batch<T>> {
         if self.queue.is_empty() {
             return None;
         }
-        let items: Vec<_> = self.queue.drain(..).collect();
+        let take = self.queue.len().min(self.policy.max_batch);
+        let items: Vec<_> = self.queue.drain(..take).collect();
         Some(Batch { items, reason: FireReason::Drain })
     }
 }
@@ -212,6 +218,27 @@ mod tests {
         assert_eq!(batch.reason, FireReason::Drain);
         assert_eq!(batch.items.len(), 2);
         assert!(b.drain().is_none());
+    }
+
+    /// Regression: flooding the queue far past `max_batch` and then
+    /// draining must yield chunks no larger than `max_batch` (the old
+    /// drain returned everything at once, which underflowed the server's
+    /// `batch - n` padding arithmetic and violated `run_padded`'s
+    /// `n <= batch` contract on shutdown).
+    #[test]
+    fn flood_then_drain_chunks_at_max_batch() {
+        let mut b = Batcher::new(policy(8, 1_000_000));
+        for i in 0..100 {
+            b.push(i);
+        }
+        let mut seen = Vec::new();
+        while let Some(batch) = b.drain() {
+            assert!(batch.items.len() <= 8, "drain yielded {} > max_batch", batch.items.len());
+            assert_eq!(batch.reason, FireReason::Drain);
+            seen.extend(batch.items.iter().map(|p| p.payload));
+        }
+        assert_eq!(seen, (0..100).collect::<Vec<i32>>());
+        assert!(b.is_empty());
     }
 
     /// Property: no request is ever lost or duplicated across an

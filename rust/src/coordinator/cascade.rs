@@ -1,4 +1,5 @@
-//! The two-tier ARI cascade.
+//! The two-tier ARI cascade — now a thin wrapper over the N-level
+//! [`Ladder`] (`levels = [reduced, full]`).
 //!
 //! Calibration (paper §III-C): run the full and reduced models over the
 //! calibration split, collect the reduced-model margins of elements whose
@@ -8,12 +9,16 @@
 //! Serving (paper Fig. 7b): every batch runs on the reduced model; rows
 //! whose margin fails `accepts(margin, T)` are gathered, re-run on the
 //! full model, and scattered back.  Energy is accounted per inference
-//! with the calibrated [`EnergyModel`] (eq. 1).
+//! with the calibrated [`crate::energy::EnergyModel`] (eq. 1).
+//!
+//! All inference delegates to the 2-level ladder, which is
+//! bit-identical to the original standalone implementation (same
+//! calibration seeds, same SC key salts — pinned by `tests/ladder.rs`).
 
 use crate::config::{AriConfig, Mode, ThresholdPolicy};
+use crate::coordinator::ladder::{Ladder, LadderBatch, LadderSpec};
 use crate::data::{EvalData, VariantRef};
-use crate::energy::EnergyModel;
-use crate::margin::{accepts, Calibration};
+use crate::margin::Calibration;
 use crate::runtime::{Backend, BatchOutputs};
 
 /// Static description of a cascade (what to build from the manifest).
@@ -48,6 +53,18 @@ impl CascadeSpec {
             seed: cfg.seed as u32,
         }
     }
+
+    /// The equivalent 2-level ladder spec.
+    pub fn to_ladder(&self) -> LadderSpec {
+        LadderSpec {
+            dataset: self.dataset.clone(),
+            mode: self.mode,
+            levels: vec![self.reduced_level, self.full_level],
+            batch: self.batch,
+            threshold: self.threshold,
+            seed: self.seed,
+        }
+    }
 }
 
 /// When to run the full model for escalated rows.
@@ -79,7 +96,21 @@ pub struct CascadeBatch {
     pub n_classes: usize,
 }
 
-/// A calibrated, servable cascade.
+impl CascadeBatch {
+    /// View a 2-level ladder batch as a cascade batch.
+    fn from_ladder(b: LadderBatch) -> Self {
+        Self {
+            escalated: b.stage.iter().map(|&s| s > 0).collect(),
+            pred: b.pred,
+            margin: b.margin,
+            energy_uj: b.energy_uj,
+            reduced_pred: b.first_pred,
+            n_classes: b.n_classes,
+        }
+    }
+}
+
+/// A calibrated, servable cascade (the 2-level [`Ladder`] special case).
 pub struct Cascade {
     /// The spec this cascade was built from.
     pub spec: CascadeSpec,
@@ -95,6 +126,9 @@ pub struct Cascade {
     pub e_reduced: f64,
     /// Energy per inference of the full model (µJ).
     pub e_full: f64,
+    /// The underlying 2-level ladder all inference delegates to (also
+    /// what [`crate::server::run_serving`] serves from).
+    pub ladder: Ladder,
 }
 
 impl Cascade {
@@ -106,54 +140,34 @@ impl Cascade {
         data: &EvalData,
         n_calib: usize,
     ) -> crate::Result<Self> {
-        anyhow::ensure!(n_calib > 0 && n_calib <= data.n, "bad calibration size {n_calib}");
-        let kind = spec.mode.kind();
-        let reduced = engine.manifest().variant(&spec.dataset, kind, spec.reduced_level, spec.batch)?.clone();
-        let full = engine.manifest().variant(&spec.dataset, kind, spec.full_level, spec.batch)?.clone();
-        let calib_slice = EvalData {
-            x: data.rows(0, n_calib).to_vec(),
-            y: data.y[..n_calib].to_vec(),
-            n: n_calib,
-            input_dim: data.input_dim,
-        };
-        let full_out = engine.run_dataset(&full, &calib_slice, spec.seed)?;
-        let red_out = engine.run_dataset(&reduced, &calib_slice, spec.seed.wrapping_add(1))?;
-        let calibration = Calibration::from_pairs(&full_out.pred, &red_out.pred, &red_out.margin);
-        let threshold = calibration.threshold(spec.threshold);
-
-        let dims = engine.weights(&spec.dataset)?.dims();
-        let energy = EnergyModel::for_dims(&dims);
-        let (e_reduced, e_full) = match spec.mode {
-            Mode::Fp => (
-                energy.fp_energy(crate::quant::FpFormat::fp(spec.reduced_level as u32)),
-                energy.fp_energy(crate::quant::FpFormat::fp(spec.full_level as u32)),
-            ),
-            Mode::Sc => (
-                energy.sc_energy(crate::sc::ScConfig::new(spec.reduced_level)),
-                energy.sc_energy(crate::sc::ScConfig::new(spec.full_level)),
-            ),
-        };
-        Ok(Self { spec, reduced, full, threshold, calibration, e_reduced, e_full })
+        let ladder = Ladder::calibrate(engine, spec.to_ladder(), data, n_calib)?;
+        let calibration = ladder.stages[0].calibration.clone().expect("non-final stage has a calibration");
+        Ok(Self {
+            spec,
+            reduced: ladder.stages[0].variant.clone(),
+            full: ladder.stages[1].variant.clone(),
+            threshold: ladder.stages[0].threshold,
+            calibration,
+            e_reduced: ladder.stages[0].energy_uj,
+            e_full: ladder.stages[1].energy_uj,
+            ladder,
+        })
     }
 
-    /// SC key for a chunk (None for FP).
+    /// SC key for a reduced-model chunk (None for FP).
     pub fn key_for(&self, key_seed: u32) -> Option<[u32; 2]> {
-        match self.spec.mode {
-            Mode::Sc => Some([self.spec.seed, key_seed]),
-            Mode::Fp => None,
-        }
+        self.ladder.key_for(0, key_seed)
     }
 
     /// Reduced-model pass only (used by the server's deferred-escalation
     /// policy, which manages its own escalation queue).
     pub fn run_reduced(&self, engine: &mut dyn Backend, x: &[f32], n: usize, key_seed: u32) -> crate::Result<BatchOutputs> {
-        Ok(engine.run_padded(&self.reduced, x, n, self.key_for(key_seed))?.0)
+        self.ladder.run_stage(engine, 0, x, n, key_seed)
     }
 
     /// Full-model pass only.
     pub fn run_full(&self, engine: &mut dyn Backend, x: &[f32], n: usize, key_seed: u32) -> crate::Result<BatchOutputs> {
-        let key = self.key_for(key_seed).map(|[a, b]| [a ^ 0x5A5A_5A5A, b]);
-        Ok(engine.run_padded(&self.full, x, n, key)?.0)
+        self.ladder.run_stage(engine, 1, x, n, key_seed)
     }
 
     /// Serve one batch of `n` rows through the cascade.
@@ -165,72 +179,13 @@ impl Cascade {
         n: usize,
         key_seed: u32,
     ) -> crate::Result<CascadeBatch> {
-        let key = self.key_for(key_seed);
-        let (red, _) = engine.run_padded(&self.reduced, x, n, key)?;
-        let mut pred = red.pred.clone();
-        let mut margin = red.margin.clone();
-        let mut escalated = vec![false; n];
-        let mut esc_rows: Vec<usize> = Vec::new();
-        for i in 0..n {
-            if !accepts(red.margin[i], self.threshold) {
-                escalated[i] = true;
-                esc_rows.push(i);
-            }
-        }
-        if !esc_rows.is_empty() {
-            let input_dim = x.len() / n;
-            // Gather escalated rows (they may exceed one full-model batch).
-            for chunk in esc_rows.chunks(self.full.batch) {
-                let mut gathered = Vec::with_capacity(chunk.len() * input_dim);
-                for &i in chunk {
-                    gathered.extend_from_slice(&x[i * input_dim..(i + 1) * input_dim]);
-                }
-                let fkey = key.map(|[a, b]| [a ^ 0x5A5A_5A5A, b]);
-                let (fout, _) = engine.run_padded(&self.full, &gathered, chunk.len(), fkey)?;
-                for (j, &i) in chunk.iter().enumerate() {
-                    pred[i] = fout.pred[j];
-                    margin[i] = fout.margin[j];
-                }
-            }
-        }
-        let energy_uj = n as f64 * self.e_reduced + esc_rows.len() as f64 * self.e_full;
-        Ok(CascadeBatch { pred, margin, escalated, energy_uj, reduced_pred: red.pred, n_classes: red.n_classes })
+        Ok(CascadeBatch::from_ladder(self.ladder.infer_batch(engine, x, n, key_seed)?))
     }
 
     /// Run a whole dataset through the cascade (experiment path).
     pub fn infer_dataset(&self, engine: &mut dyn Backend, data: &EvalData) -> crate::Result<(CascadeBatch, BatchOutputs)> {
-        let mut agg = CascadeBatch {
-            pred: Vec::with_capacity(data.n),
-            margin: Vec::with_capacity(data.n),
-            escalated: Vec::with_capacity(data.n),
-            energy_uj: 0.0,
-            reduced_pred: Vec::with_capacity(data.n),
-            n_classes: 0,
-        };
-        let mut chunkid = 0u32;
-        let mut lo = 0;
-        while lo < data.n {
-            let hi = (lo + self.spec.batch).min(data.n);
-            let out = self.infer_batch(engine, data.rows(lo, hi), hi - lo, chunkid)?;
-            agg.pred.extend(out.pred);
-            agg.margin.extend(out.margin);
-            agg.escalated.extend(out.escalated);
-            agg.energy_uj += out.energy_uj;
-            agg.reduced_pred.extend(out.reduced_pred);
-            agg.n_classes = out.n_classes;
-            lo = hi;
-            chunkid += 1;
-        }
-        // Class count comes from the backend outputs, not an assumption
-        // about the dataset (non-10-class datasets report correctly).
-        let outputs = BatchOutputs {
-            scores: Vec::new(),
-            pred: agg.pred.clone(),
-            margin: agg.margin.clone(),
-            batch: data.n,
-            n_classes: agg.n_classes,
-        };
-        Ok((agg, outputs))
+        let (batch, outputs) = self.ladder.infer_dataset(engine, data)?;
+        Ok((CascadeBatch::from_ladder(batch), outputs))
     }
 
     /// Observed escalation fraction of a served result.
@@ -265,6 +220,15 @@ mod tests {
         assert_eq!(spec.dataset, "svhn_syn");
         assert_eq!(spec.reduced_level, 12);
         assert_eq!(spec.full_level, 16);
+    }
+
+    #[test]
+    fn spec_to_ladder_is_two_level() {
+        let mut cfg = AriConfig::default();
+        cfg.reduced_level = 8;
+        let ladder = CascadeSpec::from_config(&cfg).to_ladder();
+        assert_eq!(ladder.levels, vec![8, 16]);
+        assert_eq!(ladder.batch, cfg.batch_size);
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! N-level resolution ladders — the generalisation of the paper's
+//! two-tier reduced→full cascade.
+//!
+//! The paper evaluates one operating point: a single reduced model in
+//! front of the full model.  Multi-stage big/little cascades with a
+//! confidence gate per stage (Daghero et al., arXiv 2204.03431) and the
+//! precision-as-a-ladder framing of the resource-efficiency survey
+//! (arXiv 2001.03048) suggest the richer design space this module
+//! implements: a [`Ladder`] of N calibrated stages, e.g. FP8 → FP12 →
+//! FP16 or SC L=128 → 512 → 2048.
+//!
+//! * **Calibration** — each non-final stage `i` is calibrated against
+//!   the *final* stage on the calibration split, exactly like the
+//!   paper's §III-C pair: collect stage-`i` margins of elements whose
+//!   predicted class differs from the final model's, and derive `T_i`
+//!   from the configured [`ThresholdPolicy`] (reusing
+//!   [`crate::margin::Calibration`]).
+//! * **Inference** — a batch runs on stage 0; rows whose margin clears
+//!   `T_0` stop there, the rest are gathered and escalated to stage 1,
+//!   and so on down the ladder (the final stage accepts everything).
+//!   Per-stage energy accounting extends the paper's eq. (1) to
+//!   `E = Σ_i f_i · E_i` where `f_i` is the fraction of rows that
+//!   executed stage `i`.
+//!
+//! The 2-level ladder is bit-compatible with the original
+//! [`crate::coordinator::Cascade`] (which is now a thin wrapper over
+//! this type): calibration runs use the same seeds, and SC keys use the
+//! same per-stage salt, so PR 2's cascade outputs are reproduced
+//! exactly — pinned by `tests/ladder.rs`.
+
+use crate::config::{AriConfig, Mode, ThresholdPolicy};
+use crate::data::{EvalData, VariantRef};
+use crate::energy::EnergyModel;
+use crate::margin::{accepts, Calibration};
+use crate::runtime::{Backend, BatchOutputs};
+
+/// Static description of an N-level ladder (what to build from the
+/// manifest).
+#[derive(Clone, Debug)]
+pub struct LadderSpec {
+    /// Dataset to serve.
+    pub dataset: String,
+    /// Resolution family.
+    pub mode: Mode,
+    /// Stage levels, ascending; the last entry is the full model (FP
+    /// bit widths or SC sequence lengths).  The degenerate
+    /// reduced == full pair is allowed as an always-full baseline.
+    pub levels: Vec<usize>,
+    /// Batch size every stage variant is compiled at.
+    pub batch: usize,
+    /// Threshold selection policy applied to every non-final stage.
+    pub threshold: ThresholdPolicy,
+    /// SC key seed (ignored for FP).
+    pub seed: u32,
+}
+
+impl LadderSpec {
+    /// Derive a spec from the server configuration
+    /// ([`AriConfig::ladder_levels`] falls back to the 2-level
+    /// reduced/full pair when no explicit ladder is configured).
+    pub fn from_config(cfg: &AriConfig) -> Self {
+        Self {
+            dataset: cfg.dataset.clone(),
+            mode: cfg.mode,
+            levels: cfg.ladder_levels(),
+            batch: cfg.batch_size,
+            threshold: cfg.threshold,
+            seed: cfg.seed as u32,
+        }
+    }
+}
+
+/// One calibrated stage of a ladder.
+#[derive(Clone, Debug)]
+pub struct LadderStage {
+    /// The compiled variant this stage executes.
+    pub variant: VariantRef,
+    /// The calibrated margin threshold `T_i`; rows with margin `> T_i`
+    /// are accepted at this stage.  The final stage accepts everything
+    /// (`f64::NEG_INFINITY`).
+    pub threshold: f64,
+    /// Calibration statistics `T_i` was derived from (None for the
+    /// final stage, which is the calibration reference).
+    pub calibration: Option<Calibration>,
+    /// Modelled energy per inference at this stage (µJ).
+    pub energy_uj: f64,
+}
+
+/// Result of one batch run through a ladder.
+#[derive(Clone, Debug)]
+pub struct LadderBatch {
+    /// Final predictions (stage 0, overwritten by deeper stages where
+    /// escalated).
+    pub pred: Vec<i32>,
+    /// Final margins (same overwrite rule).
+    pub margin: Vec<f32>,
+    /// Per-row index of the stage that produced the final prediction.
+    pub stage: Vec<usize>,
+    /// Rows that *executed* each stage (`stage_counts[0]` is the batch
+    /// size; deeper entries shrink as rows are accepted).
+    pub stage_counts: Vec<usize>,
+    /// Modelled energy for the batch (µJ): `Σ_i stage_counts[i] · E_i`.
+    pub energy_uj: f64,
+    /// Stage-0 predictions before any overwrite — kept for analysis.
+    pub first_pred: Vec<i32>,
+    /// Classes per row, as reported by the backend outputs.
+    pub n_classes: usize,
+}
+
+impl LadderBatch {
+    /// Fraction of rows that executed each stage (`f_i` in the energy
+    /// accounting `E = Σ_i f_i · E_i`).
+    pub fn stage_fractions(&self) -> Vec<f64> {
+        let n = self.pred.len().max(1) as f64;
+        self.stage_counts.iter().map(|&c| c as f64 / n).collect()
+    }
+
+    /// Fraction of rows that escalated past stage 0.
+    pub fn escalation_fraction(&self) -> f64 {
+        if self.pred.is_empty() {
+            return 0.0;
+        }
+        self.stage.iter().filter(|&&s| s > 0).count() as f64 / self.pred.len() as f64
+    }
+}
+
+/// A calibrated, servable N-level ladder.
+pub struct Ladder {
+    /// The spec this ladder was built from.
+    pub spec: LadderSpec,
+    /// The calibrated stages, ascending resolution; the last is the
+    /// full model.
+    pub stages: Vec<LadderStage>,
+}
+
+impl Ladder {
+    /// Build and calibrate: runs every stage over rows [0, n_calib) of
+    /// the eval split and derives each non-final stage's threshold
+    /// against the final stage's predictions.
+    pub fn calibrate(
+        engine: &mut dyn Backend,
+        spec: LadderSpec,
+        data: &EvalData,
+        n_calib: usize,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(spec.levels.len() >= 2, "a ladder needs at least 2 levels, got {:?}", spec.levels);
+        // Non-decreasing: strict ascent is the useful shape, but the
+        // degenerate reduced == full cascade is a supported baseline
+        // ("always-full": nothing ever escalates at a fixed T < 0).
+        anyhow::ensure!(
+            spec.levels.windows(2).all(|w| w[0] <= w[1]),
+            "ladder levels must be ascending (reduced -> full), got {:?}",
+            spec.levels
+        );
+        anyhow::ensure!(n_calib > 0 && n_calib <= data.n, "bad calibration size {n_calib}");
+        let kind = spec.mode.kind();
+        let mut variants: Vec<VariantRef> = Vec::with_capacity(spec.levels.len());
+        for &level in &spec.levels {
+            variants.push(engine.manifest().variant(&spec.dataset, kind, level, spec.batch)?.clone());
+        }
+        let calib_slice = EvalData {
+            x: data.rows(0, n_calib).to_vec(),
+            y: data.y[..n_calib].to_vec(),
+            n: n_calib,
+            input_dim: data.input_dim,
+        };
+        // The final stage is the calibration reference.  Seeds follow
+        // the original cascade's scheme (full = seed, stage i =
+        // seed + i + 1) so the 2-level ladder is bit-identical to it.
+        let full_out = engine.run_dataset(variants.last().unwrap(), &calib_slice, spec.seed)?;
+
+        let dims = engine.weights(&spec.dataset)?.dims();
+        let energy = EnergyModel::for_dims(&dims);
+        let n_stages = spec.levels.len();
+        let mut stages = Vec::with_capacity(n_stages);
+        for (i, variant) in variants.into_iter().enumerate() {
+            let energy_uj = match spec.mode {
+                Mode::Fp => energy.fp_energy(crate::quant::FpFormat::fp(spec.levels[i] as u32)),
+                Mode::Sc => energy.sc_energy(crate::sc::ScConfig::new(spec.levels[i])),
+            };
+            if i + 1 == n_stages {
+                stages.push(LadderStage { variant, threshold: f64::NEG_INFINITY, calibration: None, energy_uj });
+            } else {
+                let out = engine.run_dataset(&variant, &calib_slice, spec.seed.wrapping_add(i as u32 + 1))?;
+                let calibration = Calibration::from_pairs(&full_out.pred, &out.pred, &out.margin);
+                let threshold = calibration.threshold(spec.threshold);
+                stages.push(LadderStage { variant, threshold, calibration: Some(calibration), energy_uj });
+            }
+        }
+        Ok(Self { spec, stages })
+    }
+
+    /// Number of stages in the ladder.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Modelled energy per inference of the final (full) stage (µJ).
+    pub fn e_full(&self) -> f64 {
+        self.stages.last().unwrap().energy_uj
+    }
+
+    /// SC key for one batch of a stage (None for FP).  Stage 0 uses the
+    /// raw seed and each deeper stage XORs a per-stage salt — stage 1's
+    /// salt is `0x5A5A_5A5A`, keeping the 2-level ladder bit-compatible
+    /// with the original cascade while decorrelating N stages.
+    pub fn key_for(&self, stage: usize, key_seed: u32) -> Option<[u32; 2]> {
+        match self.spec.mode {
+            Mode::Sc => Some([self.spec.seed ^ (stage as u32).wrapping_mul(0x5A5A_5A5A), key_seed]),
+            Mode::Fp => None,
+        }
+    }
+
+    /// Run `n` rows on one stage only (used by the server's deferred
+    /// escalation queues, which manage their own gather/scatter).
+    pub fn run_stage(
+        &self,
+        engine: &mut dyn Backend,
+        stage: usize,
+        x: &[f32],
+        n: usize,
+        key_seed: u32,
+    ) -> crate::Result<BatchOutputs> {
+        Ok(engine.run_padded(&self.stages[stage].variant, x, n, self.key_for(stage, key_seed))?.0)
+    }
+
+    /// Serve one batch of `n` rows down the ladder.  `key_seed` feeds
+    /// SC key derivation (ignored for FP); every stage of this call
+    /// shares it (stages are decorrelated by the per-stage salt).
+    pub fn infer_batch(
+        &self,
+        engine: &mut dyn Backend,
+        x: &[f32],
+        n: usize,
+        key_seed: u32,
+    ) -> crate::Result<LadderBatch> {
+        let first = self.run_stage(engine, 0, x, n, key_seed)?;
+        let mut pred = first.pred.clone();
+        let mut margin = first.margin.clone();
+        let mut stage = vec![0usize; n];
+        let mut stage_counts = vec![0usize; self.stages.len()];
+        stage_counts[0] = n;
+        let input_dim = x.len() / n;
+        let mut rows: Vec<usize> =
+            (0..n).filter(|&i| !accepts(first.margin[i], self.stages[0].threshold)).collect();
+        for s in 1..self.stages.len() {
+            if rows.is_empty() {
+                break;
+            }
+            stage_counts[s] = rows.len();
+            let mut next_rows = Vec::new();
+            // Gather escalated rows (they may exceed one stage batch).
+            for chunk in rows.chunks(self.stages[s].variant.batch) {
+                let mut gathered = Vec::with_capacity(chunk.len() * input_dim);
+                for &i in chunk {
+                    gathered.extend_from_slice(&x[i * input_dim..(i + 1) * input_dim]);
+                }
+                let out = self.run_stage(engine, s, &gathered, chunk.len(), key_seed)?;
+                for (j, &i) in chunk.iter().enumerate() {
+                    pred[i] = out.pred[j];
+                    margin[i] = out.margin[j];
+                    stage[i] = s;
+                    if s + 1 < self.stages.len() && !accepts(out.margin[j], self.stages[s].threshold) {
+                        next_rows.push(i);
+                    }
+                }
+            }
+            rows = next_rows;
+        }
+        let energy_uj =
+            stage_counts.iter().zip(&self.stages).map(|(&c, st)| c as f64 * st.energy_uj).sum();
+        Ok(LadderBatch {
+            pred,
+            margin,
+            stage,
+            stage_counts,
+            energy_uj,
+            first_pred: first.pred,
+            n_classes: first.n_classes,
+        })
+    }
+
+    /// Run a whole dataset through the ladder (experiment path), chunked
+    /// by the spec batch size.
+    pub fn infer_dataset(
+        &self,
+        engine: &mut dyn Backend,
+        data: &EvalData,
+    ) -> crate::Result<(LadderBatch, BatchOutputs)> {
+        let mut agg = LadderBatch {
+            pred: Vec::with_capacity(data.n),
+            margin: Vec::with_capacity(data.n),
+            stage: Vec::with_capacity(data.n),
+            stage_counts: vec![0; self.stages.len()],
+            energy_uj: 0.0,
+            first_pred: Vec::with_capacity(data.n),
+            n_classes: 0,
+        };
+        let mut chunkid = 0u32;
+        let mut lo = 0;
+        while lo < data.n {
+            let hi = (lo + self.spec.batch).min(data.n);
+            let out = self.infer_batch(engine, data.rows(lo, hi), hi - lo, chunkid)?;
+            agg.pred.extend(out.pred);
+            agg.margin.extend(out.margin);
+            agg.stage.extend(out.stage);
+            for (a, b) in agg.stage_counts.iter_mut().zip(&out.stage_counts) {
+                *a += b;
+            }
+            agg.energy_uj += out.energy_uj;
+            agg.first_pred.extend(out.first_pred);
+            agg.n_classes = out.n_classes;
+            lo = hi;
+            chunkid += 1;
+        }
+        let outputs = BatchOutputs {
+            scores: Vec::new(),
+            pred: agg.pred.clone(),
+            margin: agg.margin.clone(),
+            batch: data.n,
+            n_classes: agg.n_classes,
+        };
+        Ok((agg, outputs))
+    }
+
+    /// Energy savings vs always-full, from served energy (the paper's
+    /// eq. 2 on the realised per-stage fractions).
+    pub fn realised_savings(&self, batch: &LadderBatch) -> f64 {
+        let n = batch.pred.len() as f64;
+        if n == 0.0 {
+            return 0.0;
+        }
+        1.0 - batch.energy_uj / (n * self.e_full())
+    }
+
+    /// Multi-line per-stage calibration summary (levels, changed-element
+    /// counts, thresholds, per-inference energies).
+    pub fn calibration_report(&self) -> String {
+        let mut s = String::new();
+        for (i, st) in self.stages.iter().enumerate() {
+            let label = match self.spec.mode {
+                Mode::Fp => format!("FP{}", st.variant.level),
+                Mode::Sc => format!("L={}", st.variant.level),
+            };
+            match &st.calibration {
+                Some(cal) => s.push_str(&format!(
+                    "  stage {i} ({label}): {}, E = {:.4} µJ\n",
+                    cal.summary(st.threshold),
+                    st.energy_uj
+                )),
+                None => s.push_str(&format!("  stage {i} ({label}): final, E = {:.4} µJ\n", st.energy_uj)),
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::VariantKind;
+
+    fn dummy_ladder(mode: Mode, n_stages: usize) -> Ladder {
+        let spec = LadderSpec {
+            dataset: "d".into(),
+            mode,
+            levels: (0..n_stages).map(|i| 8 + 4 * i).collect(),
+            batch: 32,
+            threshold: ThresholdPolicy::MMax,
+            seed: 0xA41,
+        };
+        let stages = spec
+            .levels
+            .iter()
+            .map(|&level| LadderStage {
+                variant: VariantRef {
+                    dataset: "d".into(),
+                    kind: VariantKind::Sc,
+                    level,
+                    batch: 32,
+                    file: String::new(),
+                },
+                threshold: 0.0,
+                calibration: None,
+                energy_uj: level as f64,
+            })
+            .collect();
+        Ladder { spec, stages }
+    }
+
+    #[test]
+    fn spec_from_config_uses_ladder_levels() {
+        let mut cfg = AriConfig::default();
+        cfg.reduced_level = 8;
+        let spec = LadderSpec::from_config(&cfg);
+        assert_eq!(spec.levels, vec![8, 16]);
+        cfg.levels = vec![8, 12, 16];
+        let spec = LadderSpec::from_config(&cfg);
+        assert_eq!(spec.levels, vec![8, 12, 16]);
+    }
+
+    #[test]
+    fn sc_keys_distinct_per_stage_and_cascade_compatible() {
+        let ladder = dummy_ladder(Mode::Sc, 3);
+        let seed = ladder.spec.seed;
+        let k0 = ladder.key_for(0, 7).unwrap();
+        let k1 = ladder.key_for(1, 7).unwrap();
+        let k2 = ladder.key_for(2, 7).unwrap();
+        // Stage 0/1 match the original cascade's reduced/full keys.
+        assert_eq!(k0, [seed, 7]);
+        assert_eq!(k1, [seed ^ 0x5A5A_5A5A, 7]);
+        assert_ne!(k1, k2);
+        assert_ne!(k0, k2);
+    }
+
+    #[test]
+    fn fp_has_no_keys() {
+        let ladder = dummy_ladder(Mode::Fp, 2);
+        assert!(ladder.key_for(0, 1).is_none());
+        assert!(ladder.key_for(1, 1).is_none());
+    }
+
+    #[test]
+    fn batch_fractions_and_escalation() {
+        let b = LadderBatch {
+            pred: vec![0; 4],
+            margin: vec![0.0; 4],
+            stage: vec![0, 1, 2, 0],
+            stage_counts: vec![4, 2, 1],
+            energy_uj: 0.0,
+            first_pred: vec![0; 4],
+            n_classes: 10,
+        };
+        assert_eq!(b.stage_fractions(), vec![1.0, 0.5, 0.25]);
+        assert!((b.escalation_fraction() - 0.5).abs() < 1e-12);
+    }
+}

@@ -2,13 +2,18 @@
 //! component.
 //!
 //! * [`batcher`] — dynamic batching queue (size + deadline policy);
-//! * [`cascade`] — the two-tier adaptive-resolution cascade: calibrate a
-//!   threshold on a calibration split, then serve every batch reduced-
-//!   first and escalate only low-margin samples to the full model
-//!   (paper Fig. 7b), with per-inference energy accounting (eq. 1).
+//! * [`ladder`] — the N-level adaptive-resolution ladder: each non-final
+//!   stage is calibrated against the full model on a calibration split,
+//!   and a batch flows down the ladder — rows accepted at stage i stop
+//!   there, the rest escalate — with per-stage energy accounting
+//!   `E = Σ_i f_i · E_i` (the paper's eq. 1 generalised);
+//! * [`cascade`] — the paper's two-tier special case, kept as a thin
+//!   wrapper over a 2-level ladder (paper Fig. 7b).
 
 pub mod batcher;
 pub mod cascade;
+pub mod ladder;
 
 pub use batcher::{Batch, Batcher, BatcherPolicy};
 pub use cascade::{Cascade, CascadeBatch, CascadeSpec, EscalationPolicy};
+pub use ladder::{Ladder, LadderBatch, LadderSpec, LadderStage};

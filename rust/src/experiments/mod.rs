@@ -16,7 +16,7 @@ use crate::runtime::Backend;
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "table1", "table2", "fig5", "fig6", "fig8", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-    "table3", "table4",
+    "table3", "table4", "ladder",
 ];
 
 /// Run one experiment by id.
@@ -35,6 +35,7 @@ pub fn run_experiment(engine: &mut dyn Backend, id: &str) -> crate::Result<Strin
         "fig15" => figures::fig15(engine),
         "table3" => case_study::table3(engine),
         "table4" => case_study::table4(engine),
+        "ladder" => sweep::ladder_report(engine),
         other => anyhow::bail!("unknown experiment {other:?} (known: {ALL:?})"),
     }
 }

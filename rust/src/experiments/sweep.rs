@@ -1,9 +1,18 @@
 //! Shared sweep cache: every figure in §IV needs (dataset × variant)
 //! outputs over the whole eval split; this runs each combination once
 //! per process and memoises the result.
+//!
+//! Also home of the **ladder sweep** (`ari sweep [--ladder]`): the
+//! N-level generalisation turns the paper's single reduced/full
+//! operating point into a family of energy/accuracy tradeoff curves —
+//! every 2-level pair plus multi-level ladders assembled from the
+//! manifest's level grid, each reported with per-stage escalation
+//! fractions and the `E = Σ_i f_i · E_i` energy accounting.
 
 use std::collections::HashMap;
 
+use crate::config::{Mode, ThresholdPolicy};
+use crate::coordinator::{Ladder, LadderSpec};
 use crate::data::{EvalData, VariantKind};
 use crate::margin::Calibration;
 use crate::runtime::{Backend, BatchOutputs};
@@ -93,6 +102,74 @@ impl Sweep {
             .filter(|&l| l != Self::full_level(kind))
             .collect()
     }
+}
+
+/// Candidate ladders over a dataset's manifest levels: every 2-level
+/// `[reduced, full]` pair, plus — when `multi` — a 3-level
+/// low→mid→full ladder and the whole level chain.
+pub fn candidate_ladders(engine: &dyn Backend, ds: &str, kind: VariantKind, multi: bool) -> Vec<Vec<usize>> {
+    let full = Sweep::full_level(kind);
+    let mut reduced = Sweep::reduced_levels(engine, ds, kind);
+    reduced.sort_unstable(); // ascending
+    let mut out: Vec<Vec<usize>> = reduced.iter().map(|&r| vec![r, full]).collect();
+    if multi && reduced.len() >= 2 {
+        let lo = reduced[0];
+        let mid = reduced[reduced.len() / 2];
+        if mid != lo {
+            out.push(vec![lo, mid, full]);
+        }
+        let mut chain = reduced.clone();
+        chain.push(full);
+        if chain.len() > 3 {
+            out.push(chain);
+        }
+    }
+    out
+}
+
+/// Run every candidate ladder end to end (calibrate on the calibration
+/// split, infer the whole eval split) and tabulate per-stage fractions,
+/// energy per inference, realised savings vs always-full, and accuracy.
+#[allow(clippy::too_many_arguments)]
+pub fn ladder_table(
+    engine: &mut dyn Backend,
+    ds: &str,
+    mode: Mode,
+    ladders: &[Vec<usize>],
+    threshold: ThresholdPolicy,
+    calib_fraction: f64,
+    batch: usize,
+    seed: u32,
+) -> crate::Result<String> {
+    let data = engine.eval_data(ds)?;
+    let n_calib = (((data.n as f64) * calib_fraction) as usize).clamp(1, data.n);
+    let mut s = format!(
+        "ladder sweep: {ds} {mode:?} threshold={threshold} calib_rows={n_calib} eval_rows={}\n",
+        data.n
+    );
+    s.push_str("levels | stage fractions f_i | E/inf µJ | savings | accuracy\n");
+    for levels in ladders {
+        let spec = LadderSpec { dataset: ds.to_string(), mode, levels: levels.clone(), batch, threshold, seed };
+        let ladder = Ladder::calibrate(engine, spec, &data, n_calib)?;
+        let (out, _) = ladder.infer_dataset(engine, &data)?;
+        let acc = out.pred.iter().zip(&data.y).filter(|(a, b)| a == b).count() as f64 / data.n.max(1) as f64;
+        let fracs =
+            out.stage_fractions().iter().map(|f| format!("{f:.3}")).collect::<Vec<_>>().join("/");
+        let e_per = out.energy_uj / data.n.max(1) as f64;
+        s.push_str(&format!(
+            "{levels:?} | {fracs} | {e_per:.5} | {:.3} | {acc:.4}\n",
+            ladder.realised_savings(&out)
+        ));
+    }
+    Ok(s)
+}
+
+/// The `ladder` experiment: FP candidate ladders (pairs + multi-level)
+/// on the first manifest dataset at the sweep batch size.
+pub fn ladder_report(engine: &mut dyn Backend) -> crate::Result<String> {
+    let ds = engine.manifest().datasets[0].name.clone();
+    let ladders = candidate_ladders(engine, &ds, VariantKind::Fp, true);
+    ladder_table(engine, &ds, Mode::Fp, &ladders, ThresholdPolicy::MMax, 0.5, SWEEP_BATCH, 0xA41)
 }
 
 /// Quantisation-level axis label (paper's x-axes).

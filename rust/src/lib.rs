@@ -12,10 +12,11 @@
 //! * **L3 (this crate)** — the serving system: a pluggable inference
 //!   [`runtime`] (pure-rust [`runtime::NativeBackend`] by default, a
 //!   PJRT engine for the lowered executables behind the `pjrt` cargo
-//!   feature) and the ARI cascade coordinator that runs every request on
-//!   the reduced model first, checks the score margin against a
-//!   calibrated threshold, and escalates only low-margin requests to the
-//!   full model (paper Fig. 7b).
+//!   feature) and the ARI ladder coordinator that runs every request on
+//!   the lowest-resolution model first, checks the score margin against
+//!   a per-stage calibrated threshold, and escalates only low-margin
+//!   requests down an N-level resolution ladder (paper Fig. 7b is the
+//!   2-level special case).
 //!
 //! Python never runs on the request path.  With default features the
 //! crate is fully self-contained: no `artifacts/` directory, no native
@@ -36,7 +37,7 @@
 //! | [`energy`] | per-inference energy model calibrated to the paper's Tables I & II |
 //! | [`margin`] | margin statistics + threshold calibration (Mmax / M99 / M95) |
 //! | [`runtime`] | the [`runtime::Backend`] trait, native + PJRT backends, fixtures |
-//! | [`coordinator`] | the ARI cascade: batcher, escalation, energy accounting |
+//! | [`coordinator`] | the ARI N-level ladder (+ 2-level cascade wrapper): batcher, per-stage escalation, energy accounting |
 //! | [`server`] | threaded request loop + workload generators |
 //! | [`metrics`] | counters + latency histograms |
 //! | [`experiments`] | regeneration drivers for every paper table & figure |

@@ -2,12 +2,19 @@
 //!
 //! ```text
 //! ari info       [--artifacts DIR] [--backend B]
-//! ari calibrate  [--artifacts DIR] [--backend B] [overrides…]   threshold table for one cascade
+//! ari calibrate  [--artifacts DIR] [--backend B] [overrides…]   per-stage threshold table
 //! ari serve      [--artifacts DIR] [--backend B] [--config FILE] [--deferred] [overrides…]
+//! ari sweep      [--artifacts DIR] [--backend B] [--ladder] [overrides…]   ladder tradeoff table
 //! ari experiment <id|all> [--artifacts DIR] [--backend B] [--out DIR]
 //! ari bench-exec [--artifacts DIR] [--backend B] [overrides…]   raw execute timing
 //! ari fixture    --out DIR                                      write synthetic artifacts
 //! ```
+//!
+//! `calibrate` and `serve` run the N-level ladder described by the
+//! config (`levels = [8, 12, 16]`, or the classic 2-level
+//! reduced/full pair when no ladder is configured); `sweep` tabulates
+//! every candidate ladder's energy/accuracy tradeoff (`--ladder` adds
+//! multi-level ladders to the 2-level pairs).
 //!
 //! `--backend` selects the inference substrate: `auto` (default; PJRT
 //! when compiled in and artifacts exist, else native), `native`
@@ -22,9 +29,9 @@
 use std::path::PathBuf;
 
 use ari::config::AriConfig;
-use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy};
+use ari::coordinator::{EscalationPolicy, Ladder, LadderSpec};
 use ari::runtime::{open_backend, Backend, BackendKind};
-use ari::server::{run_serving, ServeOptions};
+use ari::server::{run_serving_ladder, ServeOptions};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -40,6 +47,7 @@ struct Cli {
     config: Option<PathBuf>,
     out: Option<PathBuf>,
     deferred: bool,
+    ladder: bool,
     positional: Vec<String>,
     overrides: Vec<String>,
 }
@@ -51,6 +59,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
         config: None,
         out: None,
         deferred: false,
+        ladder: false,
         positional: Vec::new(),
         overrides: Vec::new(),
     };
@@ -62,6 +71,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
             "--config" => cli.config = Some(PathBuf::from(next_val(&mut it, "--config")?)),
             "--out" => cli.out = Some(PathBuf::from(next_val(&mut it, "--out")?)),
             "--deferred" => cli.deferred = true,
+            "--ladder" => cli.ladder = true,
             "--help" | "-h" => {
                 println!("{}", HELP);
                 std::process::exit(0);
@@ -78,9 +88,9 @@ fn next_val<'a>(it: &mut std::iter::Peekable<std::slice::Iter<'a, String>>, flag
 }
 
 const HELP: &str = "ari — Adaptive Resolution Inference\n\
-commands:\n  info | calibrate | serve | experiment <id|all> | bench-exec | fixture\n\
-flags: --artifacts DIR  --backend auto|native|pjrt  --config FILE  --out DIR  --deferred\n\
-overrides: dataset=… mode=fp|sc reduced_level=… threshold=mmax|m99|m95|<f> server.batch_size=… server.requests=… server.arrival_rate=…";
+commands:\n  info | calibrate | serve | sweep | experiment <id|all> | bench-exec | fixture\n\
+flags: --artifacts DIR  --backend auto|native|pjrt  --config FILE  --out DIR  --deferred  --ladder\n\
+overrides: dataset=… mode=fp|sc reduced_level=… levels=[8,12,16] threshold=mmax|m99|m95|<f> server.batch_size=… server.requests=… server.arrival_rate=…";
 
 fn load_config(cli: &Cli) -> ari::Result<AriConfig> {
     let mut cfg = match &cli.config {
@@ -92,12 +102,12 @@ fn load_config(cli: &Cli) -> ari::Result<AriConfig> {
     Ok(cfg)
 }
 
-fn build_cascade(engine: &mut dyn Backend, cfg: &AriConfig) -> ari::Result<(Cascade, ari::data::EvalData, usize)> {
+fn build_ladder(engine: &mut dyn Backend, cfg: &AriConfig) -> ari::Result<(Ladder, ari::data::EvalData, usize)> {
     let data = engine.eval_data(&cfg.dataset)?;
     let n_calib = ((data.n as f64) * cfg.calib_fraction) as usize;
-    let spec = CascadeSpec::from_config(cfg);
-    let cascade = Cascade::calibrate(engine, spec, &data, n_calib.max(1))?;
-    Ok((cascade, data, n_calib))
+    let spec = LadderSpec::from_config(cfg);
+    let ladder = Ladder::calibrate(engine, spec, &data, n_calib.max(1))?;
+    Ok((ladder, data, n_calib))
 }
 
 fn dispatch(args: &[String]) -> ari::Result<()> {
@@ -119,50 +129,73 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
         "calibrate" => {
             let cfg = load_config(&cli)?;
             let mut engine = open_backend(&cfg.artifacts, cli.backend)?;
-            let (cascade, _, n_calib) = build_cascade(engine.as_mut(), &cfg)?;
+            let (ladder, _, n_calib) = build_ladder(engine.as_mut(), &cfg)?;
             println!(
-                "cascade {}/{:?} reduced={} full={} (calibrated on {n_calib} rows, backend {})",
+                "ladder {}/{:?} levels={:?} ({}) calibrated on {n_calib} rows, backend {}",
                 cfg.dataset,
                 cfg.mode,
-                cfg.reduced_level,
-                cfg.full_level,
+                ladder.spec.levels,
+                cfg.threshold,
                 engine.name()
             );
-            println!(
-                "changed elements: {} / {} ({:.3}%)",
-                cascade.calibration.changed_margins.len(),
-                cascade.calibration.n,
-                100.0 * cascade.calibration.change_rate()
-            );
-            for p in [ari::config::ThresholdPolicy::MMax, ari::config::ThresholdPolicy::M99, ari::config::ThresholdPolicy::M95] {
-                println!("  T({p}) = {:.4}", cascade.calibration.threshold(p));
+            print!("{}", ladder.calibration_report());
+            for (i, stage) in ladder.stages.iter().enumerate() {
+                if let Some(cal) = &stage.calibration {
+                    for p in
+                        [ari::config::ThresholdPolicy::MMax, ari::config::ThresholdPolicy::M99, ari::config::ThresholdPolicy::M95]
+                    {
+                        println!("  stage {i} T({p}) = {:.4}", cal.threshold(p));
+                    }
+                }
             }
-            println!("selected T = {:.4} ({})", cascade.threshold, cfg.threshold);
-            println!("E_reduced = {:.3} µJ, E_full = {:.3} µJ", cascade.e_reduced, cascade.e_full);
         }
         "serve" => {
             let cfg = load_config(&cli)?;
             let mut engine = open_backend(&cfg.artifacts, cli.backend)?;
-            let (cascade, data, n_calib) = build_cascade(engine.as_mut(), &cfg)?;
+            let (ladder, data, n_calib) = build_ladder(engine.as_mut(), &cfg)?;
             // Baseline full-model predictions for parity reporting.
             let kind = cfg.mode.kind();
-            let full_v = engine.manifest().variant(&cfg.dataset, kind, cfg.full_level, cfg.batch_size)?.clone();
+            let full_level = *ladder.spec.levels.last().unwrap();
+            let full_v = engine.manifest().variant(&cfg.dataset, kind, full_level, cfg.batch_size)?.clone();
             let full_out = engine.run_dataset(&full_v, &data, cfg.seed as u32)?;
             let opts = ServeOptions {
                 escalation: if cli.deferred { EscalationPolicy::Deferred } else { EscalationPolicy::Immediate },
             };
             println!(
-                "serving {}: {:?} reduced={} full={} T={:.4} ({}) calib_rows={n_calib} backend={}",
+                "serving {}: {:?} levels={:?} ({}) calib_rows={n_calib} backend={}",
                 cfg.dataset,
                 cfg.mode,
-                cfg.reduced_level,
-                cfg.full_level,
-                cascade.threshold,
+                ladder.spec.levels,
                 cfg.threshold,
                 engine.name()
             );
-            let report = run_serving(engine.as_mut(), &cascade, &cfg, &data, Some(&full_out.pred), opts)?;
+            print!("{}", ladder.calibration_report());
+            let report = run_serving_ladder(engine.as_mut(), &ladder, &cfg, &data, Some(&full_out.pred), opts)?;
             println!("{}", report.summary());
+        }
+        "sweep" => {
+            let cfg = load_config(&cli)?;
+            let mut engine = open_backend(&cfg.artifacts, cli.backend)?;
+            let kind = cfg.mode.kind();
+            let mut ladders =
+                ari::experiments::sweep::candidate_ladders(engine.as_ref(), &cfg.dataset, kind, cli.ladder);
+            if !cfg.levels.is_empty() {
+                // The explicitly configured ladder leads the table
+                // (deduplicated — each ladder runs a full eval pass).
+                ladders.retain(|l| *l != cfg.levels);
+                ladders.insert(0, cfg.levels.clone());
+            }
+            let table = ari::experiments::sweep::ladder_table(
+                engine.as_mut(),
+                &cfg.dataset,
+                cfg.mode,
+                &ladders,
+                cfg.threshold,
+                cfg.calib_fraction,
+                cfg.batch_size,
+                cfg.seed as u32,
+            )?;
+            print!("{table}");
         }
         "experiment" => {
             let id = cli.positional.get(1).map(|s| s.as_str()).unwrap_or("all");

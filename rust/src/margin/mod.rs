@@ -56,6 +56,19 @@ impl Calibration {
         }
     }
 
+    /// One-line summary of this calibration at a chosen threshold —
+    /// used for the per-stage report of an N-level ladder
+    /// ([`crate::coordinator::Ladder::calibration_report`]).
+    pub fn summary(&self, threshold: f64) -> String {
+        format!(
+            "{} changed of {} ({:.2}%), T = {:.4}",
+            self.changed_margins.len(),
+            self.n,
+            100.0 * self.change_rate(),
+            threshold
+        )
+    }
+
     /// Fraction of (calibration) elements that would escalate at T, given
     /// all reduced-model margins.  This is the paper's F (Fig. 13).
     pub fn escalation_fraction(all_reduced_margins: &[f32], t: f64) -> f64 {
@@ -117,6 +130,15 @@ mod tests {
         let m99 = c.threshold(ThresholdPolicy::M99);
         let m95 = c.threshold(ThresholdPolicy::M95);
         assert!(m95 < m99 && m99 < mmax);
+    }
+
+    #[test]
+    fn summary_reports_counts_and_threshold() {
+        let c = Calibration::from_pairs(&[0, 1, 2, 3], &[0, 1, 9, 3], &[0.9f32, 0.8, 0.1, 0.7]);
+        let s = c.summary(0.1);
+        assert!(s.contains("1 changed of 4"), "{s}");
+        assert!(s.contains("25.00%"), "{s}");
+        assert!(s.contains("T = 0.1000"), "{s}");
     }
 
     #[test]

@@ -111,8 +111,14 @@ impl MetricsRegistry {
     }
 
     /// Account modelled energy (µJ, stored as integer nJ).
+    ///
+    /// Rounds to the nearest nanojoule: the old truncating cast lost up
+    /// to 1 nJ per call, biasing long accumulations of small per-request
+    /// energies systematically down.  Negative inputs are clamped to
+    /// zero (the counter is monotone) rather than wrapping.
     pub fn add_energy_uj(&self, uj: f64) {
-        self.energy_nj.fetch_add((uj * 1000.0) as u64, Ordering::Relaxed);
+        let nj = (uj * 1000.0).round().max(0.0) as u64;
+        self.energy_nj.fetch_add(nj, Ordering::Relaxed);
     }
 
     /// Total modelled energy spent (µJ).
@@ -197,6 +203,23 @@ mod tests {
         m.add_energy_uj(0.25);
         assert!((m.escalation_fraction() - 0.3).abs() < 1e-12);
         assert!((m.energy_uj() - 1.75).abs() < 1e-3);
+    }
+
+    /// Regression: accumulating many small per-request energies must
+    /// round per call, not truncate (1.9 nJ truncated to 1 nJ lost 47%
+    /// of the total), and negative inputs are clamped, not wrapped.
+    #[test]
+    fn energy_rounds_instead_of_truncating() {
+        let m = MetricsRegistry::new();
+        for _ in 0..1000 {
+            m.add_energy_uj(0.0019); // 1.9 nJ per request
+        }
+        // Rounding keeps the total within ±0.5 nJ/call of the true
+        // 1.9 µJ; truncation would report 1.0 µJ.
+        assert!((m.energy_uj() - 1.9).abs() < 0.11, "got {} µJ", m.energy_uj());
+        let before = m.energy_uj();
+        m.add_energy_uj(-4.0);
+        assert_eq!(m.energy_uj(), before, "negative energy must be clamped, not wrapped");
     }
 
     #[test]

@@ -1,9 +1,9 @@
-//! The serving loop: workload generation, request queueing, cascade
+//! The serving loop: workload generation, request queueing, ladder
 //! dispatch and reporting.
 //!
 //! Threading model: backends may be thread-pinned (the PJRT client is
 //! `Rc`-based, not `Send` — see [`crate::runtime`]), so the coordinator
-//! loop — batcher + cascade + backend — runs on the calling thread,
+//! loop — batcher + ladder + backend — runs on the calling thread,
 //! while a generator thread produces timestamped requests into an
 //! `mpsc` channel (open-loop Poisson or closed-loop).  This mirrors the
 //! single-accelerator IoT deployment the paper targets: one device, one
@@ -11,12 +11,20 @@
 //! backend shards each batch's rows across its scoped worker pool
 //! inside `execute` (see [`crate::mlp::plan`] and `docs/PERF.md`), so
 //! the serving loop stays single-queue while forwards are parallel.
+//!
+//! Both escalation policies route through the N-level
+//! [`crate::coordinator::Ladder`]: `Immediate` walks a batch down the
+//! whole ladder in place; `Deferred` keeps one escalation queue per
+//! non-first stage and flushes a stage when a full batch of escalations
+//! is waiting (or at shutdown).  Every dispatched batch — reduced or
+//! escalation flush — draws a fresh chunk id from one shared counter,
+//! so no two SC batches ever share a stochastic-computing key.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::config::AriConfig;
-use crate::coordinator::{Batcher, BatcherPolicy, Cascade, EscalationPolicy};
+use crate::coordinator::{Batcher, BatcherPolicy, Cascade, EscalationPolicy, Ladder};
 use crate::data::EvalData;
 use crate::metrics::MetricsRegistry;
 use crate::runtime::Backend;
@@ -42,7 +50,9 @@ pub struct Completion {
     pub row: usize,
     /// Predicted class served back.
     pub pred: i32,
-    /// Whether the full model ran for this request.
+    /// Ladder stage that produced the prediction (0 = reduced model).
+    pub stage: usize,
+    /// Whether any escalation stage ran for this request.
     pub escalated: bool,
     /// Submit-to-complete latency.
     pub latency: Duration,
@@ -61,8 +71,14 @@ pub struct ServeReport {
     pub accuracy: f64,
     /// Agreement with the always-full baseline predictions, if provided.
     pub full_parity: Option<f64>,
-    /// Fraction of requests that ran the full model.
+    /// Fraction of requests that ran at least one escalation stage.
     pub escalation_fraction: f64,
+    /// Fraction of completions *finishing* at each ladder stage
+    /// (completion shares — sums to 1).  Not the executed-fraction `f_i`
+    /// of the energy identity `E = Σ_i f_i · E_i`; that is
+    /// [`crate::coordinator::LadderBatch::stage_fractions`], where every
+    /// escalated row also counts toward the stages it passed through.
+    pub stage_fractions: Vec<f64>,
     /// Modelled energy actually spent (µJ).
     pub energy_uj: f64,
     /// Modelled energy an always-full policy would have spent (µJ).
@@ -73,12 +89,17 @@ pub struct ServeReport {
     pub p99: Duration,
     /// Mean request latency.
     pub mean_latency: Duration,
+    /// Mean wait in the batching queue before the first-stage pass
+    /// (recorded under both escalation policies).
+    pub queue_wait_mean: Duration,
+    /// Queue-wait samples recorded (one per dispatched request).
+    pub queue_wait_samples: u64,
 }
 
 /// Serving options beyond the config.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
-    /// When escalated rows run on the full model.
+    /// When escalated rows run on the deeper stages.
     pub escalation: EscalationPolicy,
 }
 
@@ -88,9 +109,11 @@ impl Default for ServeOptions {
     }
 }
 
-/// Run a serving session: `cfg.requests` requests drawn (with repetition
-/// if needed) from `data`, at `cfg.arrival_rate` req/s Poisson (or
-/// closed-loop when 0), through the calibrated cascade.
+/// Run a serving session through a calibrated two-tier cascade.
+///
+/// Kept as the stable entry point for the paper's reduced/full
+/// configuration; it serves from the cascade's underlying 2-level
+/// ladder via [`run_serving_ladder`].
 pub fn run_serving(
     engine: &mut dyn Backend,
     cascade: &Cascade,
@@ -99,6 +122,30 @@ pub fn run_serving(
     full_pred: Option<&[i32]>,
     opts: ServeOptions,
 ) -> crate::Result<ServeReport> {
+    run_serving_ladder(engine, &cascade.ladder, cfg, data, full_pred, opts)
+}
+
+/// Run a serving session: `cfg.requests` requests drawn (with repetition
+/// if needed) from `data`, at `cfg.arrival_rate` req/s Poisson (or
+/// closed-loop when 0), through a calibrated N-level ladder.
+pub fn run_serving_ladder(
+    engine: &mut dyn Backend,
+    ladder: &Ladder,
+    cfg: &AriConfig,
+    data: &EvalData,
+    full_pred: Option<&[i32]>,
+    opts: ServeOptions,
+) -> crate::Result<ServeReport> {
+    // The batcher may fire (and the shutdown path drain) batches of up
+    // to cfg.batch_size rows; every one must fit the ladder's compiled
+    // batch or the padding accounting and run_padded's n <= batch
+    // contract break.
+    anyhow::ensure!(
+        cfg.batch_size <= ladder.stages[0].variant.batch,
+        "server batch_size {} exceeds the ladder's compiled batch {}",
+        cfg.batch_size,
+        ladder.stages[0].variant.batch
+    );
     let (tx, rx) = mpsc::channel::<Request>();
     let n_requests = cfg.requests;
     let n_rows = data.n;
@@ -122,17 +169,21 @@ pub fn run_serving(
     let metrics = MetricsRegistry::new();
     let policy = BatcherPolicy::new(cfg.batch_size, Duration::from_micros(cfg.batch_timeout_us));
     let mut batcher: Batcher<Request> = Batcher::new(policy);
-    // Deferred-escalation queue (row-gathered inputs + request meta).
-    let mut esc_queue: Vec<(Request, Vec<f32>)> = Vec::new();
+    let n_stages = ladder.n_stages();
+    // Deferred escalations: one queue of (request, gathered row) per
+    // non-first stage (index 0 is unused).
+    let mut esc_queues: Vec<Vec<(Request, Vec<f32>)>> = vec![Vec::new(); n_stages];
     let mut completions: Vec<Completion> = Vec::with_capacity(n_requests);
     let mut received = 0usize;
+    // Every dispatched batch — first-stage or escalation flush — draws a
+    // fresh id from this counter, so SC keys are never reused.
     let mut chunk = 0u32;
     let t_start = Instant::now();
 
-    // Helper: dispatch one reduced batch through the cascade.
+    // Helper: dispatch one first-stage batch through the ladder.
     let dispatch = |batch: crate::coordinator::Batch<Request>,
                         engine: &mut dyn Backend,
-                        esc_queue: &mut Vec<(Request, Vec<f32>)>,
+                        esc_queues: &mut Vec<Vec<(Request, Vec<f32>)>>,
                         completions: &mut Vec<Completion>,
                         chunk: &mut u32|
      -> crate::Result<()> {
@@ -143,12 +194,16 @@ pub fn run_serving(
         }
         *chunk += 1;
         metrics.reduced_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        metrics.padded_slots.fetch_add((cascade.reduced.batch - n) as u64, std::sync::atomic::Ordering::Relaxed);
+        metrics
+            .padded_slots
+            .fetch_add((ladder.stages[0].variant.batch - n) as u64, std::sync::atomic::Ordering::Relaxed);
         match opts.escalation {
             EscalationPolicy::Immediate => {
-                let out = cascade.infer_batch(engine, &x, n, *chunk)?;
+                let out = ladder.infer_batch(engine, &x, n, *chunk)?;
                 metrics.add_energy_uj(out.energy_uj);
-                if out.escalated.iter().any(|&e| e) {
+                // full_batches counts batches that actually reached the
+                // final (full) model; intermediate stages don't qualify.
+                if *out.stage_counts.last().unwrap() > 0 {
                     metrics.full_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 }
                 let now = Instant::now();
@@ -157,24 +212,29 @@ pub fn run_serving(
                     metrics.latency.record(lat);
                     metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
                     metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if out.escalated[i] {
+                    if out.stage[i] > 0 {
                         metrics.escalated.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     }
                     completions.push(Completion {
                         id: p.payload.id,
                         row: p.payload.row,
                         pred: out.pred[i],
-                        escalated: out.escalated[i],
+                        stage: out.stage[i],
+                        escalated: out.stage[i] > 0,
                         latency: lat,
                     });
                 }
             }
             EscalationPolicy::Deferred => {
-                let red = cascade.run_reduced(engine, &x, n, *chunk)?;
-                metrics.add_energy_uj(n as f64 * cascade.e_reduced);
+                let red = ladder.run_stage(engine, 0, &x, n, *chunk)?;
+                metrics.add_energy_uj(n as f64 * ladder.stages[0].energy_uj);
                 let now = Instant::now();
                 for (i, p) in batch.items.iter().enumerate() {
-                    if crate::margin::accepts(red.margin[i], cascade.threshold) {
+                    // Queue wait is recorded at dispatch under *both*
+                    // policies, so MetricsRegistry::report() stays
+                    // comparable across them.
+                    metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
+                    if crate::margin::accepts(red.margin[i], ladder.stages[0].threshold) {
                         let lat = now.duration_since(p.payload.submitted);
                         metrics.latency.record(lat);
                         metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -182,16 +242,21 @@ pub fn run_serving(
                             id: p.payload.id,
                             row: p.payload.row,
                             pred: red.pred[i],
+                            stage: 0,
                             escalated: false,
                             latency: lat,
                         });
                     } else {
-                        esc_queue.push((p.payload, data.row(p.payload.row).to_vec()));
+                        esc_queues[1].push((p.payload, data.row(p.payload.row).to_vec()));
                     }
                 }
-                // Flush the escalation queue when a full batch is ready.
-                while esc_queue.len() >= cascade.full.batch {
-                    flush_escalations(engine, cascade, esc_queue, cascade.full.batch, &metrics, completions, *chunk)?;
+                // Flush any stage whose queue holds a full batch; a
+                // flush at stage s may refill queue s+1, so walk down.
+                for s in 1..n_stages {
+                    while esc_queues[s].len() >= ladder.stages[s].variant.batch {
+                        let take = ladder.stages[s].variant.batch;
+                        flush_stage(engine, ladder, esc_queues, s, take, &metrics, completions, chunk)?;
+                    }
                 }
             }
         }
@@ -209,37 +274,44 @@ pub fn run_serving(
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Generator finished (or died): flush and exit.
-                if let Some(batch) = batcher.drain() {
-                    dispatch(batch, engine, &mut esc_queue, &mut completions, &mut chunk)?;
+                // Generator finished (or died): flush in ≤ max_batch
+                // chunks and exit.
+                while let Some(batch) = batcher.drain() {
+                    dispatch(batch, engine, &mut esc_queues, &mut completions, &mut chunk)?;
                 }
                 break;
             }
         }
         let now = Instant::now();
         while let Some(batch) = batcher.try_fire(now) {
-            dispatch(batch, engine, &mut esc_queue, &mut completions, &mut chunk)?;
+            dispatch(batch, engine, &mut esc_queues, &mut completions, &mut chunk)?;
         }
         if received >= n_requests && rx.try_recv().is_err() {
             // Drain the tail.
-            if let Some(batch) = batcher.drain() {
-                dispatch(batch, engine, &mut esc_queue, &mut completions, &mut chunk)?;
+            while let Some(batch) = batcher.drain() {
+                dispatch(batch, engine, &mut esc_queues, &mut completions, &mut chunk)?;
             }
             if batcher.is_empty() {
                 break;
             }
         }
     }
-    // Flush any deferred escalations left over.
-    while !esc_queue.is_empty() {
-        let take = esc_queue.len().min(cascade.full.batch);
-        flush_escalations(engine, cascade, &mut esc_queue, take, &metrics, &mut completions, chunk)?;
+    // Final drain: flush leftover escalations stage by stage (a flush at
+    // stage s may push into queue s+1, which is visited next).  Each
+    // flush draws a fresh chunk id — the old loop passed one id to every
+    // flush, making distinct full-model batches share an SC key.
+    for s in 1..n_stages {
+        while !esc_queues[s].is_empty() {
+            let take = esc_queues[s].len().min(ladder.stages[s].variant.batch);
+            flush_stage(engine, ladder, &mut esc_queues, s, take, &metrics, &mut completions, &mut chunk)?;
+        }
     }
     gen.join().ok();
 
     let wall = t_start.elapsed();
     let mut accuracy = 0.0;
     let mut parity_ok = 0usize;
+    let mut stage_fractions = vec![0.0f64; n_stages];
     for c in &completions {
         if c.pred == data.y[c.row] {
             accuracy += 1.0;
@@ -249,48 +321,82 @@ pub fn run_serving(
                 parity_ok += 1;
             }
         }
+        stage_fractions[c.stage] += 1.0;
     }
     accuracy /= completions.len().max(1) as f64;
+    for f in &mut stage_fractions {
+        *f /= completions.len().max(1) as f64;
+    }
     let energy_uj = metrics.energy_uj();
     Ok(ServeReport {
         throughput_rps: completions.len() as f64 / wall.as_secs_f64(),
         accuracy,
         full_parity: full_pred.map(|_| parity_ok as f64 / completions.len().max(1) as f64),
         escalation_fraction: metrics.escalation_fraction(),
+        stage_fractions,
         energy_uj,
-        energy_full_uj: completions.len() as f64 * cascade.e_full,
+        energy_full_uj: completions.len() as f64 * ladder.e_full(),
         p50: metrics.latency.quantile(0.5),
         p99: metrics.latency.quantile(0.99),
         mean_latency: metrics.latency.mean(),
+        queue_wait_mean: metrics.queue_wait.mean(),
+        queue_wait_samples: metrics.queue_wait.count(),
         completions,
         wall,
     })
 }
 
-fn flush_escalations(
+/// Flush `take` queued escalations through ladder stage `stage`.
+/// Completes rows accepted there (or at the final stage) and forwards
+/// the rest to the next stage's queue.  Draws its own chunk id so every
+/// flushed batch gets a distinct SC key.
+#[allow(clippy::too_many_arguments)]
+fn flush_stage(
     engine: &mut dyn Backend,
-    cascade: &Cascade,
-    esc_queue: &mut Vec<(Request, Vec<f32>)>,
+    ladder: &Ladder,
+    esc_queues: &mut [Vec<(Request, Vec<f32>)>],
+    stage: usize,
     take: usize,
     metrics: &MetricsRegistry,
     completions: &mut Vec<Completion>,
-    chunk: u32,
+    chunk: &mut u32,
 ) -> crate::Result<()> {
-    let drained: Vec<_> = esc_queue.drain(..take).collect();
+    *chunk += 1;
+    let key_seed = *chunk;
+    let drained: Vec<_> = esc_queues[stage].drain(..take).collect();
     let mut x = Vec::with_capacity(take * drained[0].1.len());
     for (_, row) in &drained {
         x.extend_from_slice(row);
     }
-    let out = cascade.run_full(engine, &x, take, chunk ^ 0x8000_0000)?;
-    metrics.add_energy_uj(take as f64 * cascade.e_full);
-    metrics.full_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let out = ladder.run_stage(engine, stage, &x, take, key_seed)?;
+    metrics.add_energy_uj(take as f64 * ladder.stages[stage].energy_uj);
+    let last = stage + 1 == ladder.n_stages();
+    // full_batches tracks full-model dispatches only; intermediate-stage
+    // flushes get their own named counter so the report stays honest for
+    // N-level ladders.
+    if last {
+        metrics.full_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    } else {
+        metrics.bump(&format!("stage{stage}_flushes"), 1);
+    }
     let now = Instant::now();
-    for (i, (req, _)) in drained.iter().enumerate() {
-        let lat = now.duration_since(req.submitted);
-        metrics.latency.record(lat);
-        metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        metrics.escalated.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        completions.push(Completion { id: req.id, row: req.row, pred: out.pred[i], escalated: true, latency: lat });
+    for (i, (req, row)) in drained.into_iter().enumerate() {
+        if last || crate::margin::accepts(out.margin[i], ladder.stages[stage].threshold) {
+            let lat = now.duration_since(req.submitted);
+            metrics.latency.record(lat);
+            metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics.escalated.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            completions.push(Completion {
+                id: req.id,
+                row: req.row,
+                pred: out.pred[i],
+                stage,
+                escalated: true,
+                latency: lat,
+            });
+        } else {
+            esc_queues[stage + 1].push((req, row));
+        }
     }
     Ok(())
 }
@@ -306,10 +412,17 @@ impl ServeReport {
 
     /// Human-readable summary block.
     pub fn summary(&self) -> String {
+        let stages = self
+            .stage_fractions
+            .iter()
+            .enumerate()
+            .map(|(i, f)| format!("s{i} {:.1}%", 100.0 * f))
+            .collect::<Vec<_>>()
+            .join(" ");
         format!(
             "served {} requests in {:.2?} ({:.0} req/s)\n\
-             accuracy {:.4}{}  escalation {:.2}%\n\
-             latency mean {:?} p50 {:?} p99 {:?}\n\
+             accuracy {:.4}{}  escalation {:.2}%  stage mix: {stages}\n\
+             latency mean {:?} p50 {:?} p99 {:?} (queue wait mean {:?})\n\
              energy {:.1} µJ vs always-full {:.1} µJ -> savings {:.1}%",
             self.completions.len(),
             self.wall,
@@ -320,6 +433,7 @@ impl ServeReport {
             self.mean_latency,
             self.p50,
             self.p99,
+            self.queue_wait_mean,
             self.energy_uj,
             self.energy_full_uj,
             100.0 * self.savings(),
@@ -340,13 +454,17 @@ mod tests {
             accuracy: 0.0,
             full_parity: None,
             escalation_fraction: 0.0,
+            stage_fractions: vec![0.55, 0.3, 0.15],
             energy_uj: 45.0,
             energy_full_uj: 100.0,
             p50: Duration::ZERO,
             p99: Duration::ZERO,
             mean_latency: Duration::ZERO,
+            queue_wait_mean: Duration::ZERO,
+            queue_wait_samples: 0,
         };
         assert!((r.savings() - 0.55).abs() < 1e-12);
         assert!(r.summary().contains("55.0%"));
+        assert!(r.summary().contains("s1 30.0%"));
     }
 }

@@ -1,0 +1,317 @@
+//! N-level ladder integration suite on the pure-rust backend — no
+//! artifacts, no PJRT, runs in every checkout.
+//!
+//! Pins the two contracts the ladder generalisation must keep:
+//!
+//! 1. the 2-level configuration reproduces the original cascade's
+//!    outputs **bit-identically** (same calibration seeds, same SC key
+//!    salts, same gather/scatter chunking), and
+//! 2. a 3-level FP ladder runs end to end — calibrate → infer_dataset →
+//!    serving under both escalation policies — with coherent per-stage
+//!    escalation fractions and `E = Σ_i f_i · E_i` energy accounting.
+//!
+//! Plus the serving-loop fixes that ride along: distinct SC keys for
+//! distinct escalation flushes, and deterministic SC serving output for
+//! a fixed seed.
+
+use ari::config::{AriConfig, Mode, ThresholdPolicy};
+use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy, Ladder, LadderSpec};
+use ari::data::{EvalData, VariantRef};
+use ari::margin::{accepts, Calibration};
+use ari::runtime::{Backend, NativeBackend};
+use ari::server::{run_serving_ladder, ServeOptions};
+
+fn spec(dataset: &str, mode: Mode, levels: Vec<usize>, threshold: ThresholdPolicy) -> LadderSpec {
+    LadderSpec { dataset: dataset.into(), mode, levels, batch: 32, threshold, seed: 0xA41 }
+}
+
+/// The original (PR 2) two-tier cascade dataset pass, reimplemented
+/// verbatim as the bit-identity reference: chunk by the serving batch,
+/// reduced pass keyed `[seed, chunk]`, escalated rows gathered in
+/// full-batch chunks keyed `[seed ^ 0x5A5A_5A5A, chunk]`.
+fn pr2_reference_dataset(
+    engine: &mut dyn Backend,
+    reduced: &VariantRef,
+    full: &VariantRef,
+    threshold: f64,
+    data: &EvalData,
+    seed: u32,
+    sc: bool,
+    batch: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    let mut pred = Vec::with_capacity(data.n);
+    let mut margin = Vec::with_capacity(data.n);
+    let mut chunkid = 0u32;
+    let mut lo = 0;
+    while lo < data.n {
+        let hi = (lo + batch).min(data.n);
+        let n = hi - lo;
+        let x = data.rows(lo, hi);
+        let key = if sc { Some([seed, chunkid]) } else { None };
+        let (red, _) = engine.run_padded(reduced, x, n, key).unwrap();
+        let mut p = red.pred.clone();
+        let mut m = red.margin.clone();
+        let esc_rows: Vec<usize> = (0..n).filter(|&i| !accepts(red.margin[i], threshold)).collect();
+        for chunk in esc_rows.chunks(full.batch) {
+            let mut gathered = Vec::with_capacity(chunk.len() * data.input_dim);
+            for &i in chunk {
+                gathered.extend_from_slice(&x[i * data.input_dim..(i + 1) * data.input_dim]);
+            }
+            let fkey = key.map(|[a, b]| [a ^ 0x5A5A_5A5A, b]);
+            let (fout, _) = engine.run_padded(full, &gathered, chunk.len(), fkey).unwrap();
+            for (j, &i) in chunk.iter().enumerate() {
+                p[i] = fout.pred[j];
+                m[i] = fout.margin[j];
+            }
+        }
+        pred.extend(p);
+        margin.extend(m);
+        lo = hi;
+        chunkid += 1;
+    }
+    (pred, margin)
+}
+
+#[test]
+fn three_level_fp_ladder_end_to_end() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let ladder = Ladder::calibrate(
+        &mut engine,
+        spec("fashion_syn", Mode::Fp, vec![8, 12, 16], ThresholdPolicy::MMax),
+        &data,
+        data.n / 2,
+    )
+    .unwrap();
+    assert_eq!(ladder.n_stages(), 3);
+    // Stage energies ascend with resolution; only non-final stages carry
+    // a calibration.
+    assert!(ladder.stages[0].energy_uj < ladder.stages[1].energy_uj);
+    assert!(ladder.stages[1].energy_uj < ladder.stages[2].energy_uj);
+    assert!(ladder.stages[0].calibration.is_some());
+    assert!(ladder.stages[1].calibration.is_some());
+    assert!(ladder.stages[2].calibration.is_none());
+
+    let (out, outputs) = ladder.infer_dataset(&mut engine, &data).unwrap();
+    assert_eq!(out.pred.len(), data.n);
+    assert_eq!(outputs.pred, out.pred);
+    // Every row executes stage 0; deeper stages shrink monotonically.
+    assert_eq!(out.stage_counts[0], data.n);
+    assert!(out.stage_counts[1] <= data.n);
+    assert!(out.stage_counts[2] <= out.stage_counts[1]);
+    assert!(out.stage_counts[1] > 0, "FP8 must escalate some rows on the fixture");
+    // stage_counts[s] == rows whose final stage is >= s.
+    for s in 0..3 {
+        let rows_at = out.stage.iter().filter(|&&st| st >= s).count();
+        assert_eq!(rows_at, out.stage_counts[s], "stage {s} bookkeeping");
+    }
+    // Energy identity: E = Σ_i stage_counts[i] · E_i.
+    let expect: f64 =
+        out.stage_counts.iter().zip(&ladder.stages).map(|(&c, st)| c as f64 * st.energy_uj).sum();
+    assert!((out.energy_uj - expect).abs() < 1e-9);
+    // Paying reduced energy for most rows must beat always-full.
+    assert!(ladder.realised_savings(&out) > 0.2, "savings {}", ladder.realised_savings(&out));
+    // Mmax calibration against the final stage keeps accuracy at the
+    // full model's level on the (deterministic FP) fixture.
+    let acc = out.pred.iter().zip(&data.y).filter(|(a, b)| a == b).count() as f64 / data.n as f64;
+    assert!(acc > 0.7, "ladder accuracy {acc} too low");
+    // The per-stage report mentions every stage.
+    let report = ladder.calibration_report();
+    assert!(report.contains("stage 0 (FP8)"), "{report}");
+    assert!(report.contains("stage 1 (FP12)"), "{report}");
+    assert!(report.contains("stage 2 (FP16): final"), "{report}");
+}
+
+#[test]
+fn three_level_ladder_serves_under_both_policies() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let ladder = Ladder::calibrate(
+        &mut engine,
+        spec("fashion_syn", Mode::Fp, vec![8, 12, 16], ThresholdPolicy::MMax),
+        &data,
+        data.n / 2,
+    )
+    .unwrap();
+    let mut cfg = AriConfig::default();
+    cfg.levels = vec![8, 12, 16];
+    cfg.reduced_level = 8;
+    cfg.requests = 192;
+    cfg.batch_timeout_us = 1000;
+    let mut fractions = Vec::new();
+    for esc in [EscalationPolicy::Immediate, EscalationPolicy::Deferred] {
+        let report =
+            run_serving_ladder(&mut engine, &ladder, &cfg, &data, None, ServeOptions { escalation: esc })
+                .unwrap();
+        assert_eq!(report.completions.len(), cfg.requests, "{esc:?} lost requests");
+        assert_eq!(report.stage_fractions.len(), 3, "{esc:?} must report all stages");
+        let sum: f64 = report.stage_fractions.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "{esc:?} stage fractions sum to {sum}");
+        assert!(report.savings() > 0.0, "{esc:?} savings {}", report.savings());
+        // Completion stage bookkeeping matches the escalated flag.
+        for c in &report.completions {
+            assert_eq!(c.escalated, c.stage > 0);
+            assert!(c.stage < 3);
+        }
+        fractions.push(report.stage_fractions.clone());
+    }
+    // FP serving is deterministic: both policies route the same rows to
+    // the same final stages.
+    assert_eq!(fractions[0], fractions[1]);
+}
+
+#[test]
+fn two_level_fp_ladder_bit_identical_to_pr2_cascade() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let ladder = Ladder::calibrate(
+        &mut engine,
+        spec("fashion_syn", Mode::Fp, vec![8, 16], ThresholdPolicy::MMax),
+        &data,
+        256,
+    )
+    .unwrap();
+    // Calibration reference: the original cascade ran the full model
+    // with `seed` and the reduced model with `seed + 1`.
+    let calib = EvalData {
+        x: data.rows(0, 256).to_vec(),
+        y: data.y[..256].to_vec(),
+        n: 256,
+        input_dim: data.input_dim,
+    };
+    let full_out = engine.run_dataset(&ladder.stages[1].variant, &calib, 0xA41).unwrap();
+    let red_out = engine.run_dataset(&ladder.stages[0].variant, &calib, 0xA41 + 1).unwrap();
+    let reference = Calibration::from_pairs(&full_out.pred, &red_out.pred, &red_out.margin);
+    assert_eq!(ladder.stages[0].threshold.to_bits(), reference.threshold(ThresholdPolicy::MMax).to_bits());
+
+    let (out, _) = ladder.infer_dataset(&mut engine, &data).unwrap();
+    let (ref_pred, ref_margin) = pr2_reference_dataset(
+        &mut engine,
+        &ladder.stages[0].variant,
+        &ladder.stages[1].variant,
+        ladder.stages[0].threshold,
+        &data,
+        0xA41,
+        false,
+        32,
+    );
+    assert_eq!(out.pred, ref_pred, "2-level FP ladder must match the PR 2 cascade bit-identically");
+    assert_eq!(out.margin, ref_margin);
+}
+
+#[test]
+fn two_level_sc_ladder_bit_identical_to_pr2_cascade() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let ladder = Ladder::calibrate(
+        &mut engine,
+        spec("fashion_syn", Mode::Sc, vec![128, 512], ThresholdPolicy::MMax),
+        &data,
+        256,
+    )
+    .unwrap();
+    let (out, _) = ladder.infer_dataset(&mut engine, &data).unwrap();
+    let (ref_pred, ref_margin) = pr2_reference_dataset(
+        &mut engine,
+        &ladder.stages[0].variant,
+        &ladder.stages[1].variant,
+        ladder.stages[0].threshold,
+        &data,
+        0xA41,
+        true,
+        32,
+    );
+    assert_eq!(out.pred, ref_pred, "2-level SC ladder must reuse the cascade's exact key schedule");
+    assert_eq!(out.margin, ref_margin);
+}
+
+#[test]
+fn cascade_wrapper_delegates_to_its_ladder() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let mut cfg = AriConfig::default();
+    cfg.reduced_level = 8;
+    let cascade =
+        Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, 256).unwrap();
+    assert_eq!(cascade.ladder.n_stages(), 2);
+    assert_eq!(cascade.threshold.to_bits(), cascade.ladder.stages[0].threshold.to_bits());
+    assert_eq!(cascade.e_reduced, cascade.ladder.stages[0].energy_uj);
+    assert_eq!(cascade.e_full, cascade.ladder.stages[1].energy_uj);
+    let (cb, _) = cascade.infer_dataset(&mut engine, &data).unwrap();
+    let (lb, _) = cascade.ladder.infer_dataset(&mut engine, &data).unwrap();
+    assert_eq!(cb.pred, lb.pred);
+    assert_eq!(cb.margin, lb.margin);
+    assert_eq!(cb.reduced_pred, lb.first_pred);
+    assert_eq!(cb.energy_uj.to_bits(), lb.energy_uj.to_bits());
+    let escalated: Vec<bool> = lb.stage.iter().map(|&s| s > 0).collect();
+    assert_eq!(cb.escalated, escalated);
+}
+
+/// Regression for the SC key-reuse bug: the serving loop's final
+/// deferred-escalation drain passed one chunk id to every flush, so
+/// distinct full-model batches shared a stochastic-computing key and
+/// produced *identical* noise streams.  Distinct flush ids must yield
+/// distinct streams; the same id must stay reproducible.
+#[test]
+fn distinct_flush_keys_give_distinct_sc_streams() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let ladder = Ladder::calibrate(
+        &mut engine,
+        spec("fashion_syn", Mode::Sc, vec![128, 512], ThresholdPolicy::MMax),
+        &data,
+        128,
+    )
+    .unwrap();
+    let x = data.rows(0, 32).to_vec();
+    let a = ladder.run_stage(&mut engine, 1, &x, 32, 7).unwrap();
+    let b = ladder.run_stage(&mut engine, 1, &x, 32, 7).unwrap();
+    assert_eq!(a.scores, b.scores, "same flush id must reproduce the same stream");
+    let c = ladder.run_stage(&mut engine, 1, &x, 32, 8).unwrap();
+    assert_ne!(a.scores, c.scores, "two flushes with fresh ids must not share a noise stream");
+}
+
+/// SC deferred serving is deterministic for a fixed seed: with a closed
+/// loop and a deadline far beyond the test's runtime, every batch fires
+/// on size, so batch composition — and therefore the chunk-id (SC key)
+/// schedule, including the shutdown drain's per-flush ids — is exactly
+/// reproducible across runs.  Combined with `kernel_parity.rs` (SC
+/// forwards are bit-identical for any worker-pool size), this makes the
+/// served output deterministic across pool sizes too.
+#[test]
+fn sc_deferred_serving_is_deterministic_for_fixed_seed() {
+    let mut cfg = AriConfig::default();
+    cfg.dataset = "fashion_syn".into();
+    cfg.mode = Mode::Sc;
+    cfg.reduced_level = 64;
+    cfg.full_level = 512;
+    cfg.batch_size = 32;
+    cfg.requests = 160;
+    cfg.batch_timeout_us = 5_000_000; // far beyond the test runtime
+    cfg.arrival_rate = 0.0;
+    let run = || {
+        let mut engine = NativeBackend::synthetic();
+        let data = engine.eval_data(&cfg.dataset).unwrap();
+        let ladder =
+            Ladder::calibrate(&mut engine, LadderSpec::from_config(&cfg), &data, data.n / 2).unwrap();
+        let mut report = run_serving_ladder(
+            &mut engine,
+            &ladder,
+            &cfg,
+            &data,
+            None,
+            ServeOptions { escalation: EscalationPolicy::Deferred },
+        )
+        .unwrap();
+        report.completions.sort_by_key(|c| c.id);
+        report
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.completions.len(), cfg.requests);
+    assert!(r1.escalation_fraction > 0.0, "L=64 must escalate some rows on the fixture");
+    let key = |r: &ari::server::ServeReport| {
+        r.completions.iter().map(|c| (c.id, c.row, c.pred, c.stage)).collect::<Vec<_>>()
+    };
+    assert_eq!(key(&r1), key(&r2), "SC deferred serving must be deterministic for a fixed seed");
+}

@@ -70,6 +70,23 @@ fn deferred_escalation_preserves_results() {
     assert!((imm.energy_uj - def.energy_uj).abs() < 0.1, "imm {} vs def {}", imm.energy_uj, def.energy_uj);
 }
 
+/// Regression: queue-wait metrics used to be recorded only on the
+/// Immediate path, making `MetricsRegistry::report()` incomparable
+/// across escalation policies.  Both policies must record exactly one
+/// queue-wait sample per dispatched request.
+#[test]
+fn queue_wait_recorded_under_both_policies() {
+    let cfg = base_cfg();
+    for esc in [EscalationPolicy::Immediate, EscalationPolicy::Deferred] {
+        let report = serve_with(&cfg, ServeOptions { escalation: esc });
+        assert_eq!(
+            report.queue_wait_samples,
+            cfg.requests as u64,
+            "{esc:?} must record one queue-wait sample per request"
+        );
+    }
+}
+
 #[test]
 fn tiny_batch_timeout_works() {
     let mut cfg = base_cfg();
