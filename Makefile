@@ -25,16 +25,27 @@ bench:
 	$(CARGO) bench
 
 # Machine-readable perf record: short smoke iterations of the mlp /
-# runtime / cascade benches, each emitting an `ari-bench v1` JSON
-# document, concatenated into BENCH_native.json (one document per
-# line).  CI uploads the result as an artifact so the perf trajectory
-# accumulates per commit; see docs/PERF.md for how to read it.
+# runtime / quant / cascade benches, each emitting an `ari-bench v1`
+# JSON document, concatenated into BENCH_native.json (one document per
+# line).  The mlp and runtime benches run twice — once on the
+# auto-detected SIMD dispatch and once forced scalar (`ARI_SIMD=0`) —
+# so the artifact records the SIMD delta per commit (each document's
+# header carries its `simd` path); bench_quant pairs prepared against
+# unprepared quantisation.  CI uploads the result as an artifact so the
+# perf trajectory accumulates per commit; see docs/PERF.md.
 bench-json:
 	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_mlp.json) $(CARGO) bench --bench bench_mlp
+	ARI_SIMD=0 ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_mlp_scalar.json) $(CARGO) bench --bench bench_mlp
 	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_runtime.json) $(CARGO) bench --bench bench_runtime
+	ARI_SIMD=0 ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_runtime_scalar.json) $(CARGO) bench --bench bench_runtime
+	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_quant.json) $(CARGO) bench --bench bench_quant
 	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_native.bench_cascade.json) $(CARGO) bench --bench bench_cascade
-	cat BENCH_native.bench_mlp.json BENCH_native.bench_runtime.json BENCH_native.bench_cascade.json > BENCH_native.json
-	rm -f BENCH_native.bench_mlp.json BENCH_native.bench_runtime.json BENCH_native.bench_cascade.json
+	cat BENCH_native.bench_mlp.json BENCH_native.bench_mlp_scalar.json \
+	    BENCH_native.bench_runtime.json BENCH_native.bench_runtime_scalar.json \
+	    BENCH_native.bench_quant.json BENCH_native.bench_cascade.json > BENCH_native.json
+	rm -f BENCH_native.bench_mlp.json BENCH_native.bench_mlp_scalar.json \
+	    BENCH_native.bench_runtime.json BENCH_native.bench_runtime_scalar.json \
+	    BENCH_native.bench_quant.json BENCH_native.bench_cascade.json
 	@echo "wrote BENCH_native.json"
 
 # Short deferred-policy serving session on the synthetic fixtures: a

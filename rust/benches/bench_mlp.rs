@@ -28,7 +28,10 @@ fn main() {
     let data = engine.eval_data(&ds).unwrap();
     let mut json = JsonReport::new("bench_mlp");
 
-    section(&format!("pure-rust engines, batch 32 ({ds} topology)"));
+    section(&format!(
+        "pure-rust engines, batch 32 ({ds} topology, SIMD dispatch: {})",
+        ari::tensor::active_backend().name()
+    ));
     let x = data.rows(0, 32).to_vec();
     {
         let weights = engine.weights(&ds).unwrap();

@@ -1,42 +1,80 @@
-//! Quantisation substrate benchmarks: FpFormat::quantize throughput and
-//! the pure-rust reduced-precision layer (the rust twin of the L1 Pallas
-//! kernel's epilogue).  Hot on the SC-exact and cross-check paths.
+//! Quantisation substrate benchmarks: the scalar `FpFormat::quantize`
+//! reference next to the prepared paths serving actually runs — the
+//! branchless `PreparedQuantizer` slice kernel and the prepared
+//! `FpPlan` forward (pre-quantised packed weights, prepared epilogue) —
+//! plus the historical unprepared `quant_layer` for the delta.
+//!
+//! With `ARI_BENCH_JSON=path` every case is recorded in the `ari-bench
+//! v1` document, so `make bench-json` captures the prepared/unprepared
+//! quantisation delta per commit alongside the SIMD pairs.
 
+use ari::data::{LayerWeights, Weights};
+use ari::mlp::{FpPlan, Scratch};
 use ari::quant::{quant_layer, FpFormat};
 use ari::tensor::Matrix;
-use ari::util::benchkit::{bench, section};
+use ari::util::benchkit::{bench, iters, section, JsonReport};
 use ari::util::Pcg64;
 
 fn main() {
-    section("FpFormat::quantize scalar throughput");
+    let mut json = JsonReport::new("bench_quant");
+
+    section("FpFormat::quantize scalar vs PreparedQuantizer (64k values)");
     let mut rng = Pcg64::seeded(1);
     let xs: Vec<f32> = (0..65536).map(|_| rng.next_f32() * 100.0 - 50.0).collect();
+    let (w, n) = iters(3, 20);
     for bits in [8u32, 10, 12, 16] {
         let fmt = FpFormat::fp(bits);
         let mut acc = 0.0f32;
-        bench(&format!("quantize 64k values, FP{bits}"), 3, 20, || {
+        let r = bench(&format!("scalar quantize 64k values, FP{bits}"), w, n, || {
             let mut local = 0.0f32;
             for &x in &xs {
                 local += fmt.quantize(x);
             }
             acc += local;
-        })
-        .report(Some((xs.len() as u64, "vals")));
+        });
+        json.record(&r, Some((xs.len() as u64, "vals")));
         std::hint::black_box(acc);
+
+        let pq = fmt.prepare();
+        let mut buf = xs.clone();
+        let r = bench(&format!("prepared quantize 64k values, FP{bits}"), w, n, || {
+            buf.copy_from_slice(&xs);
+            pq.quantize_slice(&mut buf);
+            std::hint::black_box(&buf);
+        });
+        json.record(&r, Some((xs.len() as u64, "vals")));
     }
 
-    section("quant_layer (batch 32) — rust twin of the L1 kernel");
+    section("quant_layer (unprepared, batch 32) vs prepared FpPlan forward");
     let mut rng = Pcg64::seeded(2);
-    for (k, n) in [(784usize, 1024usize), (1024, 512), (256, 10)] {
+    let (w, n) = iters(2, 10);
+    for (k, nn) in [(784usize, 1024usize), (1024, 512), (256, 10)] {
         let x = Matrix::from_fn(32, k, |_, _| rng.next_f32() - 0.5);
-        let w = Matrix::from_fn(k, n, |_, _| (rng.next_f32() - 0.5) * 0.1);
-        let b = vec![0.01f32; n];
+        let wm = Matrix::from_fn(k, nn, |_, _| (rng.next_f32() - 0.5) * 0.1);
+        let b = vec![0.01f32; nn];
+        let weights = Weights {
+            layers: vec![LayerWeights { w: wm.data.clone(), in_dim: k, out_dim: nn, b: b.clone(), alpha: 0.25 }],
+        };
         for bits in [8u32, 16] {
             let fmt = FpFormat::fp(bits);
-            bench(&format!("layer {k}x{n}, FP{bits}"), 2, 10, || {
-                std::hint::black_box(quant_layer(&x, &w, &b, 0.25, fmt, true));
-            })
-            .report(Some(((32 * k * n) as u64, "MAC")));
+            let r = bench(&format!("unprepared quant_layer {k}x{nn}, FP{bits}"), w, n, || {
+                std::hint::black_box(quant_layer(&x, &wm, &b, 0.25, fmt, true));
+            });
+            json.record(&r, Some(((32 * k * nn) as u64, "MAC")));
+
+            // What serving runs: weights pre-quantised/packed once, the
+            // prepared-quantiser epilogue, reusable scratch.  Pinned to
+            // one worker so this pair isolates the preparation effect —
+            // quant_layer above is single-threaded too; the threaded
+            // delta is bench_mlp/bench_runtime territory.
+            let plan = FpPlan::new(&weights, fmt);
+            let mut scratch = Scratch::new();
+            let r = bench(&format!("prepared FpPlan {k}x{nn}, FP{bits} b=32"), w, n, || {
+                std::hint::black_box(plan.forward(&x.data, 32, &mut scratch, 1));
+            });
+            json.record(&r, Some(((32 * k * nn) as u64, "MAC")));
         }
     }
+
+    json.write_if_requested();
 }

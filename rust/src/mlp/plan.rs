@@ -16,7 +16,8 @@
 //!   handling exactly never,
 //! * activations ping-pong through a reusable [`Scratch`] (two
 //!   `batch × stride` buffers), so steady-state forwards allocate only
-//!   the returned [`Outputs`].
+//!   the returned [`Outputs`] (plus, on the SC path, one small `Pcg64`
+//!   per row for the persistent noise streams).
 //!
 //! Forwards shard batch rows across scoped workers
 //! ([`crate::util::pool`]).  Everything per-row — kernel accumulation
@@ -25,6 +26,17 @@
 //! independent of the shard layout, so outputs are **bit-identical for
 //! any worker count** (pinned by `tests/kernel_parity.rs`).
 //!
+//! All per-element quantisation on the FP hot path (input staging, bias
+//! epilogue, PReLU epilogue, and the pack-time weight quantisation) runs
+//! through a [`PreparedQuantizer`] — the format's round/clamp/flush
+//! constants precomputed once per plan, bit-identical to the scalar
+//! [`FpFormat::quantize`].  The SC forward is **layer-major**: one
+//! `rows × np` matmul per layer over the whole shard (instead of an
+//! `m = 1` matmul per row per layer, which wasted 3 of the kernel's 4
+//! register rows), with one persistent [`Pcg64`] per row carrying the
+//! noise stream across layers so every draw lands in the same order —
+//! and therefore every score in the same bits — as the row-major walk.
+//!
 //! Zero padding is invisible to the numbers: padded columns carry zero
 //! weights and zero bias (so their activations are exactly `0.0`, which
 //! PReLU and quantisation both fix), and padded input rows are zero
@@ -32,7 +44,7 @@
 //! real accumulation.
 
 use crate::data::Weights;
-use crate::quant::FpFormat;
+use crate::quant::{FpFormat, PreparedQuantizer};
 use crate::sc::ScConfig;
 use crate::tensor::{matmul_strided, Matrix, KERNEL_NR};
 use crate::util::{pool, Pcg64};
@@ -82,6 +94,7 @@ fn pad_to(n: usize, q: usize) -> usize {
 }
 
 fn pack(weights: &Weights, quant: Option<FpFormat>) -> Packed {
+    let pq = quant.map(PreparedQuantizer::new);
     let mut layers = Vec::with_capacity(weights.layers.len());
     let input_dim = weights.layers[0].in_dim;
     let mut prev_np = input_dim; // kernel depth consumed by the next layer
@@ -93,16 +106,16 @@ fn pack(weights: &Weights, quant: Option<FpFormat>) -> Packed {
         for i in 0..l.in_dim {
             for j in 0..l.out_dim {
                 let v = l.w[i * l.out_dim + j];
-                w[i * np + j] = match quant {
-                    Some(fmt) => fmt.quantize(v),
+                w[i * np + j] = match pq {
+                    Some(pq) => pq.quantize(v),
                     None => v,
                 };
             }
         }
         let mut b = vec![0.0f32; np];
         for (bq, &bv) in b.iter_mut().zip(&l.b) {
-            *bq = match quant {
-                Some(fmt) => fmt.quantize(bv),
+            *bq = match pq {
+                Some(pq) => pq.quantize(bv),
                 None => bv,
             };
         }
@@ -171,9 +184,13 @@ where
 }
 
 /// Prepared truncated-mantissa FP forward: weights and biases quantised
-/// once at construction, padded kernel layout, threaded forward.
+/// once at construction, padded kernel layout, threaded forward, and a
+/// [`PreparedQuantizer`] driving every epilogue element (no per-element
+/// format math).
 pub struct FpPlan {
     packed: Packed,
+    /// The format's precomputed round/clamp/flush constants.
+    pq: PreparedQuantizer,
     /// The format this plan was quantised for.
     pub fmt: FpFormat,
 }
@@ -181,7 +198,7 @@ pub struct FpPlan {
 impl FpPlan {
     /// Quantise + pack `weights` for `fmt`.
     pub fn new(weights: &Weights, fmt: FpFormat) -> Self {
-        Self { packed: pack(weights, Some(fmt)), fmt }
+        Self { packed: pack(weights, Some(fmt)), pq: fmt.prepare(), fmt }
     }
 
     /// Input feature width this plan consumes.
@@ -213,17 +230,19 @@ impl FpPlan {
     }
 
     /// One shard: rows `[lo, lo + rows)` of the batch, start to finish.
+    /// Every per-element quantisation goes through the prepared
+    /// branchless kernel (`self.pq`), bit-identical to the scalar path.
     fn run_rows(&self, x: &[f32], lo: usize, rows: usize, ping: &mut [f32], pong: &mut [f32], scores: &mut [f32]) {
         let p = &self.packed;
+        let pq = &self.pq;
         let stride = p.stride;
         // Stage + quantise the input rows (the first layer's operand
         // quantisation, hoisted out of the layer loop).
         for r in 0..rows {
             let src = &x[(lo + r) * p.input_dim..(lo + r + 1) * p.input_dim];
             let dst = &mut ping[r * stride..r * stride + p.input_dim];
-            for (d, &s) in dst.iter_mut().zip(src) {
-                *d = self.fmt.quantize(s);
-            }
+            dst.copy_from_slice(src);
+            pq.quantize_slice(dst);
         }
         let (mut cur, mut nxt) = (ping, pong);
         let n_layers = p.layers.len();
@@ -240,12 +259,12 @@ impl FpPlan {
                 // already on the format grid after the first quantise,
                 // so the post-activation pass only touches negatives.
                 for (v, &b) in row.iter_mut().zip(&l.b) {
-                    *v = self.fmt.quantize(*v + b);
+                    *v = pq.quantize(*v + b);
                 }
                 if !last {
                     for v in row.iter_mut() {
                         if *v < 0.0 {
-                            *v = self.fmt.quantize(l.alpha * *v);
+                            *v = pq.quantize(l.alpha * *v);
                         }
                     }
                 }
@@ -260,7 +279,8 @@ impl FpPlan {
 }
 
 /// Prepared SC noise-model forward: raw padded weights, per-layer
-/// `max|w|` precomputed, per-row noise streams, threaded forward.
+/// `max|w|` precomputed, per-row noise streams, threaded **layer-major**
+/// forward (one whole-shard matmul per layer + per-row noise epilogue).
 pub struct ScPlan {
     packed: Packed,
     /// The SC configuration (sequence length) being modelled.
@@ -306,8 +326,14 @@ impl ScPlan {
         out
     }
 
-    /// One shard, processed row-by-row so each row's noise stream runs
-    /// layer-sequentially without buffering PRNG state.
+    /// One shard, processed **layer-major**: one `rows × np` matmul per
+    /// layer over the whole shard (full register tiles, unlike the old
+    /// row-major walk's `m = 1` matmuls, which wasted 3 of the kernel's
+    /// 4 register rows), then the per-row noise epilogue.  One [`Pcg64`]
+    /// per row persists across layers, so each row's draw order — and
+    /// therefore every SC score — is bit-identical to the row-major
+    /// walk (pinned against an inline row-major reference in
+    /// `tests/kernel_parity.rs`).
     fn run_rows(
         &self,
         x: &[f32],
@@ -321,38 +347,45 @@ impl ScPlan {
         let p = &self.packed;
         let stride = p.stride;
         let n_layers = p.layers.len();
+        let mut rngs: Vec<Pcg64> = (0..rows).map(|r| Pcg64::new(seed, SC_ROW_STREAM + (lo + r) as u64)).collect();
         for r in 0..rows {
-            let mut rng = Pcg64::new(seed, SC_ROW_STREAM + (lo + r) as u64);
             ping[r * stride..r * stride + p.input_dim]
                 .copy_from_slice(&x[(lo + r) * p.input_dim..(lo + r + 1) * p.input_dim]);
-            let (mut cur, mut nxt) = (&mut ping[r * stride..(r + 1) * stride], &mut pong[r * stride..(r + 1) * stride]);
-            for (li, l) in p.layers.iter().enumerate() {
+        }
+        let (mut cur, mut nxt) = (ping, pong);
+        for (li, l) in p.layers.iter().enumerate() {
+            let last = li + 1 == n_layers;
+            let sigma_base = SC_NOISE_C / SC_LFSR_K * (l.in_real as f64 / self.cfg.seq_len as f64).sqrt();
+            matmul_strided(cur, stride, &l.w, l.k, nxt, stride, rows, l.np);
+            for (r, rng) in rngs.iter_mut().enumerate() {
                 // Per-row operand scale, matching the exact bitstream
                 // simulator's per-sample normalisation (the hardware
                 // encodes x / max|x| per input vector).
-                let xmax = cur[..l.k].iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
+                let xmax = cur[r * stride..r * stride + l.k].iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
                 let scale = xmax * l.wmax;
-                let sigma = SC_NOISE_C / SC_LFSR_K * (l.in_real as f64 / self.cfg.seq_len as f64).sqrt() * scale;
+                let sigma = sigma_base * scale;
                 let step = self.cfg.grid_step() * scale;
-                matmul_strided(cur, stride, &l.w, l.k, nxt, stride, 1, l.np);
-                let last = li + 1 == n_layers;
-                for j in 0..l.out_real {
-                    let v = nxt[j] + l.b[j];
+                let orow = &mut nxt[r * stride..r * stride + l.np];
+                for (j, &b) in l.b.iter().enumerate().take(l.out_real) {
+                    let v = orow[j] + b;
                     let noisy = v as f64 + sigma * rng.normal();
                     let mut v = ((noisy / step).round() * step) as f32;
                     if !last && v < 0.0 {
                         v *= l.alpha;
                     }
-                    nxt[j] = v;
+                    orow[j] = v;
                 }
                 // Padded outputs stay exactly zero (zero weights, zero
                 // bias, no noise): they feed zero rows downstream.
-                for v in &mut nxt[l.out_real..l.np] {
+                for v in &mut orow[l.out_real..l.np] {
                     *v = 0.0;
                 }
-                std::mem::swap(&mut cur, &mut nxt);
             }
-            scores[r * p.n_classes..(r + 1) * p.n_classes].copy_from_slice(&cur[..p.n_classes]);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        for r in 0..rows {
+            scores[r * p.n_classes..(r + 1) * p.n_classes]
+                .copy_from_slice(&cur[r * stride..r * stride + p.n_classes]);
         }
     }
 }

@@ -87,6 +87,93 @@ impl FpFormat {
             *x = self.quantize(*x);
         }
     }
+
+    /// Precompute this format's quantisation constants — see
+    /// [`PreparedQuantizer`].
+    pub fn prepare(&self) -> PreparedQuantizer {
+        PreparedQuantizer::new(*self)
+    }
+}
+
+/// A quantiser prepared once per [`FpFormat`]: the mantissa round bias
+/// and keep mask plus the clamp/flush bounds precomputed as `u32` bit
+/// patterns, driving a **branchless** per-element kernel the compiler
+/// can vectorise.  The scalar [`FpFormat::quantize`] recomputes
+/// `max_value()`/`min_normal()` — four `exp2` calls — on every element;
+/// this does all of that exactly once at construction.
+///
+/// Bit-identical to [`FpFormat::quantize`] for **every** `f32` bit
+/// pattern (NaN passthrough, ±0, subnormals, halfway-RNE cases, ±max,
+/// infinities) — pinned by the `tests/quantizer_equivalence.rs` suite
+/// over all constructible `(m_bits, e_bits)` formats.
+#[derive(Clone, Copy, Debug)]
+pub struct PreparedQuantizer {
+    fmt: FpFormat,
+    /// Mantissa bits dropped: `23 - m_bits`.
+    shift: u32,
+    /// 1 when RNE applies (`shift > 0`), 0 for the identity (`m = 23`) —
+    /// gates the round-to-even LSB term without a branch.
+    lsb_gate: u32,
+    /// `(1 << (shift - 1)) - 1`, or 0 when `shift == 0`.
+    half_bias: u32,
+    /// `!((1 << shift) - 1)`: mask keeping the surviving mantissa bits.
+    keep_mask: u32,
+    /// `max_value().to_bits()`: clamp bound on the magnitude bits (for
+    /// positive finite floats, bit order == value order).
+    max_bits: u32,
+    /// `min_normal().to_bits()`: flush-to-zero bound on the magnitude.
+    min_bits: u32,
+}
+
+impl PreparedQuantizer {
+    /// Precompute the round/clamp/flush constants for `fmt`.
+    pub fn new(fmt: FpFormat) -> Self {
+        let shift = 23 - fmt.m_bits;
+        Self {
+            fmt,
+            shift,
+            lsb_gate: u32::from(shift != 0),
+            half_bias: if shift == 0 { 0 } else { (1u32 << (shift - 1)) - 1 },
+            keep_mask: if shift == 0 { !0 } else { !((1u32 << shift) - 1) },
+            max_bits: fmt.max_value().to_bits(),
+            min_bits: fmt.min_normal().to_bits(),
+        }
+    }
+
+    /// The format this quantiser was prepared for.
+    pub fn format(&self) -> FpFormat {
+        self.fmt
+    }
+
+    /// Quantise one value — branchless bit-pattern twin of
+    /// [`FpFormat::quantize`] (same RNE, clamp, subnormal flush and NaN
+    /// passthrough; flushed values come back as `+0.0` either way).
+    #[inline(always)]
+    pub fn quantize(&self, x: f32) -> f32 {
+        let bits = x.to_bits();
+        let sign = bits & 0x8000_0000;
+        let mag = bits & 0x7FFF_FFFF;
+        // Round-to-nearest-even on the magnitude (identity when m = 23):
+        // add the tie-to-even bias, clear the dropped mantissa bits.
+        // Carries propagate into the exponent, which is exactly how the
+        // scalar bit trick rounds across binades.
+        let lsb = (mag >> self.shift) & self.lsb_gate;
+        let r = (mag + lsb + self.half_bias) & self.keep_mask;
+        // Clamp to the largest finite magnitude (also catches inf and
+        // rounding carries past the top), then flush subnormals to +0.
+        let r = if r > self.max_bits { self.max_bits } else { r };
+        let q = if r < self.min_bits { 0 } else { r | sign };
+        // NaN passes through with its payload, like the scalar path.
+        f32::from_bits(if mag > 0x7F80_0000 { bits } else { q })
+    }
+
+    /// Quantise a slice in place — the hot-path form: one branchless
+    /// kernel per element, no per-element format math, vectorisable.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
 }
 
 /// Reduced-precision MLP layer on the pure-rust substrate — mirrors the
@@ -238,6 +325,43 @@ mod tests {
                 last = err;
             }
         }
+    }
+
+    #[test]
+    fn prepared_quantizer_constants_smoke() {
+        // One representative check per precomputed constant; the
+        // exhaustive scalar-vs-prepared equivalence (all constructible
+        // formats, full-range bit patterns, NaN/tie/bound edges) lives
+        // in `tests/quantizer_equivalence.rs` — keep that the single
+        // source of truth for the contract.
+        let pq = FpFormat::FP16.prepare();
+        assert_eq!(pq.shift, 13);
+        assert_eq!(pq.lsb_gate, 1);
+        assert_eq!(pq.half_bias, (1 << 12) - 1);
+        assert_eq!(pq.keep_mask, !((1u32 << 13) - 1));
+        assert_eq!(pq.max_bits, 65504.0f32.to_bits());
+        assert_eq!(pq.min_bits, 2f32.powi(-14).to_bits());
+        // m = 23: rounding must be the identity (no underflowing shift).
+        let full = FpFormat::new(23, 8).prepare();
+        assert_eq!(full.lsb_gate, 0);
+        assert_eq!(full.half_bias, 0);
+        assert_eq!(full.keep_mask, !0);
+    }
+
+    #[test]
+    fn prepared_quantizer_slice_matches_elementwise() {
+        let fmt = FpFormat::fp(10);
+        let pq = fmt.prepare();
+        assert_eq!(pq.format(), fmt);
+        let mut rng = crate::util::Pcg64::seeded(31);
+        let mut xs: Vec<f32> = (0..4096).map(|_| (rng.next_f32() - 0.5) * rng.range_f64(1e-6, 1e6) as f32).collect();
+        let mut want = xs.clone();
+        fmt.quantize_slice(&mut want);
+        pq.quantize_slice(&mut xs);
+        assert_eq!(
+            xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -88,18 +88,58 @@ impl VariantStats {
 }
 
 /// Compile/execute statistics (perf accounting), shared by all backends.
+///
+/// This is the *report* shape: backends accumulate wall time in integer
+/// nanoseconds ([`EngineStatsAccum`]) and derive these µs/ms fields at
+/// read time, rounded to nearest — truncating per call (the old
+/// `execute_us += elapsed.as_micros()`) lost up to 1 µs *per execute*,
+/// systematically down, the same bias-down class as the metrics energy
+/// counter fixed in PR 3.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
     /// Variants compiled (or prepared) so far.
     pub compiles: u64,
-    /// Total wall time spent compiling, in milliseconds.
+    /// Total wall time spent compiling, in milliseconds (derived from
+    /// the nanosecond accumulator, rounded to nearest).
     pub compile_ms: u128,
     /// Batches executed.
     pub executes: u64,
-    /// Total wall time spent executing, in microseconds.
+    /// Total wall time spent executing, in microseconds (derived from
+    /// the nanosecond accumulator, rounded to nearest).
     pub execute_us: u128,
     /// Host-to-device bytes uploaded (0 for host-resident backends).
     pub h2d_bytes: u64,
+}
+
+/// The internal accumulator behind [`EngineStats`]: integer nanoseconds,
+/// summed exactly; [`EngineStatsAccum::report`] derives the public µs/ms
+/// fields once, at read time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStatsAccum {
+    /// Variants compiled (or prepared) so far.
+    pub compiles: u64,
+    /// Total compile wall time, exact nanoseconds.
+    pub compile_ns: u128,
+    /// Batches executed.
+    pub executes: u64,
+    /// Total execute wall time, exact nanoseconds.
+    pub execute_ns: u128,
+    /// Host-to-device bytes uploaded.
+    pub h2d_bytes: u64,
+}
+
+impl EngineStatsAccum {
+    /// Derive the public report: µs/ms rounded to nearest (never the
+    /// truncate-per-call bias the accumulator exists to avoid).
+    pub fn report(&self) -> EngineStats {
+        EngineStats {
+            compiles: self.compiles,
+            compile_ms: (self.compile_ns + 500_000) / 1_000_000,
+            executes: self.executes,
+            execute_us: (self.execute_ns + 500) / 1_000,
+            h2d_bytes: self.h2d_bytes,
+        }
+    }
 }
 
 /// An inference substrate the ARI coordinator can serve from.
@@ -317,6 +357,33 @@ mod tests {
             n_classes: 2,
         };
         assert_eq!(o.score_row(1), &[0.8, 0.2]);
+    }
+
+    #[test]
+    fn stats_accum_sums_ns_and_rounds_at_read_time() {
+        // 1000 × 900 ns of execute: per-call truncation to µs would
+        // report 0; the ns accumulator reports 900 µs.  Same for 1500 ×
+        // 700 µs of compile time vs per-call ms truncation.
+        let mut acc = EngineStatsAccum::default();
+        for _ in 0..1000 {
+            acc.executes += 1;
+            acc.execute_ns += 900;
+        }
+        for _ in 0..1500 {
+            acc.compiles += 1;
+            acc.compile_ns += 700_000;
+        }
+        acc.h2d_bytes = 42;
+        let report = acc.report();
+        assert_eq!(report.execute_us, 900);
+        assert_eq!(report.compile_ms, 1050);
+        assert_eq!(report.executes, 1000);
+        assert_eq!(report.compiles, 1500);
+        assert_eq!(report.h2d_bytes, 42);
+        // Rounds to nearest, not down.
+        let half = EngineStatsAccum { execute_ns: 1_500, compile_ns: 1_500_000, ..Default::default() };
+        assert_eq!(half.report().execute_us, 2);
+        assert_eq!(half.report().compile_ms, 2);
     }
 
     #[test]

@@ -4,6 +4,10 @@
 //!
 //! The generator is seeded ([`crate::util::Pcg64`]) and uses no wall
 //! clock, so every run — test, doctest, CI — sees bit-identical data.
+//! Gaussian draws go through `Pcg64::normal_unpaired` (one Box–Muller
+//! transform per call, sine half discarded): the draw pattern is pinned
+//! so fixture bytes stay identical even as `Pcg64::normal` gains
+//! optimisations like the spare-half cache.
 //!
 //! The construction mirrors the paper's setting at miniature scale:
 //! class prototypes are unit-norm gaussian directions; the first layer's
@@ -96,7 +100,7 @@ pub fn generate(spec: &FixtureSpec) -> Fixture {
     // Unit-norm class prototypes.
     let mut prototypes: Vec<Vec<f32>> = Vec::with_capacity(n_classes);
     for _ in 0..n_classes {
-        let mut p: Vec<f32> = (0..spec.input_dim).map(|_| rng.normal() as f32).collect();
+        let mut p: Vec<f32> = (0..spec.input_dim).map(|_| rng.normal_unpaired() as f32).collect();
         let norm = (p.iter().map(|v| v * v).sum::<f32>()).sqrt().max(1e-6);
         for v in &mut p {
             *v /= norm;
@@ -113,12 +117,12 @@ pub fn generate(spec: &FixtureSpec) -> Fixture {
     for li in 0..dims.len() - 1 {
         let (in_dim, out_dim) = (dims[li], dims[li + 1]);
         // Background mixing weights.
-        let mut w: Vec<f32> = (0..in_dim * out_dim).map(|_| (rng.normal() as f32) * 0.05).collect();
+        let mut w: Vec<f32> = (0..in_dim * out_dim).map(|_| (rng.normal_unpaired() as f32) * 0.05).collect();
         if li == 0 {
             // Leading columns carry the class prototypes.
             for (j, proto) in prototypes.iter().enumerate().take(out_dim.min(n_classes)) {
                 for i in 0..in_dim {
-                    w[i * out_dim + j] = proto[i] + (rng.normal() as f32) * 0.01;
+                    w[i * out_dim + j] = proto[i] + (rng.normal_unpaired() as f32) * 0.01;
                 }
             }
         } else {
@@ -147,7 +151,7 @@ pub fn generate(spec: &FixtureSpec) -> Fixture {
             } else {
                 prototypes[c][i]
             };
-            x.push(scale * base + difficulty * rng.normal() as f32);
+            x.push(scale * base + difficulty * rng.normal_unpaired() as f32);
         }
         y.push(c as i32);
     }

@@ -24,7 +24,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use backend::{open_backend, Backend, BackendKind, BatchOutputs, EngineStats, VariantStats};
+pub use backend::{open_backend, Backend, BackendKind, BatchOutputs, EngineStats, EngineStatsAccum, VariantStats};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::Engine;

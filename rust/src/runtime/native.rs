@@ -35,7 +35,7 @@ use crate::data::{EvalData, Manifest, VariantKind, VariantRef, Weights};
 use crate::mlp::{FpPlan, ScPlan, Scratch};
 use crate::quant::FpFormat;
 use crate::runtime::fixture::{self, FixtureSpec};
-use crate::runtime::{Backend, BatchOutputs, EngineStats, VariantStats};
+use crate::runtime::{Backend, BatchOutputs, EngineStats, EngineStatsAccum, VariantStats};
 use crate::sc::ScConfig;
 
 struct LoadedDataset {
@@ -78,7 +78,7 @@ pub struct NativeBackend {
     /// The single compilation cache: one prepared plan (+ scratch +
     /// timings) per `(dataset, kind, level)`.
     plans: HashMap<String, PreparedVariant>,
-    stats: EngineStats,
+    stats: EngineStatsAccum,
 }
 
 impl NativeBackend {
@@ -92,7 +92,7 @@ impl NativeBackend {
             root: Some(artifacts.to_path_buf()),
             datasets: HashMap::new(),
             plans: HashMap::new(),
-            stats: EngineStats::default(),
+            stats: EngineStatsAccum::default(),
         })
     }
 
@@ -111,7 +111,7 @@ impl NativeBackend {
             let fx = fixture::generate(spec);
             datasets.insert(spec.name.clone(), LoadedDataset { weights: fx.weights, eval: fx.eval });
         }
-        Self { manifest, root: None, datasets, plans: HashMap::new(), stats: EngineStats::default() }
+        Self { manifest, root: None, datasets, plans: HashMap::new(), stats: EngineStatsAccum::default() }
     }
 
     /// The prepared variant for `v`, building and caching it on first
@@ -140,7 +140,7 @@ impl NativeBackend {
             };
             let prepare_ns = t0.elapsed().as_nanos();
             self.stats.compiles += 1;
-            self.stats.compile_ms += t0.elapsed().as_millis();
+            self.stats.compile_ns += prepare_ns;
             let stats = VariantStats { key: key.clone(), prepare_ns, ..Default::default() };
             self.plans.insert(key.clone(), PreparedVariant { kernel, scratch: Scratch::new(), stats });
         }
@@ -228,13 +228,13 @@ impl Backend for NativeBackend {
             (out, v.batch, elapsed)
         };
         self.stats.executes += 1;
-        self.stats.execute_us += elapsed.as_micros();
+        self.stats.execute_ns += elapsed.as_nanos();
         let n_classes = out.scores.cols;
         Ok(BatchOutputs { scores: out.scores.data, pred: out.pred, margin: out.margin, batch, n_classes })
     }
 
     fn stats(&self) -> EngineStats {
-        self.stats
+        self.stats.report()
     }
 
     fn variant_stats(&self) -> Vec<VariantStats> {

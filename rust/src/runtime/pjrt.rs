@@ -21,7 +21,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use crate::data::{EvalData, Manifest, VariantKind, VariantRef, Weights};
-use crate::runtime::{Backend, BatchOutputs, EngineStats};
+use crate::runtime::{Backend, BatchOutputs, EngineStats, EngineStatsAccum};
 
 struct DatasetState {
     weights: Weights,
@@ -43,8 +43,8 @@ pub struct Engine {
     pub manifest: Manifest,
     datasets: HashMap<String, DatasetState>,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Compile/execute statistics (perf accounting).
-    pub stats: EngineStats,
+    /// Compile/execute statistics (perf accounting, exact ns).
+    pub stats: EngineStatsAccum,
 }
 
 impl Engine {
@@ -53,7 +53,7 @@ impl Engine {
     pub fn new(artifacts: &Path) -> crate::Result<Self> {
         let manifest = Manifest::load(artifacts)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Self { client, manifest, datasets: HashMap::new(), executables: HashMap::new(), stats: EngineStats::default() })
+        Ok(Self { client, manifest, datasets: HashMap::new(), executables: HashMap::new(), stats: EngineStatsAccum::default() })
     }
 
     /// Ensure a dataset's weights are loaded and device-resident.
@@ -138,7 +138,7 @@ impl Engine {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {key}: {e}"))?;
         self.stats.compiles += 1;
-        self.stats.compile_ms += t0.elapsed().as_millis();
+        self.stats.compile_ns += t0.elapsed().as_nanos();
         self.executables.insert(key, exe);
         Ok(())
     }
@@ -192,7 +192,7 @@ impl Engine {
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("download: {e}"))?;
         self.stats.executes += 1;
-        self.stats.execute_us += t0.elapsed().as_micros();
+        self.stats.execute_ns += t0.elapsed().as_nanos();
         let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
         anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
         let scores = parts[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("scores: {e}"))?;
@@ -233,6 +233,6 @@ impl Backend for Engine {
     }
 
     fn stats(&self) -> EngineStats {
-        self.stats
+        self.stats.report()
     }
 }

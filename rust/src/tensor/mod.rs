@@ -9,14 +9,113 @@
 //! `tests/kernel_parity.rs` pins, and what lets the prepared-plan
 //! forward pass shard batch rows across threads without changing a
 //! single bit of output.
+//!
+//! The full-width tile of the kernel is **runtime-dispatched** to an
+//! explicit SIMD path ([`SimdBackend`]): AVX2 on x86_64 hosts that have
+//! it, SSE2 as the x86_64 baseline, and a portable scalar fallback
+//! everywhere.  Every path uses separate multiply and add only (no FMA)
+//! with the same per-lane, k-ascending accumulation, so **all dispatch
+//! paths produce bit-identical outputs** — SIMD changes how many output
+//! elements are in flight, never a single element's summation order.
+//! `ARI_SIMD=0` (or `scalar`/`sse2`/`avx2`) overrides the dispatch for
+//! forced-scalar runs; see [`active_backend`].
+
+use std::sync::OnceLock;
 
 /// Row-register width of the tiled kernel (i-block).
 pub const KERNEL_MR: usize = 4;
 
-/// Column-register width of the tiled kernel (j-block).  Prepared plans
-/// pad weight matrices' output dimension to a multiple of this so the
-/// steady-state kernel never takes the ragged-edge path.
-pub const KERNEL_NR: usize = 8;
+/// Column-register width of the tiled kernel (j-block): two 256-bit
+/// vectors on the AVX2 path.  Prepared plans pad weight matrices'
+/// output dimension to a multiple of this so the steady-state kernel
+/// never takes the ragged-edge path.
+pub const KERNEL_NR: usize = 16;
+
+/// One instruction-set flavour of the full-tile matmul microkernel.
+/// All variants exist on every architecture (so code can name them
+/// portably); [`SimdBackend::is_available`] says which ones this host
+/// can actually run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimdBackend {
+    /// Portable scalar loop (autovectorisable, no `std::arch`).
+    Scalar,
+    /// x86_64 SSE2 (`__m128`, baseline on every x86_64).
+    Sse2,
+    /// x86_64 AVX2 (`__m256`, runtime-detected).
+    Avx2,
+}
+
+impl SimdBackend {
+    /// Lower-case stable name (`scalar` / `sse2` / `avx2`) — used in the
+    /// `ari-bench v1` JSON header and the `ARI_SIMD` override.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Sse2 => "sse2",
+            SimdBackend::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this host can execute the path.
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdBackend::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdBackend::Sse2 => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdBackend::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+}
+
+/// Every dispatch path this host can run, scalar first.  Test suites
+/// iterate this to pin all paths against the naive reference.
+pub fn available_backends() -> Vec<SimdBackend> {
+    [SimdBackend::Scalar, SimdBackend::Sse2, SimdBackend::Avx2].into_iter().filter(|b| b.is_available()).collect()
+}
+
+fn best_available() -> SimdBackend {
+    if SimdBackend::Avx2.is_available() {
+        SimdBackend::Avx2
+    } else if SimdBackend::Sse2.is_available() {
+        SimdBackend::Sse2
+    } else {
+        SimdBackend::Scalar
+    }
+}
+
+/// The dispatch path [`matmul_strided`] uses, decided once per process:
+/// the `ARI_SIMD` environment variable (`0`/`scalar`/`off`, `sse2`,
+/// `avx2`) when set and available on this host, else the best detected
+/// path (AVX2 > SSE2 > scalar).  An unavailable request falls back to
+/// auto-detection with a warning rather than failing — outputs are
+/// bit-identical on every path, so the choice only affects speed.
+pub fn active_backend() -> SimdBackend {
+    static ACTIVE: OnceLock<SimdBackend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let requested = match std::env::var("ARI_SIMD").ok().as_deref().map(str::trim) {
+            Some("0") | Some("scalar") | Some("off") => Some(SimdBackend::Scalar),
+            Some("sse2") => Some(SimdBackend::Sse2),
+            Some("avx2") => Some(SimdBackend::Avx2),
+            Some("") | None => None,
+            Some(other) => {
+                eprintln!("[ari] unknown ARI_SIMD={other:?} (expected 0|scalar|sse2|avx2); auto-detecting");
+                None
+            }
+        };
+        match requested {
+            Some(b) if b.is_available() => b,
+            Some(b) => {
+                let fallback = best_available();
+                eprintln!("[ari] ARI_SIMD asked for {} but this host cannot run it; using {}", b.name(), fallback.name());
+                fallback
+            }
+            None => best_available(),
+        }
+    })
+}
 
 /// Tiled matmul with explicit row strides: `out[i][j] = sum_p a[i][p] *
 /// b[p][j]` for `i < m`, `j < n`, `p < k`, where row `i` of `a` lives at
@@ -24,43 +123,221 @@ pub const KERNEL_NR: usize = 8;
 /// `out` lives at `out[i*ldo..i*ldo+n]`.
 ///
 /// Each output element accumulates over `p` in ascending order (register
-/// tiling only changes *which* elements are in flight, never the
-/// per-element summation order), so results are bit-identical to
-/// [`Matrix::matmul_naive`] and independent of the `MR`/`NR` blocking.
+/// tiling and SIMD only change *which* elements are in flight, never the
+/// per-element summation order, and no path contracts mul+add into FMA),
+/// so results are bit-identical to [`Matrix::matmul_naive`], independent
+/// of the `MR`/`NR` blocking **and** of the dispatched instruction set.
+/// Dispatches to [`active_backend`]; use [`matmul_strided_with`] to pin
+/// a specific path.
 pub fn matmul_strided(a: &[f32], lda: usize, b: &[f32], k: usize, out: &mut [f32], ldo: usize, m: usize, n: usize) {
-    debug_assert!(m == 0 || (m - 1) * lda + k <= a.len(), "a too short");
-    debug_assert!(k * n <= b.len(), "b too short");
-    debug_assert!(m == 0 || (m - 1) * ldo + n <= out.len(), "out too short");
+    matmul_strided_with(active_backend(), a, lda, b, k, out, ldo, m, n);
+}
+
+/// [`matmul_strided`] on an explicit dispatch path.  Panics if `backend`
+/// is not available on this host (see [`available_backends`]).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_strided_with(
+    backend: SimdBackend,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    k: usize,
+    out: &mut [f32],
+    ldo: usize,
+    m: usize,
+    n: usize,
+) {
+    assert!(backend.is_available(), "SIMD backend {} unavailable on this host", backend.name());
+    // Hard asserts, not debug: the SIMD paths below use raw-pointer
+    // loads/stores, so an undersized slice must panic here (as the old
+    // slice-indexed kernel did) rather than read or write out of bounds
+    // in release builds.  Three integer compares, negligible vs the
+    // matmul itself.
+    assert!(m == 0 || (m - 1) * lda + k <= a.len(), "a too short");
+    assert!(k * n <= b.len(), "b too short");
+    assert!(m == 0 || (m - 1) * ldo + n <= out.len(), "out too short");
     let mut i = 0;
     while i < m {
         let ib = KERNEL_MR.min(m - i);
         let mut j = 0;
         while j < n {
             let jb = KERNEL_NR.min(n - j);
-            let mut acc = [[0.0f32; KERNEL_NR]; KERNEL_MR];
-            for p in 0..k {
-                let brow = &b[p * n + j..p * n + j + jb];
-                for (mi, accr) in acc.iter_mut().enumerate().take(ib) {
-                    let av = a[(i + mi) * lda + p];
-                    if jb == KERNEL_NR {
-                        // Full tile: fixed trip count so the compiler can
-                        // unroll/vectorise with no bounds checks.
-                        for nj in 0..KERNEL_NR {
-                            accr[nj] += av * brow[nj];
-                        }
-                    } else {
-                        for (nj, &bv) in brow.iter().enumerate() {
-                            accr[nj] += av * bv;
-                        }
-                    }
+            if jb == KERNEL_NR {
+                match backend {
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: availability asserted above; the tile is in
+                    // bounds (j + KERNEL_NR <= n checked here, row bounds
+                    // by the debug asserts / slice invariants).
+                    SimdBackend::Avx2 => unsafe { full_tile_avx2(a, lda, b, n, out, ldo, k, i, j, ib) },
+                    #[cfg(target_arch = "x86_64")]
+                    // SAFETY: SSE2 is baseline on x86_64; bounds as above.
+                    SimdBackend::Sse2 => unsafe {
+                        full_tile_sse2_half(a, lda, b, n, out, ldo, k, i, j, ib);
+                        full_tile_sse2_half(a, lda, b, n, out, ldo, k, i, j + KERNEL_NR / 2, ib);
+                    },
+                    _ => full_tile_scalar(a, lda, b, n, out, ldo, k, i, j, ib),
                 }
-            }
-            for (mi, accr) in acc.iter().enumerate().take(ib) {
-                out[(i + mi) * ldo + j..(i + mi) * ldo + j + jb].copy_from_slice(&accr[..jb]);
+            } else {
+                ragged_tile_scalar(a, lda, b, n, out, ldo, k, i, j, ib, jb);
             }
             j += jb;
         }
         i += ib;
+    }
+}
+
+/// Full-width tile, portable scalar path: fixed trip count so the
+/// compiler can unroll/autovectorise with no bounds checks.
+#[allow(clippy::too_many_arguments)]
+fn full_tile_scalar(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+    k: usize,
+    i: usize,
+    j: usize,
+    ib: usize,
+) {
+    let mut acc = [[0.0f32; KERNEL_NR]; KERNEL_MR];
+    for p in 0..k {
+        let brow = &b[p * ldb + j..p * ldb + j + KERNEL_NR];
+        for (mi, accr) in acc.iter_mut().enumerate().take(ib) {
+            let av = a[(i + mi) * lda + p];
+            for nj in 0..KERNEL_NR {
+                accr[nj] += av * brow[nj];
+            }
+        }
+    }
+    for (mi, accr) in acc.iter().enumerate().take(ib) {
+        out[(i + mi) * ldo + j..(i + mi) * ldo + j + KERNEL_NR].copy_from_slice(accr);
+    }
+}
+
+/// Ragged-edge tile (`jb < KERNEL_NR`), scalar on every dispatch path —
+/// prepared plans pad their layouts so serving never comes here.
+#[allow(clippy::too_many_arguments)]
+fn ragged_tile_scalar(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+    k: usize,
+    i: usize,
+    j: usize,
+    ib: usize,
+    jb: usize,
+) {
+    let mut acc = [[0.0f32; KERNEL_NR]; KERNEL_MR];
+    for p in 0..k {
+        let brow = &b[p * ldb + j..p * ldb + j + jb];
+        for (mi, accr) in acc.iter_mut().enumerate().take(ib) {
+            let av = a[(i + mi) * lda + p];
+            for (nj, &bv) in brow.iter().enumerate() {
+                accr[nj] += av * bv;
+            }
+        }
+    }
+    for (mi, accr) in acc.iter().enumerate().take(ib) {
+        out[(i + mi) * ldo + j..(i + mi) * ldo + j + jb].copy_from_slice(&accr[..jb]);
+    }
+}
+
+/// Full-width tile on AVX2: `ib` rows × two `__m256` column registers.
+/// Separate `_mm256_mul_ps` + `_mm256_add_ps` per lane, `p` ascending —
+/// rustc never contracts these into FMA, so lanes compute exactly the
+/// scalar `acc += a * b` sequence and outputs stay bit-identical.
+///
+/// # Safety
+///
+/// Caller must ensure AVX2 is available, `j + KERNEL_NR <= ldb` with
+/// `b.len() >= k * ldb`, `(i + ib - 1) * lda + k <= a.len()`, and
+/// `(i + ib - 1) * ldo + j + KERNEL_NR <= out.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn full_tile_avx2(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+    k: usize,
+    i: usize,
+    j: usize,
+    ib: usize,
+) {
+    use std::arch::x86_64::*;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut acc = [[_mm256_setzero_ps(); 2]; KERNEL_MR];
+    for p in 0..k {
+        let base = bp.add(p * ldb + j);
+        let b0 = _mm256_loadu_ps(base);
+        let b1 = _mm256_loadu_ps(base.add(8));
+        for (mi, accr) in acc.iter_mut().enumerate().take(ib) {
+            let av = _mm256_set1_ps(*ap.add((i + mi) * lda + p));
+            accr[0] = _mm256_add_ps(accr[0], _mm256_mul_ps(av, b0));
+            accr[1] = _mm256_add_ps(accr[1], _mm256_mul_ps(av, b1));
+        }
+    }
+    for (mi, accr) in acc.iter().enumerate().take(ib) {
+        let dst = op.add((i + mi) * ldo + j);
+        _mm256_storeu_ps(dst, accr[0]);
+        _mm256_storeu_ps(dst.add(8), accr[1]);
+    }
+}
+
+/// Half of a full-width tile on SSE2: `ib` rows × two `__m128` column
+/// registers covering columns `j..j + 8`.  Called twice per full tile so
+/// the accumulators fit the 16 xmm registers without spilling; columns
+/// are independent, so the split cannot change any output bit.  Mul+add
+/// only, `p` ascending — bit-identical to the scalar path.
+///
+/// # Safety
+///
+/// Caller must ensure `j + 8 <= ldb` with `b.len() >= k * ldb`,
+/// `(i + ib - 1) * lda + k <= a.len()`, and `(i + ib - 1) * ldo + j + 8
+/// <= out.len()`.  SSE2 itself is baseline on x86_64.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn full_tile_sse2_half(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    out: &mut [f32],
+    ldo: usize,
+    k: usize,
+    i: usize,
+    j: usize,
+    ib: usize,
+) {
+    use std::arch::x86_64::*;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut acc = [[_mm_setzero_ps(); 2]; KERNEL_MR];
+    for p in 0..k {
+        let base = bp.add(p * ldb + j);
+        let b0 = _mm_loadu_ps(base);
+        let b1 = _mm_loadu_ps(base.add(4));
+        for (mi, accr) in acc.iter_mut().enumerate().take(ib) {
+            let av = _mm_set1_ps(*ap.add((i + mi) * lda + p));
+            accr[0] = _mm_add_ps(accr[0], _mm_mul_ps(av, b0));
+            accr[1] = _mm_add_ps(accr[1], _mm_mul_ps(av, b1));
+        }
+    }
+    for (mi, accr) in acc.iter().enumerate().take(ib) {
+        let dst = op.add((i + mi) * ldo + j);
+        _mm_storeu_ps(dst, accr[0]);
+        _mm_storeu_ps(dst.add(4), accr[1]);
     }
 }
 
@@ -286,22 +563,50 @@ mod tests {
 
     #[test]
     fn tiled_kernel_bit_identical_to_naive() {
-        // Shapes straddling the MR/NR tile edges, including ragged ones.
+        // Shapes straddling the MR/NR tile edges, including ragged ones,
+        // on every dispatch path this host can run.
         let mut rng = crate::util::Pcg64::seeded(21);
-        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 17), (32, 24, 32), (2, 100, 3)] {
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 17), (5, 9, 16), (32, 24, 32), (2, 100, 3)] {
             let a = Matrix::from_fn(m, k, |_, _| rng.next_f32() - 0.5);
             let b = Matrix::from_fn(k, n, |_, _| rng.next_f32() - 0.5);
-            let tiled = a.matmul(&b);
             let naive = a.matmul_naive(&b);
-            assert_eq!(tiled.data, naive.data, "m={m} k={k} n={n}");
+            let tiled = a.matmul(&b);
+            assert_eq!(tiled.data, naive.data, "active m={m} k={k} n={n}");
+            for backend in available_backends() {
+                let mut out = Matrix::zeros(m, n);
+                matmul_strided_with(backend, &a.data, k, &b.data, k, &mut out.data, n, m, n);
+                assert_eq!(out.data, naive.data, "{} m={m} k={k} n={n}", backend.name());
+            }
         }
+    }
+
+    #[test]
+    fn dispatch_reports_a_runnable_backend() {
+        let active = active_backend();
+        assert!(active.is_available());
+        assert!(available_backends().contains(&active));
+        assert!(available_backends().contains(&SimdBackend::Scalar));
+        assert_eq!(SimdBackend::Scalar.name(), "scalar");
+        assert_eq!(SimdBackend::Sse2.name(), "sse2");
+        assert_eq!(SimdBackend::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    #[should_panic(expected = "unavailable")]
+    #[cfg(not(target_arch = "x86_64"))]
+    fn unavailable_backend_rejected() {
+        let a = [1.0f32];
+        let mut out = [0.0f32];
+        matmul_strided_with(SimdBackend::Avx2, &a, 1, &a, 1, &mut out, 1, 1, 1);
     }
 
     #[test]
     fn strided_kernel_respects_strides() {
         // Rows of a and out embedded in wider buffers; the gap bytes
-        // must never be read or written.
-        let (m, k, n, lda, ldo) = (3usize, 4usize, 5usize, 7usize, 9usize);
+        // must never be read or written — on every dispatch path.  n is
+        // a full KERNEL_NR multiple plus a ragged tail so SIMD stores
+        // and the scalar edge both run.
+        let (m, k, n, lda, ldo) = (3usize, 4usize, KERNEL_NR + 5, KERNEL_NR + 7, KERNEL_NR + 9);
         let mut rng = crate::util::Pcg64::seeded(22);
         let mut a = vec![f32::NAN; (m - 1) * lda + k];
         for i in 0..m {
@@ -310,19 +615,21 @@ mod tests {
             }
         }
         let b = Matrix::from_fn(k, n, |_, _| rng.next_f32() - 0.5);
-        let sentinel = -123.0f32;
-        let mut out = vec![sentinel; (m - 1) * ldo + n];
-        matmul_strided(&a, lda, &b.data, k, &mut out, ldo, m, n);
         let at = Matrix::from_fn(m, k, |i, p| a[i * lda + p]);
         let want = at.matmul_naive(&b);
-        for i in 0..m {
-            for j in 0..n {
-                assert_eq!(out[i * ldo + j], want.get(i, j), "({i},{j})");
-            }
-            // Stride gap untouched.
-            if i + 1 < m {
-                for g in n..ldo {
-                    assert_eq!(out[i * ldo + g], sentinel);
+        let sentinel = -123.0f32;
+        for backend in available_backends() {
+            let mut out = vec![sentinel; (m - 1) * ldo + n];
+            matmul_strided_with(backend, &a, lda, &b.data, k, &mut out, ldo, m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(out[i * ldo + j], want.get(i, j), "{} ({i},{j})", backend.name());
+                }
+                // Stride gap untouched.
+                if i + 1 < m {
+                    for g in n..ldo {
+                        assert_eq!(out[i * ldo + g], sentinel, "{} gap", backend.name());
+                    }
                 }
             }
         }

@@ -178,13 +178,18 @@ impl JsonReport {
         self.add(r, items_per_iter.map(|(n, _)| n));
     }
 
-    /// The full JSON document.
+    /// The full JSON document.  The header records the active SIMD
+    /// dispatch path (`simd`) next to `max_threads`, so paired
+    /// default/`ARI_SIMD=0` runs of the same bench are distinguishable
+    /// in `BENCH_native.json` and the per-commit SIMD delta can be read
+    /// off the artifact.
     pub fn render(&self) -> String {
         let entries: Vec<String> = self.entries.iter().map(|e| e.render()).collect();
         format!(
-            "{{\"schema\":\"ari-bench v1\",\"bench\":\"{}\",\"max_threads\":{},\"smoke\":{},\"entries\":[{}]}}\n",
+            "{{\"schema\":\"ari-bench v1\",\"bench\":\"{}\",\"max_threads\":{},\"simd\":\"{}\",\"smoke\":{},\"entries\":[{}]}}\n",
             json_escape(&self.bench),
             crate::util::pool::max_threads(),
+            crate::tensor::active_backend().name(),
             smoke(),
             entries.join(",")
         )
@@ -242,6 +247,7 @@ mod tests {
         let doc = report.render();
         assert!(doc.starts_with("{\"schema\":\"ari-bench v1\""), "{doc}");
         assert!(doc.contains("\"bench\":\"bench_test\""));
+        assert!(doc.contains(&format!("\"simd\":\"{}\"", crate::tensor::active_backend().name())), "{doc}");
         assert!(doc.contains("\\\"a\\\""), "quotes escaped: {doc}");
         assert!(doc.contains("\"items_per_iter\":32"));
         assert!(doc.contains("\"ns_per_item\":31.250"));

@@ -1,26 +1,33 @@
 //! Kernel-equivalence suite: the tiled/parallel prepared-plan path must
-//! be bit-identical to the naive reference implementations, and — under
-//! the per-row SC noise keying — invariant to the worker-pool size.
+//! be bit-identical to the naive reference implementations — on **every
+//! SIMD dispatch path this host can run** — and, under the per-row SC
+//! noise keying, invariant to the worker-pool size.
 //!
 //! This is the contract that makes the perf work safe: any blocking,
-//! padding or sharding change that alters a single output bit fails
-//! here before it can silently shift the ARI escalation statistics.
+//! padding, SIMD or sharding change that alters a single output bit
+//! fails here before it can silently shift the ARI escalation
+//! statistics.  CI additionally runs this whole suite under
+//! `ARI_SIMD=0 ARI_THREADS=1` (forced scalar dispatch, serial pool), so
+//! every dispatch × thread combination gets pinned across the two runs.
 
 use ari::data::VariantKind;
-use ari::mlp::{FpEngine, FpPlan, ScNoiseEngine, ScPlan, Scratch};
+use ari::mlp::plan::SC_ROW_STREAM;
+use ari::mlp::{FpEngine, FpPlan, ScNoiseEngine, ScPlan, Scratch, SC_LFSR_K, SC_NOISE_C};
 use ari::quant::FpFormat;
 use ari::runtime::fixture::{self, FixtureSpec};
 use ari::runtime::{Backend, NativeBackend};
 use ari::sc::ScConfig;
-use ari::tensor::Matrix;
+use ari::tensor::{available_backends, matmul_strided_with, Matrix, SimdBackend};
 use ari::util::Pcg64;
 
 /// Shapes that straddle the kernel's MR×NR tile edges.
-const SHAPES: [(usize, usize, usize); 7] =
-    [(1, 1, 1), (2, 3, 5), (4, 8, 8), (5, 9, 17), (7, 33, 10), (32, 24, 32), (256, 24, 40)];
+const SHAPES: [(usize, usize, usize); 8] =
+    [(1, 1, 1), (2, 3, 5), (4, 8, 8), (5, 9, 17), (7, 33, 10), (32, 24, 32), (256, 24, 40), (13, 24, 48)];
 
 #[test]
 fn tiled_matmul_bit_identical_to_naive_reference() {
+    // The active dispatch path (whatever ARI_SIMD / detection picked)
+    // and every other available path, against the naive triple loop.
     let mut rng = Pcg64::seeded(101);
     for (m, k, n) in SHAPES {
         let a = Matrix::from_fn(m, k, |_, _| (rng.next_f32() - 0.5) * 4.0);
@@ -28,6 +35,54 @@ fn tiled_matmul_bit_identical_to_naive_reference() {
         let tiled = a.matmul(&b);
         let naive = a.matmul_naive(&b);
         assert_eq!(tiled.data, naive.data, "m={m} k={k} n={n}");
+        for backend in available_backends() {
+            let mut out = Matrix::zeros(m, n);
+            matmul_strided_with(backend, &a.data, k, &b.data, k, &mut out.data, n, m, n);
+            assert_eq!(out.data, naive.data, "{} m={m} k={k} n={n}", backend.name());
+        }
+    }
+}
+
+#[test]
+fn simd_dispatch_honours_ari_simd_override() {
+    // When ARI_SIMD names an available path, the process-wide dispatch
+    // must have picked it (this is what makes CI's forced-scalar leg a
+    // real scalar run); otherwise it must have picked something runnable.
+    let want = match std::env::var("ARI_SIMD").ok().as_deref().map(str::trim) {
+        Some("0") | Some("scalar") | Some("off") => Some(SimdBackend::Scalar),
+        Some("sse2") => Some(SimdBackend::Sse2),
+        Some("avx2") => Some(SimdBackend::Avx2),
+        _ => None,
+    };
+    let active = ari::tensor::active_backend();
+    assert!(active.is_available());
+    if let Some(want) = want {
+        if want.is_available() {
+            assert_eq!(active, want, "ARI_SIMD override not honoured");
+        }
+    }
+}
+
+#[test]
+fn simd_paths_agree_on_strided_plan_shaped_buffers() {
+    // The exact buffer shape the prepared plans use: rows embedded at a
+    // stride wider than the matrix, padded widths a KERNEL_NR multiple.
+    let mut rng = Pcg64::seeded(103);
+    let (m, k, n) = (9usize, 40usize, 32usize);
+    let stride = 56usize;
+    let mut a = vec![0.0f32; m * stride];
+    for r in 0..m {
+        for p in 0..k {
+            a[r * stride + p] = (rng.next_f32() - 0.5) * 2.0;
+        }
+    }
+    let b = Matrix::from_fn(k, n, |_, _| (rng.next_f32() - 0.5) * 2.0);
+    let mut want = vec![0.0f32; m * stride];
+    matmul_strided_with(SimdBackend::Scalar, &a, stride, &b.data, k, &mut want, stride, m, n);
+    for backend in available_backends() {
+        let mut out = vec![0.0f32; m * stride];
+        matmul_strided_with(backend, &a, stride, &b.data, k, &mut out, stride, m, n);
+        assert_eq!(out, want, "{}", backend.name());
     }
 }
 
@@ -162,6 +217,73 @@ fn backend_execute_matches_plan_outputs() {
     let splan = ScPlan::new(weights, ScConfig::new(512));
     let sfresh = splan.forward(&x, 32, seed, &mut Scratch::new(), 3);
     assert_eq!(sa.scores, sfresh.scores.data);
+}
+
+/// The old row-major SC walk, reimplemented verbatim on the naive
+/// kernel and unpadded weights: per row, per layer, an `m = 1` matmul,
+/// then the noise epilogue, with one persistent per-row PCG stream.
+/// This is the reference `ScPlan`'s layer-major restructure is pinned
+/// against — same seed, same draws, same bits.
+fn sc_row_major_reference(weights: &ari::data::Weights, x: &[f32], batch: usize, cfg: ScConfig, seed: u64) -> Matrix {
+    let n_layers = weights.layers.len();
+    let input_dim = weights.layers[0].in_dim;
+    let n_classes = weights.layers.last().unwrap().out_dim;
+    let mut scores = Matrix::zeros(batch, n_classes);
+    for r in 0..batch {
+        let mut rng = Pcg64::new(seed, SC_ROW_STREAM + r as u64);
+        let mut h: Vec<f32> = x[r * input_dim..(r + 1) * input_dim].to_vec();
+        for (li, l) in weights.layers.iter().enumerate() {
+            let last = li + 1 == n_layers;
+            let xmax = h.iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
+            let wmax = l.w.iter().fold(1e-6f32, |a, &v| a.max(v.abs())) as f64;
+            let scale = xmax * wmax;
+            let sigma = SC_NOISE_C / SC_LFSR_K * (l.in_dim as f64 / cfg.seq_len as f64).sqrt() * scale;
+            let step = cfg.grid_step() * scale;
+            let xm = Matrix::from_vec(1, l.in_dim, h.clone());
+            let wm = Matrix::from_vec(l.in_dim, l.out_dim, l.w.clone());
+            let mut out = xm.matmul_naive(&wm);
+            for j in 0..l.out_dim {
+                let v = out.data[j] + l.b[j];
+                let noisy = v as f64 + sigma * rng.normal();
+                let mut v = ((noisy / step).round() * step) as f32;
+                if !last && v < 0.0 {
+                    v *= l.alpha;
+                }
+                out.data[j] = v;
+            }
+            h = out.data;
+        }
+        scores.row_mut(r).copy_from_slice(&h);
+    }
+    // The plan's readout: L2-normalised scores snapped to the bipolar
+    // 2/L counter grid.
+    scores.l2_normalize_rows();
+    let half = cfg.seq_len as f32 / 2.0;
+    scores.map_inplace(|v| (v * half).round() / half);
+    scores
+}
+
+#[test]
+fn sc_layer_major_forward_bit_identical_to_row_major_reference() {
+    // The layer-major restructure (one whole-shard matmul per layer)
+    // must not move a single bit relative to the row-major walk: the
+    // per-row PRNGs persist across layers, so each row's draw order is
+    // unchanged, and the kernel's per-element accumulation order is
+    // blocking-independent.
+    let (mut backend, eval) = fixture_backend();
+    backend.load_dataset("par").unwrap();
+    let weights = backend.weights("par").unwrap().clone();
+    let batch = 19; // straddles shard boundaries at every pool size
+    let x = eval.rows(0, batch).to_vec();
+    for level in [64usize, 512] {
+        let cfg = ScConfig::new(level);
+        let want = sc_row_major_reference(&weights, &x, batch, cfg, 1234);
+        let plan = ScPlan::new(&weights, cfg);
+        for threads in [1usize, 2, 4] {
+            let got = plan.forward(&x, batch, 1234, &mut Scratch::new(), threads);
+            assert_eq!(got.scores.data, want.data, "L={level} threads={threads}");
+        }
+    }
 }
 
 #[test]

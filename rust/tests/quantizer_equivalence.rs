@@ -1,0 +1,131 @@
+//! `PreparedQuantizer` vs scalar `FpFormat::quantize` equivalence suite:
+//! the branchless bit-pattern kernel the prepared plans run must match
+//! the scalar reference **bit for bit** over every constructible
+//! `(m_bits, e_bits)` format — random values across the full dynamic
+//! range, plus the adversarial edges (NaN payloads, ±0, subnormals,
+//! halfway round-to-nearest-even ties, format bounds, infinities).
+//!
+//! The scalar path stays the semantic golden (it is itself pinned
+//! against the python `quantize_fp`); this suite is what lets the hot
+//! path swap in the prepared kernel without re-litigating quantisation
+//! semantics anywhere else.
+
+use ari::quant::FpFormat;
+use ari::util::Pcg64;
+
+fn assert_match(fmt: FpFormat, bits: u32) {
+    let x = f32::from_bits(bits);
+    let scalar = fmt.quantize(x);
+    let prepared = fmt.prepare().quantize(x);
+    assert_eq!(
+        scalar.to_bits(),
+        prepared.to_bits(),
+        "m={} e={} bits={bits:#010x} x={x:e}: scalar {scalar:e} != prepared {prepared:e}",
+        fmt.m_bits,
+        fmt.e_bits
+    );
+}
+
+/// Every constructible format: `m_bits` 1..=23 × `e_bits` 2..=8.
+fn all_formats() -> Vec<FpFormat> {
+    let mut out = Vec::new();
+    for m in 1..=23u32 {
+        for e in 2..=8u32 {
+            out.push(FpFormat::new(m, e));
+        }
+    }
+    out
+}
+
+#[test]
+fn random_bit_patterns_every_constructible_format() {
+    // Raw u64-derived bit patterns: uniform over the whole f32 space,
+    // so every binade, subnormals, infs and NaNs all occur.
+    let mut rng = Pcg64::seeded(0xE9);
+    for fmt in all_formats() {
+        for _ in 0..4_000 {
+            assert_match(fmt, rng.next_u32());
+        }
+    }
+}
+
+#[test]
+fn random_values_every_constructible_format() {
+    // Value-space randoms concentrated where inference actually lives:
+    // magnitudes spanning 1e-8..1e8 around each format's range.
+    let mut rng = Pcg64::seeded(0xEA);
+    for fmt in all_formats() {
+        for _ in 0..2_000 {
+            let x = (rng.next_f32() - 0.5) * 2.0 * rng.range_f64(1e-8, 1e8) as f32;
+            assert_match(fmt, x.to_bits());
+        }
+    }
+}
+
+#[test]
+fn curated_edges_every_constructible_format() {
+    for fmt in all_formats() {
+        let shift = 23 - fmt.m_bits;
+        let mut patterns: Vec<u32> = vec![
+            0x0000_0000, // +0
+            0x8000_0000, // -0
+            0x0000_0001, // smallest positive subnormal
+            0x8000_0001,
+            0x007F_FFFF, // largest subnormal
+            0x0080_0000, // smallest f32 normal
+            0x3F80_0000, // 1.0
+            0xBF80_0000, // -1.0
+            0x7F7F_FFFF, // f32::MAX
+            0xFF7F_FFFF, // f32::MIN
+            0x7F80_0000, // +inf
+            0xFF80_0000, // -inf
+            0x7FC0_0000, // canonical quiet NaN
+            0x7FFF_FFFF, // NaN, max payload
+            0xFFC0_0123, // negative quiet NaN with payload
+            0x7F80_0001, // signalling NaN
+        ];
+        // The format's own bounds and their bit-neighbours.
+        for base in [fmt.max_value().to_bits(), fmt.min_normal().to_bits()] {
+            for delta in -3i64..=3 {
+                let b = (base as i64 + delta) as u32;
+                patterns.push(b);
+                patterns.push(b | 0x8000_0000);
+            }
+        }
+        // Halfway RNE ties (even and odd mantissa neighbours) in several
+        // binades, when any mantissa bits are dropped.
+        if shift > 0 {
+            let keep = !((1u32 << shift) - 1);
+            for g in [0x3F80_0000u32, 0x4000_0000, 0x3F00_0000, 0x4150_0000, 0x0080_0000] {
+                let even = g & keep;
+                let odd = even | (1 << shift);
+                for grid in [even, odd] {
+                    let tie = grid + (1 << (shift - 1));
+                    patterns.push(tie);
+                    patterns.push(tie | 0x8000_0000);
+                    // One ULP either side of the tie breaks it.
+                    patterns.push(tie - 1);
+                    patterns.push(tie + 1);
+                }
+            }
+        }
+        for bits in patterns {
+            assert_match(fmt, bits);
+        }
+    }
+}
+
+#[test]
+fn prepared_idempotent_and_on_grid() {
+    // Quantised output must be a fixed point of both implementations.
+    let mut rng = Pcg64::seeded(0xEB);
+    for fmt in [FpFormat::fp(8), FpFormat::fp(12), FpFormat::FP16, FpFormat::new(23, 5)] {
+        let pq = fmt.prepare();
+        for _ in 0..2_000 {
+            let x = (rng.next_f32() - 0.5) * rng.range_f64(1e-4, 1e4) as f32;
+            let q = pq.quantize(x);
+            assert_eq!(pq.quantize(q).to_bits(), q.to_bits(), "prepared idempotency x={x}");
+            assert_eq!(fmt.quantize(q).to_bits(), q.to_bits(), "cross idempotency x={x}");
+        }
+    }
+}
