@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test doc fmt bench bench-json serve-smoke artifacts artifacts-quick clean
+.PHONY: build test doc fmt bench bench-json bench-serve serve-smoke artifacts artifacts-quick clean
 
 build:
 	$(CARGO) build --release
@@ -48,6 +48,16 @@ bench-json:
 	    BENCH_native.bench_quant.json BENCH_native.bench_cascade.json
 	@echo "wrote BENCH_native.json"
 
+# Machine-readable serving perf record: short smoke sessions of the
+# open-loop bench_serve harness (Poisson rates x escalation policy x
+# ladder depth, plus closed-loop ceilings) into BENCH_serve.json —
+# p50/p95/p99 latency, queue wait and completions/sec per session.  CI
+# uploads it next to BENCH_native.json so the serving trajectory
+# accumulates per commit; see docs/PERF.md for the record format.
+bench-serve:
+	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_serve.json) $(CARGO) bench --bench bench_serve
+	@echo "wrote BENCH_serve.json"
+
 # Short deferred-policy serving session on the synthetic fixtures: a
 # 3-level FP ladder under open-loop load, exercising the shutdown drain
 # and per-stage escalation-flush paths end to end (the paths the PR 3
@@ -68,4 +78,4 @@ artifacts-quick:
 clean:
 	$(CARGO) clean
 	rm -rf artifacts
-	rm -f BENCH_native.json BENCH_native.bench_*.json
+	rm -f BENCH_native.json BENCH_native.bench_*.json BENCH_serve.json

@@ -1,0 +1,111 @@
+//! Open-loop serving bench — the request-to-completion pipeline under
+//! load: Poisson arrivals at several rates, Immediate and Deferred
+//! escalation, 2- and 3-level FP ladders, plus a closed-loop
+//! throughput-ceiling point per ladder.
+//!
+//! Per session it reports p50/p95/p99 latency, mean queue wait and
+//! completions/sec; with `ARI_BENCH_JSON` set every session becomes a
+//! group of `ari-bench v1` entries (see docs/PERF.md for the record
+//! format) — `make bench-serve` drives this into `BENCH_serve.json`, so
+//! the serving trajectory is tracked per commit alongside the kernel
+//! benches in `BENCH_native.json`.  `ARI_BENCH_SMOKE=1` shrinks the
+//! request counts for CI.
+
+use ari::config::{AriConfig, Mode, ThresholdPolicy};
+use ari::coordinator::{EscalationPolicy, Ladder, LadderSpec};
+use ari::runtime::{Backend, NativeBackend};
+use ari::server::{run_serving_ladder, ServeOptions, ServeReport};
+use ari::util::benchkit::{section, smoke, BenchResult, JsonReport};
+
+/// Shrink a request count for smoke runs.
+fn req(n: usize) -> usize {
+    if smoke() {
+        n / 8
+    } else {
+        n
+    }
+}
+
+/// Record one serving session: a wall-time entry whose `items_per_sec`
+/// is completions/sec, plus one entry per latency quantile and the mean
+/// queue wait (their `mean_ns` carries the metric; no item counts).
+fn record(json: &mut JsonReport, name: &str, r: &ServeReport) {
+    json.add(
+        &BenchResult { name: name.to_string(), mean_ns: r.wall.as_nanos() as f64, std_ns: 0.0, iters: 1 },
+        Some(r.completions.len() as u64),
+    );
+    for (suffix, d) in
+        [("p50", r.p50), ("p95", r.p95), ("p99", r.p99), ("queue_wait", r.queue_wait_mean)]
+    {
+        json.add(
+            &BenchResult {
+                name: format!("{name} {suffix}"),
+                mean_ns: d.as_nanos() as f64,
+                std_ns: 0.0,
+                iters: 1,
+            },
+            None,
+        );
+    }
+}
+
+fn session(levels: &[usize], rate: f64, requests: usize, policy: EscalationPolicy) -> ServeReport {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let mut cfg = AriConfig::default();
+    cfg.dataset = "fashion_syn".into();
+    cfg.mode = Mode::Fp;
+    cfg.batch_size = 32;
+    cfg.requests = requests;
+    cfg.arrival_rate = rate;
+    cfg.batch_timeout_us = 500;
+    let spec = LadderSpec {
+        dataset: cfg.dataset.clone(),
+        mode: Mode::Fp,
+        levels: levels.to_vec(),
+        batch: cfg.batch_size,
+        threshold: ThresholdPolicy::MMax,
+        seed: cfg.seed as u32,
+    };
+    let ladder = Ladder::calibrate(&mut engine, spec, &data, data.n / 2).unwrap();
+    run_serving_ladder(&mut engine, &ladder, &cfg, &data, None, ServeOptions { escalation: policy })
+        .unwrap()
+}
+
+fn main() {
+    let mut json = JsonReport::new("bench_serve");
+
+    section("pipelined serving: open-loop Poisson x escalation policy x ladder depth (FP @ Mmax)");
+    println!(
+        "{:<40} {:>9} {:>10} {:>10} {:>10} {:>11}",
+        "case", "req/s", "p50", "p95", "p99", "queue wait"
+    );
+    for levels in [&[8usize, 16][..], &[8, 12, 16][..]] {
+        for rate in [2000.0f64, 8000.0] {
+            for (pname, policy) in
+                [("imm", EscalationPolicy::Immediate), ("def", EscalationPolicy::Deferred)]
+            {
+                let r = session(levels, rate, req(768), policy);
+                let name = format!("{}L {pname} rate={rate:.0}", levels.len());
+                record(&mut json, &name, &r);
+                println!(
+                    "{:<40} {:>9.0} {:>10.1?} {:>10.1?} {:>10.1?} {:>11.1?}",
+                    name, r.throughput_rps, r.p50, r.p95, r.p99, r.queue_wait_mean
+                );
+            }
+        }
+    }
+
+    section("closed-loop throughput ceiling (no pacing)");
+    for levels in [&[8usize, 16][..], &[8, 12, 16][..]] {
+        let r = session(levels, 0.0, req(1024), EscalationPolicy::Immediate);
+        let name = format!("{}L imm closed-loop", levels.len());
+        record(&mut json, &name, &r);
+        println!(
+            "{:<40} {:>9.0} {:>10.1?} {:>10.1?} {:>10.1?} {:>11.1?}",
+            name, r.throughput_rps, r.p50, r.p95, r.p99, r.queue_wait_mean
+        );
+    }
+
+    json.write_if_requested();
+}

@@ -108,6 +108,21 @@ pub struct LadderBatch {
 }
 
 impl LadderBatch {
+    /// An empty result, ready to be filled by
+    /// [`Ladder::infer_batch_into`] — the serving loop keeps one and
+    /// reuses its buffers across batches.
+    pub fn empty() -> Self {
+        Self {
+            pred: Vec::new(),
+            margin: Vec::new(),
+            stage: Vec::new(),
+            stage_counts: Vec::new(),
+            energy_uj: 0.0,
+            first_pred: Vec::new(),
+            n_classes: 0,
+        }
+    }
+
     /// Fraction of rows that executed each stage (`f_i` in the energy
     /// accounting `E = Σ_i f_i · E_i`).
     pub fn stage_fractions(&self) -> Vec<f64> {
@@ -121,6 +136,30 @@ impl LadderBatch {
             return 0.0;
         }
         self.stage.iter().filter(|&&s| s > 0).count() as f64 / self.pred.len() as f64
+    }
+}
+
+/// Reusable gather/scatter/padding scratch for the ladder's serving hot
+/// path ([`Ladder::infer_batch_into`], [`Ladder::run_stage_scratch`]).
+/// Buffer capacities grow to the largest batch seen and persist, so a
+/// steady-state serving loop allocates nothing per dispatched batch.
+#[derive(Default)]
+pub struct LadderScratch {
+    /// Escalated rows gathered contiguously for a deeper stage.
+    gathered: Vec<f32>,
+    /// Zero-padded staging when a partial batch runs on a compiled
+    /// full-batch variant (the scratch twin of `Backend::run_padded`).
+    padded: Vec<f32>,
+    /// Row indices still escalating after the current stage.
+    rows: Vec<usize>,
+    /// Row indices that will escalate past the next stage.
+    next_rows: Vec<usize>,
+}
+
+impl LadderScratch {
+    /// Empty scratch (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
@@ -224,6 +263,46 @@ impl Ladder {
         Ok(engine.run_padded(&self.stages[stage].variant, x, n, self.key_for(stage, key_seed))?.0)
     }
 
+    /// [`Ladder::run_stage`] for the allocation-free serving path: any
+    /// zero-padding to the compiled batch is staged in `scratch.padded`
+    /// instead of a fresh vector, and output storage comes from the
+    /// engine's recycle pool when the caller returns outputs via
+    /// `Backend::recycle_outputs`.  Bit-identical to `run_stage` (same
+    /// zero padding, same key derivation, outputs truncated to `n`).
+    /// Also returns the padding waste (unused batch slots) for the
+    /// metrics.
+    pub fn run_stage_scratch(
+        &self,
+        engine: &mut dyn Backend,
+        stage: usize,
+        x: &[f32],
+        n: usize,
+        key_seed: u32,
+        scratch: &mut LadderScratch,
+    ) -> crate::Result<(BatchOutputs, usize)> {
+        let v = &self.stages[stage].variant;
+        // Same validation as `Backend::run_padded` (manifest-derived
+        // width, exact length) so the two padding paths reject the same
+        // inputs with the same precision.
+        let input_dim = engine.manifest().dataset(&v.dataset)?.input_dim;
+        anyhow::ensure!(n > 0 && n <= v.batch, "n={n} out of range for batch {}", v.batch);
+        anyhow::ensure!(x.len() == n * input_dim, "input length mismatch");
+        let key = self.key_for(stage, key_seed);
+        let waste = v.batch - n;
+        if waste == 0 {
+            return Ok((engine.execute(v, x, key)?, 0));
+        }
+        scratch.padded.clear();
+        scratch.padded.resize(v.batch * input_dim, 0.0);
+        scratch.padded[..x.len()].copy_from_slice(x);
+        let mut out = engine.execute(v, &scratch.padded, key)?;
+        out.scores.truncate(n * out.n_classes);
+        out.pred.truncate(n);
+        out.margin.truncate(n);
+        out.batch = n;
+        Ok((out, waste))
+    }
+
     /// Serve one batch of `n` rows down the ladder.  `key_seed` feeds
     /// SC key derivation (ignored for FP); every stage of this call
     /// shares it (stages are decorrelated by the per-stage salt).
@@ -234,50 +313,86 @@ impl Ladder {
         n: usize,
         key_seed: u32,
     ) -> crate::Result<LadderBatch> {
-        let first = self.run_stage(engine, 0, x, n, key_seed)?;
-        let mut pred = first.pred.clone();
-        let mut margin = first.margin.clone();
-        let mut stage = vec![0usize; n];
-        let mut stage_counts = vec![0usize; self.stages.len()];
-        stage_counts[0] = n;
+        let mut out = LadderBatch::empty();
+        self.infer_batch_into(engine, x, n, key_seed, &mut LadderScratch::new(), &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Ladder::infer_batch`] writing into a reusable result and
+    /// gather/scatter scratch — the serving loop's allocation-free
+    /// path.  `out`'s buffers are cleared and refilled; outputs are
+    /// bit-identical to [`Ladder::infer_batch`] (same chunking, same
+    /// zero padding, same keys).
+    pub fn infer_batch_into(
+        &self,
+        engine: &mut dyn Backend,
+        x: &[f32],
+        n: usize,
+        key_seed: u32,
+        scratch: &mut LadderScratch,
+        out: &mut LadderBatch,
+    ) -> crate::Result<()> {
+        let (first, _) = self.run_stage_scratch(engine, 0, x, n, key_seed, scratch)?;
+        out.pred.clear();
+        out.pred.extend_from_slice(&first.pred);
+        out.margin.clear();
+        out.margin.extend_from_slice(&first.margin);
+        out.first_pred.clear();
+        out.first_pred.extend_from_slice(&first.pred);
+        out.stage.clear();
+        out.stage.resize(n, 0);
+        out.stage_counts.clear();
+        out.stage_counts.resize(self.stages.len(), 0);
+        out.stage_counts[0] = n;
+        out.n_classes = first.n_classes;
         let input_dim = x.len() / n;
-        let mut rows: Vec<usize> =
-            (0..n).filter(|&i| !accepts(first.margin[i], self.stages[0].threshold)).collect();
-        for s in 1..self.stages.len() {
+        // The index vectors are moved out of the scratch for the loop
+        // (so `run_stage_scratch` can borrow the scratch mutably) and
+        // moved back at the end — no allocation either way.
+        let mut rows = std::mem::take(&mut scratch.rows);
+        let mut next_rows = std::mem::take(&mut scratch.next_rows);
+        let mut gathered = std::mem::take(&mut scratch.gathered);
+        rows.clear();
+        rows.extend((0..n).filter(|&i| !accepts(first.margin[i], self.stages[0].threshold)));
+        engine.recycle_outputs(first);
+        let mut result = Ok(());
+        'stages: for s in 1..self.stages.len() {
             if rows.is_empty() {
                 break;
             }
-            stage_counts[s] = rows.len();
-            let mut next_rows = Vec::new();
+            out.stage_counts[s] = rows.len();
+            next_rows.clear();
             // Gather escalated rows (they may exceed one stage batch).
             for chunk in rows.chunks(self.stages[s].variant.batch) {
-                let mut gathered = Vec::with_capacity(chunk.len() * input_dim);
+                gathered.clear();
                 for &i in chunk {
                     gathered.extend_from_slice(&x[i * input_dim..(i + 1) * input_dim]);
                 }
-                let out = self.run_stage(engine, s, &gathered, chunk.len(), key_seed)?;
+                let stage_out = match self.run_stage_scratch(engine, s, &gathered, chunk.len(), key_seed, scratch) {
+                    Ok((o, _)) => o,
+                    Err(e) => {
+                        result = Err(e);
+                        break 'stages;
+                    }
+                };
                 for (j, &i) in chunk.iter().enumerate() {
-                    pred[i] = out.pred[j];
-                    margin[i] = out.margin[j];
-                    stage[i] = s;
-                    if s + 1 < self.stages.len() && !accepts(out.margin[j], self.stages[s].threshold) {
+                    out.pred[i] = stage_out.pred[j];
+                    out.margin[i] = stage_out.margin[j];
+                    out.stage[i] = s;
+                    if s + 1 < self.stages.len() && !accepts(stage_out.margin[j], self.stages[s].threshold) {
                         next_rows.push(i);
                     }
                 }
+                engine.recycle_outputs(stage_out);
             }
-            rows = next_rows;
+            std::mem::swap(&mut rows, &mut next_rows);
         }
-        let energy_uj =
-            stage_counts.iter().zip(&self.stages).map(|(&c, st)| c as f64 * st.energy_uj).sum();
-        Ok(LadderBatch {
-            pred,
-            margin,
-            stage,
-            stage_counts,
-            energy_uj,
-            first_pred: first.pred,
-            n_classes: first.n_classes,
-        })
+        scratch.rows = rows;
+        scratch.next_rows = next_rows;
+        scratch.gathered = gathered;
+        result?;
+        out.energy_uj = out.stage_counts.iter().zip(&self.stages).map(|(&c, st)| c as f64 * st.energy_uj).sum();
+        Ok(())
     }
 
     /// Run a whole dataset through the ladder (experiment path), chunked

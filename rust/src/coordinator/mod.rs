@@ -14,6 +14,6 @@ pub mod batcher;
 pub mod cascade;
 pub mod ladder;
 
-pub use batcher::{Batch, Batcher, BatcherPolicy};
+pub use batcher::{Batch, Batcher, BatcherPolicy, FireReason, Pending};
 pub use cascade::{Cascade, CascadeBatch, CascadeSpec, EscalationPolicy};
-pub use ladder::{Ladder, LadderBatch, LadderSpec, LadderStage};
+pub use ladder::{Ladder, LadderBatch, LadderScratch, LadderSpec, LadderStage};

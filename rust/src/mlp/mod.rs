@@ -26,7 +26,7 @@ use crate::quant::FpFormat;
 use crate::sc::ScConfig;
 use crate::tensor::{top2_margin, Matrix};
 
-pub use plan::{FpPlan, ScPlan, Scratch};
+pub use plan::{FpPlan, OutBufs, ScPlan, Scratch};
 
 /// Output of a forward pass over a batch.
 #[derive(Clone, Debug)]
@@ -44,10 +44,20 @@ impl Outputs {
     /// `_normalize` (see `python/compile/model.py`): the paper's scores
     /// are raw bounded outputs, not softmax, which is what gives changed
     /// elements their small margins.
-    fn from_logits(mut logits: Matrix) -> Self {
+    fn from_logits(logits: Matrix) -> Self {
+        Self::from_logits_reuse(logits, Vec::new(), Vec::new())
+    }
+
+    /// [`Self::from_logits`] writing into recycled `pred`/`margin`
+    /// buffers (cleared, then filled) — with the logits matrix itself
+    /// built over a recycled score buffer this makes a steady-state
+    /// forward allocation-free (see [`plan::OutBufs`]).
+    fn from_logits_reuse(mut logits: Matrix, mut pred: Vec<i32>, mut margin: Vec<f32>) -> Self {
         logits.l2_normalize_rows();
-        let mut pred = Vec::with_capacity(logits.rows);
-        let mut margin = Vec::with_capacity(logits.rows);
+        pred.clear();
+        margin.clear();
+        pred.reserve(logits.rows);
+        margin.reserve(logits.rows);
         for r in 0..logits.rows {
             let (p, m) = top2_margin(logits.row(r));
             pred.push(p as i32);

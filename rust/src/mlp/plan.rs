@@ -15,11 +15,14 @@
 //!   padded width — so the tiled kernel's full-register path runs edge
 //!   handling exactly never,
 //! * activations ping-pong through a reusable [`Scratch`] (two
-//!   `batch × stride` buffers), so steady-state forwards allocate only
-//!   the returned [`Outputs`] (plus, on the SC path, one small `Pcg64`
-//!   per row for the persistent noise streams).
+//!   `batch × stride` buffers plus the SC path's per-row noise
+//!   streams), and output storage can be recycled through [`OutBufs`]
+//!   (`forward_reuse`), so a steady-state serving forward that returns
+//!   its outputs to the backend's recycle pool allocates **nothing**
+//!   on the serial path (the threaded path allocates only the two
+//!   small per-call shard/job vectors).
 //!
-//! Forwards shard batch rows across scoped workers
+//! Forwards shard batch rows across the persistent parked worker pool
 //! ([`crate::util::pool`]).  Everything per-row — kernel accumulation
 //! order, the quantisation epilogue, and the SC noise stream, which is
 //! keyed per row as `Pcg64::new(seed, SC_ROW_STREAM + row)` — is
@@ -129,13 +132,17 @@ fn pack(weights: &Weights, quant: Option<FpFormat>) -> Packed {
     Packed { layers, stride, input_dim, n_classes, flops_per_row }
 }
 
-/// Reusable ping-pong activation buffers.  Grows to the largest
-/// `batch × stride` seen and never shrinks, so the steady state of a
-/// serving loop allocates nothing per forward.
+/// Reusable ping-pong activation buffers (plus, for SC plans, the
+/// per-row noise streams).  Grows to the largest `batch × stride` seen
+/// and never shrinks, so the steady state of a serving loop allocates
+/// nothing per forward.
 #[derive(Default)]
 pub struct Scratch {
     ping: Vec<f32>,
     pong: Vec<f32>,
+    /// Per-row SC noise streams, re-seeded every forward (FP plans
+    /// leave this empty).
+    rngs: Vec<Pcg64>,
 }
 
 impl Scratch {
@@ -150,23 +157,76 @@ impl Scratch {
             self.pong.resize(len, 0.0);
         }
     }
+
+    fn ensure_rngs(&mut self, rows: usize) {
+        if self.rngs.len() < rows {
+            self.rngs.resize_with(rows, || Pcg64::new(0, 0));
+        }
+    }
+}
+
+/// Recyclable output buffers for [`FpPlan::forward_reuse`] /
+/// [`ScPlan::forward_reuse`]: score/pred/margin storage whose
+/// capacities persist across forwards.  The native backend circulates
+/// these through its recycle pool (`Backend::recycle_outputs`), which
+/// is what makes the steady-state serving dispatch allocation-free.
+#[derive(Default)]
+pub struct OutBufs {
+    /// Raw score storage (becomes `Outputs::scores.data`).
+    pub scores: Vec<f32>,
+    /// Predicted-class storage.
+    pub pred: Vec<i32>,
+    /// Margin storage.
+    pub margin: Vec<f32>,
 }
 
 /// Shared shard scaffolding of both plan forwards: size the scratch,
-/// split ping/pong/scores into per-shard slices, run `run(lo, rows,
-/// ping, pong, scores)` for every shard on the worker pool, and return
-/// the assembled scores.  Keeping this in one place keeps the
-/// bit-identical-across-threads contract uniform across engines.
-fn shard_forward<F>(packed: &Packed, batch: usize, scratch: &mut Scratch, threads: usize, run: F) -> Vec<f32>
-where
-    F: Fn(usize, usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+/// split ping/pong/rngs/scores into per-shard slices, run `run(lo,
+/// rows, ping, pong, rngs, scores)` for every shard on the persistent
+/// worker pool, and leave the assembled scores in `scores`.  Keeping
+/// this in one place keeps the bit-identical-across-threads contract
+/// uniform across engines.  The serial path (`threads <= 1`, which
+/// includes every fixture-sized batch thanks to the work gate in
+/// [`pool::auto_threads_for`]) runs inline with no per-call
+/// allocation; the threaded path allocates the shard and job vectors
+/// (two small Vecs) per call.
+fn shard_forward<F>(
+    packed: &Packed,
+    batch: usize,
+    scratch: &mut Scratch,
+    threads: usize,
+    scores: &mut Vec<f32>,
+    use_rngs: bool,
+    run: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32], &mut [Pcg64], &mut [f32]) + Sync,
 {
     scratch.ensure(batch * packed.stride);
-    let mut scores = vec![0.0f32; batch * packed.n_classes];
+    if use_rngs {
+        scratch.ensure_rngs(batch);
+    }
+    scores.clear();
+    scores.resize(batch * packed.n_classes, 0.0);
+    if batch == 0 {
+        return;
+    }
+    if threads <= 1 {
+        let rngs: &mut [Pcg64] = if use_rngs { &mut scratch.rngs[..batch] } else { &mut [] };
+        run(
+            0,
+            batch,
+            &mut scratch.ping[..batch * packed.stride],
+            &mut scratch.pong[..batch * packed.stride],
+            rngs,
+            &mut scores[..],
+        );
+        return;
+    }
     {
         let mut ping: &mut [f32] = &mut scratch.ping[..batch * packed.stride];
         let mut pong: &mut [f32] = &mut scratch.pong[..batch * packed.stride];
-        let mut out: &mut [f32] = &mut scores;
+        let mut rngs: &mut [Pcg64] = if use_rngs { &mut scratch.rngs[..batch] } else { &mut [] };
+        let mut out: &mut [f32] = scores;
         let run = &run;
         let mut jobs = Vec::new();
         for (lo, rows) in pool::shards(batch, threads) {
@@ -174,13 +234,19 @@ where
             ping = rest;
             let (b, rest) = std::mem::take(&mut pong).split_at_mut(rows * packed.stride);
             pong = rest;
+            let rg: &mut [Pcg64] = if use_rngs {
+                let (rg, rest) = std::mem::take(&mut rngs).split_at_mut(rows);
+                rngs = rest;
+                rg
+            } else {
+                &mut []
+            };
             let (o, rest) = std::mem::take(&mut out).split_at_mut(rows * packed.n_classes);
             out = rest;
-            jobs.push(move || run(lo, rows, a, b, o));
+            jobs.push(move || run(lo, rows, a, b, rg, o));
         }
         pool::run_jobs(jobs);
     }
-    scores
 }
 
 /// Prepared truncated-mantissa FP forward: weights and biases quantised
@@ -221,12 +287,29 @@ impl FpPlan {
     /// Forward a `(batch, input_dim)` row-major slice on up to `threads`
     /// workers.  Outputs are bit-identical for every `threads` value.
     pub fn forward(&self, x: &[f32], batch: usize, scratch: &mut Scratch, threads: usize) -> Outputs {
+        self.forward_reuse(x, batch, scratch, threads, OutBufs::default())
+    }
+
+    /// [`Self::forward`] with recycled output storage: `bufs` provides
+    /// the score/pred/margin buffers (any content is overwritten), so a
+    /// caller that hands back the previous call's outputs makes the
+    /// steady-state forward allocation-free.  Bit-identical to
+    /// [`Self::forward`].
+    pub fn forward_reuse(
+        &self,
+        x: &[f32],
+        batch: usize,
+        scratch: &mut Scratch,
+        threads: usize,
+        bufs: OutBufs,
+    ) -> Outputs {
         let p = &self.packed;
         assert_eq!(x.len(), batch * p.input_dim, "input shape mismatch");
-        let scores = shard_forward(p, batch, scratch, threads, |lo, rows, ping, pong, out| {
+        let OutBufs { mut scores, pred, margin } = bufs;
+        shard_forward(p, batch, scratch, threads, &mut scores, false, |lo, rows, ping, pong, _rngs, out| {
             self.run_rows(x, lo, rows, ping, pong, out)
         });
-        Outputs::from_logits(Matrix::from_vec(batch, p.n_classes, scores))
+        Outputs::from_logits_reuse(Matrix::from_vec(batch, p.n_classes, scores), pred, margin)
     }
 
     /// One shard: rows `[lo, lo + rows)` of the batch, start to finish.
@@ -316,12 +399,29 @@ impl ScPlan {
     /// Row `r` draws noise from its own `(seed, SC_ROW_STREAM + r)`
     /// stream, so outputs are bit-identical for every `threads` value.
     pub fn forward(&self, x: &[f32], batch: usize, seed: u64, scratch: &mut Scratch, threads: usize) -> Outputs {
+        self.forward_reuse(x, batch, seed, scratch, threads, OutBufs::default())
+    }
+
+    /// [`Self::forward`] with recycled output storage (see
+    /// [`FpPlan::forward_reuse`]).  The per-row noise streams live in
+    /// the scratch and are re-seeded per call, so this is bit-identical
+    /// to [`Self::forward`] at equal seed.
+    pub fn forward_reuse(
+        &self,
+        x: &[f32],
+        batch: usize,
+        seed: u64,
+        scratch: &mut Scratch,
+        threads: usize,
+        bufs: OutBufs,
+    ) -> Outputs {
         let p = &self.packed;
         assert_eq!(x.len(), batch * p.input_dim, "input shape mismatch");
-        let scores = shard_forward(p, batch, scratch, threads, |lo, rows, ping, pong, out| {
-            self.run_rows(x, lo, rows, seed, ping, pong, out)
+        let OutBufs { mut scores, pred, margin } = bufs;
+        shard_forward(p, batch, scratch, threads, &mut scores, true, |lo, rows, ping, pong, rngs, out| {
+            self.run_rows(x, lo, rows, seed, rngs, ping, pong, out)
         });
-        let mut out = Outputs::from_logits(Matrix::from_vec(batch, p.n_classes, scores));
+        let mut out = Outputs::from_logits_reuse(Matrix::from_vec(batch, p.n_classes, scores), pred, margin);
         out.snap_scores_to_grid(self.cfg.seq_len);
         out
     }
@@ -340,6 +440,7 @@ impl ScPlan {
         lo: usize,
         rows: usize,
         seed: u64,
+        rngs: &mut [Pcg64],
         ping: &mut [f32],
         pong: &mut [f32],
         scores: &mut [f32],
@@ -347,7 +448,12 @@ impl ScPlan {
         let p = &self.packed;
         let stride = p.stride;
         let n_layers = p.layers.len();
-        let mut rngs: Vec<Pcg64> = (0..rows).map(|r| Pcg64::new(seed, SC_ROW_STREAM + (lo + r) as u64)).collect();
+        // Re-seed the shard's recycled per-row streams: identical draws
+        // to a freshly allocated `Pcg64` per row (`new` also clears the
+        // cached Box–Muller half).
+        for (r, rng) in rngs.iter_mut().enumerate() {
+            *rng = Pcg64::new(seed, SC_ROW_STREAM + (lo + r) as u64);
+        }
         for r in 0..rows {
             ping[r * stride..r * stride + p.input_dim]
                 .copy_from_slice(&x[(lo + r) * p.input_dim..(lo + r + 1) * p.input_dim]);

@@ -190,6 +190,13 @@ pub trait Backend {
     /// FP variants.
     fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs>;
 
+    /// Hand a consumed [`BatchOutputs`] back to the backend so its
+    /// buffers can be reused by a later [`Backend::execute`].  Purely an
+    /// optimisation hook for the serving hot path (zero steady-state
+    /// allocation): the default implementation just drops the outputs,
+    /// and callers are free to never call it.
+    fn recycle_outputs(&mut self, _out: BatchOutputs) {}
+
     /// Compile/execute statistics accumulated so far.
     fn stats(&self) -> EngineStats;
 

@@ -19,8 +19,10 @@
 //! packed into the padded kernel layout, per-layer `max|w|` precomputed
 //! for the SC noise model, plus reusable ping-pong activation scratch —
 //! cached by `(dataset, kind, level)` and shared across batch sizes, so
-//! steady-state execution does no per-call weight work and allocates
-//! only the returned outputs.  Batch rows shard across the scoped
+//! steady-state execution does no per-call weight work — and, when the
+//! caller returns consumed outputs via [`Backend::recycle_outputs`],
+//! no per-call allocation either (output storage circulates through a
+//! small recycle pool).  Batch rows shard across the persistent parked
 //! worker pool ([`crate::util::pool`]) with bit-identical results for
 //! any thread count.
 //!
@@ -32,11 +34,16 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::data::{EvalData, Manifest, VariantKind, VariantRef, Weights};
-use crate::mlp::{FpPlan, ScPlan, Scratch};
+use crate::mlp::{FpPlan, OutBufs, ScPlan, Scratch};
 use crate::quant::FpFormat;
 use crate::runtime::fixture::{self, FixtureSpec};
 use crate::runtime::{Backend, BatchOutputs, EngineStats, EngineStatsAccum, VariantStats};
 use crate::sc::ScConfig;
+
+/// Max recycled output-buffer sets kept by [`Backend::recycle_outputs`].
+/// The serving path keeps at most a couple in flight; the cap just
+/// bounds memory if a caller recycles more than it executes.
+const FREE_OUTPUT_POOL: usize = 8;
 
 struct LoadedDataset {
     weights: Weights,
@@ -47,9 +54,20 @@ struct LoadedDataset {
 /// scratch and per-variant timings.  One per `(dataset, kind, level)` —
 /// batch size only affects how much of the scratch is used.
 struct PreparedVariant {
+    dataset: String,
+    kind: VariantKind,
+    level: usize,
     kernel: PreparedKernel,
     scratch: Scratch,
     stats: VariantStats,
+}
+
+impl PreparedVariant {
+    /// Cache identity: batch size deliberately excluded (plans are
+    /// batch-agnostic).
+    fn matches(&self, v: &VariantRef) -> bool {
+        self.kind == v.kind && self.level == v.level && self.dataset == v.dataset
+    }
 }
 
 enum PreparedKernel {
@@ -57,7 +75,7 @@ enum PreparedKernel {
     Sc(ScPlan),
 }
 
-/// Cache key: batch size deliberately excluded (plans are batch-agnostic).
+/// Stable per-variant stats key (batch size excluded, like the cache).
 fn plan_key(v: &VariantRef) -> String {
     format!("{}/{:?}{}", v.dataset, v.kind, v.level)
 }
@@ -76,8 +94,13 @@ pub struct NativeBackend {
     root: Option<PathBuf>,
     datasets: HashMap<String, LoadedDataset>,
     /// The single compilation cache: one prepared plan (+ scratch +
-    /// timings) per `(dataset, kind, level)`.
-    plans: HashMap<String, PreparedVariant>,
+    /// timings) per `(dataset, kind, level)`.  A linear scan, not a
+    /// map: variant counts are tiny and matching on fields keeps the
+    /// steady-state execute path free of per-call key formatting.
+    plans: Vec<PreparedVariant>,
+    /// Recycled output buffers ([`Backend::recycle_outputs`]) handed
+    /// back to the next execute, shared across variants.
+    free: Vec<OutBufs>,
     stats: EngineStatsAccum,
 }
 
@@ -91,7 +114,8 @@ impl NativeBackend {
             manifest,
             root: Some(artifacts.to_path_buf()),
             datasets: HashMap::new(),
-            plans: HashMap::new(),
+            plans: Vec::new(),
+            free: Vec::new(),
             stats: EngineStatsAccum::default(),
         })
     }
@@ -111,7 +135,7 @@ impl NativeBackend {
             let fx = fixture::generate(spec);
             datasets.insert(spec.name.clone(), LoadedDataset { weights: fx.weights, eval: fx.eval });
         }
-        Self { manifest, root: None, datasets, plans: HashMap::new(), stats: EngineStatsAccum::default() }
+        Self { manifest, root: None, datasets, plans: Vec::new(), free: Vec::new(), stats: EngineStatsAccum::default() }
     }
 
     /// The prepared variant for `v`, building and caching it on first
@@ -119,32 +143,39 @@ impl NativeBackend {
     /// dataset, pre-quantise/pack the weights into the kernel layout.
     /// One plan per `(dataset, kind, level)` — batch sizes share it.
     fn prepared(&mut self, v: &VariantRef) -> crate::Result<&mut PreparedVariant> {
-        let key = plan_key(v);
-        if !self.plans.contains_key(&key) {
-            self.manifest.dataset(&v.dataset)?;
-            if v.kind == VariantKind::Sc {
-                // Fails loudly on non-power-of-two lengths, like the
-                // exporter would at lowering time.
-                anyhow::ensure!(
-                    v.level >= 2 && v.level.is_power_of_two(),
-                    "SC sequence length {} must be a power of two >= 2",
-                    v.level
-                );
-            }
-            self.load_dataset(&v.dataset)?;
-            let weights = &self.datasets[&v.dataset].weights;
-            let t0 = Instant::now();
-            let kernel = match v.kind {
-                VariantKind::Fp => PreparedKernel::Fp(FpPlan::new(weights, FpFormat::fp(v.level as u32))),
-                VariantKind::Sc => PreparedKernel::Sc(ScPlan::new(weights, ScConfig::new(v.level))),
-            };
-            let prepare_ns = t0.elapsed().as_nanos();
-            self.stats.compiles += 1;
-            self.stats.compile_ns += prepare_ns;
-            let stats = VariantStats { key: key.clone(), prepare_ns, ..Default::default() };
-            self.plans.insert(key.clone(), PreparedVariant { kernel, scratch: Scratch::new(), stats });
+        if let Some(idx) = self.plans.iter().position(|p| p.matches(v)) {
+            return Ok(&mut self.plans[idx]);
         }
-        Ok(self.plans.get_mut(&key).expect("just prepared"))
+        self.manifest.dataset(&v.dataset)?;
+        if v.kind == VariantKind::Sc {
+            // Fails loudly on non-power-of-two lengths, like the
+            // exporter would at lowering time.
+            anyhow::ensure!(
+                v.level >= 2 && v.level.is_power_of_two(),
+                "SC sequence length {} must be a power of two >= 2",
+                v.level
+            );
+        }
+        self.load_dataset(&v.dataset)?;
+        let weights = &self.datasets[&v.dataset].weights;
+        let t0 = Instant::now();
+        let kernel = match v.kind {
+            VariantKind::Fp => PreparedKernel::Fp(FpPlan::new(weights, FpFormat::fp(v.level as u32))),
+            VariantKind::Sc => PreparedKernel::Sc(ScPlan::new(weights, ScConfig::new(v.level))),
+        };
+        let prepare_ns = t0.elapsed().as_nanos();
+        self.stats.compiles += 1;
+        self.stats.compile_ns += prepare_ns;
+        let stats = VariantStats { key: plan_key(v), prepare_ns, ..Default::default() };
+        self.plans.push(PreparedVariant {
+            dataset: v.dataset.clone(),
+            kind: v.kind,
+            level: v.level,
+            kernel,
+            scratch: Scratch::new(),
+            stats,
+        });
+        Ok(self.plans.last_mut().expect("just prepared"))
     }
 }
 
@@ -195,10 +226,15 @@ impl Backend for NativeBackend {
     }
 
     fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs> {
+        // Output storage comes from the recycle pool when the caller
+        // returns consumed outputs (`recycle_outputs`): the steady-state
+        // serving dispatch then allocates nothing here.
+        let bufs = self.free.pop().unwrap_or_default();
         let (out, batch, elapsed) = {
             let plan = self.prepared(v)?;
-            // Work-aware worker count: tiny models stay serial (spawns
-            // would out-cost the kernel), big ones scale with cores.
+            // Work-aware worker count: tiny models stay serial (even a
+            // parked-pool dispatch would out-cost the kernel), big ones
+            // scale with cores.
             let (input_dim, threads) = match &plan.kernel {
                 PreparedKernel::Fp(p) => (p.input_dim(), p.auto_threads(v.batch)),
                 PreparedKernel::Sc(p) => (p.input_dim(), p.auto_threads(v.batch)),
@@ -212,13 +248,13 @@ impl Backend for NativeBackend {
             );
             let t0 = Instant::now();
             let out = match &plan.kernel {
-                PreparedKernel::Fp(p) => p.forward(x, v.batch, &mut plan.scratch, threads),
+                PreparedKernel::Fp(p) => p.forward_reuse(x, v.batch, &mut plan.scratch, threads, bufs),
                 PreparedKernel::Sc(p) => {
                     let Some(key) = sc_key else {
                         anyhow::bail!("SC variant requires a key");
                     };
                     let seed = ((key[0] as u64) << 32) | key[1] as u64;
-                    p.forward(x, v.batch, seed, &mut plan.scratch, threads)
+                    p.forward_reuse(x, v.batch, seed, &mut plan.scratch, threads, bufs)
                 }
             };
             let elapsed = t0.elapsed();
@@ -233,12 +269,18 @@ impl Backend for NativeBackend {
         Ok(BatchOutputs { scores: out.scores.data, pred: out.pred, margin: out.margin, batch, n_classes })
     }
 
+    fn recycle_outputs(&mut self, out: BatchOutputs) {
+        if self.free.len() < FREE_OUTPUT_POOL {
+            self.free.push(OutBufs { scores: out.scores, pred: out.pred, margin: out.margin });
+        }
+    }
+
     fn stats(&self) -> EngineStats {
         self.stats.report()
     }
 
     fn variant_stats(&self) -> Vec<VariantStats> {
-        let mut out: Vec<VariantStats> = self.plans.values().map(|p| p.stats.clone()).collect();
+        let mut out: Vec<VariantStats> = self.plans.iter().map(|p| p.stats.clone()).collect();
         out.sort_by(|a, b| a.key.cmp(&b.key));
         out
     }
@@ -288,6 +330,42 @@ mod tests {
         let a = b.execute(&v, eval.rows(0, 32), Some([3, 4])).unwrap();
         let c = b.execute(&v, eval.rows(0, 32), Some([3, 4])).unwrap();
         assert_eq!(a.scores, c.scores);
+    }
+
+    #[test]
+    fn recycled_outputs_do_not_change_results() {
+        // The recycle pool only reuses capacity: executing through
+        // recycled buffers must be bit-identical to fresh allocation,
+        // for FP and (same key) SC alike.
+        let mut b = backend();
+        let eval = b.eval_data("d").unwrap();
+        let v = fp_variant(&b, 10, 32);
+        let first = b.execute(&v, eval.rows(0, 32), None).unwrap();
+        let want = (first.scores.clone(), first.pred.clone(), first.margin.clone());
+        b.recycle_outputs(first);
+        let again = b.execute(&v, eval.rows(0, 32), None).unwrap();
+        assert_eq!((again.scores.clone(), again.pred.clone(), again.margin.clone()), want);
+        b.recycle_outputs(again);
+
+        let sv = b.manifest().variant("d", VariantKind::Sc, 512, 32).unwrap().clone();
+        let sa = b.execute(&sv, eval.rows(0, 32), Some([3, 4])).unwrap();
+        let swant = sa.scores.clone();
+        b.recycle_outputs(sa);
+        let sb = b.execute(&sv, eval.rows(0, 32), Some([3, 4])).unwrap();
+        assert_eq!(sb.scores, swant, "SC through recycled buffers must keep the stream");
+    }
+
+    #[test]
+    fn recycle_pool_is_bounded() {
+        let mut b = backend();
+        let eval = b.eval_data("d").unwrap();
+        let v = fp_variant(&b, 16, 32);
+        for _ in 0..2 * FREE_OUTPUT_POOL {
+            let out = b.execute(&v, eval.rows(0, 32), None).unwrap();
+            b.recycle_outputs(out.clone());
+            b.recycle_outputs(out); // over-recycling must not grow the pool unboundedly
+        }
+        assert!(b.free.len() <= FREE_OUTPUT_POOL);
     }
 
     #[test]

@@ -1,34 +1,64 @@
-//! The serving loop: workload generation, request queueing, ladder
-//! dispatch and reporting.
+//! The serving loop: workload generation, request queueing, pipelined
+//! ladder dispatch and reporting.
 //!
-//! Threading model: backends may be thread-pinned (the PJRT client is
-//! `Rc`-based, not `Send` — see [`crate::runtime`]), so the coordinator
-//! loop — batcher + ladder + backend — runs on the calling thread,
-//! while a generator thread produces timestamped requests into an
-//! `mpsc` channel (open-loop Poisson or closed-loop).  This mirrors the
-//! single-accelerator IoT deployment the paper targets: one device, one
-//! inference queue.  Compute still scales with cores: the native
-//! backend shards each batch's rows across its scoped worker pool
-//! inside `execute` (see [`crate::mlp::plan`] and `docs/PERF.md`), so
-//! the serving loop stays single-queue while forwards are parallel.
+//! Threading model (three stages, pipelined):
+//!
+//! 1. a **generator** thread produces timestamped requests into an
+//!    `mpsc` channel (open-loop Poisson or closed-loop);
+//! 2. a **batching** thread runs the arrival loop — `recv_timeout`
+//!    against the batcher's next deadline, one timestamp per iteration
+//!    threaded through `push_at`/`try_fire_into` — and stages each
+//!    fired batch's input rows into a recycled `StagedBatch` buffer;
+//! 3. the **calling** thread runs ladder inference.  Backends may be
+//!    thread-pinned (the PJRT client is `Rc`-based, not `Send` — see
+//!    [`crate::runtime`]), so compute stays on the caller while
+//!    batching/arrival overlaps it.
+//!
+//! Stages 2 and 3 exchange a fixed set of staging buffers through a
+//! pair of bounded queues ([`crate::util::queue::BoundedQueue`]):
+//! bounded for backpressure, preallocated so the steady-state dispatch
+//! path — batch fire, input staging, ladder forward, completion
+//! recording — performs **zero heap allocation** (buffers circulate;
+//! the ladder reuses gather/padding scratch and a recycled result; the
+//! native backend recycles output storage via
+//! `Backend::recycle_outputs`).  Compute additionally scales with
+//! cores: the native backend shards each batch's rows across the
+//! persistent worker pool inside `execute` (see [`crate::mlp::plan`]
+//! and `docs/PERF.md`).
 //!
 //! Both escalation policies route through the N-level
 //! [`crate::coordinator::Ladder`]: `Immediate` walks a batch down the
 //! whole ladder in place; `Deferred` keeps one escalation queue per
-//! non-first stage and flushes a stage when a full batch of escalations
-//! is waiting (or at shutdown).  Every dispatched batch — reduced or
-//! escalation flush — draws a fresh chunk id from one shared counter,
-//! so no two SC batches ever share a stochastic-computing key.
+//! non-first stage (row indices only — inputs are re-gathered from the
+//! dataset at flush time) and flushes a stage when a full batch of
+//! escalations is waiting (or at shutdown).  Every dispatched batch —
+//! reduced or escalation flush — draws a fresh chunk id from one
+//! shared counter, so no two SC batches ever share a
+//! stochastic-computing key.  Batches are staged and inferred strictly
+//! in arrival order, so serving output for a fixed seed is as
+//! deterministic as the pre-pipelined loop.
 
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::config::AriConfig;
-use crate::coordinator::{Batcher, BatcherPolicy, Cascade, EscalationPolicy, Ladder};
+use crate::coordinator::{
+    Batcher, BatcherPolicy, Cascade, EscalationPolicy, Ladder, LadderBatch, LadderScratch, Pending,
+};
 use crate::data::EvalData;
 use crate::metrics::MetricsRegistry;
 use crate::runtime::Backend;
+use crate::util::queue::BoundedQueue;
 use crate::util::Pcg64;
+
+/// Staged batches in flight between the batching thread and the
+/// inference loop.  2 is enough to overlap staging with compute; more
+/// would only let the queue hide latency the report should show.
+const PIPELINE_DEPTH: usize = 2;
+
+/// Arrival-loop poll interval when the batcher holds no deadline.
+const IDLE_POLL: Duration = Duration::from_millis(50);
 
 /// One request: a row index into the workload dataset.
 #[derive(Clone, Copy, Debug)]
@@ -85,6 +115,8 @@ pub struct ServeReport {
     pub energy_full_uj: f64,
     /// Median request latency.
     pub p50: Duration,
+    /// 95th-percentile request latency.
+    pub p95: Duration,
     /// 99th-percentile request latency.
     pub p99: Duration,
     /// Mean request latency.
@@ -94,6 +126,10 @@ pub struct ServeReport {
     pub queue_wait_mean: Duration,
     /// Queue-wait samples recorded (one per dispatched request).
     pub queue_wait_samples: u64,
+    /// Batch slots dispatched without a request in them — first-stage
+    /// batches **and** escalation-stage flushes (the latter were
+    /// uncounted before this field existed).
+    pub padded_slots: u64,
 }
 
 /// Serving options beyond the config.
@@ -106,6 +142,340 @@ pub struct ServeOptions {
 impl Default for ServeOptions {
     fn default() -> Self {
         Self { escalation: EscalationPolicy::Immediate }
+    }
+}
+
+/// A batch staged for inference: the fired requests plus their input
+/// rows gathered contiguously.  A fixed set of these circulates
+/// between the batching thread and the inference loop, so the steady
+/// state stages batches into already-sized buffers.
+#[derive(Default)]
+struct StagedBatch {
+    items: Vec<Pending<Request>>,
+    x: Vec<f32>,
+}
+
+/// Gather the staged requests' input rows into the batch's reusable
+/// buffer.
+fn stage_rows(data: &EvalData, buf: &mut StagedBatch) {
+    buf.x.clear();
+    for p in &buf.items {
+        buf.x.extend_from_slice(data.row(p.payload.row));
+    }
+}
+
+/// Fire every due batch into the pipeline.  Returns `false` when the
+/// pipeline is closed (inference errored) and the loop should stop.
+/// `now` is restamped after each dispatched batch: the buffer pop and
+/// pipeline push may block on backpressure, and a stale timestamp
+/// would both mis-stamp later enqueues and stretch the next recv
+/// deadline by up to a full `max_wait`.
+fn fire_ready(
+    batcher: &mut Batcher<Request>,
+    now: &mut Instant,
+    data: &EvalData,
+    staged: &BoundedQueue<StagedBatch>,
+    empties: &BoundedQueue<StagedBatch>,
+) -> bool {
+    while batcher.ready(*now) {
+        let Some(mut buf) = empties.pop() else { return false };
+        if batcher.try_fire_into(*now, &mut buf.items).is_none() {
+            let _ = empties.push(buf);
+            break;
+        }
+        stage_rows(data, &mut buf);
+        if staged.push(buf).is_err() {
+            return false;
+        }
+        *now = Instant::now();
+    }
+    true
+}
+
+/// Shutdown flush: drain the batcher in `<= max_batch` chunks into the
+/// pipeline until empty (or the pipeline is closed).
+fn flush_batcher(
+    batcher: &mut Batcher<Request>,
+    data: &EvalData,
+    staged: &BoundedQueue<StagedBatch>,
+    empties: &BoundedQueue<StagedBatch>,
+) {
+    loop {
+        let Some(mut buf) = empties.pop() else { return };
+        if batcher.drain_into(&mut buf.items).is_none() {
+            let _ = empties.push(buf);
+            return;
+        }
+        stage_rows(data, &mut buf);
+        if staged.push(buf).is_err() {
+            return;
+        }
+    }
+}
+
+/// The batching thread's arrival loop: receive requests, fire batches
+/// by size/deadline, stage their rows, and hand them to the inference
+/// loop.  One `Instant::now()` per arrival iteration stamps the
+/// enqueue and drives every deadline check (the old loop took several
+/// per request), plus one restamp per dispatched batch — the pipeline
+/// push can block on backpressure (see [`fire_ready`]).  On shutdown
+/// no request is ever discarded: when the expected count has been
+/// produced, the channel is drained with `try_recv` and every returned
+/// request is *pushed* (the old check dropped one).
+fn batching_loop(
+    rx: mpsc::Receiver<Request>,
+    policy: BatcherPolicy,
+    n_requests: usize,
+    data: &EvalData,
+    staged: &BoundedQueue<StagedBatch>,
+    empties: &BoundedQueue<StagedBatch>,
+) {
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    let mut received = 0usize;
+    let mut now = Instant::now();
+    loop {
+        if staged.is_closed() {
+            break;
+        }
+        let timeout = batcher.next_deadline(now).unwrap_or(IDLE_POLL);
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                now = Instant::now();
+                batcher.push_at(req, now);
+                received += 1;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => now = Instant::now(),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Generator finished (or died): flush in <= max_batch
+                // chunks and exit.
+                flush_batcher(&mut batcher, data, staged, empties);
+                break;
+            }
+        }
+        if !fire_ready(&mut batcher, &mut now, data, staged, empties) {
+            break;
+        }
+        if received >= n_requests {
+            // Every request was produced: drain the channel tail
+            // without discarding anything, then flush and exit.  The
+            // tail gets a fresh stamp — these requests were submitted
+            // after the loop's `now`, and a stale stamp would record
+            // zero queue wait (enqueued < submitted saturates).
+            now = Instant::now();
+            while let Ok(req) = rx.try_recv() {
+                batcher.push_at(req, now);
+                received += 1;
+            }
+            flush_batcher(&mut batcher, data, staged, empties);
+            break;
+        }
+    }
+    staged.close();
+}
+
+/// Closes both pipeline queues on drop, so an inference error (or
+/// panic) on the serving thread always releases the batching thread.
+struct CloseOnDrop<'q> {
+    staged: &'q BoundedQueue<StagedBatch>,
+    empties: &'q BoundedQueue<StagedBatch>,
+}
+
+impl Drop for CloseOnDrop<'_> {
+    fn drop(&mut self) {
+        self.staged.close();
+        self.empties.close();
+    }
+}
+
+/// The inference side of the serving loop: ladder dispatch, escalation
+/// queues, completion recording.  Owns every reusable buffer of the
+/// dispatch path (ladder scratch, recycled ladder result, escalation
+/// gather), so the steady state allocates nothing per batch.
+struct Dispatcher<'a> {
+    ladder: &'a Ladder,
+    data: &'a EvalData,
+    metrics: &'a MetricsRegistry,
+    escalation: EscalationPolicy,
+    /// Deferred escalations: one queue of requests per non-first stage
+    /// (index 0 unused).  Only the request is queued — input rows are
+    /// re-gathered from the dataset at flush time, replacing the old
+    /// per-escalation row copy.
+    esc_queues: Vec<Vec<Request>>,
+    completions: Vec<Completion>,
+    /// Every dispatched batch — first-stage or escalation flush — draws
+    /// a fresh id from this counter, so SC keys are never reused.
+    chunk: u32,
+    scratch: LadderScratch,
+    /// Recycled result buffer for `Ladder::infer_batch_into`.
+    ladder_out: LadderBatch,
+    /// Gather buffer for escalation flushes.
+    gather: Vec<f32>,
+}
+
+impl<'a> Dispatcher<'a> {
+    fn new(
+        ladder: &'a Ladder,
+        data: &'a EvalData,
+        metrics: &'a MetricsRegistry,
+        escalation: EscalationPolicy,
+        expected: usize,
+    ) -> Self {
+        Self {
+            ladder,
+            data,
+            metrics,
+            escalation,
+            esc_queues: vec![Vec::new(); ladder.n_stages()],
+            completions: Vec::with_capacity(expected),
+            chunk: 0,
+            scratch: LadderScratch::new(),
+            ladder_out: LadderBatch::empty(),
+            gather: Vec::new(),
+        }
+    }
+
+    /// Dispatch one first-stage batch through the ladder.
+    fn dispatch(&mut self, engine: &mut dyn Backend, items: &[Pending<Request>], x: &[f32]) -> crate::Result<()> {
+        let n = items.len();
+        if n == 0 {
+            return Ok(());
+        }
+        self.chunk += 1;
+        self.metrics.reduced_batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .padded_slots
+            .fetch_add((self.ladder.stages[0].variant.batch - n) as u64, Ordering::Relaxed);
+        match self.escalation {
+            EscalationPolicy::Immediate => {
+                self.ladder.infer_batch_into(engine, x, n, self.chunk, &mut self.scratch, &mut self.ladder_out)?;
+                self.metrics.add_energy_uj(self.ladder_out.energy_uj);
+                // full_batches counts batches that actually reached the
+                // final (full) model; intermediate stages don't qualify.
+                if *self.ladder_out.stage_counts.last().unwrap() > 0 {
+                    self.metrics.full_batches.fetch_add(1, Ordering::Relaxed);
+                }
+                let now = Instant::now();
+                for (i, p) in items.iter().enumerate() {
+                    let lat = now.duration_since(p.payload.submitted);
+                    self.metrics.latency.record(lat);
+                    self.metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
+                    self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    if self.ladder_out.stage[i] > 0 {
+                        self.metrics.escalated.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.completions.push(Completion {
+                        id: p.payload.id,
+                        row: p.payload.row,
+                        pred: self.ladder_out.pred[i],
+                        stage: self.ladder_out.stage[i],
+                        escalated: self.ladder_out.stage[i] > 0,
+                        latency: lat,
+                    });
+                }
+            }
+            EscalationPolicy::Deferred => {
+                let (red, _) = self.ladder.run_stage_scratch(engine, 0, x, n, self.chunk, &mut self.scratch)?;
+                self.metrics.add_energy_uj(n as f64 * self.ladder.stages[0].energy_uj);
+                let now = Instant::now();
+                for (i, p) in items.iter().enumerate() {
+                    // Queue wait is recorded at dispatch under *both*
+                    // policies, so MetricsRegistry::report() stays
+                    // comparable across them.
+                    self.metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
+                    if crate::margin::accepts(red.margin[i], self.ladder.stages[0].threshold) {
+                        let lat = now.duration_since(p.payload.submitted);
+                        self.metrics.latency.record(lat);
+                        self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        self.completions.push(Completion {
+                            id: p.payload.id,
+                            row: p.payload.row,
+                            pred: red.pred[i],
+                            stage: 0,
+                            escalated: false,
+                            latency: lat,
+                        });
+                    } else {
+                        self.esc_queues[1].push(p.payload);
+                    }
+                }
+                engine.recycle_outputs(red);
+                // Flush any stage whose queue holds a full batch; a
+                // flush at stage s may refill queue s+1, so walk down.
+                for s in 1..self.ladder.n_stages() {
+                    while self.esc_queues[s].len() >= self.ladder.stages[s].variant.batch {
+                        let take = self.ladder.stages[s].variant.batch;
+                        self.flush_stage(engine, s, take)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush `take` queued escalations through ladder stage `stage`.
+    /// Completes rows accepted there (or at the final stage) and
+    /// forwards the rest to the next stage's queue.  Draws its own
+    /// chunk id so every flushed batch gets a distinct SC key; padding
+    /// waste is counted (escalation flushes used to be missed by
+    /// `padded_slots`).
+    fn flush_stage(&mut self, engine: &mut dyn Backend, stage: usize, take: usize) -> crate::Result<()> {
+        self.chunk += 1;
+        let key_seed = self.chunk;
+        let mut gather = std::mem::take(&mut self.gather);
+        gather.clear();
+        for i in 0..take {
+            gather.extend_from_slice(self.data.row(self.esc_queues[stage][i].row));
+        }
+        let result = self.ladder.run_stage_scratch(engine, stage, &gather, take, key_seed, &mut self.scratch);
+        self.gather = gather;
+        let (out, waste) = result?;
+        self.metrics.add_energy_uj(take as f64 * self.ladder.stages[stage].energy_uj);
+        self.metrics.padded_slots.fetch_add(waste as u64, Ordering::Relaxed);
+        let last = stage + 1 == self.ladder.n_stages();
+        // full_batches tracks full-model dispatches only;
+        // intermediate-stage flushes get their own named counter so the
+        // report stays honest for N-level ladders.
+        if last {
+            self.metrics.full_batches.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.metrics.bump(&format!("stage{stage}_flushes"), 1);
+        }
+        let now = Instant::now();
+        for i in 0..take {
+            let req = self.esc_queues[stage][i];
+            if last || crate::margin::accepts(out.margin[i], self.ladder.stages[stage].threshold) {
+                let lat = now.duration_since(req.submitted);
+                self.metrics.latency.record(lat);
+                self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.escalated.fetch_add(1, Ordering::Relaxed);
+                self.completions.push(Completion {
+                    id: req.id,
+                    row: req.row,
+                    pred: out.pred[i],
+                    stage,
+                    escalated: true,
+                    latency: lat,
+                });
+            } else {
+                self.esc_queues[stage + 1].push(req);
+            }
+        }
+        self.esc_queues[stage].drain(..take);
+        engine.recycle_outputs(out);
+        Ok(())
+    }
+
+    /// Shutdown drain: flush leftover escalations stage by stage (a
+    /// flush at stage s may push into queue s+1, which is visited
+    /// next).  Each flush draws a fresh chunk id.
+    fn finish(&mut self, engine: &mut dyn Backend) -> crate::Result<()> {
+        for s in 1..self.ladder.n_stages() {
+            while !self.esc_queues[s].is_empty() {
+                let take = self.esc_queues[s].len().min(self.ladder.stages[s].variant.batch);
+                self.flush_stage(engine, s, take)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -127,7 +497,9 @@ pub fn run_serving(
 
 /// Run a serving session: `cfg.requests` requests drawn (with repetition
 /// if needed) from `data`, at `cfg.arrival_rate` req/s Poisson (or
-/// closed-loop when 0), through a calibrated N-level ladder.
+/// closed-loop when 0), through a calibrated N-level ladder — batching
+/// on a dedicated thread, inference on the calling thread, overlapped
+/// through a bounded pipeline.
 pub fn run_serving_ladder(
     engine: &mut dyn Backend,
     ladder: &Ladder,
@@ -168,147 +540,41 @@ pub fn run_serving_ladder(
 
     let metrics = MetricsRegistry::new();
     let policy = BatcherPolicy::new(cfg.batch_size, Duration::from_micros(cfg.batch_timeout_us));
-    let mut batcher: Batcher<Request> = Batcher::new(policy);
-    let n_stages = ladder.n_stages();
-    // Deferred escalations: one queue of (request, gathered row) per
-    // non-first stage (index 0 is unused).
-    let mut esc_queues: Vec<Vec<(Request, Vec<f32>)>> = vec![Vec::new(); n_stages];
-    let mut completions: Vec<Completion> = Vec::with_capacity(n_requests);
-    let mut received = 0usize;
-    // Every dispatched batch — first-stage or escalation flush — draws a
-    // fresh id from this counter, so SC keys are never reused.
-    let mut chunk = 0u32;
+    let mut disp = Dispatcher::new(ladder, data, &metrics, opts.escalation, n_requests);
+    // The fixed set of staging buffers that circulates through the
+    // pipeline for the whole session.
+    let staged: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
+    let empties: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
+    for _ in 0..PIPELINE_DEPTH {
+        let _ = empties.push(StagedBatch::default());
+    }
     let t_start = Instant::now();
-
-    // Helper: dispatch one first-stage batch through the ladder.
-    let dispatch = |batch: crate::coordinator::Batch<Request>,
-                        engine: &mut dyn Backend,
-                        esc_queues: &mut Vec<Vec<(Request, Vec<f32>)>>,
-                        completions: &mut Vec<Completion>,
-                        chunk: &mut u32|
-     -> crate::Result<()> {
-        let n = batch.items.len();
-        let mut x = Vec::with_capacity(n * data.input_dim);
-        for p in &batch.items {
-            x.extend_from_slice(data.row(p.payload.row));
-        }
-        *chunk += 1;
-        metrics.reduced_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        metrics
-            .padded_slots
-            .fetch_add((ladder.stages[0].variant.batch - n) as u64, std::sync::atomic::Ordering::Relaxed);
-        match opts.escalation {
-            EscalationPolicy::Immediate => {
-                let out = ladder.infer_batch(engine, &x, n, *chunk)?;
-                metrics.add_energy_uj(out.energy_uj);
-                // full_batches counts batches that actually reached the
-                // final (full) model; intermediate stages don't qualify.
-                if *out.stage_counts.last().unwrap() > 0 {
-                    metrics.full_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                }
-                let now = Instant::now();
-                for (i, p) in batch.items.iter().enumerate() {
-                    let lat = now.duration_since(p.payload.submitted);
-                    metrics.latency.record(lat);
-                    metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
-                    metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if out.stage[i] > 0 {
-                        metrics.escalated.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    }
-                    completions.push(Completion {
-                        id: p.payload.id,
-                        row: p.payload.row,
-                        pred: out.pred[i],
-                        stage: out.stage[i],
-                        escalated: out.stage[i] > 0,
-                        latency: lat,
-                    });
-                }
-            }
-            EscalationPolicy::Deferred => {
-                let red = ladder.run_stage(engine, 0, &x, n, *chunk)?;
-                metrics.add_energy_uj(n as f64 * ladder.stages[0].energy_uj);
-                let now = Instant::now();
-                for (i, p) in batch.items.iter().enumerate() {
-                    // Queue wait is recorded at dispatch under *both*
-                    // policies, so MetricsRegistry::report() stays
-                    // comparable across them.
-                    metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
-                    if crate::margin::accepts(red.margin[i], ladder.stages[0].threshold) {
-                        let lat = now.duration_since(p.payload.submitted);
-                        metrics.latency.record(lat);
-                        metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        completions.push(Completion {
-                            id: p.payload.id,
-                            row: p.payload.row,
-                            pred: red.pred[i],
-                            stage: 0,
-                            escalated: false,
-                            latency: lat,
-                        });
-                    } else {
-                        esc_queues[1].push((p.payload, data.row(p.payload.row).to_vec()));
-                    }
-                }
-                // Flush any stage whose queue holds a full batch; a
-                // flush at stage s may refill queue s+1, so walk down.
-                for s in 1..n_stages {
-                    while esc_queues[s].len() >= ladder.stages[s].variant.batch {
-                        let take = ladder.stages[s].variant.batch;
-                        flush_stage(engine, ladder, esc_queues, s, take, &metrics, completions, chunk)?;
-                    }
-                }
-            }
+    let input_dim = data.input_dim;
+    let serve_result: crate::Result<()> = std::thread::scope(|s| {
+        let staged_ref = &staged;
+        let empties_ref = &empties;
+        let _batching = s.spawn(move || batching_loop(rx, policy, n_requests, data, staged_ref, empties_ref));
+        // Inference loop on the calling thread; the guard closes the
+        // pipeline on every exit path so the batching thread never
+        // blocks forever.
+        let _guard = CloseOnDrop { staged: &staged, empties: &empties };
+        while let Some(mut batch) = staged.pop() {
+            let n = batch.items.len();
+            let r = disp.dispatch(engine, &batch.items, &batch.x[..n * input_dim]);
+            batch.items.clear();
+            batch.x.clear();
+            let _ = empties.push(batch);
+            r?;
         }
         Ok(())
-    };
-
-    // Main loop: recv with deadline-aware timeout, fire batches.
-    loop {
-        let now = Instant::now();
-        let timeout = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(req) => {
-                batcher.push_at(req, req.submitted.max(now));
-                received += 1;
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Generator finished (or died): flush in ≤ max_batch
-                // chunks and exit.
-                while let Some(batch) = batcher.drain() {
-                    dispatch(batch, engine, &mut esc_queues, &mut completions, &mut chunk)?;
-                }
-                break;
-            }
-        }
-        let now = Instant::now();
-        while let Some(batch) = batcher.try_fire(now) {
-            dispatch(batch, engine, &mut esc_queues, &mut completions, &mut chunk)?;
-        }
-        if received >= n_requests && rx.try_recv().is_err() {
-            // Drain the tail.
-            while let Some(batch) = batcher.drain() {
-                dispatch(batch, engine, &mut esc_queues, &mut completions, &mut chunk)?;
-            }
-            if batcher.is_empty() {
-                break;
-            }
-        }
-    }
-    // Final drain: flush leftover escalations stage by stage (a flush at
-    // stage s may push into queue s+1, which is visited next).  Each
-    // flush draws a fresh chunk id — the old loop passed one id to every
-    // flush, making distinct full-model batches share an SC key.
-    for s in 1..n_stages {
-        while !esc_queues[s].is_empty() {
-            let take = esc_queues[s].len().min(ladder.stages[s].variant.batch);
-            flush_stage(engine, ladder, &mut esc_queues, s, take, &metrics, &mut completions, &mut chunk)?;
-        }
-    }
+    });
+    serve_result?;
+    disp.finish(engine)?;
     gen.join().ok();
 
     let wall = t_start.elapsed();
+    let completions = std::mem::take(&mut disp.completions);
+    let n_stages = ladder.n_stages();
     let mut accuracy = 0.0;
     let mut parity_ok = 0usize;
     let mut stage_fractions = vec![0.0f64; n_stages];
@@ -337,68 +603,15 @@ pub fn run_serving_ladder(
         energy_uj,
         energy_full_uj: completions.len() as f64 * ladder.e_full(),
         p50: metrics.latency.quantile(0.5),
+        p95: metrics.latency.quantile(0.95),
         p99: metrics.latency.quantile(0.99),
         mean_latency: metrics.latency.mean(),
         queue_wait_mean: metrics.queue_wait.mean(),
         queue_wait_samples: metrics.queue_wait.count(),
+        padded_slots: metrics.padded_slots.load(Ordering::Relaxed),
         completions,
         wall,
     })
-}
-
-/// Flush `take` queued escalations through ladder stage `stage`.
-/// Completes rows accepted there (or at the final stage) and forwards
-/// the rest to the next stage's queue.  Draws its own chunk id so every
-/// flushed batch gets a distinct SC key.
-#[allow(clippy::too_many_arguments)]
-fn flush_stage(
-    engine: &mut dyn Backend,
-    ladder: &Ladder,
-    esc_queues: &mut [Vec<(Request, Vec<f32>)>],
-    stage: usize,
-    take: usize,
-    metrics: &MetricsRegistry,
-    completions: &mut Vec<Completion>,
-    chunk: &mut u32,
-) -> crate::Result<()> {
-    *chunk += 1;
-    let key_seed = *chunk;
-    let drained: Vec<_> = esc_queues[stage].drain(..take).collect();
-    let mut x = Vec::with_capacity(take * drained[0].1.len());
-    for (_, row) in &drained {
-        x.extend_from_slice(row);
-    }
-    let out = ladder.run_stage(engine, stage, &x, take, key_seed)?;
-    metrics.add_energy_uj(take as f64 * ladder.stages[stage].energy_uj);
-    let last = stage + 1 == ladder.n_stages();
-    // full_batches tracks full-model dispatches only; intermediate-stage
-    // flushes get their own named counter so the report stays honest for
-    // N-level ladders.
-    if last {
-        metrics.full_batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    } else {
-        metrics.bump(&format!("stage{stage}_flushes"), 1);
-    }
-    let now = Instant::now();
-    for (i, (req, row)) in drained.into_iter().enumerate() {
-        if last || crate::margin::accepts(out.margin[i], ladder.stages[stage].threshold) {
-            let lat = now.duration_since(req.submitted);
-            metrics.latency.record(lat);
-            metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            metrics.escalated.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            completions.push(Completion {
-                id: req.id,
-                row: req.row,
-                pred: out.pred[i],
-                stage,
-                escalated: true,
-                latency: lat,
-            });
-        } else {
-            esc_queues[stage + 1].push((req, row));
-        }
-    }
-    Ok(())
 }
 
 impl ServeReport {
@@ -422,7 +635,7 @@ impl ServeReport {
         format!(
             "served {} requests in {:.2?} ({:.0} req/s)\n\
              accuracy {:.4}{}  escalation {:.2}%  stage mix: {stages}\n\
-             latency mean {:?} p50 {:?} p99 {:?} (queue wait mean {:?})\n\
+             latency mean {:?} p50 {:?} p95 {:?} p99 {:?} (queue wait mean {:?})\n\
              energy {:.1} µJ vs always-full {:.1} µJ -> savings {:.1}%",
             self.completions.len(),
             self.wall,
@@ -432,6 +645,7 @@ impl ServeReport {
             100.0 * self.escalation_fraction,
             self.mean_latency,
             self.p50,
+            self.p95,
             self.p99,
             self.queue_wait_mean,
             self.energy_uj,
@@ -444,6 +658,9 @@ impl ServeReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{Mode, ThresholdPolicy};
+    use crate::coordinator::LadderSpec;
+    use crate::runtime::NativeBackend;
 
     #[test]
     fn report_savings() {
@@ -458,13 +675,132 @@ mod tests {
             energy_uj: 45.0,
             energy_full_uj: 100.0,
             p50: Duration::ZERO,
+            p95: Duration::ZERO,
             p99: Duration::ZERO,
             mean_latency: Duration::ZERO,
             queue_wait_mean: Duration::ZERO,
             queue_wait_samples: 0,
+            padded_slots: 0,
         };
         assert!((r.savings() - 0.55).abs() < 1e-12);
         assert!(r.summary().contains("55.0%"));
         assert!(r.summary().contains("s1 30.0%"));
+    }
+
+    fn fixture_ladder(engine: &mut NativeBackend, threshold: ThresholdPolicy) -> (Ladder, EvalData) {
+        let data = engine.eval_data("fashion_syn").unwrap();
+        let spec = LadderSpec {
+            dataset: "fashion_syn".into(),
+            mode: Mode::Fp,
+            levels: vec![8, 12, 16],
+            batch: 32,
+            threshold,
+            seed: 7,
+        };
+        let ladder = Ladder::calibrate(engine, spec, &data, 64).unwrap();
+        (ladder, data)
+    }
+
+    fn staged_items(data: &EvalData, n: usize) -> (Vec<Pending<Request>>, Vec<f32>) {
+        let t0 = Instant::now();
+        let items: Vec<Pending<Request>> = (0..n)
+            .map(|i| Pending { payload: Request { id: i as u64, row: i, submitted: t0 }, enqueued: t0 })
+            .collect();
+        let mut x = Vec::new();
+        for p in &items {
+            x.extend_from_slice(data.row(p.payload.row));
+        }
+        (items, x)
+    }
+
+    /// Satellite regression: `padded_slots` must count the padding of
+    /// escalation-stage flushes, not just first-stage batches.  With a
+    /// fixed threshold above the margin ceiling every row escalates to
+    /// the end of a 3-level deferred ladder, so a 5-request session
+    /// pads 27 slots at each of the three dispatches.
+    #[test]
+    fn escalation_flush_padding_is_counted() {
+        let mut engine = NativeBackend::synthetic();
+        // Margins are top1-minus-top2 of L2-normalised scores, so they
+        // never exceed sqrt(2): T=2 escalates everything.
+        let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::Fixed(2.0));
+        let metrics = MetricsRegistry::new();
+        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Deferred, 8);
+        let (items, x) = staged_items(&data, 5);
+        disp.dispatch(&mut engine, &items, &x).unwrap();
+        assert_eq!(disp.completions.len(), 0, "nothing accepted at FP8 under T=2");
+        assert_eq!(disp.esc_queues[1].len(), 5);
+        assert_eq!(metrics.padded_slots.load(Ordering::Relaxed), 27, "first-stage padding");
+        disp.finish(&mut engine).unwrap();
+        assert_eq!(disp.completions.len(), 5);
+        assert!(disp.completions.iter().all(|c| c.stage == 2 && c.escalated));
+        // 27 first-stage + 27 at the stage-1 flush + 27 at the stage-2
+        // flush — the two flush paddings were uncounted before.
+        assert_eq!(metrics.padded_slots.load(Ordering::Relaxed), 81);
+        assert_eq!(metrics.full_batches.load(Ordering::Relaxed), 1);
+        assert!(metrics.report().contains("stage1_flushes: 1"), "{}", metrics.report());
+    }
+
+    /// The reusable-dispatch path must serve the same predictions as a
+    /// direct `Ladder::infer_batch` on the same rows and chunk id.
+    #[test]
+    fn immediate_dispatch_matches_ladder_inference() {
+        let mut engine = NativeBackend::synthetic();
+        let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::MMax);
+        let metrics = MetricsRegistry::new();
+        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Immediate, 16);
+        let (items, x) = staged_items(&data, 16);
+        disp.dispatch(&mut engine, &items, &x).unwrap();
+        // Dispatch used chunk id 1.
+        let want = ladder.infer_batch(&mut engine, &x, 16, 1).unwrap();
+        assert_eq!(disp.completions.len(), 16);
+        for (i, c) in disp.completions.iter().enumerate() {
+            assert_eq!(c.pred, want.pred[i], "row {i}");
+            assert_eq!(c.stage, want.stage[i], "row {i}");
+        }
+        // Dispatching a second, different-sized batch reuses the same
+        // buffers and stays correct.
+        let (items2, x2) = staged_items(&data, 7);
+        disp.dispatch(&mut engine, &items2, &x2).unwrap();
+        assert_eq!(disp.completions.len(), 16 + 7);
+        let want2 = ladder.infer_batch(&mut engine, &x2, 7, 2).unwrap();
+        for (i, c) in disp.completions[16..].iter().enumerate() {
+            assert_eq!(c.pred, want2.pred[i], "row {i}");
+        }
+    }
+
+    /// End-to-end pipelined session: every request generated is served
+    /// exactly once (closed-loop flood, small batches — the shape that
+    /// used to lose an in-flight request at shutdown).
+    #[test]
+    fn pipelined_session_serves_every_request() {
+        let mut engine = NativeBackend::synthetic();
+        let data = engine.eval_data("fashion_syn").unwrap();
+        let mut cfg = AriConfig::default();
+        cfg.dataset = "fashion_syn".into();
+        cfg.reduced_level = 8;
+        cfg.requests = 200;
+        cfg.batch_size = 8;
+        cfg.batch_timeout_us = 200;
+        cfg.arrival_rate = 0.0;
+        // Calibrate at a compiled batch size (the fixture manifest has
+        // 32/256); serving at batch_size 8 pads into it.
+        let spec = LadderSpec {
+            dataset: cfg.dataset.clone(),
+            mode: Mode::Fp,
+            levels: vec![8, 16],
+            batch: 32,
+            threshold: ThresholdPolicy::MMax,
+            seed: cfg.seed as u32,
+        };
+        let ladder = Ladder::calibrate(&mut engine, spec, &data, 64).unwrap();
+        let report =
+            run_serving_ladder(&mut engine, &ladder, &cfg, &data, None, ServeOptions::default()).unwrap();
+        assert_eq!(report.completions.len(), 200);
+        let mut ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 200, "every id exactly once");
+        assert!(report.p95 >= report.p50 && report.p99 >= report.p95);
     }
 }

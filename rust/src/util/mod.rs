@@ -3,8 +3,8 @@
 //! The sandbox's vendored crate set has no `rand`, `serde`, `toml` or
 //! `proptest`, so this module carries minimal, well-tested replacements:
 //! a PCG-family PRNG, descriptive statistics, a streaming histogram, a
-//! line-oriented mini-TOML parser, a scoped worker pool and a tiny
-//! property-testing harness.
+//! line-oriented mini-TOML parser, a persistent parked worker pool, a
+//! bounded blocking queue and a tiny property-testing harness.
 
 pub mod benchkit;
 pub mod histogram;
@@ -12,6 +12,7 @@ pub mod minitoml;
 pub mod pool;
 pub mod prng;
 pub mod proptest;
+pub mod queue;
 pub mod stats;
 
 pub use histogram::Histogram;

@@ -1,28 +1,44 @@
-//! Scoped worker pool for sharding batch rows across cores.
+//! Persistent, parked worker pool for sharding batch rows across cores.
 //!
 //! The prepared-plan forward passes ([`crate::mlp::plan`]) are
 //! embarrassingly parallel over batch rows: every row's computation —
 //! kernel accumulation, quantisation epilogue, per-row SC noise stream —
 //! is independent of which worker runs it, so outputs are bit-identical
-//! for **any** shard count.  This module only decides *how many* workers
-//! to use and runs the per-shard jobs on `std::thread::scope` threads
-//! (no dependencies, no long-lived pool: scoped threads let jobs borrow
-//! the caller's buffers directly).
+//! for **any** shard count.  This module decides *how many* workers to
+//! use and runs the per-shard jobs on a **persistent pool**: worker
+//! threads are spawned once per process (first use), parked on a condvar
+//! between batches, and woken per submitted batch.  The old
+//! `std::thread::scope` implementation paid a spawn + join (~tens of µs)
+//! *per forward call* — comparable to a whole reduced-precision batch on
+//! the fixture topologies; waking a parked thread is two orders of
+//! magnitude cheaper.
+//!
+//! Jobs still borrow the caller's buffers directly: [`WorkerPool::run`]
+//! publishes the job vector to the workers by raw pointer and does not
+//! return until every job has finished (and every worker has detached
+//! from the batch), which is the same borrow-safety argument scoped
+//! threads make — the borrows outlive the parallel region because the
+//! submitting call blocks on it.
 //!
 //! Shards are contiguous row ranges of near-equal size.  Per-row work is
 //! uniform (same layer stack for every row), so static partitioning is
-//! within noise of work stealing here while staying allocation- and
-//! unsafe-free; the `ARI_THREADS` environment variable caps (or raises)
-//! the worker count, and `1` forces the serial path.
+//! within noise of work stealing here; the `ARI_THREADS` environment
+//! variable caps (or raises) the worker count, and `1` forces the
+//! serial path (the global pool then has zero workers and every job
+//! runs inline).
 
-use std::sync::OnceLock;
+use std::any::Any;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-/// Rows below which an extra worker is not worth its spawn cost.
+/// Rows below which an extra worker is not worth waking.
 const MIN_ROWS_PER_WORKER: usize = 8;
 
 /// Floating-point-op-equivalents of work below which an extra worker is
-/// not worth its spawn cost (scoped spawn + join is ~tens of µs; a
-/// worker should amortise that many times over).
+/// not worth waking (a condvar wake is ~µs-scale; a worker should still
+/// amortise it many times over).
 const MIN_WORK_PER_WORKER: usize = 256 * 1024;
 
 /// Upper bound on worker threads: hardware parallelism (capped at 16),
@@ -48,10 +64,11 @@ pub fn auto_threads(rows: usize) -> usize {
 }
 
 /// Work-aware worker count: like [`auto_threads`] but also requires
-/// each worker to amortise its spawn cost — at least
+/// each worker to amortise its wake cost — at least
 /// `MIN_WORK_PER_WORKER` flop-equivalents of the `rows *
 /// flops_per_row` total per worker, so tiny models stay on the fast
-/// serial path (spawn + join would otherwise exceed the compute).
+/// serial path (even a parked-pool dispatch would otherwise exceed the
+/// compute).
 pub fn auto_threads_for(rows: usize, flops_per_row: usize) -> usize {
     let by_work = (rows.saturating_mul(flops_per_row) / MIN_WORK_PER_WORKER).max(1);
     auto_threads(rows).min(by_work)
@@ -72,28 +89,290 @@ pub fn shards(rows: usize, threads: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// Run the jobs concurrently on scoped threads.  The first job always
-/// runs inline on the caller's thread (the caller is a worker, not an
-/// idle joiner), so `n` jobs cost `n - 1` spawns; the call returns once
-/// every job has finished.
+/// Run the jobs concurrently on the process-global persistent pool.
+/// The first job always runs inline on the caller's thread (the caller
+/// is a worker, not an idle joiner); the call returns once every job
+/// has finished.  Semantics are identical to the old scoped-spawn
+/// implementation — only the thread lifecycle changed.
 pub fn run_jobs<F: FnOnce() + Send>(jobs: Vec<F>) {
-    let mut jobs = jobs.into_iter();
-    let Some(first) = jobs.next() else { return };
-    if jobs.len() == 0 {
-        first();
-        return;
-    }
-    std::thread::scope(|s| {
-        for job in jobs {
-            s.spawn(job);
+    global().run(jobs)
+}
+
+/// The process-global pool: `max_threads() - 1` parked workers (the
+/// submitting thread is always the remaining worker), created on first
+/// use and parked for the life of the process.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(max_threads().saturating_sub(1)))
+}
+
+/// Type-erased runner: reads job `idx` out of the submitted vector and
+/// runs it, catching panics so the batch always drains (a lost
+/// decrement would deadlock the submitter).
+type RunOne = unsafe fn(*mut (), usize) -> Option<Box<dyn Any + Send>>;
+
+unsafe fn run_erased<F: FnOnce() + Send>(base: *mut (), idx: usize) -> Option<Box<dyn Any + Send>> {
+    // SAFETY: the submitter guarantees `base` points at a live `Vec<F>`
+    // spine of at least `idx + 1` elements, that every index is claimed
+    // exactly once (atomic dispenser), and that the vector's length is
+    // set to 0 before the spine is dropped — so this `read` is the one
+    // and only move of the job.
+    let job: F = unsafe { (base as *mut F).add(idx).read() };
+    panic::catch_unwind(AssertUnwindSafe(move || job())).err()
+}
+
+/// One published batch: an erased view of the submitter's job vector.
+/// Lives on the submitter's stack; workers only dereference it between
+/// registering in `State::active` and deregistering, and the submitter
+/// only returns once `active == 0 && pending == 0`.
+struct BatchDesc {
+    base: *mut (),
+    len: usize,
+    /// Next job index to claim.  Index 0 is reserved for the submitter
+    /// (the caller always works instead of idling in the join).
+    next: AtomicUsize,
+    run_one: RunOne,
+}
+
+/// Raw pointer to the current batch descriptor, sendable to workers.
+#[derive(Clone, Copy)]
+struct BatchPtr(*const BatchDesc);
+// SAFETY: the pointee outlives every dereference (see `BatchDesc`), and
+// the jobs it exposes are `Send` (enforced by `WorkerPool::run`'s
+// bound), so handing the pointer to a worker thread is sound.
+unsafe impl Send for BatchPtr {}
+
+struct State {
+    /// The batch workers should drain, if any.
+    batch: Option<BatchPtr>,
+    /// Bumped once per published batch so a worker never re-enters a
+    /// batch it already drained.
+    epoch: u64,
+    /// Jobs of the current batch not yet finished.
+    pending: usize,
+    /// Workers currently inside the current batch's claim loop.
+    active: usize,
+    /// First panic payload caught in the current batch, if any.
+    panic_payload: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between batches.
+    work_cv: Condvar,
+    /// The submitter parks here until the batch drains.
+    done_cv: Condvar,
+    /// Serialises submitters; try-locked so nested or concurrent `run`
+    /// calls fall back to inline execution instead of deadlocking.
+    submit: Mutex<()>,
+    /// Live worker threads (for leak tests and introspection).
+    live: AtomicUsize,
+}
+
+/// A persistent pool of parked worker threads.  See the module docs;
+/// most code uses the process-global instance via [`run_jobs`].
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked worker threads (0 is valid: every job then
+    /// runs inline on the submitting thread).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                batch: None,
+                epoch: 0,
+                pending: 0,
+                active: 0,
+                panic_payload: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+            live: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            sh.live.fetch_add(1, Ordering::SeqCst);
+            let handle = std::thread::Builder::new()
+                .name(format!("ari-pool-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+            handles.push(handle);
         }
-        first();
-    });
+        Self { shared, handles }
+    }
+
+    /// Number of worker threads this pool was built with.
+    pub fn worker_count(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Worker threads currently alive (equals [`Self::worker_count`]
+    /// until shutdown begins).
+    pub fn live_workers(&self) -> usize {
+        self.shared.live.load(Ordering::SeqCst)
+    }
+
+    /// Run the jobs, first job inline on the caller, the rest drained by
+    /// the parked workers (and by the caller once its own job is done).
+    /// Returns after every job has finished; panics (re-raising the
+    /// first payload) if any job panicked.
+    pub fn run<F: FnOnce() + Send>(&self, mut jobs: Vec<F>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.handles.is_empty() {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        // A second submitter (or a job submitting from inside the pool)
+        // runs inline rather than queueing: the pool's win is parking,
+        // not scheduling depth.
+        let Ok(_submit) = self.shared.submit.try_lock() else {
+            for job in jobs {
+                job();
+            }
+            return;
+        };
+        let desc = BatchDesc {
+            base: jobs.as_mut_ptr() as *mut (),
+            len: n,
+            next: AtomicUsize::new(1),
+            run_one: run_erased::<F>,
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.batch = Some(BatchPtr(&desc));
+            st.epoch = st.epoch.wrapping_add(1);
+            st.pending = n;
+            st.panic_payload = None;
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+        // Job 0 runs here, then the caller joins the claim loop.
+        let mut done = 1usize;
+        // SAFETY: index 0 is reserved for the submitter (`next` starts
+        // at 1), and `jobs` is live for the whole call.
+        let mut first_panic = unsafe { (desc.run_one)(desc.base, 0) };
+        loop {
+            let i = desc.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            // SAFETY: `i` was claimed exactly once by this fetch_add.
+            let p = unsafe { (desc.run_one)(desc.base, i) };
+            if first_panic.is_none() {
+                first_panic = p;
+            }
+            done += 1;
+        }
+        let payload = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.pending -= done;
+            while st.pending > 0 || st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            // Unpublish before returning: `desc` dies with this frame.
+            st.batch = None;
+            let worker_panic = st.panic_payload.take();
+            if first_panic.is_none() {
+                first_panic = worker_panic;
+            }
+            first_panic
+        };
+        // Every job was moved out by `run_one`'s `ptr::read`; drop only
+        // the spine.
+        // SAFETY: all `n` indices were claimed and read exactly once.
+        unsafe { jobs.set_len(0) };
+        if let Some(payload) = payload {
+            // Release the submit lock *before* re-raising: unwinding
+            // while holding it would poison the mutex and silently
+            // degrade every later `run` to the inline fallback.
+            drop(_submit);
+            panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for handle in self.handles.drain(..) {
+            handle.join().ok();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        // Park until there is a fresh batch (or shutdown).
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    shared.live.fetch_sub(1, Ordering::SeqCst);
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(b) = st.batch {
+                        st.active += 1;
+                        break b;
+                    }
+                    // Batch already fully drained and unpublished:
+                    // nothing to do for this epoch.
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Drain jobs.  `desc` stays valid while we are registered in
+        // `active` — the submitter cannot return before `active == 0`.
+        // SAFETY: see `BatchDesc` / `BatchPtr`.
+        let desc = unsafe { &*batch.0 };
+        let mut done = 0usize;
+        let mut panic_payload: Option<Box<dyn Any + Send>> = None;
+        loop {
+            let i = desc.next.fetch_add(1, Ordering::Relaxed);
+            if i >= desc.len {
+                break;
+            }
+            // SAFETY: `i` was claimed exactly once by this fetch_add.
+            let p = unsafe { (desc.run_one)(desc.base, i) };
+            if panic_payload.is_none() {
+                panic_payload = p;
+            }
+            done += 1;
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.pending -= done;
+        st.active -= 1;
+        if panic_payload.is_some() && st.panic_payload.is_none() {
+            st.panic_payload = panic_payload;
+        }
+        if st.pending == 0 && st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn shards_cover_exactly() {
@@ -114,7 +393,6 @@ mod tests {
 
     #[test]
     fn run_jobs_executes_every_job() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
         let hits = AtomicUsize::new(0);
         let jobs: Vec<_> = (0..4)
             .map(|_| {
@@ -148,7 +426,7 @@ mod tests {
     #[test]
     fn work_aware_threads_stay_serial_on_tiny_models() {
         // A fixture-sized forward (32 rows × ~3k flops) must not pay
-        // thread spawns; heavy per-row work may.
+        // pool dispatch; heavy per-row work may.
         assert_eq!(auto_threads_for(32, 3_000), 1);
         assert_eq!(auto_threads_for(1, usize::MAX), 1);
         let heavy = auto_threads_for(256, 4_000_000);
@@ -176,7 +454,7 @@ mod tests {
     #[test]
     fn jobs_can_write_disjoint_slices() {
         // The plan forward's usage pattern: split one buffer, let each
-        // scoped job fill its shard.
+        // job fill its shard through a borrowed &mut.
         let mut buf = vec![0u32; 32];
         {
             let mut rest: &mut [u32] = &mut buf;
@@ -195,5 +473,154 @@ mod tests {
         for (i, &v) in buf.iter().enumerate() {
             assert_eq!(v, i as u32);
         }
+    }
+
+    #[test]
+    fn pool_reused_across_many_batches() {
+        // The persistent-pool contract: many submissions, zero new
+        // threads, every batch complete and correct.
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.worker_count(), 3);
+        for round in 0..50usize {
+            let n_jobs = 1 + round % 6;
+            let hits = AtomicUsize::new(0);
+            let jobs: Vec<_> = (0..n_jobs)
+                .map(|_| {
+                    let hits = &hits;
+                    move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            pool.run(jobs);
+            assert_eq!(hits.load(Ordering::SeqCst), n_jobs, "round {round}");
+            assert_eq!(pool.live_workers(), 3, "round {round}");
+        }
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(4);
+        let shared = Arc::clone(&pool.shared);
+        pool.run((0..8).map(|_| || ()).collect::<Vec<_>>());
+        assert_eq!(shared.live.load(Ordering::SeqCst), 4);
+        drop(pool);
+        assert_eq!(shared.live.load(Ordering::SeqCst), 0, "drop must join every worker");
+    }
+
+    #[test]
+    fn repeated_create_drop_does_not_leak_threads() {
+        for _ in 0..16 {
+            let pool = WorkerPool::new(2);
+            let shared = Arc::clone(&pool.shared);
+            let hits = AtomicUsize::new(0);
+            pool.run(
+                (0..4)
+                    .map(|_| {
+                        let hits = &hits;
+                        move || {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            assert_eq!(hits.load(Ordering::SeqCst), 4);
+            drop(pool);
+            assert_eq!(shared.live.load(Ordering::SeqCst), 0);
+        }
+    }
+
+    #[test]
+    fn nested_run_jobs_falls_back_inline() {
+        // A job that itself submits must not deadlock: the inner submit
+        // sees the submit lock held and runs inline.
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let outer: Vec<_> = (0..2)
+            .map(|_| {
+                let hits = &hits;
+                let pool = &pool;
+                move || {
+                    let inner: Vec<_> = (0..3)
+                        .map(|_| {
+                            move || {
+                                hits.fetch_add(1, Ordering::SeqCst);
+                            }
+                        })
+                        .collect();
+                    pool.run(inner);
+                }
+            })
+            .collect();
+        pool.run(outer);
+        assert_eq!(hits.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = Arc::clone(&pool);
+            let total = Arc::clone(&total);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let local = AtomicUsize::new(0);
+                    let jobs: Vec<_> = (0..4)
+                        .map(|_| {
+                            let local = &local;
+                            move || {
+                                local.fetch_add(1, Ordering::SeqCst);
+                            }
+                        })
+                        .collect();
+                    pool.run(jobs);
+                    total.fetch_add(local.load(Ordering::SeqCst), Ordering::SeqCst);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 20 * 4);
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("boom in job")),
+                Box::new(|| {}),
+            ];
+            pool.run(jobs);
+        }));
+        assert!(caught.is_err(), "job panic must propagate to the submitter");
+        // The submit lock must not be poisoned by the re-raise (that
+        // would silently degrade every later run to the inline path).
+        assert!(pool.shared.submit.try_lock().is_ok(), "submit lock poisoned by propagated panic");
+        // The pool is still functional afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(
+            (0..4)
+                .map(|_| {
+                    let hits = &hits;
+                    move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        assert_eq!(pool.live_workers(), 2);
+    }
+
+    #[test]
+    fn global_pool_sized_by_max_threads() {
+        let pool = global();
+        assert_eq!(pool.worker_count(), max_threads().saturating_sub(1));
+        assert_eq!(pool.live_workers(), pool.worker_count(), "global pool never shuts down");
     }
 }

@@ -1,0 +1,196 @@
+//! A small bounded blocking queue (Mutex + Condvar over a preallocated
+//! ring) for the pipelined serving runtime.
+//!
+//! `std::sync::mpsc` allocates a node per message; this queue never
+//! allocates after construction (the `VecDeque` is sized up front and
+//! pushes are rejected-by-blocking at capacity), which is what lets the
+//! server's staged-batch pipeline claim zero steady-state allocation —
+//! the same fixed set of [`crate::server`] staging buffers circulates
+//! through a pair of these queues for the whole session.
+//!
+//! Semantics: `push` blocks while full and fails only once the queue is
+//! closed; `pop` blocks while empty and returns `None` only once the
+//! queue is closed **and** drained (close never discards queued items).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer blocking queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cap: usize,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue holding at most `cap` items (`cap >= 1`).  The backing
+    /// storage is allocated here, once.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        Self {
+            inner: Mutex::new(Inner { buf: VecDeque::with_capacity(cap), closed: false }),
+            cap,
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Enqueue, blocking while the queue is full.  Returns the item back
+    /// if the queue is (or becomes) closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(item);
+            }
+            if inner.buf.len() < self.cap {
+                inner.buf.push_back(item);
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Dequeue, blocking while the queue is empty and open.  `None`
+    /// means closed *and* fully drained — items queued before `close`
+    /// are always delivered.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.buf.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Close the queue: blocked pushers fail, blocked poppers drain the
+    /// remaining items then get `None`.  Idempotent.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Whether [`Self::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn push_blocks_until_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0usize).unwrap();
+        let q2 = Arc::clone(&q);
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let pushed2 = Arc::clone(&pushed);
+        let h = std::thread::spawn(move || {
+            q2.push(1).unwrap(); // blocks: capacity 1, slot taken
+            pushed2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(pushed.load(Ordering::SeqCst), 0, "push must block while full");
+        assert_eq!(q.pop(), Some(0));
+        h.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.push(3), Err(3), "push after close must fail");
+        assert_eq!(q.pop(), Some(1), "close must not discard queued items");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q = Arc::new(BoundedQueue::<u32>::new(2));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_pusher() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(7u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(8));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(8));
+    }
+
+    #[test]
+    fn buffers_circulate_without_growth() {
+        // The serving pipeline's usage: a fixed set of buffers bouncing
+        // between two queues.
+        let fwd = BoundedQueue::new(2);
+        let back = BoundedQueue::new(2);
+        back.push(Vec::<f32>::with_capacity(64)).unwrap();
+        back.push(Vec::<f32>::with_capacity(64)).unwrap();
+        for round in 0..100 {
+            let mut buf = back.pop().unwrap();
+            buf.clear();
+            buf.push(round as f32);
+            fwd.push(buf).unwrap();
+            let buf = fwd.pop().unwrap();
+            assert_eq!(buf[0], round as f32);
+            assert!(buf.capacity() >= 64);
+            back.push(buf).unwrap();
+        }
+    }
+}

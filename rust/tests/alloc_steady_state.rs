@@ -1,0 +1,126 @@
+//! Allocation-counting hook for the zero-steady-state-allocation
+//! contract (docs/PERF.md): after a short warm-up in which every
+//! reusable buffer reaches its steady capacity — ladder scratch,
+//! recycled ladder result, the backend's recycled output storage, plan
+//! ping-pong scratch — the Immediate dispatch path from batch input to
+//! filled result must perform **zero heap allocations**.
+//!
+//! The counting `#[global_allocator]` lives in its own test binary with
+//! a single `#[test]`, so no concurrent test can allocate inside the
+//! counting window.  Fixture-sized models run on the serial path (the
+//! pool's work gate), which is exactly the configuration this pins; the
+//! threaded path adds two small bounded per-call Vecs (documented in
+//! PERF.md, not covered here).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use ari::config::{Mode, ThresholdPolicy};
+use ari::coordinator::{Ladder, LadderBatch, LadderScratch, LadderSpec};
+use ari::runtime::{Backend, NativeBackend};
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn ladder_for(engine: &mut NativeBackend, data: &ari::data::EvalData, threshold: ThresholdPolicy) -> Ladder {
+    let spec = LadderSpec {
+        dataset: "fashion_syn".into(),
+        mode: Mode::Fp,
+        levels: vec![8, 16],
+        batch: 32,
+        threshold,
+        seed: 3,
+    };
+    Ladder::calibrate(engine, spec, data, 64).unwrap()
+}
+
+/// Warm four batches, then assert the next eight identical batches
+/// allocate nothing and keep identical predictions.
+fn assert_steady_state_allocation_free(
+    engine: &mut NativeBackend,
+    ladder: &Ladder,
+    x: &[f32],
+    n: usize,
+    label: &str,
+) {
+    let mut scratch = LadderScratch::new();
+    let mut out = LadderBatch::empty();
+    // Warm-up: scratch/result/recycle-pool capacities stabilise (the
+    // FP path is chunk-independent, so every round does identical work
+    // and sizes).
+    for chunk in 1..5u32 {
+        ladder.infer_batch_into(engine, x, n, chunk, &mut scratch, &mut out).unwrap();
+    }
+    let want_pred = out.pred.clone();
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for chunk in 5..13u32 {
+        ladder.infer_batch_into(engine, x, n, chunk, &mut scratch, &mut out).unwrap();
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+
+    assert_eq!(out.pred, want_pred, "{label}: steady-state results must stay identical");
+    assert_eq!(
+        ALLOCS.load(Ordering::SeqCst),
+        0,
+        "{label}: steady-state Immediate dispatch (batch in -> ladder result) must not allocate"
+    );
+}
+
+#[test]
+fn steady_state_immediate_dispatch_is_allocation_free() {
+    // Build and warm everything OUTSIDE the counting windows.
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+
+    // Calibrated threshold, full compiled batch: the common serving
+    // shape (whatever mix of accepts/escalations MMax yields).
+    let mmax = ladder_for(&mut engine, &data, ThresholdPolicy::MMax);
+    let x = data.rows(0, 32).to_vec();
+    assert_steady_state_allocation_free(&mut engine, &mmax, &x, 32, "MMax full batch");
+
+    // Margins never exceed sqrt(2), so T=2 escalates every row: the
+    // gather path definitely runs; n=20 < 32 also exercises the padded
+    // staging on both the first stage and the escalation chunk.
+    let escalate_all = ladder_for(&mut engine, &data, ThresholdPolicy::Fixed(2.0));
+    let x20 = data.rows(0, 20).to_vec();
+    let mut probe = LadderBatch::empty();
+    escalate_all
+        .infer_batch_into(&mut engine, &x20, 20, 0, &mut LadderScratch::new(), &mut probe)
+        .unwrap();
+    assert_eq!(probe.stage_counts[1], 20, "T=2 must escalate every row");
+    assert_steady_state_allocation_free(&mut engine, &escalate_all, &x20, 20, "escalate-all partial batch");
+}

@@ -18,7 +18,7 @@ use ari::runtime::fixture::{self, FixtureSpec};
 use ari::runtime::{Backend, NativeBackend};
 use ari::sc::ScConfig;
 use ari::tensor::{available_backends, matmul_strided_with, Matrix, SimdBackend};
-use ari::util::Pcg64;
+use ari::util::{pool, Pcg64};
 
 /// Shapes that straddle the kernel's MR×NR tile edges.
 const SHAPES: [(usize, usize, usize); 8] =
@@ -144,7 +144,7 @@ fn fp_outputs_invariant_to_worker_pool_size() {
     let x = eval.rows(0, batch).to_vec();
     let plan = FpPlan::new(&weights, FpFormat::fp(10));
     let base = plan.forward(&x, batch, &mut Scratch::new(), 1);
-    for threads in [2usize, 3, 4, 7] {
+    for threads in [2usize, 3, 4, 7, 8] {
         let got = plan.forward(&x, batch, &mut Scratch::new(), threads);
         assert_eq!(got.scores.data, base.scores.data, "threads={threads}");
         assert_eq!(got.pred, base.pred, "threads={threads}");
@@ -164,7 +164,7 @@ fn sc_outputs_invariant_to_worker_pool_size() {
     for level in [64usize, 512] {
         let plan = ScPlan::new(&weights, ScConfig::new(level));
         let base = plan.forward(&x, batch, 99, &mut Scratch::new(), 1);
-        for threads in [2usize, 4] {
+        for threads in [2usize, 4, 8] {
             let got = plan.forward(&x, batch, 99, &mut Scratch::new(), threads);
             assert_eq!(got.scores.data, base.scores.data, "L={level} threads={threads}");
             assert_eq!(got.pred, base.pred);
@@ -283,6 +283,62 @@ fn sc_layer_major_forward_bit_identical_to_row_major_reference() {
             let got = plan.forward(&x, batch, 1234, &mut Scratch::new(), threads);
             assert_eq!(got.scores.data, want.data, "L={level} threads={threads}");
         }
+    }
+}
+
+/// Persistent-pool pin: many forwards through the process-global
+/// parked pool — across pool sizes (1/2/4/8), batch sizes and plan
+/// kinds, interleaved — every one bit-identical to the serial path,
+/// and the pool neither grows nor loses workers.
+#[test]
+fn persistent_pool_reuse_is_bit_identical_across_sizes() {
+    let (mut backend, eval) = fixture_backend();
+    backend.load_dataset("par").unwrap();
+    let weights = backend.weights("par").unwrap().clone();
+    let fp = FpPlan::new(&weights, FpFormat::fp(10));
+    let sc = ScPlan::new(&weights, ScConfig::new(256));
+    let fp_base = fp.forward(eval.rows(0, 256), 256, &mut Scratch::new(), 1);
+    let sc_base = sc.forward(eval.rows(0, 32), 32, 77, &mut Scratch::new(), 1);
+    let workers_before = pool::global().live_workers();
+    let mut fp_scratch = Scratch::new();
+    let mut sc_scratch = Scratch::new();
+    for round in 0..6 {
+        for threads in [1usize, 2, 4, 8] {
+            let got = fp.forward(eval.rows(0, 256), 256, &mut fp_scratch, threads);
+            assert_eq!(got.scores.data, fp_base.scores.data, "FP round={round} threads={threads}");
+            let got = sc.forward(eval.rows(0, 32), 32, 77, &mut sc_scratch, threads);
+            assert_eq!(got.scores.data, sc_base.scores.data, "SC round={round} threads={threads}");
+        }
+        // Interleave a different batch size through the same scratch
+        // (FP rows are independent, so the first 32 rows' scores match
+        // the big-batch forward exactly).
+        let got = fp.forward(eval.rows(0, 32), 32, &mut fp_scratch, 4);
+        let cols = fp_base.scores.cols;
+        assert_eq!(got.scores.data, &fp_base.scores.data[..32 * cols], "FP small round={round}");
+    }
+    assert_eq!(pool::global().live_workers(), workers_before, "pool reuse must not spawn or lose threads");
+}
+
+/// Backends share the process-global parked pool: creating, executing
+/// on and dropping many backends spawns no threads beyond the fixed
+/// pool (the old scoped implementation spawned and joined per call).
+#[test]
+fn backend_create_drop_does_not_leak_threads() {
+    let workers = pool::global().live_workers();
+    assert_eq!(workers, pool::global().worker_count());
+    assert!(pool::global().worker_count() <= pool::max_threads());
+    let reference = {
+        let (mut backend, eval) = fixture_backend();
+        let v = backend.manifest().variant("par", VariantKind::Fp, 10, 32).unwrap().clone();
+        backend.execute(&v, eval.rows(0, 32), None).unwrap().scores
+    };
+    for round in 0..8 {
+        let (mut backend, eval) = fixture_backend();
+        let v = backend.manifest().variant("par", VariantKind::Fp, 10, 32).unwrap().clone();
+        let out = backend.execute(&v, eval.rows(0, 32), None).unwrap();
+        assert_eq!(out.scores, reference, "round {round}");
+        // backend drops here; the global pool must be unaffected.
+        assert_eq!(pool::global().live_workers(), workers, "round {round}");
     }
 }
 

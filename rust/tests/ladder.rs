@@ -15,7 +15,7 @@
 //! a fixed seed.
 
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
-use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy, Ladder, LadderSpec};
+use ari::coordinator::{Cascade, CascadeSpec, EscalationPolicy, Ladder, LadderBatch, LadderScratch, LadderSpec};
 use ari::data::{EvalData, VariantRef};
 use ari::margin::{accepts, Calibration};
 use ari::runtime::{Backend, NativeBackend};
@@ -158,6 +158,50 @@ fn three_level_ladder_serves_under_both_policies() {
     // FP serving is deterministic: both policies route the same rows to
     // the same final stages.
     assert_eq!(fractions[0], fractions[1]);
+}
+
+/// The serving hot path's scratch/reuse variants must be bit-identical
+/// to the allocating paths: `infer_batch_into` (recycled result +
+/// gather scratch, output recycling through the engine) against
+/// `infer_batch`, and `run_stage_scratch` (scratch-staged padding)
+/// against `run_stage` — FP and SC, across reused-buffer batches.
+#[test]
+fn scratch_serving_path_bit_identical_to_allocating_path() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    for (mode, levels) in [(Mode::Fp, vec![8usize, 12, 16]), (Mode::Sc, vec![128, 512])] {
+        let ladder = Ladder::calibrate(
+            &mut engine,
+            spec("fashion_syn", mode, levels, ThresholdPolicy::MMax),
+            &data,
+            128,
+        )
+        .unwrap();
+        let mut scratch = LadderScratch::new();
+        let mut reused = LadderBatch::empty();
+        for (chunk, lo) in [(1u32, 0usize), (2, 32), (3, 64)] {
+            let n = 32;
+            let x = data.rows(lo, lo + n);
+            let want = ladder.infer_batch(&mut engine, x, n, chunk).unwrap();
+            ladder.infer_batch_into(&mut engine, x, n, chunk, &mut scratch, &mut reused).unwrap();
+            assert_eq!(reused.pred, want.pred, "{mode:?} chunk={chunk}");
+            assert_eq!(reused.margin, want.margin, "{mode:?} chunk={chunk}");
+            assert_eq!(reused.stage, want.stage, "{mode:?} chunk={chunk}");
+            assert_eq!(reused.stage_counts, want.stage_counts, "{mode:?} chunk={chunk}");
+            assert_eq!(reused.first_pred, want.first_pred, "{mode:?} chunk={chunk}");
+            assert_eq!(reused.energy_uj.to_bits(), want.energy_uj.to_bits(), "{mode:?} chunk={chunk}");
+        }
+        // Partial batch through the scratch stage runner: same zero
+        // padding, same key, same truncation as run_stage/run_padded.
+        let x = data.rows(0, 20);
+        let (a, waste) = ladder.run_stage_scratch(&mut engine, 1, x, 20, 9, &mut scratch).unwrap();
+        let b = ladder.run_stage(&mut engine, 1, x, 20, 9).unwrap();
+        assert_eq!(waste, 12, "{mode:?}");
+        assert_eq!(a.scores, b.scores, "{mode:?}");
+        assert_eq!(a.pred, b.pred, "{mode:?}");
+        assert_eq!(a.margin, b.margin, "{mode:?}");
+        assert_eq!(a.batch, 20);
+    }
 }
 
 #[test]

@@ -87,6 +87,45 @@ fn queue_wait_recorded_under_both_policies() {
     }
 }
 
+/// Regression for the lossy shutdown check: the old serving loop's
+/// `received >= n_requests && rx.try_recv().is_err()` exit *consumed* —
+/// and silently dropped — any request `try_recv` happened to return, so
+/// a flooded channel near shutdown could lose a request.  The
+/// restructured loop pushes everything `try_recv` returns; flood the
+/// channel (closed loop, no pacing, deadline-heavy batching) repeatedly
+/// and assert conservation every time.
+#[test]
+fn shutdown_flood_never_drops_requests() {
+    for round in 0..3u64 {
+        let mut cfg = base_cfg();
+        cfg.requests = 512;
+        cfg.arrival_rate = 0.0;
+        cfg.batch_timeout_us = 100;
+        cfg.seed = 1000 + round;
+        let report = serve_with(&cfg, ServeOptions::default());
+        assert_eq!(report.completions.len(), cfg.requests, "round {round} lost requests");
+        let mut ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), cfg.requests, "round {round} duplicated or dropped ids");
+    }
+}
+
+/// The padding counter covers every dispatch shape: with the compiled
+/// batch at 32 and deadline-fired partial batches, padded_slots must be
+/// consistent with what was served (n_batches * 32 - requests for a
+/// 2-level Immediate session where only first-stage batches pad —
+/// escalation chunks inside `infer_batch` are internal to the ladder).
+#[test]
+fn padded_slots_reported() {
+    let mut cfg = base_cfg();
+    cfg.requests = 40; // not a multiple of 32: the drain pads
+    let report = serve_with(&cfg, ServeOptions::default());
+    assert_eq!(report.completions.len(), 40);
+    assert!(report.padded_slots > 0, "a 40-request session must pad at least one batch");
+    assert_eq!(report.padded_slots % 8, 0, "padding is a whole number of empty slots: 32k - 40");
+}
+
 #[test]
 fn tiny_batch_timeout_works() {
     let mut cfg = base_cfg();
