@@ -151,7 +151,15 @@ impl<T> Batcher<T> {
         if self.queue.is_empty() {
             return None;
         }
-        let take = self.queue.len().min(self.policy.max_batch);
+        // `unchunked-drain` reintroduces the historical unchunked drain
+        // (arbitrarily large shutdown batches) so the model suite can
+        // prove its chunk-bound invariant catches it.  Test-only; the
+        // fault switch is compiled out of release builds.
+        let take = if crate::util::sim::fault("unchunked-drain") {
+            self.queue.len()
+        } else {
+            self.queue.len().min(self.policy.max_batch)
+        };
         out.clear();
         out.extend(self.queue.drain(..take));
         Some(FireReason::Drain)

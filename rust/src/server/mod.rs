@@ -50,6 +50,7 @@ use crate::data::EvalData;
 use crate::metrics::MetricsRegistry;
 use crate::runtime::Backend;
 use crate::util::queue::BoundedQueue;
+use crate::util::sim;
 use crate::util::Pcg64;
 
 /// Staged batches in flight between the batching thread and the
@@ -148,11 +149,92 @@ impl Default for ServeOptions {
 /// A batch staged for inference: the fired requests plus their input
 /// rows gathered contiguously.  A fixed set of these circulates
 /// between the batching thread and the inference loop, so the steady
-/// state stages batches into already-sized buffers.
+/// state stages batches into already-sized buffers.  `doc(hidden)`-pub
+/// so the model suites (`tests/model_server.rs`) can drive
+/// [`batching_loop`] directly under the sim harness.
+#[doc(hidden)]
 #[derive(Default)]
-struct StagedBatch {
-    items: Vec<Pending<Request>>,
-    x: Vec<f32>,
+pub struct StagedBatch {
+    /// Requests fired into this batch, arrival order.
+    pub items: Vec<Pending<Request>>,
+    /// Their input rows, gathered contiguously.
+    pub x: Vec<f32>,
+}
+
+/// What one arrival-loop receive produced.  Mirrors
+/// `mpsc::RecvTimeoutError` so [`batching_loop`] can run against the
+/// real channel or the sim harness's virtual-time channel.
+#[doc(hidden)]
+#[derive(Debug)]
+pub enum SourceRecv {
+    /// A request arrived.
+    Req(Request),
+    /// The timeout elapsed with no request.
+    Timeout,
+    /// Every sender is gone.
+    Disconnected,
+}
+
+/// The arrival loop's view of the request channel.  The production
+/// impl is `mpsc::Receiver<Request>`; dev/test builds also implement
+/// it for [`sim::SimReceiver`] so model tests can enumerate arrival /
+/// deadline / shutdown interleavings deterministically.
+#[doc(hidden)]
+pub trait RequestSource {
+    /// Receive with a timeout.
+    fn recv_timeout(&mut self, timeout: Duration) -> SourceRecv;
+    /// Non-blocking receive; `None` for empty *or* disconnected (only
+    /// used on the shutdown tail-drain path).
+    fn try_recv(&mut self) -> Option<Request>;
+}
+
+impl RequestSource for mpsc::Receiver<Request> {
+    fn recv_timeout(&mut self, timeout: Duration) -> SourceRecv {
+        match mpsc::Receiver::recv_timeout(self, timeout) {
+            Ok(req) => SourceRecv::Req(req),
+            Err(mpsc::RecvTimeoutError::Timeout) => SourceRecv::Timeout,
+            Err(mpsc::RecvTimeoutError::Disconnected) => SourceRecv::Disconnected,
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<Request> {
+        mpsc::Receiver::try_recv(self).ok()
+    }
+}
+
+#[cfg(any(debug_assertions, feature = "sim"))]
+impl RequestSource for sim::SimReceiver<Request> {
+    fn recv_timeout(&mut self, timeout: Duration) -> SourceRecv {
+        match sim::SimReceiver::recv_timeout(self, timeout) {
+            sim::SimRecv::Item(req) => SourceRecv::Req(req),
+            sim::SimRecv::Timeout => SourceRecv::Timeout,
+            sim::SimRecv::Disconnected => SourceRecv::Disconnected,
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<Request> {
+        sim::SimReceiver::try_recv(self)
+    }
+}
+
+/// Clock the arrival loop stamps enqueues and deadlines with.  The
+/// production impl is [`StdClock`]; model tests substitute the sim
+/// harness's virtual clock so batcher deadlines fire deterministically.
+#[doc(hidden)]
+pub trait ServeClock {
+    /// Current time.
+    fn now(&self) -> Instant;
+}
+
+/// The real clock: `Instant::now()`.
+#[doc(hidden)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StdClock;
+
+impl ServeClock for StdClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
 }
 
 /// Gather the staged requests' input rows into the batch's reusable
@@ -170,9 +252,10 @@ fn stage_rows(data: &EvalData, buf: &mut StagedBatch) {
 /// pipeline push may block on backpressure, and a stale timestamp
 /// would both mis-stamp later enqueues and stretch the next recv
 /// deadline by up to a full `max_wait`.
-fn fire_ready(
+fn fire_ready<C: ServeClock>(
     batcher: &mut Batcher<Request>,
     now: &mut Instant,
+    clock: &C,
     data: &EvalData,
     staged: &BoundedQueue<StagedBatch>,
     empties: &BoundedQueue<StagedBatch>,
@@ -187,7 +270,7 @@ fn fire_ready(
         if staged.push(buf).is_err() {
             return false;
         }
-        *now = Instant::now();
+        *now = clock.now();
     }
     true
 }
@@ -215,15 +298,25 @@ fn flush_batcher(
 
 /// The batching thread's arrival loop: receive requests, fire batches
 /// by size/deadline, stage their rows, and hand them to the inference
-/// loop.  One `Instant::now()` per arrival iteration stamps the
+/// loop.  One `clock.now()` per arrival iteration stamps the
 /// enqueue and drives every deadline check (the old loop took several
 /// per request), plus one restamp per dispatched batch — the pipeline
 /// push can block on backpressure (see [`fire_ready`]).  On shutdown
 /// no request is ever discarded: when the expected count has been
 /// produced, the channel is drained with `try_recv` and every returned
 /// request is *pushed* (the old check dropped one).
-fn batching_loop(
-    rx: mpsc::Receiver<Request>,
+///
+/// Generic over the request source and clock ([`RequestSource`],
+/// [`ServeClock`]) so `tests/model_server.rs` can run the *same* loop
+/// body against the sim harness's channel and virtual clock; the
+/// production instantiation is `mpsc::Receiver<Request>` + [`StdClock`]
+/// and monomorphises to exactly the old code.  The
+/// `lossy-shutdown-drain` fault (dev/test builds only) re-introduces
+/// the historical lossy shutdown exit for the mutation suite.
+#[doc(hidden)]
+pub fn batching_loop<S: RequestSource, C: ServeClock>(
+    mut rx: S,
+    clock: &C,
     policy: BatcherPolicy,
     n_requests: usize,
     data: &EvalData,
@@ -232,27 +325,29 @@ fn batching_loop(
 ) {
     let mut batcher: Batcher<Request> = Batcher::new(policy);
     let mut received = 0usize;
-    let mut now = Instant::now();
+    let mut now = clock.now();
     loop {
         if staged.is_closed() {
             break;
         }
         let timeout = batcher.next_deadline(now).unwrap_or(IDLE_POLL);
         match rx.recv_timeout(timeout) {
-            Ok(req) => {
-                now = Instant::now();
+            SourceRecv::Req(req) => {
+                now = clock.now();
                 batcher.push_at(req, now);
                 received += 1;
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => now = Instant::now(),
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
+            SourceRecv::Timeout => now = clock.now(),
+            SourceRecv::Disconnected => {
                 // Generator finished (or died): flush in <= max_batch
                 // chunks and exit.
-                flush_batcher(&mut batcher, data, staged, empties);
+                if !sim::fault("lossy-shutdown-drain") {
+                    flush_batcher(&mut batcher, data, staged, empties);
+                }
                 break;
             }
         }
-        if !fire_ready(&mut batcher, &mut now, data, staged, empties) {
+        if !fire_ready(&mut batcher, &mut now, clock, data, staged, empties) {
             break;
         }
         if received >= n_requests {
@@ -261,12 +356,14 @@ fn batching_loop(
             // tail gets a fresh stamp — these requests were submitted
             // after the loop's `now`, and a stale stamp would record
             // zero queue wait (enqueued < submitted saturates).
-            now = Instant::now();
-            while let Ok(req) = rx.try_recv() {
+            now = clock.now();
+            while let Some(req) = rx.try_recv() {
                 batcher.push_at(req, now);
                 received += 1;
             }
-            flush_batcher(&mut batcher, data, staged, empties);
+            if !sim::fault("lossy-shutdown-drain") {
+                flush_batcher(&mut batcher, data, staged, empties);
+            }
             break;
         }
     }
@@ -341,6 +438,8 @@ impl<'a> Dispatcher<'a> {
             return Ok(());
         }
         self.chunk += 1;
+        sim::probe("sc_key", self.chunk as u64, 0);
+        sim::probe("dispatch", n as u64, self.ladder.stages[0].variant.batch as u64);
         self.metrics.reduced_batches.fetch_add(1, Ordering::Relaxed);
         self.metrics
             .padded_slots
@@ -420,7 +519,12 @@ impl<'a> Dispatcher<'a> {
     /// `padded_slots`).
     fn flush_stage(&mut self, engine: &mut dyn Backend, stage: usize, take: usize) -> crate::Result<()> {
         self.chunk += 1;
-        let key_seed = self.chunk;
+        // `sc-key-reuse` (dev/test builds only) pins every flush to key
+        // 1, re-introducing the historical shared-SC-key bug for the
+        // mutation suite.
+        let key_seed = if sim::fault("sc-key-reuse") { 1 } else { self.chunk };
+        sim::probe("sc_key", key_seed as u64, 1);
+        sim::probe("flush", stage as u64, take as u64);
         let mut gather = std::mem::take(&mut self.gather);
         gather.clear();
         for i in 0..take {
@@ -430,7 +534,12 @@ impl<'a> Dispatcher<'a> {
         self.gather = gather;
         let (out, waste) = result?;
         self.metrics.add_energy_uj(take as f64 * self.ladder.stages[stage].energy_uj);
-        self.metrics.padded_slots.fetch_add(waste as u64, Ordering::Relaxed);
+        // `padded-slots-first-stage-only` (dev/test builds only) skips
+        // the flush-side count, re-introducing the historical
+        // first-stage-only accounting for the mutation suite.
+        if !sim::fault("padded-slots-first-stage-only") {
+            self.metrics.padded_slots.fetch_add(waste as u64, Ordering::Relaxed);
+        }
         let last = stage + 1 == self.ladder.n_stages();
         // full_batches tracks full-model dispatches only;
         // intermediate-stage flushes get their own named counter so the
@@ -553,7 +662,8 @@ pub fn run_serving_ladder(
     let serve_result: crate::Result<()> = std::thread::scope(|s| {
         let staged_ref = &staged;
         let empties_ref = &empties;
-        let _batching = s.spawn(move || batching_loop(rx, policy, n_requests, data, staged_ref, empties_ref));
+        let _batching =
+            s.spawn(move || batching_loop(rx, &StdClock, policy, n_requests, data, staged_ref, empties_ref));
         // Inference loop on the calling thread; the guard closes the
         // pipeline on every exit path so the batching thread never
         // blocks forever.
@@ -652,6 +762,88 @@ impl ServeReport {
             self.energy_full_uj,
             100.0 * self.savings(),
         )
+    }
+}
+
+/// Deterministic single-threaded drivers for the dispatcher, used by
+/// the model suites (`tests/model_server.rs`, `tests/model_mutations.rs`)
+/// to check SC-key uniqueness and padding exactness without running a
+/// full pipelined session.  Dev/test builds only — compiled out of
+/// release binaries alongside the sim harness.
+#[cfg(any(debug_assertions, feature = "sim"))]
+#[doc(hidden)]
+pub mod model {
+    use super::*;
+
+    /// Everything a model test needs after a deferred-policy session:
+    /// the completions plus the probe-derived dispatch bookkeeping.
+    pub struct DeferredSession {
+        /// Completions in completion order.
+        pub completions: Vec<Completion>,
+        /// Final `padded_slots` metric.
+        pub padded_slots: u64,
+        /// Every SC chunk key drawn, in draw order.
+        pub sc_keys: Vec<u64>,
+        /// `(stage, take)` per escalation flush.
+        pub flushes: Vec<(u64, u64)>,
+        /// `(n, compiled_batch)` per first-stage dispatch.
+        pub dispatches: Vec<(u64, u64)>,
+    }
+
+    /// Run `batches` (lists of dataset row indices) through a
+    /// deferred-escalation dispatcher exactly as the serving loop
+    /// would — same `dispatch`/`flush_stage`/`finish` code — then
+    /// collect the probe stream.
+    pub fn drive_deferred(
+        engine: &mut dyn Backend,
+        ladder: &Ladder,
+        data: &EvalData,
+        batches: &[Vec<usize>],
+    ) -> crate::Result<DeferredSession> {
+        let metrics = MetricsRegistry::new();
+        let mut disp = Dispatcher::new(ladder, data, &metrics, EscalationPolicy::Deferred, 64);
+        let t0 = Instant::now();
+        let mut next_id = 0u64;
+        let mut x = Vec::new();
+        sim::begin_probes();
+        let run = (|| -> crate::Result<()> {
+            for rows in batches {
+                let items: Vec<Pending<Request>> = rows
+                    .iter()
+                    .map(|&row| {
+                        let req = Request { id: next_id, row, submitted: t0 };
+                        next_id += 1;
+                        Pending { payload: req, enqueued: t0 }
+                    })
+                    .collect();
+                x.clear();
+                for p in &items {
+                    x.extend_from_slice(data.row(p.payload.row));
+                }
+                disp.dispatch(engine, &items, &x)?;
+            }
+            disp.finish(engine)
+        })();
+        let probes = sim::end_probes();
+        run?;
+        let mut sc_keys = Vec::new();
+        let mut flushes = Vec::new();
+        let mut dispatches = Vec::new();
+        for p in &probes {
+            match p.tag {
+                "sc_key" => sc_keys.push(p.a),
+                "flush" => flushes.push((p.a, p.b)),
+                "dispatch" => dispatches.push((p.a, p.b)),
+                _ => {}
+            }
+        }
+        Ok(DeferredSession {
+            completions: std::mem::take(&mut disp.completions),
+            padded_slots: metrics.padded_slots.load(Ordering::Relaxed),
+            sc_keys,
+            flushes,
+            dispatches,
+        })
     }
 }
 

@@ -4,7 +4,9 @@
 //! `proptest`, so this module carries minimal, well-tested replacements:
 //! a PCG-family PRNG, descriptive statistics, a streaming histogram, a
 //! line-oriented mini-TOML parser, a persistent parked worker pool, a
-//! bounded blocking queue and a tiny property-testing harness.
+//! bounded blocking queue, a tiny property-testing harness and a
+//! deterministic-interleaving scheduler ([`sim`]) the concurrency
+//! primitives are checked under.
 
 pub mod benchkit;
 pub mod histogram;
@@ -13,6 +15,7 @@ pub mod pool;
 pub mod prng;
 pub mod proptest;
 pub mod queue;
+pub mod sim;
 pub mod stats;
 
 pub use histogram::Histogram;

@@ -27,11 +27,11 @@
 //! serial path (the global pool then has zero workers and every job
 //! runs inline).
 
+use crate::util::sim::{self, Condvar, Mutex, Thread};
 use std::any::Any;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread::JoinHandle;
+use std::sync::{Arc, OnceLock};
 
 /// Rows below which an extra worker is not worth waking.
 const MIN_ROWS_PER_WORKER: usize = 8;
@@ -118,7 +118,10 @@ unsafe fn run_erased<F: FnOnce() + Send>(base: *mut (), idx: usize) -> Option<Bo
     // set to 0 before the spine is dropped — so this `read` is the one
     // and only move of the job.
     let job: F = unsafe { (base as *mut F).add(idx).read() };
-    panic::catch_unwind(AssertUnwindSafe(move || job())).err()
+    // `sim::catching`, not a bare catch_unwind: the panic is handled
+    // right here (stored, batch keeps draining), so under the model
+    // harness it must not abort the running schedule.
+    sim::catching(move || job()).err()
 }
 
 /// One published batch: an erased view of the submitter's job vector.
@@ -172,9 +175,16 @@ struct Shared {
 
 /// A persistent pool of parked worker threads.  See the module docs;
 /// most code uses the process-global instance via [`run_jobs`].
+///
+/// Synchronisation (state mutex, park/done condvars, spawn/join) goes
+/// through [`crate::util::sim`], so dedicated pool instances can be
+/// driven under the deterministic-interleaving harness
+/// (`tests/model_pool.rs`); in release builds the wrappers are the std
+/// primitives.  The **global** pool must never be used from inside a
+/// schedule — model tests construct their own instances.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Vec<Thread>,
 }
 
 impl WorkerPool {
@@ -199,10 +209,7 @@ impl WorkerPool {
         for i in 0..workers {
             let sh = Arc::clone(&shared);
             sh.live.fetch_add(1, Ordering::SeqCst);
-            let handle = std::thread::Builder::new()
-                .name(format!("ari-pool-{i}"))
-                .spawn(move || worker_loop(sh))
-                .expect("spawn pool worker");
+            let handle = sim::spawn_thread(format!("ari-pool-{i}"), move || worker_loop(sh)).expect("spawn pool worker");
             handles.push(handle);
         }
         Self { shared, handles }
@@ -264,6 +271,9 @@ impl WorkerPool {
         // at 1), and `jobs` is live for the whole call.
         let mut first_panic = unsafe { (desc.run_one)(desc.base, 0) };
         loop {
+            // Scheduling point: under the sim harness the claim race
+            // between the submitter and every worker is enumerable.
+            sim::yield_point();
             let i = desc.next.fetch_add(1, Ordering::Relaxed);
             if i >= n {
                 break;
@@ -346,6 +356,9 @@ fn worker_loop(shared: Arc<Shared>) {
         let mut done = 0usize;
         let mut panic_payload: Option<Box<dyn Any + Send>> = None;
         loop {
+            // Scheduling point: under the sim harness the claim race
+            // between the submitter and every worker is enumerable.
+            sim::yield_point();
             let i = desc.next.fetch_add(1, Ordering::Relaxed);
             if i >= desc.len {
                 break;

@@ -44,29 +44,113 @@ impl Config {
     }
 }
 
-/// Run `prop` against `config.cases` seeded RNGs.  Panics (with the
-/// failing case's seed, for reproduction) if the property panics.
+/// Parse the `ARI_REPLAY` environment variable: `<seed>` or
+/// `<seed>/<stream>`, where the seed accepts `0x`-prefixed hex or
+/// decimal (the stream is always decimal; 0 when omitted).  Shared by
+/// this harness (seed/stream = a failing case's RNG) and the schedule
+/// checkers in [`crate::util::sim`] (seed only).
+pub fn replay_env() -> Option<(u64, u64)> {
+    let raw = std::env::var("ARI_REPLAY").ok()?;
+    let (seed_str, stream_str) = match raw.split_once('/') {
+        Some((a, b)) => (a.trim(), Some(b.trim())),
+        None => (raw.trim(), None),
+    };
+    let parse = |s: &str| -> Option<u64> {
+        match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+            Some(hex) => u64::from_str_radix(hex, 16).ok(),
+            None => s.parse::<u64>().ok(),
+        }
+    };
+    let seed = parse(seed_str)?;
+    let stream = match stream_str {
+        Some(s) => parse(s)?,
+        None => 0,
+    };
+    Some((seed, stream))
+}
+
+/// Greedily minimise a failing schedule-choice sequence: first truncate
+/// the tail (dropped entries replay as 0), then zero entries one by
+/// one, re-running the predicate for each candidate and keeping it only
+/// while it still fails.  `budget` caps predicate invocations.  Used by
+/// [`crate::util::sim::check_random`]; shrinking over *choices* is what
+/// turns a 100-step failing schedule into a readable one.
+pub fn shrink_choices<F: FnMut(&[u32]) -> bool>(mut choices: Vec<u32>, budget: usize, mut fails: F) -> Vec<u32> {
+    let mut spent = 0usize;
+    loop {
+        if choices.is_empty() || spent >= budget {
+            break;
+        }
+        let mut cut = choices.len() / 2;
+        let mut progressed = false;
+        while cut >= 1 && spent < budget {
+            let cand = choices[..choices.len() - cut].to_vec();
+            spent += 1;
+            if fails(&cand) {
+                choices = cand;
+                progressed = true;
+                break;
+            }
+            cut /= 2;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    let mut i = 0;
+    while i < choices.len() && spent < budget {
+        if choices[i] != 0 {
+            let mut cand = choices.clone();
+            cand[i] = 0;
+            spent += 1;
+            if fails(&cand) {
+                choices = cand;
+            }
+        }
+        i += 1;
+    }
+    choices
+}
+
+fn run_case<F>(case: u64, case_seed: u64, stream: u64, prop: &mut F)
+where
+    F: FnMut(&mut Pcg64),
+{
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut rng = Pcg64::new(case_seed, stream);
+        prop(&mut rng);
+    }));
+    if let Err(payload) = result {
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".to_string());
+        eprintln!("ARI_REPLAY=0x{case_seed:x}/{stream}");
+        panic!(
+            "property failed on case {case} (seed {case_seed:#x}, stream {stream}): {msg}\n\
+             reproduce with ARI_REPLAY=0x{case_seed:x}/{stream} (env var) or \
+             Config {{ cases: 1, seed: {case_seed:#x} }} at case 0 stream {stream}"
+        );
+    }
+}
+
+/// Run `prop` against `config.cases` seeded RNGs.  Panics — after
+/// printing a one-line `ARI_REPLAY=<seed>/<stream>` reproduction string
+/// — if the property panics.  When the `ARI_REPLAY` environment
+/// variable is set, runs exactly that one case instead.
 pub fn run<F>(config: Config, mut prop: F)
 where
     F: FnMut(&mut Pcg64),
 {
+    if let Some((seed, stream)) = replay_env() {
+        eprintln!("ARI_REPLAY set: running single property case (seed {seed:#x}, stream {stream})");
+        run_case(0, seed, stream, &mut prop);
+        return;
+    }
     for case in 0..config.cases {
         let case_seed = config.seed.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let mut rng = Pcg64::new(case_seed, case);
-            prop(&mut rng);
-        }));
-        if let Err(payload) = result {
-            let msg = payload
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".to_string());
-            panic!(
-                "property failed on case {case} (seed {case_seed:#x}): {msg}\n\
-                 reproduce with Config {{ cases: 1, seed: {case_seed:#x} }}"
-            );
-        }
+        run_case(case, case_seed, case, &mut prop);
     }
 }
 
@@ -88,6 +172,42 @@ mod tests {
         run(Config::cases(16), |rng| {
             assert!(rng.next_f64() < 0.5, "coin came up heads");
         });
+    }
+
+    #[test]
+    fn shrink_truncates_and_zeroes() {
+        // Failure condition: the sequence contains a 3 anywhere in the
+        // first four entries.  Minimal failing input under
+        // truncate+zero: [0, 3] is not reachable from position 1, but
+        // the tail after the last needed entry must go, and every entry
+        // not needed for failure must end up 0.
+        let fails = |c: &[u32]| c.iter().take(4).any(|&x| x == 3);
+        let start = vec![7, 3, 9, 1, 5, 5, 5, 5, 5, 5];
+        let min = shrink_choices(start, 1000, fails);
+        assert!(fails(&min), "shrinking must preserve failure");
+        assert!(min.len() <= 2, "tail not truncated: {min:?}");
+        assert_eq!(min.iter().filter(|&&x| x != 0).count(), 1, "only the 3 should survive: {min:?}");
+    }
+
+    #[test]
+    fn shrink_respects_budget() {
+        let mut calls = 0usize;
+        let min = shrink_choices(vec![1; 64], 5, |_| {
+            calls += 1;
+            true
+        });
+        assert!(calls <= 5);
+        assert!(!min.is_empty() || calls <= 5);
+    }
+
+    #[test]
+    fn shrink_keeps_unshrinkable_input() {
+        // Nothing but the full sequence fails: shrinking must return it
+        // unchanged.
+        let full = vec![2u32, 2, 2];
+        let want = full.clone();
+        let min = shrink_choices(full, 1000, |c| c == want.as_slice());
+        assert_eq!(min, want);
     }
 
     #[test]

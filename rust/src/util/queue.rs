@@ -11,9 +11,26 @@
 //! Semantics: `push` blocks while full and fails only once the queue is
 //! closed; `pop` blocks while empty and returns `None` only once the
 //! queue is closed **and** drained (close never discards queued items).
+//!
+//! The close contract, pinned by the model suite
+//! (`tests/model_queue.rs`) under every small-bound interleaving:
+//!
+//! * items enqueued before `close` are always delivered, FIFO;
+//! * a `push` that observes the queue closed — including a pusher that
+//!   was blocked on a full queue when `close` arrived — returns
+//!   `Err(item)`, handing the exact item back; an item is never both
+//!   returned **and** delivered;
+//! * a blocked `pop` always wakes on `close` (drain, then `None`);
+//!   a blocked `push` always wakes on `close` (`Err`).  No wakeup is
+//!   lost under any schedule.
+//!
+//! The synchronisation goes through [`crate::util::sim`]: in release
+//! builds those wrappers *are* `std::sync::{Mutex, Condvar}`; in
+//! dev/test builds every lock and wait is a scheduling point the
+//! deterministic-interleaving harness can enumerate.
 
+use crate::util::sim::{Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 
 struct Inner<T> {
     buf: VecDeque<T>,
@@ -42,7 +59,11 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Enqueue, blocking while the queue is full.  Returns the item back
-    /// if the queue is (or becomes) closed.
+    /// as `Err(item)` if the queue is (or, while blocked, becomes)
+    /// closed — the item is then guaranteed **not** to have been
+    /// enqueued, so the caller still owns it exclusively.  On `Ok(())`
+    /// the item will be delivered by exactly one `pop` (close never
+    /// discards accepted items).
     pub fn push(&self, item: T) -> Result<(), T> {
         let mut inner = self.inner.lock().unwrap();
         loop {
@@ -61,7 +82,7 @@ impl<T> BoundedQueue<T> {
 
     /// Dequeue, blocking while the queue is empty and open.  `None`
     /// means closed *and* fully drained — items queued before `close`
-    /// are always delivered.
+    /// are always delivered, in FIFO order, each to exactly one popper.
     pub fn pop(&self) -> Option<T> {
         let mut inner = self.inner.lock().unwrap();
         loop {
@@ -77,8 +98,10 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Close the queue: blocked pushers fail, blocked poppers drain the
-    /// remaining items then get `None`.  Idempotent.
+    /// Close the queue: every blocked pusher wakes and gets its item
+    /// back as `Err`, every blocked popper wakes and drains the
+    /// remaining items (which are never discarded) before `None`.
+    /// Idempotent.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.not_empty.notify_all();

@@ -1,0 +1,1290 @@
+//! Deterministic-interleaving test harness for the serving core's
+//! concurrency ("model checking by schedule").
+//!
+//! The serving runtime's threads synchronise through `Mutex`, `Condvar`,
+//! thread spawn/join and timed waits.  This module wraps exactly those
+//! primitives behind a compile-time switch:
+//!
+//! * **Release builds** (`cargo build --release`, no `sim` feature): the
+//!   wrappers are literal re-exports of `std::sync` and the hook
+//!   functions are empty `#[inline(always)]` stubs — zero overhead, zero
+//!   behaviour change (see `docs/PERF.md`).
+//! * **Dev/test builds** (`debug_assertions`) or `--features sim`: the
+//!   wrappers participate in a **token-passing scheduler**.  All sim
+//!   threads are real OS threads, but exactly one holds the run token at
+//!   a time; every lock acquisition, condvar wait/notify, spawn, join
+//!   and explicit [`yield_point`] is a *scheduling point* where the
+//!   harness picks which thread runs next.  The pick sequence is driven
+//!   by a [`ChoiceSource`]: exhaustive DFS over all interleavings
+//!   ([`check_exhaustive`]), seeded random schedules
+//!   ([`check_random`]), or replay of a recorded choice list.
+//!
+//! Timed waits use **virtual time**: a `u64` nanosecond clock that only
+//! advances when no thread is runnable, so batcher deadlines fire
+//! deterministically and a model that sleeps five virtual seconds runs
+//! in microseconds ([`sleep`], [`vnow`]).
+//!
+//! Failure handling: an assertion failure in any sim thread, a detected
+//! deadlock (no runnable thread, no pending timeout) or a livelock
+//! (step bound exceeded) **aborts the schedule**: every parked thread is
+//! woken with a private unwind token, the harness reports the failure,
+//! and [`check_random`] prints a one-line `ARI_REPLAY=<seed>`
+//! reproduction string and a shrunk choice sequence.
+//!
+//! The module also carries two small test-only side channels used by the
+//! model suites: [`probe`] (thread-local event capture, e.g. which SC
+//! chunk keys the dispatcher drew) and [`fault`] (named test-only
+//! mutations that re-introduce historical bugs so the suites can prove
+//! they would catch them).  See `docs/TESTING.md` for the yield-point
+//! map and a how-to.
+
+#[cfg(any(debug_assertions, feature = "sim"))]
+mod imp {
+    use crate::util::prng::Pcg64;
+    use std::any::Any;
+    use std::cell::RefCell;
+    use std::collections::VecDeque;
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar as StdCondvar, LockResult, Mutex as StdMutex, Once, PoisonError, TryLockError};
+    use std::time::Duration;
+
+    /// Default per-schedule scheduler-step bound (livelock guard).
+    const DEFAULT_MAX_STEPS: u64 = 200_000;
+
+    /// Whether the sim hooks are compiled in (true in dev/test builds
+    /// and under `--features sim`; the release stub returns false).
+    pub fn hooks_enabled() -> bool {
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduler core
+    // ------------------------------------------------------------------
+
+    /// Private unwind payload used to tear parked threads out of an
+    /// aborted schedule.  Swallowed by the harness, never user-visible.
+    struct SimAbort;
+
+    fn unwind_abort() -> ! {
+        resume_unwind(Box::new(SimAbort))
+    }
+
+    #[derive(Clone, Copy, PartialEq, Eq, Debug)]
+    enum RunState {
+        Runnable,
+        BlockedMutex(usize),
+        BlockedCv { addr: usize, deadline: Option<u64> },
+        BlockedJoin(usize),
+        Finished,
+    }
+
+    struct Slot {
+        state: RunState,
+        timed_out: bool,
+        name: String,
+    }
+
+    /// How the scheduler resolves each nondeterministic choice.
+    enum ChoiceSource {
+        /// Seeded random pick at every choice point.
+        Random(Pcg64),
+        /// DFS: follow `prefix`, then always pick 0 (first enabled).
+        Exhaustive { prefix: Vec<u32>, depth: usize },
+        /// Replay a recorded choice list (0 / clamped past the end).
+        Replay { choices: Vec<u32>, pos: usize },
+    }
+
+    impl ChoiceSource {
+        fn next(&mut self, n: u32) -> u32 {
+            match self {
+                ChoiceSource::Random(rng) => rng.below(n as u64) as u32,
+                ChoiceSource::Exhaustive { prefix, depth } => {
+                    let c = if *depth < prefix.len() { prefix[*depth].min(n - 1) } else { 0 };
+                    *depth += 1;
+                    c
+                }
+                ChoiceSource::Replay { choices, pos } => {
+                    let c = choices.get(*pos).copied().unwrap_or(0).min(n - 1);
+                    *pos += 1;
+                    c
+                }
+            }
+        }
+    }
+
+    struct Sched {
+        slots: Vec<Slot>,
+        /// Index of the token holder (`usize::MAX`: none).
+        current: usize,
+        choices: ChoiceSource,
+        /// Every resolved choice with more than one option, as
+        /// `(choice, n_options)` — the schedule's replayable identity.
+        record: Vec<(u32, u32)>,
+        /// Virtual clock, nanoseconds.  Advances only when nothing is
+        /// runnable and a timed waiter exists.
+        vnow: u64,
+        steps: u64,
+        max_steps: u64,
+        /// Spawned child OS threads that have not exited yet.
+        live: usize,
+        diag: Option<String>,
+        payload: Option<Box<dyn Any + Send>>,
+    }
+
+    struct SimShared {
+        sched: StdMutex<Sched>,
+        cv: StdCondvar,
+        abort_flag: AtomicBool,
+    }
+
+    #[derive(Clone)]
+    struct SimCtx {
+        shared: Arc<SimShared>,
+        idx: usize,
+    }
+
+    thread_local! {
+        static CURRENT: RefCell<Option<SimCtx>> = const { RefCell::new(None) };
+    }
+
+    fn ctx() -> Option<SimCtx> {
+        CURRENT.with(|c| c.borrow().clone())
+    }
+
+    /// Context for *parking* operations: `None` means run the plain std
+    /// primitive (no sim, or this thread is unwinding); an aborted
+    /// schedule unwinds immediately instead of parking.
+    fn active_ctx() -> Option<SimCtx> {
+        let c = ctx()?;
+        if std::thread::panicking() {
+            return None;
+        }
+        if c.shared.abort_flag.load(Ordering::Relaxed) {
+            unwind_abort();
+        }
+        Some(c)
+    }
+
+    fn lock_sched(shared: &SimShared) -> std::sync::MutexGuard<'_, Sched> {
+        shared.sched.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    impl SimShared {
+        fn abort_locked(&self, s: &mut Sched, diag: String) {
+            if s.diag.is_none() {
+                s.diag = Some(diag);
+            }
+            self.abort_flag.store(true, Ordering::Relaxed);
+            self.cv.notify_all();
+        }
+
+        fn choose(s: &mut Sched, n: usize) -> usize {
+            if n <= 1 {
+                return 0;
+            }
+            let c = s.choices.next(n as u32);
+            s.record.push((c, n as u32));
+            c as usize
+        }
+
+        /// Hand the token to some runnable thread, advancing virtual
+        /// time if necessary.  Returns false if the schedule aborted
+        /// (deadlock).
+        fn schedule_next(&self, s: &mut Sched) -> bool {
+            loop {
+                let runnable: Vec<usize> = s
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, sl)| sl.state == RunState::Runnable)
+                    .map(|(i, _)| i)
+                    .collect();
+                if !runnable.is_empty() {
+                    let pick = Self::choose(s, runnable.len());
+                    s.current = runnable[pick];
+                    self.cv.notify_all();
+                    return true;
+                }
+                let mut min_dl: Option<u64> = None;
+                for sl in &s.slots {
+                    if let RunState::BlockedCv { deadline: Some(d), .. } = sl.state {
+                        min_dl = Some(min_dl.map_or(d, |m: u64| m.min(d)));
+                    }
+                }
+                if let Some(d) = min_dl {
+                    s.vnow = s.vnow.max(d);
+                    for sl in s.slots.iter_mut() {
+                        if let RunState::BlockedCv { deadline: Some(dl), .. } = sl.state {
+                            if dl <= s.vnow {
+                                sl.state = RunState::Runnable;
+                                sl.timed_out = true;
+                            }
+                        }
+                    }
+                    continue;
+                }
+                if s.slots.iter().all(|sl| sl.state == RunState::Finished) {
+                    s.current = usize::MAX;
+                    self.cv.notify_all();
+                    return true;
+                }
+                let states: Vec<String> =
+                    s.slots.iter().map(|sl| format!("  {}: {:?}", sl.name, sl.state)).collect();
+                self.abort_locked(
+                    s,
+                    format!("deadlock: no runnable thread and no pending timeout\n{}", states.join("\n")),
+                );
+                return false;
+            }
+        }
+
+        /// Park this thread in `state` until the scheduler hands it the
+        /// token again.  Returns whether the wait timed out (only
+        /// meaningful for `BlockedCv` with a deadline).
+        fn block_on(&self, me: usize, state: RunState) -> bool {
+            let mut s = lock_sched(self);
+            s.slots[me].state = state;
+            s.slots[me].timed_out = false;
+            if !self.schedule_next(&mut s) {
+                drop(s);
+                unwind_abort();
+            }
+            loop {
+                if self.abort_flag.load(Ordering::Relaxed) {
+                    drop(s);
+                    unwind_abort();
+                }
+                if s.current == me {
+                    return s.slots[me].timed_out;
+                }
+                s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+
+        /// Scheduling point for a running (token-holding) thread: offer
+        /// the token to every runnable thread, including itself.
+        fn yield_now(&self, me: usize) {
+            let mut s = lock_sched(self);
+            if self.abort_flag.load(Ordering::Relaxed) {
+                drop(s);
+                unwind_abort();
+            }
+            s.steps += 1;
+            if s.steps > s.max_steps {
+                let max = s.max_steps;
+                self.abort_locked(&mut s, format!("livelock: exceeded {max} scheduler steps"));
+                drop(s);
+                unwind_abort();
+            }
+            if !self.schedule_next(&mut s) {
+                drop(s);
+                unwind_abort();
+            }
+            loop {
+                if self.abort_flag.load(Ordering::Relaxed) {
+                    drop(s);
+                    unwind_abort();
+                }
+                if s.current == me {
+                    return;
+                }
+                s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+
+        /// A mutex was unlocked: every thread blocked on it may retry.
+        fn mutex_released(&self, addr: usize) {
+            let mut s = lock_sched(self);
+            for sl in s.slots.iter_mut() {
+                if sl.state == RunState::BlockedMutex(addr) {
+                    sl.state = RunState::Runnable;
+                }
+            }
+        }
+
+        /// Condvar notify: wake one (scheduler's choice) or all waiters
+        /// on `addr`.  No waiters means the notification is lost — real
+        /// condvar semantics, which is exactly what the queue models
+        /// need to be able to catch.
+        fn notify_cv(&self, addr: usize, all: bool) {
+            let mut s = lock_sched(self);
+            let waiters: Vec<usize> = s
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, sl)| matches!(sl.state, RunState::BlockedCv { addr: a, .. } if a == addr))
+                .map(|(i, _)| i)
+                .collect();
+            if waiters.is_empty() {
+                return;
+            }
+            if all {
+                for &w in &waiters {
+                    s.slots[w].state = RunState::Runnable;
+                    s.slots[w].timed_out = false;
+                }
+            } else {
+                let pick = Self::choose(&mut s, waiters.len());
+                let w = waiters[pick];
+                s.slots[w].state = RunState::Runnable;
+                s.slots[w].timed_out = false;
+            }
+        }
+
+        fn join_slot(&self, me: usize, target: usize) {
+            {
+                let s = lock_sched(self);
+                if s.slots[target].state == RunState::Finished {
+                    return;
+                }
+            }
+            let _ = self.block_on(me, RunState::BlockedJoin(target));
+        }
+
+        fn thread_exit(&self, me: usize, payload: Option<Box<dyn Any + Send>>) {
+            let mut s = lock_sched(self);
+            s.slots[me].state = RunState::Finished;
+            for sl in s.slots.iter_mut() {
+                if sl.state == RunState::BlockedJoin(me) {
+                    sl.state = RunState::Runnable;
+                }
+            }
+            if let Some(p) = payload {
+                if s.payload.is_none() {
+                    s.payload = Some(p);
+                }
+                self.abort_flag.store(true, Ordering::Relaxed);
+                self.cv.notify_all();
+                return;
+            }
+            if self.abort_flag.load(Ordering::Relaxed) {
+                self.cv.notify_all();
+                return;
+            }
+            let _ = self.schedule_next(&mut s);
+        }
+
+        fn child_exited(&self) {
+            let mut s = lock_sched(self);
+            s.live -= 1;
+            drop(s);
+            self.cv.notify_all();
+        }
+
+        /// A freshly spawned child's first wait for the token.  Returns
+        /// false if the schedule aborted before it ever ran.
+        fn wait_for_token_initial(&self, me: usize) -> bool {
+            let mut s = lock_sched(self);
+            loop {
+                if self.abort_flag.load(Ordering::Relaxed) {
+                    return false;
+                }
+                if s.current == me {
+                    return true;
+                }
+                s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+
+    thread_local! {
+        /// Depth of [`catching`] regions on this thread: panics raised
+        /// inside one are handled by the raiser (e.g. the worker pool's
+        /// per-job catch), so the abort hook must not kill the schedule.
+        static CATCHING: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+    }
+
+    /// `catch_unwind` that the sim abort hook knows about: a panic
+    /// raised inside `f` does **not** abort the running schedule,
+    /// because the caller is about to handle it.  Instrumented code
+    /// whose contract is "catch the panic and keep going" (the worker
+    /// pool's job runner) must catch through this, or a deliberately
+    /// panicking job would tear down the whole model run.
+    pub fn catching<R>(f: impl FnOnce() -> R) -> std::thread::Result<R> {
+        CATCHING.with(|c| c.set(c.get() + 1));
+        let r = catch_unwind(AssertUnwindSafe(f));
+        CATCHING.with(|c| c.set(c.get() - 1));
+        r
+    }
+
+    /// A panic in a sim thread must release every parked peer *before*
+    /// the unwinding thread's destructors run (a destructor taking a
+    /// lock held by a parked thread would otherwise hang for real).
+    /// Installed once per process; delegates to the previous hook.
+    /// Panics inside a [`catching`] region are exempt: they are caught
+    /// and handled by the raiser, so the schedule keeps running.
+    fn install_abort_hook() {
+        static HOOK: Once = Once::new();
+        HOOK.call_once(|| {
+            let prev = std::panic::take_hook();
+            std::panic::set_hook(Box::new(move |info| {
+                if CATCHING.with(|c| c.get()) == 0 {
+                    if let Some(c) = ctx() {
+                        c.shared.abort_flag.store(true, Ordering::Relaxed);
+                        // Take the sched lock once so no peer can be midway
+                        // between its abort check and its wait.
+                        drop(lock_sched(&c.shared));
+                        c.shared.cv.notify_all();
+                    }
+                }
+                prev(info);
+            }));
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduling hooks used by instrumented code
+    // ------------------------------------------------------------------
+
+    /// Explicit scheduling point.  Instrumented lock-free fast paths
+    /// (e.g. the worker pool's claim loop) call this so the scheduler
+    /// can interleave them; it is a no-op outside a schedule.
+    pub fn yield_point() {
+        if let Some(c) = active_ctx() {
+            c.shared.yield_now(c.idx);
+        }
+    }
+
+    /// Sleep in virtual time under a schedule (the clock jumps forward
+    /// deterministically, no real delay); plain `thread::sleep`
+    /// otherwise.
+    pub fn sleep(dur: Duration) {
+        if let Some(c) = active_ctx() {
+            let deadline = {
+                let s = lock_sched(&c.shared);
+                s.vnow.saturating_add(dur.as_nanos() as u64)
+            };
+            // A per-thread pseudo-address no real condvar can collide
+            // with: nothing ever notifies it, only the clock fires it.
+            let addr = usize::MAX - c.idx;
+            let _ = c.shared.block_on(c.idx, RunState::BlockedCv { addr, deadline: Some(deadline) });
+        } else {
+            std::thread::sleep(dur);
+        }
+    }
+
+    /// Current virtual time in nanoseconds (0 outside a schedule).
+    pub fn vnow() -> u64 {
+        match ctx() {
+            Some(c) => lock_sched(&c.shared).vnow,
+            None => 0,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Mutex / Condvar wrappers (std-compatible API surface)
+    // ------------------------------------------------------------------
+
+    /// Sim-aware mutex.  Same API subset as `std::sync::Mutex`; under a
+    /// schedule every `lock` is a scheduling point and contention parks
+    /// the thread in the scheduler instead of the OS.
+    pub struct Mutex<T> {
+        inner: StdMutex<T>,
+    }
+
+    /// Guard for [`Mutex`]; releasing it wakes sim threads blocked on
+    /// the lock.
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+    }
+
+    impl<T> Mutex<T> {
+        /// New unlocked mutex.
+        pub fn new(value: T) -> Self {
+            Self { inner: StdMutex::new(value) }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Self as *const () as usize
+        }
+
+        /// Acquire, parking in the scheduler while contended.
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            if let Some(c) = active_ctx() {
+                c.shared.yield_now(c.idx);
+                loop {
+                    match self.inner.try_lock() {
+                        Ok(g) => return Ok(MutexGuard { lock: self, inner: Some(g) }),
+                        Err(TryLockError::Poisoned(p)) => {
+                            return Err(PoisonError::new(MutexGuard { lock: self, inner: Some(p.into_inner()) }))
+                        }
+                        Err(TryLockError::WouldBlock) => {
+                            let _ = c.shared.block_on(c.idx, RunState::BlockedMutex(self.addr()));
+                        }
+                    }
+                }
+            }
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g) }),
+                Err(p) => Err(PoisonError::new(MutexGuard { lock: self, inner: Some(p.into_inner()) })),
+            }
+        }
+
+        /// Non-blocking acquire (still a scheduling point under a
+        /// schedule).
+        pub fn try_lock(&self) -> Result<MutexGuard<'_, T>, TryLockError<MutexGuard<'_, T>>> {
+            if let Some(c) = active_ctx() {
+                c.shared.yield_now(c.idx);
+            }
+            match self.inner.try_lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g) }),
+                Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+                Err(TryLockError::Poisoned(p)) => Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                }))),
+            }
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("sim mutex guard used after release")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("sim mutex guard used after release")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            if let Some(g) = self.inner.take() {
+                drop(g);
+                // Bookkeeping only (never parks), so it also runs while
+                // unwinding or aborting — blocked peers must always
+                // learn the lock was released.
+                if let Some(c) = ctx() {
+                    c.shared.mutex_released(self.lock.addr());
+                }
+            }
+        }
+    }
+
+    /// Sim-aware condition variable paired with [`Mutex`].  Notify
+    /// choices (which waiter wakes) are scheduling choices; a notify
+    /// with no waiter is lost, exactly like the real primitive.
+    pub struct Condvar {
+        inner: StdCondvar,
+    }
+
+    impl Condvar {
+        /// New condvar.
+        pub fn new() -> Self {
+            Self { inner: StdCondvar::new() }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Self as *const () as usize
+        }
+
+        /// Atomically release the guard and park until notified.
+        pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            if let Some(c) = active_ctx() {
+                let lock = guard.lock;
+                drop(guard.inner.take());
+                c.shared.mutex_released(lock.addr());
+                drop(guard);
+                let _ = c.shared.block_on(c.idx, RunState::BlockedCv { addr: self.addr(), deadline: None });
+                return lock.lock();
+            }
+            let lock = guard.lock;
+            let std_guard = guard.inner.take().expect("sim mutex guard used after release");
+            match self.inner.wait(std_guard) {
+                Ok(g) => Ok(MutexGuard { lock, inner: Some(g) }),
+                Err(p) => Err(PoisonError::new(MutexGuard { lock, inner: Some(p.into_inner()) })),
+            }
+        }
+
+        /// Timed wait; the boolean is true when the wait timed out.
+        /// Under a schedule the deadline is virtual-time and fires only
+        /// when nothing else is runnable.
+        pub fn wait_timeout_sim<'a, T>(&self, mut guard: MutexGuard<'a, T>, dur: Duration) -> (MutexGuard<'a, T>, bool) {
+            if let Some(c) = active_ctx() {
+                let lock = guard.lock;
+                drop(guard.inner.take());
+                c.shared.mutex_released(lock.addr());
+                drop(guard);
+                let deadline = {
+                    let s = lock_sched(&c.shared);
+                    s.vnow.saturating_add(dur.as_nanos() as u64)
+                };
+                let timed_out =
+                    c.shared.block_on(c.idx, RunState::BlockedCv { addr: self.addr(), deadline: Some(deadline) });
+                let g = lock.lock().unwrap_or_else(|e| e.into_inner());
+                return (g, timed_out);
+            }
+            let lock = guard.lock;
+            let std_guard = guard.inner.take().expect("sim mutex guard used after release");
+            let (g, res) = self.inner.wait_timeout(std_guard, dur).unwrap_or_else(|e| e.into_inner());
+            (MutexGuard { lock, inner: Some(g) }, res.timed_out())
+        }
+
+        /// Wake one waiter (the scheduler chooses which).
+        pub fn notify_one(&self) {
+            if let Some(c) = ctx() {
+                c.shared.notify_cv(self.addr(), false);
+            }
+            self.inner.notify_one();
+        }
+
+        /// Wake every waiter.
+        pub fn notify_all(&self) {
+            if let Some(c) = ctx() {
+                c.shared.notify_cv(self.addr(), true);
+            }
+            self.inner.notify_all();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Threads
+    // ------------------------------------------------------------------
+
+    /// Handle to a (possibly simulated) thread; join-compatible with
+    /// `std::thread::JoinHandle<()>`.
+    pub struct Thread {
+        inner: std::thread::JoinHandle<()>,
+        sim: Option<(Arc<SimShared>, usize)>,
+    }
+
+    impl Thread {
+        /// Wait for the thread to finish (a scheduling point under a
+        /// schedule).
+        pub fn join(self) -> std::thread::Result<()> {
+            if let Some((shared, target)) = &self.sim {
+                if let Some(c) = active_ctx() {
+                    shared.join_slot(c.idx, *target);
+                }
+            }
+            self.inner.join()
+        }
+    }
+
+    /// Spawn a named thread.  Inside a schedule the child becomes a sim
+    /// thread (runnable immediately, scheduled by choice); outside it is
+    /// a plain `std::thread::Builder` spawn.
+    pub fn spawn_thread<F: FnOnce() + Send + 'static>(name: String, f: F) -> std::io::Result<Thread> {
+        let Some(c) = active_ctx() else {
+            let h = std::thread::Builder::new().name(name).spawn(f)?;
+            return Ok(Thread { inner: h, sim: None });
+        };
+        let shared = Arc::clone(&c.shared);
+        let idx = {
+            let mut s = lock_sched(&shared);
+            s.slots.push(Slot { state: RunState::Runnable, timed_out: false, name: name.clone() });
+            s.live += 1;
+            s.slots.len() - 1
+        };
+        let sh2 = Arc::clone(&shared);
+        let res = std::thread::Builder::new().name(name).spawn(move || {
+            CURRENT.with(|cur| *cur.borrow_mut() = Some(SimCtx { shared: Arc::clone(&sh2), idx }));
+            let payload = if sh2.wait_for_token_initial(idx) {
+                match catch_unwind(AssertUnwindSafe(f)) {
+                    Ok(()) => None,
+                    Err(p) => {
+                        if p.downcast_ref::<SimAbort>().is_some() {
+                            None
+                        } else {
+                            Some(p)
+                        }
+                    }
+                }
+            } else {
+                None
+            };
+            sh2.thread_exit(idx, payload);
+            sh2.child_exited();
+        });
+        match res {
+            Ok(h) => Ok(Thread { inner: h, sim: Some((shared, idx)) }),
+            Err(e) => {
+                let mut s = lock_sched(&shared);
+                s.slots[idx].state = RunState::Finished;
+                s.live -= 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Spawn an anonymous sim thread (model-suite convenience).
+    pub fn spawn<F: FnOnce() + Send + 'static>(f: F) -> Thread {
+        spawn_thread("sim".to_string(), f).expect("spawn sim thread")
+    }
+
+    // ------------------------------------------------------------------
+    // Schedule runners
+    // ------------------------------------------------------------------
+
+    struct Outcome {
+        failure: Option<String>,
+        record: Vec<(u32, u32)>,
+    }
+
+    fn panic_message(p: &(dyn Any + Send)) -> String {
+        p.downcast_ref::<String>()
+            .cloned()
+            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".to_string())
+    }
+
+    fn run_one(choices: ChoiceSource, max_steps: u64, body: &dyn Fn()) -> Outcome {
+        install_abort_hook();
+        let shared = Arc::new(SimShared {
+            sched: StdMutex::new(Sched {
+                slots: vec![Slot { state: RunState::Runnable, timed_out: false, name: "root".to_string() }],
+                current: 0,
+                choices,
+                record: Vec::new(),
+                vnow: 0,
+                steps: 0,
+                max_steps,
+                live: 0,
+                diag: None,
+                payload: None,
+            }),
+            cv: StdCondvar::new(),
+            abort_flag: AtomicBool::new(false),
+        });
+        CURRENT.with(|cur| *cur.borrow_mut() = Some(SimCtx { shared: Arc::clone(&shared), idx: 0 }));
+        let r = catch_unwind(AssertUnwindSafe(body));
+        CURRENT.with(|cur| *cur.borrow_mut() = None);
+        let root_payload = match r {
+            Ok(()) => None,
+            Err(p) => {
+                if p.downcast_ref::<SimAbort>().is_some() {
+                    None
+                } else {
+                    Some(p)
+                }
+            }
+        };
+        shared.thread_exit(0, root_payload);
+        // Wait for every child OS thread to exit (aborts release parked
+        // ones).  The timeout is a harness-bug backstop, not a schedule
+        // outcome.
+        let mut hung = false;
+        {
+            let deadline = std::time::Instant::now() + Duration::from_secs(30);
+            let mut s = lock_sched(&shared);
+            while s.live > 0 {
+                let (g, _) = shared.cv.wait_timeout(s, Duration::from_millis(100)).unwrap_or_else(|e| e.into_inner());
+                s = g;
+                if std::time::Instant::now() > deadline {
+                    hung = true;
+                    break;
+                }
+            }
+        }
+        let mut s = lock_sched(&shared);
+        let mut failure = None;
+        if let Some(p) = s.payload.take() {
+            failure = Some(panic_message(p.as_ref()));
+        } else if let Some(d) = s.diag.take() {
+            failure = Some(d);
+        }
+        if hung {
+            let base = failure.unwrap_or_else(|| "sim hung: spawned threads did not exit".to_string());
+            failure = Some(format!("{base}\n(harness: timed out waiting for sim threads to exit)"));
+        }
+        Outcome { failure, record: std::mem::take(&mut s.record) }
+    }
+
+    /// Result of an exhaustive enumeration.
+    #[derive(Clone, Copy, Debug)]
+    pub struct SimReport {
+        /// Schedules executed.
+        pub schedules: u64,
+        /// Whether the interleaving space was fully enumerated within
+        /// the schedule budget.
+        pub complete: bool,
+    }
+
+    /// Exhaustively enumerate every interleaving of `body` (DFS over
+    /// scheduler choices), up to `max_schedules`.  Panics with the
+    /// failing choice sequence on the first schedule that fails.
+    pub fn check_exhaustive<F: Fn()>(max_schedules: u64, body: F) -> SimReport {
+        let mut prefix: Vec<u32> = Vec::new();
+        let mut schedules = 0u64;
+        loop {
+            let out = run_one(ChoiceSource::Exhaustive { prefix: prefix.clone(), depth: 0 }, DEFAULT_MAX_STEPS, &body);
+            schedules += 1;
+            if let Some(msg) = out.failure {
+                let choices: Vec<u32> = out.record.iter().map(|&(c, _)| c).collect();
+                panic!("model failed under exhaustive schedule {schedules} (choices {choices:?}):\n{msg}");
+            }
+            let mut next = None;
+            for i in (0..out.record.len()).rev() {
+                let (c, n) = out.record[i];
+                if c + 1 < n {
+                    let mut p: Vec<u32> = out.record[..i].iter().map(|&(cc, _)| cc).collect();
+                    p.push(c + 1);
+                    next = Some(p);
+                    break;
+                }
+            }
+            match next {
+                None => return SimReport { schedules, complete: true },
+                Some(_) if schedules >= max_schedules => return SimReport { schedules, complete: false },
+                Some(p) => prefix = p,
+            }
+        }
+    }
+
+    /// Run `schedules` seeded-random schedules of `body`.  Honours the
+    /// `ARI_REPLAY` environment variable (run exactly one schedule by
+    /// seed); on failure prints a one-line `ARI_REPLAY=<seed>`
+    /// reproduction string, shrinks the recorded choice sequence, and
+    /// panics.  Returns the number of schedules run.
+    pub fn check_random<F: Fn()>(schedules: u64, base_seed: u64, body: F) -> u64 {
+        if let Some((seed, _)) = crate::util::proptest::replay_env() {
+            eprintln!("ARI_REPLAY set: running single schedule seed {seed:#x}");
+            let out = run_one(ChoiceSource::Random(Pcg64::new(seed, 0)), DEFAULT_MAX_STEPS, &body);
+            if let Some(msg) = out.failure {
+                panic!("model failed on replayed schedule (ARI_REPLAY={seed:#x}):\n{msg}");
+            }
+            return 1;
+        }
+        for i in 0..schedules {
+            let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let out = run_one(ChoiceSource::Random(Pcg64::new(seed, 0)), DEFAULT_MAX_STEPS, &body);
+            if let Some(msg) = out.failure {
+                eprintln!("ARI_REPLAY={seed:#x}");
+                let choices: Vec<u32> = out.record.iter().map(|&(c, _)| c).collect();
+                let min = crate::util::proptest::shrink_choices(choices, 128, |cand| {
+                    run_one(ChoiceSource::Replay { choices: cand.to_vec(), pos: 0 }, DEFAULT_MAX_STEPS, &body)
+                        .failure
+                        .is_some()
+                });
+                panic!(
+                    "model failed on random schedule {i} of {schedules}\n\
+                     reproduce with ARI_REPLAY={seed:#x} (env var; reruns exactly this schedule)\n\
+                     minimised choice sequence: {min:?}\n{msg}"
+                );
+            }
+        }
+        schedules
+    }
+
+    /// Random-schedule budget for the model suites: `ARI_MODEL_SCHEDULES`
+    /// if set (CI raises it), else `default`.
+    pub fn schedule_budget(default: u64) -> u64 {
+        std::env::var("ARI_MODEL_SCHEDULES").ok().and_then(|s| s.parse::<u64>().ok()).unwrap_or(default)
+    }
+
+    // ------------------------------------------------------------------
+    // SimChannel: a deterministic mpsc stand-in for model tests
+    // ------------------------------------------------------------------
+
+    struct ChanState<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+    }
+
+    struct ChanShared<T> {
+        state: Mutex<ChanState<T>>,
+        cv: Condvar,
+    }
+
+    /// Sending half of [`sim_channel`].
+    pub struct SimSender<T> {
+        shared: Arc<ChanShared<T>>,
+    }
+
+    /// Receiving half of [`sim_channel`].
+    pub struct SimReceiver<T> {
+        shared: Arc<ChanShared<T>>,
+    }
+
+    /// Outcome of [`SimReceiver::recv_timeout`], mirroring
+    /// `mpsc::RecvTimeoutError`'s three-way split.
+    #[derive(Debug, PartialEq, Eq)]
+    pub enum SimRecv<T> {
+        /// An item arrived.
+        Item(T),
+        /// The (virtual-time) timeout elapsed first.
+        Timeout,
+        /// Every sender is gone and the queue is drained.
+        Disconnected,
+    }
+
+    /// An unbounded channel built on the sim primitives, so a model can
+    /// drive the server's arrival loop under the scheduler with
+    /// deterministic, virtual-time `recv_timeout` semantics.
+    pub fn sim_channel<T>() -> (SimSender<T>, SimReceiver<T>) {
+        let shared = Arc::new(ChanShared {
+            state: Mutex::new(ChanState { queue: VecDeque::new(), senders: 1 }),
+            cv: Condvar::new(),
+        });
+        (SimSender { shared: Arc::clone(&shared) }, SimReceiver { shared })
+    }
+
+    impl<T> SimSender<T> {
+        /// Enqueue an item (never blocks).
+        pub fn send(&self, item: T) {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.queue.push_back(item);
+            drop(st);
+            self.shared.cv.notify_one();
+        }
+    }
+
+    impl<T> Clone for SimSender<T> {
+        fn clone(&self) -> Self {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.senders += 1;
+            drop(st);
+            Self { shared: Arc::clone(&self.shared) }
+        }
+    }
+
+    impl<T> Drop for SimSender<T> {
+        fn drop(&mut self) {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.senders -= 1;
+            let last = st.senders == 0;
+            drop(st);
+            if last {
+                self.shared.cv.notify_all();
+            }
+        }
+    }
+
+    impl<T> SimReceiver<T> {
+        /// Blocking receive with a timeout (virtual time under a
+        /// schedule).
+        pub fn recv_timeout(&self, timeout: Duration) -> SimRecv<T> {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(x) = st.queue.pop_front() {
+                    return SimRecv::Item(x);
+                }
+                if st.senders == 0 {
+                    return SimRecv::Disconnected;
+                }
+                let (g, timed_out) = self.shared.cv.wait_timeout_sim(st, timeout);
+                st = g;
+                if timed_out {
+                    if let Some(x) = st.queue.pop_front() {
+                        return SimRecv::Item(x);
+                    }
+                    if st.senders == 0 {
+                        return SimRecv::Disconnected;
+                    }
+                    return SimRecv::Timeout;
+                }
+            }
+        }
+
+        /// Non-blocking receive.
+        pub fn try_recv(&self) -> Option<T> {
+            self.shared.state.lock().unwrap_or_else(|e| e.into_inner()).queue.pop_front()
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Probes and faults (test-only side channels)
+    // ------------------------------------------------------------------
+
+    /// One captured [`probe`] event.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct ProbeEvent {
+        /// Static event tag (e.g. `"sc_key"`).
+        pub tag: &'static str,
+        /// First payload word.
+        pub a: u64,
+        /// Second payload word.
+        pub b: u64,
+    }
+
+    thread_local! {
+        static PROBES: RefCell<Option<Vec<ProbeEvent>>> = const { RefCell::new(None) };
+    }
+
+    /// Record an event if this thread has probe capture enabled
+    /// (a no-op otherwise, and always a no-op in release builds).
+    pub fn probe(tag: &'static str, a: u64, b: u64) {
+        PROBES.with(|p| {
+            if let Some(v) = p.borrow_mut().as_mut() {
+                v.push(ProbeEvent { tag, a, b });
+            }
+        });
+    }
+
+    /// Start capturing [`probe`] events on this thread.
+    pub fn begin_probes() {
+        PROBES.with(|p| *p.borrow_mut() = Some(Vec::new()));
+    }
+
+    /// Stop capturing and return the events recorded since
+    /// [`begin_probes`].
+    pub fn end_probes() -> Vec<ProbeEvent> {
+        PROBES.with(|p| p.borrow_mut().take().unwrap_or_default())
+    }
+
+    static FAULTS_ON: AtomicUsize = AtomicUsize::new(0);
+    static FAULTS: StdMutex<Vec<&'static str>> = StdMutex::new(Vec::new());
+    static FAULT_SERIAL: StdMutex<()> = StdMutex::new(());
+
+    /// Whether the named test-only mutation is enabled.  Always false
+    /// unless a [`FaultGuard`] for `name` is alive (and always false in
+    /// release builds).  The fast path is one relaxed atomic load.
+    pub fn fault(name: &str) -> bool {
+        if FAULTS_ON.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        FAULTS.lock().unwrap_or_else(|e| e.into_inner()).iter().any(|&f| f == name)
+    }
+
+    /// RAII enabling of one named fault.  Also holds a process-wide
+    /// serialisation lock so fault-injection tests never overlap (the
+    /// fault registry is global); a test must hold at most one guard at
+    /// a time.
+    pub struct FaultGuard {
+        name: &'static str,
+        _serial: std::sync::MutexGuard<'static, ()>,
+    }
+
+    impl FaultGuard {
+        /// Enable `name` until the guard drops.
+        pub fn enable(name: &'static str) -> Self {
+            let serial = FAULT_SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+            FAULTS.lock().unwrap_or_else(|e| e.into_inner()).push(name);
+            FAULTS_ON.fetch_add(1, Ordering::Relaxed);
+            Self { name, _serial: serial }
+        }
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            let mut f = FAULTS.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(pos) = f.iter().position(|&n| n == self.name) {
+                f.remove(pos);
+            }
+            FAULTS_ON.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use std::collections::HashSet;
+        use std::sync::Mutex as PlainMutex;
+
+        // A plain std mutex is safe inside sim threads as long as it is
+        // never held across a scheduling point: between sim ops exactly
+        // one thread runs, so it cannot contend.
+        fn two_thread_orders() -> (SimReport, HashSet<Vec<u8>>) {
+            let seen: PlainMutex<HashSet<Vec<u8>>> = PlainMutex::new(HashSet::new());
+            let report = check_exhaustive(10_000, || {
+                let order = Arc::new(PlainMutex::new(Vec::new()));
+                let m = Arc::new(Mutex::new(()));
+                let mut handles = Vec::new();
+                for id in 0..2u8 {
+                    let order = Arc::clone(&order);
+                    let m = Arc::clone(&m);
+                    handles.push(spawn(move || {
+                        let _g = m.lock().unwrap();
+                        order.lock().unwrap().push(id);
+                    }));
+                }
+                for h in handles {
+                    h.join().unwrap();
+                }
+                let o = order.lock().unwrap().clone();
+                seen.lock().unwrap().insert(o);
+            });
+            (report, seen.into_inner().unwrap())
+        }
+
+        #[test]
+        fn exhaustive_explores_both_orders() {
+            let (report, seen) = two_thread_orders();
+            assert!(report.complete, "tiny scenario must enumerate fully ({} schedules)", report.schedules);
+            assert!(report.schedules >= 2);
+            let mut want = HashSet::new();
+            want.insert(vec![0u8, 1]);
+            want.insert(vec![1u8, 0]);
+            assert_eq!(seen, want, "both lock orders must be explored");
+        }
+
+        #[test]
+        #[should_panic(expected = "deadlock")]
+        fn detects_abba_deadlock() {
+            check_exhaustive(10_000, || {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a1, b1) = (Arc::clone(&a), Arc::clone(&b));
+                let t1 = spawn(move || {
+                    let _x = a1.lock().unwrap();
+                    let _y = b1.lock().unwrap();
+                });
+                let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+                let t2 = spawn(move || {
+                    let _x = b2.lock().unwrap();
+                    let _y = a2.lock().unwrap();
+                });
+                t1.join().unwrap();
+                t2.join().unwrap();
+            });
+        }
+
+        #[test]
+        fn virtual_time_advances_without_real_sleep() {
+            let t0 = std::time::Instant::now();
+            check_random(3, 42, || {
+                assert_eq!(vnow(), 0);
+                sleep(Duration::from_secs(5));
+                assert!(vnow() >= 5_000_000_000);
+            });
+            assert!(t0.elapsed() < Duration::from_secs(5), "sleep must be virtual");
+        }
+
+        fn racy_lost_update() {
+            let c = Arc::new(PlainMutex::new(0u64));
+            let mut handles = Vec::new();
+            for _ in 0..2 {
+                let c = Arc::clone(&c);
+                handles.push(spawn(move || {
+                    let v = *c.lock().unwrap();
+                    yield_point();
+                    *c.lock().unwrap() = v + 1;
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(*c.lock().unwrap(), 2, "lost update");
+        }
+
+        #[test]
+        fn exhaustive_finds_lost_update() {
+            let r = std::panic::catch_unwind(|| check_exhaustive(10_000, racy_lost_update));
+            let msg = panic_message(r.expect_err("the race must be found").as_ref());
+            assert!(msg.contains("lost update"), "{msg}");
+        }
+
+        #[test]
+        fn same_seed_reproduces_same_schedule_and_replay_matches() {
+            let body = racy_lost_update;
+            let mut failing = None;
+            for s in 0..200u64 {
+                let out = run_one(ChoiceSource::Random(Pcg64::new(s, 0)), DEFAULT_MAX_STEPS, &body);
+                if out.failure.is_some() {
+                    failing = Some((s, out));
+                    break;
+                }
+            }
+            let (seed, first) = failing.expect("some random schedule must hit the race");
+            let again = run_one(ChoiceSource::Random(Pcg64::new(seed, 0)), DEFAULT_MAX_STEPS, &body);
+            assert_eq!(first.record, again.record, "same seed must replay the same schedule");
+            assert!(again.failure.is_some());
+            let choices: Vec<u32> = first.record.iter().map(|&(c, _)| c).collect();
+            let replay = run_one(ChoiceSource::Replay { choices, pos: 0 }, DEFAULT_MAX_STEPS, &body);
+            assert!(replay.failure.is_some(), "recorded choices must reproduce the failure");
+        }
+
+        #[test]
+        fn channel_timeout_and_disconnect_under_virtual_time() {
+            check_random(5, 9, || {
+                let (tx, rx) = sim_channel::<u32>();
+                assert_eq!(rx.recv_timeout(Duration::from_millis(1)), SimRecv::Timeout);
+                tx.send(5);
+                assert_eq!(rx.recv_timeout(Duration::from_millis(1)), SimRecv::Item(5));
+                drop(tx);
+                assert_eq!(rx.recv_timeout(Duration::from_millis(1)), SimRecv::Disconnected);
+            });
+        }
+
+        #[test]
+        fn faults_toggle_and_scope() {
+            assert!(!fault("sim-test-fault"));
+            {
+                let _g = FaultGuard::enable("sim-test-fault");
+                assert!(fault("sim-test-fault"));
+                assert!(!fault("sim-test-other"));
+            }
+            assert!(!fault("sim-test-fault"));
+        }
+
+        #[test]
+        fn probes_capture_only_between_begin_and_end() {
+            begin_probes();
+            probe("k", 1, 2);
+            let v = end_probes();
+            assert_eq!(v, vec![ProbeEvent { tag: "k", a: 1, b: 2 }]);
+            probe("k", 3, 4); // not capturing: dropped
+            begin_probes();
+            assert!(end_probes().is_empty());
+        }
+
+        #[test]
+        fn schedule_budget_default() {
+            // Cannot assert the env-var branch without mutating process
+            // env; pin the default path.
+            if std::env::var("ARI_MODEL_SCHEDULES").is_err() {
+                assert_eq!(schedule_budget(123), 123);
+            }
+        }
+    }
+}
+
+#[cfg(any(debug_assertions, feature = "sim"))]
+pub use imp::*;
+
+#[cfg(not(any(debug_assertions, feature = "sim")))]
+mod stub {
+    /// Sim-aware mutex (release stub: the real `std::sync::Mutex`).
+    pub use std::sync::Mutex;
+
+    /// Sim-aware condvar (release stub: the real `std::sync::Condvar`).
+    pub use std::sync::Condvar;
+
+    /// Thread handle (release stub: a plain `JoinHandle<()>`).
+    pub type Thread = std::thread::JoinHandle<()>;
+
+    /// Spawn a named thread (release stub: `std::thread::Builder`).
+    pub fn spawn_thread<F: FnOnce() + Send + 'static>(name: String, f: F) -> std::io::Result<Thread> {
+        std::thread::Builder::new().name(name).spawn(f)
+    }
+
+    /// Spawn an anonymous thread (release stub).
+    pub fn spawn<F: FnOnce() + Send + 'static>(f: F) -> Thread {
+        std::thread::spawn(f)
+    }
+
+    /// Scheduling point (release stub: nothing).
+    #[inline(always)]
+    pub fn yield_point() {}
+
+    /// Harness-aware `catch_unwind` (release stub: the plain one).
+    #[inline(always)]
+    pub fn catching<R>(f: impl FnOnce() -> R) -> std::thread::Result<R> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+    }
+
+    /// Test-only mutation switch (release stub: always disabled, so the
+    /// branch folds away).
+    #[inline(always)]
+    pub fn fault(_name: &str) -> bool {
+        false
+    }
+
+    /// Test-only event capture (release stub: nothing).
+    #[inline(always)]
+    pub fn probe(_tag: &'static str, _a: u64, _b: u64) {}
+
+    /// Whether the sim hooks are compiled in (release stub: no).
+    #[inline(always)]
+    pub fn hooks_enabled() -> bool {
+        false
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "sim")))]
+pub use stub::*;

@@ -1,0 +1,190 @@
+//! Shared fixtures and invariant checks for the model suites
+//! (`model_queue` / `model_pool` / `model_server` / `model_mutations`).
+//!
+//! Each invariant lives here exactly once so the mutation suite can
+//! prove that the *same* check the model suites run fails when a
+//! historical bug is re-introduced via `sim::fault`.
+#![allow(dead_code)] // each test crate uses a subset of these helpers
+
+use std::sync::Arc;
+use std::sync::Mutex as PlainMutex;
+use std::time::{Duration, Instant};
+
+use ari::config::{Mode, ThresholdPolicy};
+use ari::coordinator::{Batcher, BatcherPolicy, Ladder, LadderSpec};
+use ari::data::EvalData;
+use ari::runtime::{Backend, NativeBackend};
+use ari::server::model::drive_deferred;
+use ari::server::{batching_loop, Request, ServeClock, StagedBatch};
+use ari::util::queue::BoundedQueue;
+use ari::util::sim;
+
+/// Virtual clock for driving [`batching_loop`] under the sim harness:
+/// `now` is a fixed origin plus the scheduler's virtual nanoseconds, so
+/// batcher deadlines fire deterministically.
+pub struct VClock {
+    pub t0: Instant,
+}
+
+impl ServeClock for VClock {
+    fn now(&self) -> Instant {
+        self.t0 + Duration::from_nanos(sim::vnow())
+    }
+}
+
+/// Drive the *real* [`batching_loop`] under the sim scheduler — sim
+/// channel for arrivals, virtual clock for deadlines, a sim generator
+/// thread and a sim consumer thread around the root running the loop —
+/// and assert the serving pipeline's core invariants:
+///
+/// * **conservation**: every generated request is staged exactly once,
+///   in arrival order (no request dropped at shutdown, none duplicated);
+/// * **chunk bound**: every staged batch holds `1..=max_batch` items
+///   (shutdown drains included);
+/// * **staging**: each batch's row buffer is exactly
+///   `items.len() * input_dim` floats.
+///
+/// Must be called from inside a schedule body ([`sim::check_random`] /
+/// [`sim::check_exhaustive`]).
+pub fn run_sim_serving_model(
+    data: &EvalData,
+    n_requests: u64,
+    max_batch: usize,
+    max_wait: Duration,
+    paced: bool,
+) {
+    let t0 = Instant::now();
+    let staged: Arc<BoundedQueue<StagedBatch>> = Arc::new(BoundedQueue::new(2));
+    let empties: Arc<BoundedQueue<StagedBatch>> = Arc::new(BoundedQueue::new(2));
+    for _ in 0..2 {
+        let _ = empties.push(StagedBatch::default());
+    }
+    let (tx, rx) = sim::sim_channel::<Request>();
+    let n_rows = data.n;
+    let input_dim = data.input_dim;
+
+    let gen = sim::spawn(move || {
+        for id in 0..n_requests {
+            if paced {
+                sim::sleep(Duration::from_micros(700));
+            }
+            let submitted = t0 + Duration::from_nanos(sim::vnow());
+            tx.send(Request { id, row: id as usize % n_rows, submitted });
+        }
+        // tx drops here: the loop sees Disconnected once drained.
+    });
+
+    let staged_c = Arc::clone(&staged);
+    let empties_c = Arc::clone(&empties);
+    let seen: Arc<PlainMutex<Vec<u64>>> = Arc::new(PlainMutex::new(Vec::new()));
+    let seen_c = Arc::clone(&seen);
+    let consumer = sim::spawn(move || {
+        while let Some(mut batch) = staged_c.pop() {
+            assert!(!batch.items.is_empty(), "empty batch staged");
+            assert!(
+                batch.items.len() <= max_batch,
+                "staged batch of {} exceeds max_batch {max_batch}",
+                batch.items.len()
+            );
+            assert_eq!(batch.x.len(), batch.items.len() * input_dim, "staged rows out of step with items");
+            {
+                let mut s = seen_c.lock().unwrap();
+                s.extend(batch.items.iter().map(|p| p.payload.id));
+            }
+            batch.items.clear();
+            batch.x.clear();
+            let _ = empties_c.push(batch);
+        }
+    });
+
+    let policy = BatcherPolicy::new(max_batch, max_wait);
+    batching_loop(rx, &VClock { t0 }, policy, n_requests as usize, data, &staged, &empties);
+    gen.join().unwrap();
+    consumer.join().unwrap();
+
+    let seen = seen.lock().unwrap();
+    assert_eq!(
+        seen.len(),
+        n_requests as usize,
+        "request lost or duplicated at shutdown: staged ids {:?}",
+        &*seen
+    );
+    for (i, &id) in seen.iter().enumerate() {
+        assert_eq!(id, i as u64, "arrival order violated: staged ids {:?}", &*seen);
+    }
+}
+
+/// The batcher's shutdown-drain contract: every chunk yielded by
+/// `drain_into` holds `1..=max_batch` items and the concatenation is
+/// FIFO-complete.  The serving pipeline relies on the bound — a larger
+/// chunk would exceed the ladder's compiled batch (`run_padded`'s
+/// `n <= batch` contract) and underflow the padding accounting.
+pub fn assert_drain_chunked(max_batch: usize, n_items: u32) {
+    let mut batcher: Batcher<u32> = Batcher::new(BatcherPolicy::new(max_batch, Duration::from_millis(1)));
+    for i in 0..n_items {
+        batcher.push(i);
+    }
+    let mut out = Vec::new();
+    let mut drained = Vec::new();
+    while batcher.drain_into(&mut out).is_some() {
+        assert!(!out.is_empty(), "drain_into fired an empty chunk");
+        assert!(out.len() <= max_batch, "drained chunk of {} exceeds max_batch {max_batch}", out.len());
+        drained.extend(out.iter().map(|p| p.payload));
+    }
+    assert_eq!(drained, (0..n_items).collect::<Vec<_>>(), "drain must conserve items in FIFO order");
+}
+
+/// A 3-level ladder whose fixed threshold (2.0) exceeds the margin
+/// ceiling (top1−top2 of L2-normalised scores never tops sqrt(2)), so
+/// every request escalates to the final stage — the shape that
+/// exercises escalation flushes both mid-session and at shutdown.
+pub fn escalate_all_fixture(engine: &mut NativeBackend) -> (Ladder, EvalData) {
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let spec = LadderSpec {
+        dataset: "fashion_syn".into(),
+        mode: Mode::Fp,
+        levels: vec![8, 12, 16],
+        batch: 32,
+        threshold: ThresholdPolicy::Fixed(2.0),
+        seed: 7,
+    };
+    let ladder = Ladder::calibrate(engine, spec, &data, 64).unwrap();
+    (ladder, data)
+}
+
+/// No SC batch key is ever reused: across first-stage dispatches and
+/// escalation flushes (in-dispatch *and* shutdown), every key drawn
+/// from the dispatcher's chunk counter is distinct.
+pub fn assert_sc_keys_unique(engine: &mut dyn Backend, ladder: &Ladder, data: &EvalData) {
+    // Three batches of 20 escalate-all rows: queue depth crosses the
+    // compiled batch (32), forcing flushes inside dispatch as well as
+    // the shutdown drain.
+    let batches: Vec<Vec<usize>> = (0..3).map(|b| (0..20).map(|k| (b * 20 + k) % data.n).collect()).collect();
+    let session = drive_deferred(engine, ladder, data, &batches).unwrap();
+    assert!(session.flushes.len() >= 2, "fixture must exercise escalation flushes: {:?}", session.flushes);
+    let mut keys = session.sc_keys.clone();
+    keys.sort_unstable();
+    let n = keys.len();
+    keys.dedup();
+    assert_eq!(keys.len(), n, "SC batch key reused: keys in draw order {:?}", session.sc_keys);
+}
+
+/// `padded_slots` double-entry: the metric must equal the padding
+/// recomputed independently from the probe stream — `Σ (B₀ − n)` over
+/// first-stage dispatches plus `Σ (B_s − take)` over escalation
+/// flushes.  Catches both under- and over-counting on either path.
+pub fn assert_padding_double_entry(engine: &mut dyn Backend, ladder: &Ladder, data: &EvalData) {
+    // One 5-row escalate-all batch: pads 27 slots at the first stage
+    // and 27 more at each of the two shutdown flushes.
+    let session = drive_deferred(engine, ladder, data, &[(0..5).collect::<Vec<usize>>()]).unwrap();
+    assert!(session.flushes.len() >= 2, "fixture must exercise escalation flushes: {:?}", session.flushes);
+    let dispatch_pad: u64 = session.dispatches.iter().map(|&(n, b)| b - n).sum();
+    let flush_pad: u64 =
+        session.flushes.iter().map(|&(stage, take)| ladder.stages[stage as usize].variant.batch as u64 - take).sum();
+    assert_eq!(
+        session.padded_slots,
+        dispatch_pad + flush_pad,
+        "padded_slots out of double-entry balance (dispatch {dispatch_pad} + flush {flush_pad})"
+    );
+    assert_eq!(session.completions.len(), 5, "escalate-all session must still serve every request");
+}

@@ -1,0 +1,94 @@
+//! Mutation testing for the model suites: each test re-introduces one
+//! historical serving-core bug as a test-only fault
+//! (`ari::util::sim::fault`) and proves the *same* invariant check the
+//! model suites run (`tests/model_common/mod.rs`) fails against it —
+//! so a regression in the checks themselves cannot go unnoticed.
+//!
+//! The faults, and the bugs they re-encode:
+//!
+//! * `lossy-shutdown-drain` — the batching loop's shutdown paths used
+//!   to exit without flushing, dropping in-flight requests;
+//! * `sc-key-reuse` — escalation flushes used to share one SC chunk
+//!   key instead of drawing fresh ones;
+//! * `padded-slots-first-stage-only` — `padded_slots` used to count
+//!   first-stage padding only, missing escalation flushes;
+//! * `unchunked-drain` — the batcher's shutdown drain used to return
+//!   arbitrarily large batches, exceeding the compiled batch size.
+//!
+//! Every test holds a `FaultGuard`, which serialises fault-injection
+//! through a process-wide lock; this suite is its own test binary so
+//! the guards cannot interfere with the clean model suites.  Expect
+//! `ARI_REPLAY=...` lines in this suite's stderr: they come from the
+//! *deliberately failing* model runs.
+#![cfg(any(debug_assertions, feature = "sim"))]
+
+mod model_common;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use ari::runtime::NativeBackend;
+use ari::util::sim;
+use model_common::{
+    assert_drain_chunked, assert_padding_double_entry, assert_sc_keys_unique, escalate_all_fixture,
+    run_sim_serving_model,
+};
+
+/// True when `f` panics (i.e. the invariant check fired).
+fn check_fails(f: impl FnOnce()) -> bool {
+    catch_unwind(AssertUnwindSafe(f)).is_err()
+}
+
+/// The conservation model must fail when the shutdown flush is lost:
+/// 5 requests at batch 4 always leave one request in the batcher at
+/// shutdown, and the faulted loop drops it on every schedule.
+#[test]
+fn conservation_model_catches_lossy_shutdown_drain() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let model = |schedules: u64| {
+        sim::check_random(schedules, 0x10ad_bea7, || {
+            run_sim_serving_model(&data, 5, 4, Duration::from_millis(10), false);
+        });
+    };
+    model(3); // sanity: the model passes while the fault is off
+    let _fault = sim::FaultGuard::enable("lossy-shutdown-drain");
+    assert!(check_fails(|| model(3)), "conservation model must catch the lossy shutdown drain");
+}
+
+/// The SC-key uniqueness model must fail when escalation flushes pin
+/// their key instead of drawing fresh chunk ids.
+#[test]
+fn sc_key_model_catches_key_reuse() {
+    let mut engine = NativeBackend::synthetic();
+    let (ladder, data) = escalate_all_fixture(&mut engine);
+    assert_sc_keys_unique(&mut engine, &ladder, &data); // sanity: passes clean
+    let _fault = sim::FaultGuard::enable("sc-key-reuse");
+    assert!(
+        check_fails(|| assert_sc_keys_unique(&mut engine, &ladder, &data)),
+        "SC-key model must catch flush-key reuse"
+    );
+}
+
+/// The padding double-entry model must fail when flush-side padding
+/// goes uncounted (the pre-fix first-stage-only accounting).
+#[test]
+fn padding_model_catches_first_stage_only_accounting() {
+    let mut engine = NativeBackend::synthetic();
+    let (ladder, data) = escalate_all_fixture(&mut engine);
+    assert_padding_double_entry(&mut engine, &ladder, &data); // sanity: passes clean
+    let _fault = sim::FaultGuard::enable("padded-slots-first-stage-only");
+    assert!(
+        check_fails(|| assert_padding_double_entry(&mut engine, &ladder, &data)),
+        "padding model must catch first-stage-only accounting"
+    );
+}
+
+/// The drain-chunking model must fail when the shutdown drain returns
+/// one oversized batch.
+#[test]
+fn drain_model_catches_unchunked_drain() {
+    assert_drain_chunked(2, 5); // sanity: passes clean
+    let _fault = sim::FaultGuard::enable("unchunked-drain");
+    assert!(check_fails(|| assert_drain_chunked(2, 5)), "drain model must catch the unchunked shutdown drain");
+}

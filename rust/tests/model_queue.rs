@@ -1,0 +1,264 @@
+//! Deterministic-schedule model checking for
+//! `ari::util::queue::BoundedQueue` — the close contract pinned in the
+//! queue's module docs, verified under **every** interleaving at small
+//! bounds (2–3 threads, capacity 1–2, ≤6 ops) and under seeded random
+//! schedules at larger ones.  Failing random schedules print a one-line
+//! `ARI_REPLAY=<seed>` reproduction string.
+//!
+//! Compiled only when the sim harness is (dev/test builds or
+//! `--features sim`); the suite also carries real-thread property tests
+//! so the queue is exercised under genuine preemption, not just the
+//! model scheduler.
+#![cfg(any(debug_assertions, feature = "sim"))]
+
+use std::sync::Arc;
+use std::sync::Mutex as PlainMutex;
+use std::time::Duration;
+
+use ari::util::proptest::{run, Config};
+use ari::util::queue::BoundedQueue;
+use ari::util::sim;
+
+// ---------------------------------------------------------------------
+// Exhaustive small-bound models (every interleaving, `complete`
+// asserted).  A plain std mutex is safe for recording inside sim
+// threads as long as it is never held across a scheduling point.
+// ---------------------------------------------------------------------
+
+/// Items enqueued before `close` are always delivered, FIFO, then
+/// `None` — under every schedule of a cap-1 queue.
+#[test]
+fn exhaustive_items_before_close_always_delivered_fifo() {
+    let report = sim::check_exhaustive(100_000, || {
+        let q = Arc::new(BoundedQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let producer = sim::spawn(move || {
+            q2.push(1u32).unwrap();
+            q2.push(2).unwrap();
+            q2.close();
+        });
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None, "closed and drained queue must report None");
+        producer.join().unwrap();
+    });
+    assert!(report.complete, "state space must enumerate fully ({} schedules)", report.schedules);
+}
+
+/// A push racing `close` either delivers the item exactly once or hands
+/// the exact item back — never both, never neither.
+#[test]
+fn exhaustive_close_racing_push_never_loses_or_duplicates() {
+    let report = sim::check_exhaustive(100_000, || {
+        let q = Arc::new(BoundedQueue::new(1));
+        let result: Arc<PlainMutex<Option<Result<(), u32>>>> = Arc::new(PlainMutex::new(None));
+        let q2 = Arc::clone(&q);
+        let r2 = Arc::clone(&result);
+        let pusher = sim::spawn(move || {
+            let r = q2.push(7u32);
+            *r2.lock().unwrap() = Some(r);
+        });
+        q.close();
+        let mut popped = Vec::new();
+        while let Some(v) = q.pop() {
+            popped.push(v);
+        }
+        pusher.join().unwrap();
+        match result.lock().unwrap().take().unwrap() {
+            Ok(()) => assert_eq!(popped, vec![7], "accepted item must be delivered exactly once"),
+            Err(item) => {
+                assert_eq!(item, 7, "rejected push must hand the exact item back");
+                assert!(popped.is_empty(), "an item must never be both returned and delivered");
+            }
+        }
+    });
+    assert!(report.complete, "state space must enumerate fully ({} schedules)", report.schedules);
+}
+
+/// A pusher blocked on a full queue always wakes on `close` and gets
+/// its item back; the queued item is still delivered.
+#[test]
+fn exhaustive_close_wakes_blocked_pusher() {
+    let report = sim::check_exhaustive(100_000, || {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(5u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = sim::spawn(move || {
+            assert_eq!(q2.push(9), Err(9), "push against a full-then-closed queue must wake and reject");
+        });
+        q.close();
+        assert_eq!(q.pop(), Some(5), "close never discards queued items");
+        assert_eq!(q.pop(), None);
+        pusher.join().unwrap();
+    });
+    assert!(report.complete, "state space must enumerate fully ({} schedules)", report.schedules);
+}
+
+/// A popper blocked on an empty queue always wakes: first on the push
+/// (delivering the item), then on `close` (reporting `None`).  No
+/// wakeup is lost under any schedule.
+#[test]
+fn exhaustive_close_wakes_blocked_popper() {
+    let report = sim::check_exhaustive(100_000, || {
+        let q = Arc::new(BoundedQueue::<u32>::new(1));
+        let q2 = Arc::clone(&q);
+        let popper = sim::spawn(move || {
+            assert_eq!(q2.pop(), Some(3), "blocked pop must wake on push");
+            assert_eq!(q2.pop(), None, "blocked pop must wake on close");
+        });
+        q.push(3).unwrap();
+        q.close();
+        popper.join().unwrap();
+    });
+    assert!(report.complete, "state space must enumerate fully ({} schedules)", report.schedules);
+}
+
+// ---------------------------------------------------------------------
+// Random-schedule model at a larger bound (3 spawned threads).
+// ---------------------------------------------------------------------
+
+/// Two producers, a racing closer and a draining root: every item is
+/// either delivered once or handed back once, delivered items keep
+/// per-producer FIFO order.  `ARI_MODEL_SCHEDULES` raises the budget
+/// in CI; failures print `ARI_REPLAY=<seed>`.
+#[test]
+fn random_schedules_conserve_items_across_close() {
+    sim::check_random(sim::schedule_budget(300), 0xA5E1_D00D, || {
+        let q = Arc::new(BoundedQueue::new(2));
+        let rejected: Arc<PlainMutex<Vec<u32>>> = Arc::new(PlainMutex::new(Vec::new()));
+        let mut producers = Vec::new();
+        for p in 0..2u32 {
+            let q2 = Arc::clone(&q);
+            let rej = Arc::clone(&rejected);
+            producers.push(sim::spawn(move || {
+                for k in 0..2u32 {
+                    if let Err(item) = q2.push(p * 10 + k) {
+                        rej.lock().unwrap().push(item);
+                    }
+                }
+            }));
+        }
+        let qc = Arc::clone(&q);
+        let closer = sim::spawn(move || qc.close());
+        let mut delivered = Vec::new();
+        while let Some(v) = q.pop() {
+            delivered.push(v);
+        }
+        for t in producers {
+            t.join().unwrap();
+        }
+        closer.join().unwrap();
+        let rejected = rejected.lock().unwrap();
+        let mut all: Vec<u32> = delivered.iter().chain(rejected.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 10, 11], "delivered {delivered:?} + rejected {rejected:?} must cover every item once");
+        for base in [0u32, 10] {
+            let seq: Vec<u32> = delivered.iter().copied().filter(|v| v / 10 == base / 10).collect();
+            assert!(seq.windows(2).all(|w| w[0] < w[1]), "per-producer FIFO violated: {delivered:?}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Real-thread property tests (satellite): genuine preemption, no sim
+// schedule.
+// ---------------------------------------------------------------------
+
+/// Linearisability smoke under real threads: 3 producers × 50 items
+/// through a cap-4 queue into 2 consumers; every item arrives exactly
+/// once.
+#[test]
+fn real_threads_linearisability_smoke() {
+    let q = Arc::new(BoundedQueue::new(4));
+    let got: Arc<PlainMutex<Vec<u32>>> = Arc::new(PlainMutex::new(Vec::new()));
+    let mut producers = Vec::new();
+    for p in 0..3u32 {
+        let q2 = Arc::clone(&q);
+        producers.push(std::thread::spawn(move || {
+            for k in 0..50u32 {
+                q2.push(p * 1000 + k).unwrap();
+            }
+        }));
+    }
+    let mut consumers = Vec::new();
+    for _ in 0..2 {
+        let q2 = Arc::clone(&q);
+        let got2 = Arc::clone(&got);
+        consumers.push(std::thread::spawn(move || {
+            while let Some(v) = q2.pop() {
+                got2.lock().unwrap().push(v);
+            }
+        }));
+    }
+    for h in producers {
+        h.join().unwrap();
+    }
+    q.close();
+    for h in consumers {
+        h.join().unwrap();
+    }
+    let mut all = got.lock().unwrap().clone();
+    all.sort_unstable();
+    let want: Vec<u32> = (0..3).flat_map(|p| (0..50).map(move |k| p * 1000 + k)).collect();
+    assert_eq!(all, want);
+}
+
+/// Close-while-full under real threads: every pusher blocked on a full
+/// queue wakes and gets its own item back; the resident item survives.
+#[test]
+fn real_threads_close_while_full_wakes_every_pusher() {
+    let q = Arc::new(BoundedQueue::new(1));
+    q.push(0u32).unwrap();
+    let mut pushers = Vec::new();
+    for i in 1..=4u32 {
+        let q2 = Arc::clone(&q);
+        pushers.push(std::thread::spawn(move || q2.push(i)));
+    }
+    // Give the pushers time to genuinely block on the full queue.
+    std::thread::sleep(Duration::from_millis(30));
+    q.close();
+    let mut rejected: Vec<u32> = pushers.into_iter().map(|h| h.join().unwrap().unwrap_err()).collect();
+    rejected.sort_unstable();
+    assert_eq!(rejected, vec![1, 2, 3, 4]);
+    assert_eq!(q.pop(), Some(0));
+    assert_eq!(q.pop(), None);
+}
+
+/// Randomised close-mid-stream property under real threads: the
+/// delivered ids form a prefix, the rejected ids the exact suffix, and
+/// together they cover the sequence once.  Failures print an
+/// `ARI_REPLAY=<seed>/<stream>` reproduction string.
+#[test]
+fn real_threads_property_close_splits_prefix_suffix() {
+    run(Config::cases(8), |rng| {
+        let cap = 1 + rng.below(2) as usize;
+        let n_items = 1 + rng.below(40) as u32;
+        let cut = rng.below(n_items as u64 + 1) as usize;
+        let q = Arc::new(BoundedQueue::new(cap));
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            let mut rejected = Vec::new();
+            for k in 0..n_items {
+                if let Err(item) = q2.push(k) {
+                    rejected.push(item);
+                }
+            }
+            rejected
+        });
+        let mut delivered = Vec::new();
+        for _ in 0..cut {
+            match q.pop() {
+                Some(v) => delivered.push(v),
+                None => break,
+            }
+        }
+        q.close();
+        while let Some(v) = q.pop() {
+            delivered.push(v);
+        }
+        let rejected = producer.join().unwrap();
+        let m = delivered.len() as u32;
+        assert_eq!(delivered, (0..m).collect::<Vec<_>>(), "delivered ids must be the FIFO prefix");
+        assert_eq!(rejected, (m..n_items).collect::<Vec<_>>(), "rejected ids must be the exact suffix");
+    });
+}

@@ -1,0 +1,95 @@
+//! Deterministic-schedule model checking for the serving core: the
+//! *real* `batching_loop` driven under the sim scheduler (sim channel,
+//! virtual-time deadlines, sim consumer), plus single-threaded
+//! dispatcher models for the SC-key and padding invariants.
+//!
+//! Invariants pinned here (the mutation suite proves each check really
+//! fires — see `tests/model_mutations.rs`):
+//!
+//! * no request is dropped or duplicated at shutdown, and staging
+//!   preserves arrival order;
+//! * every staged batch holds `1..=max_batch` requests (shutdown
+//!   drains chunk correctly);
+//! * no SC batch key is ever reused across first-stage dispatches and
+//!   escalation flushes;
+//! * `padded_slots` balances against an independent recomputation over
+//!   first-stage **and** escalation-flush padding.
+//!
+//! Compiled only when the sim harness is (dev/test builds or
+//! `--features sim`).
+#![cfg(any(debug_assertions, feature = "sim"))]
+
+mod model_common;
+
+use std::time::Duration;
+
+use ari::runtime::NativeBackend;
+use ari::util::sim;
+use model_common::{
+    assert_drain_chunked, assert_padding_double_entry, assert_sc_keys_unique, escalate_all_fixture,
+    run_sim_serving_model,
+};
+
+/// Closed-loop burst through the pipelined arrival loop under random
+/// schedules: 7 requests, batch 3, so size-fired batches, a partial
+/// shutdown flush and channel-tail draining all occur.  Failures print
+/// a one-line `ARI_REPLAY=<seed>` reproduction string.
+#[test]
+fn random_schedules_burst_session_conserves_requests() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    sim::check_random(sim::schedule_budget(250), 0x5E7_ED15, || {
+        run_sim_serving_model(&data, 7, 3, Duration::from_millis(5), false);
+    });
+}
+
+/// Paced arrivals against a short batcher deadline under random
+/// schedules: batches fire by *virtual-time* deadline rather than
+/// size, exercising `next_deadline` / `recv_timeout` / restamping.
+#[test]
+fn random_schedules_paced_session_fires_deadlines() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    sim::check_random(sim::schedule_budget(250), 0xDEAD_115E, || {
+        run_sim_serving_model(&data, 5, 4, Duration::from_micros(300), true);
+    });
+}
+
+/// Bounded-exhaustive pass over the smallest pipeline (2 requests,
+/// batch 1, generator + loop + consumer): enumerates the leading
+/// interleavings of channel, batcher and staging-queue operations.
+#[test]
+fn exhaustive_prefix_tiny_session_conserves_requests() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    sim::check_exhaustive(10_000, || {
+        run_sim_serving_model(&data, 2, 1, Duration::from_millis(5), false);
+    });
+}
+
+/// Shutdown drains chunk at `max_batch`: direct model of the batcher's
+/// `drain_into` contract the pipeline relies on.
+#[test]
+fn drained_chunks_respect_max_batch() {
+    assert_drain_chunked(2, 5);
+    assert_drain_chunked(3, 9);
+    assert_drain_chunked(4, 1);
+}
+
+/// No SC batch key reused across dispatches and escalation flushes
+/// (in-dispatch and shutdown).
+#[test]
+fn deferred_sc_keys_are_never_reused() {
+    let mut engine = NativeBackend::synthetic();
+    let (ladder, data) = escalate_all_fixture(&mut engine);
+    assert_sc_keys_unique(&mut engine, &ladder, &data);
+}
+
+/// `padded_slots` is exact across first-stage batches and escalation
+/// flushes (double-entry against the probe stream).
+#[test]
+fn deferred_padded_slots_balance_double_entry() {
+    let mut engine = NativeBackend::synthetic();
+    let (ladder, data) = escalate_all_fixture(&mut engine);
+    assert_padding_double_entry(&mut engine, &ladder, &data);
+}
