@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test doc fmt bench bench-json bench-serve serve-smoke artifacts artifacts-quick clean
+.PHONY: build test doc fmt bench bench-json bench-serve serve-smoke chaos-smoke artifacts artifacts-quick clean
 
 build:
 	$(CARGO) build --release
@@ -50,8 +50,10 @@ bench-json:
 
 # Machine-readable serving perf record: short smoke sessions of the
 # open-loop bench_serve harness (Poisson rates x escalation policy x
-# ladder depth, plus closed-loop ceilings) into BENCH_serve.json —
-# p50/p95/p99 latency, queue wait and completions/sec per session.  CI
+# ladder depth, plus closed-loop ceilings and the graceful-degradation
+# frontier under injected overload) into BENCH_serve.json —
+# p50/p95/p99 latency, queue wait, completions/sec, accuracy and
+# robustness counters per session.  CI
 # uploads it next to BENCH_native.json so the serving trajectory
 # accumulates per commit; see docs/PERF.md for the record format.
 bench-serve:
@@ -65,6 +67,19 @@ bench-serve:
 serve-smoke:
 	$(CARGO) run --release --bin ari -- serve --deferred --backend native \
 		"levels=[8,12,16]" server.requests=512 server.batch_size=32 server.arrival_rate=6000
+
+# The serve-smoke session under a seeded random fault schedule
+# (docs/ROBUSTNESS.md): ARI_FAULTS defaults to seed 1 locally — a bare
+# seed arms util::fault's canonical chaos spec (injected backend
+# errors/panics, latency spikes, queue stalls, worker death); the CI
+# chaos job seeds it from the run id instead.  The session must survive
+# via retries, pool supervision and graceful degradation
+# (server.overload_queue) with every request completing exactly once —
+# enforced in-process — and the armed spec is echoed for exact replay.
+chaos-smoke:
+	ARI_FAULTS=$${ARI_FAULTS:-1} $(CARGO) run --release --bin ari -- serve --deferred --backend native \
+		"levels=[8,12,16]" server.requests=512 server.batch_size=32 server.arrival_rate=6000 \
+		server.overload_queue=64
 
 # Train the MLPs and AOT-lower every resolution variant to HLO text
 # (L1/L2 python layer; needs jax).  Output: ./artifacts/

@@ -8,14 +8,20 @@
 //! group of `ari-bench v1` entries (see docs/PERF.md for the record
 //! format) — `make bench-serve` drives this into `BENCH_serve.json`, so
 //! the serving trajectory is tracked per commit alongside the kernel
-//! benches in `BENCH_native.json`.  `ARI_BENCH_SMOKE=1` shrinks the
-//! request counts for CI.
+//! benches in `BENCH_native.json`.  Every session entry also carries
+//! the robustness counters (`accuracy`, `degraded`, `rejected`,
+//! `failed`, `retries`), and a final section records the
+//! accuracy-vs-latency frontier of ladder-native graceful degradation
+//! under injected overload (`exec-delay` faults; see
+//! docs/ROBUSTNESS.md).  `ARI_BENCH_SMOKE=1` shrinks the request
+//! counts for CI.
 
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{EscalationPolicy, Ladder, LadderSpec};
 use ari::runtime::{Backend, NativeBackend};
 use ari::server::{run_serving_ladder, ServeOptions, ServeReport};
 use ari::util::benchkit::{section, smoke, BenchResult, JsonReport};
+use ari::util::fault;
 
 /// Shrink a request count for smoke runs.
 fn req(n: usize) -> usize {
@@ -27,12 +33,21 @@ fn req(n: usize) -> usize {
 }
 
 /// Record one serving session: a wall-time entry whose `items_per_sec`
-/// is completions/sec, plus one entry per latency quantile and the mean
-/// queue wait (their `mean_ns` carries the metric; no item counts).
+/// is completions/sec — carrying the session's accuracy and robustness
+/// counters as extra fields — plus one entry per latency quantile and
+/// the mean queue wait (their `mean_ns` carries the metric; no item
+/// counts).
 fn record(json: &mut JsonReport, name: &str, r: &ServeReport) {
-    json.add(
+    json.add_extra(
         &BenchResult { name: name.to_string(), mean_ns: r.wall.as_nanos() as f64, std_ns: 0.0, iters: 1 },
         Some(r.completions.len() as u64),
+        &[
+            ("accuracy", r.accuracy),
+            ("degraded", r.degraded as f64),
+            ("rejected", r.rejected as f64),
+            ("failed", r.failed as f64),
+            ("retries", r.retries as f64),
+        ],
     );
     for (suffix, d) in
         [("p50", r.p50), ("p95", r.p95), ("p99", r.p99), ("queue_wait", r.queue_wait_mean)]
@@ -49,7 +64,19 @@ fn record(json: &mut JsonReport, name: &str, r: &ServeReport) {
     }
 }
 
-fn session(levels: &[usize], rate: f64, requests: usize, policy: EscalationPolicy) -> ServeReport {
+/// Run one serving session.  `faults` (a `util::fault` spec) is armed
+/// *after* calibration, so injected faults hit only the serving
+/// pipeline — the same placement the `ari serve --faults` flag uses;
+/// `tweak` applies config overrides (e.g. an overload threshold) on top
+/// of the bench defaults.
+fn session_with(
+    levels: &[usize],
+    rate: f64,
+    requests: usize,
+    policy: EscalationPolicy,
+    faults: Option<&str>,
+    tweak: impl FnOnce(&mut AriConfig),
+) -> ServeReport {
     let mut engine = NativeBackend::synthetic();
     let data = engine.eval_data("fashion_syn").unwrap();
     let mut cfg = AriConfig::default();
@@ -59,6 +86,7 @@ fn session(levels: &[usize], rate: f64, requests: usize, policy: EscalationPolic
     cfg.requests = requests;
     cfg.arrival_rate = rate;
     cfg.batch_timeout_us = 500;
+    tweak(&mut cfg);
     let spec = LadderSpec {
         dataset: cfg.dataset.clone(),
         mode: Mode::Fp,
@@ -68,8 +96,13 @@ fn session(levels: &[usize], rate: f64, requests: usize, policy: EscalationPolic
         seed: cfg.seed as u32,
     };
     let ladder = Ladder::calibrate(&mut engine, spec, &data, data.n / 2).unwrap();
+    let _armed = faults.map(fault::ArmGuard::arm);
     run_serving_ladder(&mut engine, &ladder, &cfg, &data, None, ServeOptions { escalation: policy })
         .unwrap()
+}
+
+fn session(levels: &[usize], rate: f64, requests: usize, policy: EscalationPolicy) -> ServeReport {
+    session_with(levels, rate, requests, policy, None, |_| {})
 }
 
 fn main() {
@@ -104,6 +137,35 @@ fn main() {
         println!(
             "{:<40} {:>9.0} {:>10.1?} {:>10.1?} {:>10.1?} {:>11.1?}",
             name, r.throughput_rps, r.p50, r.p95, r.p99, r.queue_wait_mean
+        );
+    }
+
+    // Graceful-degradation frontier: the same overloaded session
+    // (injected exec-delay latency spikes under open-loop pressure) at
+    // tightening overload thresholds.  As the threshold drops, more
+    // batches are served the reduced-stage answer: p95 falls, accuracy
+    // gives a little — the accuracy-vs-latency tradeoff the degradation
+    // policy buys under overload.  Deterministic fault seed, so the
+    // frontier is comparable across commits.
+    section("graceful degradation: accuracy vs latency under injected overload (exec-delay:0.5@7)");
+    println!(
+        "{:<40} {:>9} {:>10} {:>9} {:>9} {:>9}",
+        "case", "req/s", "p95", "accuracy", "degraded", "retries"
+    );
+    for (cname, overload_queue) in [("off", 0usize), ("depth=64", 64), ("depth=32", 32)] {
+        let r = session_with(
+            &[8, 12, 16],
+            8000.0,
+            req(512),
+            EscalationPolicy::Deferred,
+            Some("exec-delay:0.5@7"),
+            |cfg| cfg.overload_queue = overload_queue,
+        );
+        let name = format!("3L def overloaded {cname}");
+        record(&mut json, &name, &r);
+        println!(
+            "{:<40} {:>9.0} {:>10.1?} {:>9.4} {:>9} {:>9}",
+            name, r.throughput_rps, r.p95, r.accuracy, r.degraded, r.retries
         );
     }
 

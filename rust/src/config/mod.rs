@@ -128,6 +128,27 @@ pub struct AriConfig {
     pub arrival_rate: f64,
     /// Workload / SC-key seed.
     pub seed: u64,
+    /// Per-request deadline in µs from submission; requests already
+    /// past it at dispatch are rejected unserved.  0 disables deadlines.
+    pub deadline_us: u64,
+    /// Max retries per batch after a transient backend error/panic
+    /// before the batch's requests are marked failed.
+    pub retries: u32,
+    /// Base backoff between backend retries in µs (attempt `k` waits
+    /// `k * retry_backoff_us`).
+    pub retry_backoff_us: u64,
+    /// Overload threshold on pipeline depth: when staged + escalation
+    /// backlog reaches this many requests, the dispatcher stops
+    /// escalating and serves reduced-stage answers flagged degraded.
+    /// 0 disables the depth trigger.
+    pub overload_queue: usize,
+    /// Overload threshold on observed p95 latency in µs (same
+    /// degraded-mode response).  0 disables the latency trigger.
+    pub overload_p95_us: u64,
+    /// Batching-thread watchdog: a heartbeat stalled longer than this
+    /// many µs fails the session diagnostically instead of hanging.
+    /// 0 disables the watchdog.
+    pub watchdog_stall_us: u64,
 }
 
 impl Default for AriConfig {
@@ -146,6 +167,12 @@ impl Default for AriConfig {
             requests: 2048,
             arrival_rate: 0.0,
             seed: 0xA41,
+            deadline_us: 0,
+            retries: 2,
+            retry_backoff_us: 200,
+            overload_queue: 0,
+            overload_p95_us: 0,
+            watchdog_stall_us: 3_000_000,
         }
     }
 }
@@ -253,6 +280,30 @@ impl AriConfig {
         }
         if let Some(v) = doc.get_int("server", "seed") {
             self.seed = v as u64;
+        }
+        if let Some(v) = doc.get_int("server", "deadline_us") {
+            anyhow::ensure!(v >= 0, "server.deadline_us must be >= 0, got {v}");
+            self.deadline_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("server", "retries") {
+            anyhow::ensure!((0..=64).contains(&v), "server.retries must be in 0..=64, got {v}");
+            self.retries = v as u32;
+        }
+        if let Some(v) = doc.get_int("server", "retry_backoff_us") {
+            anyhow::ensure!(v >= 0, "server.retry_backoff_us must be >= 0, got {v}");
+            self.retry_backoff_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("server", "overload_queue") {
+            anyhow::ensure!(v >= 0, "server.overload_queue must be >= 0, got {v}");
+            self.overload_queue = v as usize;
+        }
+        if let Some(v) = doc.get_int("server", "overload_p95_us") {
+            anyhow::ensure!(v >= 0, "server.overload_p95_us must be >= 0, got {v}");
+            self.overload_p95_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("server", "watchdog_stall_us") {
+            anyhow::ensure!(v >= 0, "server.watchdog_stall_us must be >= 0, got {v}");
+            self.watchdog_stall_us = v as u64;
         }
         Ok(())
     }
@@ -421,6 +472,38 @@ arrival_rate = 1000.5
             assert_eq!(c.reduced_level, 8);
             assert_eq!(c.full_level, 16);
         }
+    }
+
+    /// The robustness keys default OFF (bit-identical serving) and
+    /// parse from the `[server]` section with range validation.
+    #[test]
+    fn robustness_keys_parse_and_validate() {
+        let c = AriConfig::default();
+        assert_eq!(c.deadline_us, 0, "deadlines default off");
+        assert_eq!(c.overload_queue, 0, "depth trigger defaults off");
+        assert_eq!(c.overload_p95_us, 0, "latency trigger defaults off");
+        assert_eq!(c.retries, 2);
+        assert_eq!(c.retry_backoff_us, 200);
+        assert_eq!(c.watchdog_stall_us, 3_000_000);
+        let mut c = AriConfig::default();
+        c.apply_overrides(&[
+            "server.deadline_us=5000".into(),
+            "server.retries=4".into(),
+            "server.retry_backoff_us=50".into(),
+            "server.overload_queue=96".into(),
+            "server.overload_p95_us=20000".into(),
+            "server.watchdog_stall_us=1000000".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.deadline_us, 5000);
+        assert_eq!(c.retries, 4);
+        assert_eq!(c.retry_backoff_us, 50);
+        assert_eq!(c.overload_queue, 96);
+        assert_eq!(c.overload_p95_us, 20000);
+        assert_eq!(c.watchdog_stall_us, 1_000_000);
+        let mut c = AriConfig::default();
+        assert!(c.apply_overrides(&["server.retries=65".into()]).is_err(), "retry cap");
+        assert!(c.apply_overrides(&["server.deadline_us=-1".into()]).is_err(), "negative deadline");
     }
 
     #[test]

@@ -78,7 +78,9 @@ impl Manifest {
         let path = root.join("manifest.txt");
         let text = std::fs::read_to_string(&path)
             .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} — run `make artifacts` first"))?;
-        Self::parse(root, &text)
+        // Name the offending file: a malformed manifest must produce an
+        // actionable error (pinned by `tests/failure_injection.rs`).
+        Self::parse(root, &text).map_err(|e| e.context(format!("manifest {}", path.display())))
     }
 
     /// Parse manifest text (separated out for tests).

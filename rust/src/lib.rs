@@ -27,7 +27,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`util`] | PRNG, stats, histograms, mini-TOML, worker pool, bench kit, property-test + deterministic-schedule ([`util::sim`]) harnesses |
+//! | [`util`] | PRNG, stats, histograms, mini-TOML, worker pool, fault-injection registry ([`util::fault`]), bench kit, property-test + deterministic-schedule ([`util::sim`]) harnesses |
 //! | [`config`] | experiment / server configuration |
 //! | [`data`] | `.bin`/`.meta` tensor loader, manifest, datasets |
 //! | [`tensor`] | f32 matrix substrate with the tiled matmul kernel |

@@ -48,6 +48,7 @@ struct Cli {
     out: Option<PathBuf>,
     deferred: bool,
     ladder: bool,
+    faults: Option<String>,
     positional: Vec<String>,
     overrides: Vec<String>,
 }
@@ -60,6 +61,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
         out: None,
         deferred: false,
         ladder: false,
+        faults: None,
         positional: Vec::new(),
         overrides: Vec::new(),
     };
@@ -72,6 +74,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
             "--out" => cli.out = Some(PathBuf::from(next_val(&mut it, "--out")?)),
             "--deferred" => cli.deferred = true,
             "--ladder" => cli.ladder = true,
+            "--faults" => cli.faults = Some(next_val(&mut it, "--faults")?.to_string()),
             "--help" | "-h" => {
                 println!("{}", HELP);
                 std::process::exit(0);
@@ -89,7 +92,9 @@ fn next_val<'a>(it: &mut std::iter::Peekable<std::slice::Iter<'a, String>>, flag
 
 const HELP: &str = "ari — Adaptive Resolution Inference\n\
 commands:\n  info | calibrate | serve | sweep | experiment <id|all> | bench-exec | fixture\n\
-flags: --artifacts DIR  --backend auto|native|pjrt  --config FILE  --out DIR  --deferred  --ladder\n\
+flags: --artifacts DIR  --backend auto|native|pjrt  --config FILE  --out DIR  --deferred  --ladder\n  \
+--faults SPEC  arm fault injection for serve (point[:prob[:count]],…[@seed] or a bare chaos seed;\n  \
+               also read from ARI_FAULTS; see docs/ROBUSTNESS.md)\n\
 overrides: dataset=… mode=fp|sc reduced_level=… levels=[8,12,16] threshold=mmax|m99|m95|<f> server.batch_size=… server.requests=… server.arrival_rate=…";
 
 fn load_config(cli: &Cli) -> ari::Result<AriConfig> {
@@ -170,7 +175,20 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
                 engine.name()
             );
             print!("{}", ladder.calibration_report());
+            // Arm fault injection last, so chaos hits the serving
+            // session rather than calibration or the baseline pass
+            // (neither has a retry path).  `--faults` wins over the
+            // `ARI_FAULTS` environment variable; the normalised spec
+            // is echoed so a failing run can be replayed exactly.
+            let armed_spec = match &cli.faults {
+                Some(v) => Some(ari::util::fault::arm_value(v)?),
+                None => ari::util::fault::arm_from_env()?,
+            };
+            if let Some(spec) = &armed_spec {
+                println!("faults armed: {spec}");
+            }
             let report = run_serving_ladder(engine.as_mut(), &ladder, &cfg, &data, Some(&full_out.pred), opts)?;
+            ari::util::fault::disarm_all();
             println!("{}", report.summary());
         }
         "sweep" => {

@@ -95,6 +95,15 @@ pub struct MetricsRegistry {
     pub latency: LatencyHist,
     /// Queue wait before the reduced pass.
     pub queue_wait: LatencyHist,
+    /// Requests served a reduced-stage answer under overload
+    /// (escalation suppressed — [`crate::server::CompletionOutcome::Degraded`]).
+    pub degraded: AtomicU64,
+    /// Requests rejected unserved (deadline already expired at dispatch).
+    pub rejected: AtomicU64,
+    /// Requests whose batch exhausted its backend retries.
+    pub failed: AtomicU64,
+    /// Backend `execute` retries after transient errors/panics.
+    pub retries: AtomicU64,
     /// Named counters for anything else (failure injection, retries…).
     extra: Mutex<std::collections::BTreeMap<String, u64>>,
 }
@@ -105,9 +114,11 @@ impl MetricsRegistry {
         Self::default()
     }
 
-    /// Increment a named ad-hoc counter.
+    /// Increment a named ad-hoc counter.  Recovers a poisoned guard:
+    /// the map is plain data, and losing ad-hoc counters to an
+    /// unrelated panic would hide the very incident being counted.
     pub fn bump(&self, name: &str, by: u64) {
-        *self.extra.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+        *self.extra.lock().unwrap_or_else(|e| e.into_inner()).entry(name.to_string()).or_insert(0) += by;
     }
 
     /// Account modelled energy (µJ, stored as integer nJ).
@@ -157,7 +168,14 @@ impl MetricsRegistry {
             self.latency.quantile(0.99)
         ));
         s.push_str(&format!("modelled energy: {:.2} µJ\n", self.energy_uj()));
-        for (k, v) in self.extra.lock().unwrap().iter() {
+        s.push_str(&format!(
+            "outcomes: degraded {} rejected {} failed {} after {} retries\n",
+            self.degraded.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed)
+        ));
+        for (k, v) in self.extra.lock().unwrap_or_else(|e| e.into_inner()).iter() {
             s.push_str(&format!("{k}: {v}\n"));
         }
         s
@@ -228,6 +246,30 @@ mod tests {
         m.bump("retries", 2);
         m.bump("retries", 1);
         assert!(m.report().contains("retries: 3"));
+    }
+
+    #[test]
+    fn outcome_counters_in_report() {
+        let m = MetricsRegistry::new();
+        m.degraded.store(4, Ordering::Relaxed);
+        m.rejected.store(2, Ordering::Relaxed);
+        m.failed.store(1, Ordering::Relaxed);
+        m.retries.store(7, Ordering::Relaxed);
+        assert!(m.report().contains("outcomes: degraded 4 rejected 2 failed 1 after 7 retries"));
+    }
+
+    #[test]
+    fn bump_survives_a_poisoned_map() {
+        let m = std::sync::Arc::new(MetricsRegistry::new());
+        let mc = std::sync::Arc::clone(&m);
+        // Poison `extra` by panicking while holding its guard.
+        let _ = std::thread::spawn(move || {
+            let _guard = mc.extra.lock().unwrap();
+            panic!("poison the metrics map");
+        })
+        .join();
+        m.bump("after-poison", 1);
+        assert!(m.report().contains("after-poison: 1"));
     }
 
     #[test]

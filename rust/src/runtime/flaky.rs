@@ -1,0 +1,140 @@
+//! A deterministic fault-wrapping backend for tests and benches.
+//!
+//! [`FlakyBackend`] delegates every [`Backend`] method to an inner
+//! backend and fails (or panics) on *exact* `execute` call indices.
+//! Where the probabilistic registry in [`crate::util::fault`] models a
+//! noisy environment, this wrapper answers a different question the
+//! model suites need: *what happens when call #k of a schedule fails?*
+//! — every schedule of the deterministic harness then sees the same
+//! fault at the same dispatch, so the exactly-one-completion invariant
+//! can be checked per failure position rather than on average.
+
+use crate::data::{EvalData, Manifest, VariantRef, Weights};
+use crate::runtime::{Backend, BatchOutputs, EngineStats, VariantStats};
+
+/// Wraps a [`Backend`], failing chosen `execute` calls deterministically.
+///
+/// Call indices are 0-based and count every `execute` arriving at this
+/// wrapper (including those issued through the provided `run_padded` /
+/// `run_dataset` helpers, which funnel into `execute`).
+pub struct FlakyBackend<B: Backend> {
+    inner: B,
+    /// 0-based `execute` call indices that return a typed error.
+    fail_on: Vec<u64>,
+    /// 0-based `execute` call indices that panic.
+    panic_on: Vec<u64>,
+    calls: u64,
+}
+
+impl<B: Backend> FlakyBackend<B> {
+    /// Wrap `inner` with no faults scheduled.
+    pub fn new(inner: B) -> Self {
+        Self { inner, fail_on: Vec::new(), panic_on: Vec::new(), calls: 0 }
+    }
+
+    /// Schedule a typed `Err` on the given 0-based `execute` call index.
+    pub fn fail_on_call(mut self, idx: u64) -> Self {
+        self.fail_on.push(idx);
+        self
+    }
+
+    /// Schedule a panic on the given 0-based `execute` call index.
+    pub fn panic_on_call(mut self, idx: u64) -> Self {
+        self.panic_on.push(idx);
+        self
+    }
+
+    /// `execute` calls seen so far (failed, panicked and successful).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// The wrapped backend.
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+}
+
+impl<B: Backend> Backend for FlakyBackend<B> {
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn load_dataset(&mut self, name: &str) -> crate::Result<()> {
+        self.inner.load_dataset(name)
+    }
+
+    fn weights(&self, name: &str) -> crate::Result<&Weights> {
+        self.inner.weights(name)
+    }
+
+    fn eval_data(&self, name: &str) -> crate::Result<EvalData> {
+        self.inner.eval_data(name)
+    }
+
+    fn ensure_compiled(&mut self, v: &VariantRef) -> crate::Result<()> {
+        self.inner.ensure_compiled(v)
+    }
+
+    fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs> {
+        let idx = self.calls;
+        self.calls += 1;
+        if self.panic_on.contains(&idx) {
+            panic!("flaky backend: scheduled panic on execute call {idx}");
+        }
+        if self.fail_on.contains(&idx) {
+            anyhow::bail!("flaky backend: scheduled failure on execute call {idx}");
+        }
+        self.inner.execute(v, x, sc_key)
+    }
+
+    fn recycle_outputs(&mut self, out: BatchOutputs) {
+        self.inner.recycle_outputs(out)
+    }
+
+    fn stats(&self) -> EngineStats {
+        self.inner.stats()
+    }
+
+    fn variant_stats(&self) -> Vec<VariantStats> {
+        self.inner.variant_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::VariantKind;
+    use crate::runtime::fixture::FixtureSpec;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn fails_exactly_the_scheduled_calls() {
+        let native = NativeBackend::from_fixtures(&[FixtureSpec::small("d", "D", 16, 11)]);
+        let mut b = FlakyBackend::new(native).fail_on_call(1);
+        let v = b.manifest().variant("d", VariantKind::Fp, 16, 32).unwrap().clone();
+        let eval = b.eval_data("d").unwrap();
+        assert!(b.execute(&v, eval.rows(0, 32), None).is_ok(), "call 0 clean");
+        let err = b.execute(&v, eval.rows(0, 32), None).unwrap_err().to_string();
+        assert!(err.contains("call 1"), "{err}");
+        assert!(b.execute(&v, eval.rows(0, 32), None).is_ok(), "call 2 clean again");
+        assert_eq!(b.calls(), 3);
+    }
+
+    #[test]
+    fn panics_on_schedule_and_counts_the_call() {
+        let native = NativeBackend::from_fixtures(&[FixtureSpec::small("d", "D", 16, 11)]);
+        let mut b = FlakyBackend::new(native).panic_on_call(0);
+        let v = b.manifest().variant("d", VariantKind::Fp, 16, 32).unwrap().clone();
+        let eval = b.eval_data("d").unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.execute(&v, eval.rows(0, 32), None);
+        }));
+        assert!(caught.is_err());
+        assert!(b.execute(&v, eval.rows(0, 32), None).is_ok(), "wrapper survives its own panic");
+    }
+}

@@ -20,11 +20,13 @@
 
 pub mod backend;
 pub mod fixture;
+pub mod flaky;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use backend::{open_backend, Backend, BackendKind, BatchOutputs, EngineStats, EngineStatsAccum, VariantStats};
+pub use flaky::FlakyBackend;
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::Engine;

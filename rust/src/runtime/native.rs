@@ -39,6 +39,7 @@ use crate::quant::FpFormat;
 use crate::runtime::fixture::{self, FixtureSpec};
 use crate::runtime::{Backend, BatchOutputs, EngineStats, EngineStatsAccum, VariantStats};
 use crate::sc::ScConfig;
+use crate::util::fault;
 
 /// Max recycled output-buffer sets kept by [`Backend::recycle_outputs`].
 /// The serving path keeps at most a couple in flight; the cap just
@@ -197,12 +198,18 @@ impl Backend for NativeBackend {
             anyhow::bail!("dataset {name} not in this synthetic backend");
         }
         let dir = self.manifest.dataset_dir(name);
-        let weights = Weights::load(&dir)?;
+        // Every load error names the offending file: a corrupt artifact
+        // directory must produce a typed, actionable `Err`, never a
+        // panic (pinned by `tests/failure_injection.rs`).
+        let weights = Weights::load(&dir)
+            .map_err(|e| e.context(format!("dataset {name}: {}", dir.join("weights.bin/.meta").display())))?;
         anyhow::ensure!(
             weights.layers[0].in_dim == entry.input_dim,
-            "weights/manifest input_dim mismatch for {name}"
+            "weights/manifest input_dim mismatch for {name} in {}",
+            dir.join("weights.meta").display()
         );
-        let eval = EvalData::load(&dir)?;
+        let eval = EvalData::load(&dir)
+            .map_err(|e| e.context(format!("dataset {name}: {}", dir.join("eval.bin/.meta").display())))?;
         self.datasets.insert(name.to_string(), LoadedDataset { weights, eval });
         Ok(())
     }
@@ -226,6 +233,21 @@ impl Backend for NativeBackend {
     }
 
     fn execute(&mut self, v: &VariantRef, x: &[f32], sc_key: Option<[u32; 2]>) -> crate::Result<BatchOutputs> {
+        // Injected environmental faults (one relaxed load when
+        // disarmed): a latency spike, a transient typed error, or a
+        // mid-batch panic — in escalating order of violence so one
+        // chaos schedule can arm all three.
+        if fault::armed() {
+            if fault::inject(fault::EXEC_DELAY) {
+                std::thread::sleep(fault::STALL);
+            }
+            if fault::inject(fault::EXEC_ERROR) {
+                anyhow::bail!("injected transient execute fault ({})", plan_key(v));
+            }
+            if fault::inject(fault::EXEC_PANIC) {
+                panic!("injected execute panic ({})", plan_key(v));
+            }
+        }
         // Output storage comes from the recycle pool when the caller
         // returns consumed outputs (`recycle_outputs`): the steady-state
         // serving dispatch then allocates nothing here.
@@ -423,5 +445,41 @@ mod tests {
         assert!(b.load_dataset("nope").is_err());
         assert!(b.weights("nope").is_err());
         assert!(b.eval_data("nope").is_err());
+    }
+
+    /// The `exec-error` fault point turns executes into typed errors
+    /// naming the plan, without corrupting the backend: once the armed
+    /// count is spent the same variant executes normally again.
+    #[test]
+    fn injected_exec_error_is_typed_and_transient() {
+        let mut b = backend();
+        let v = fp_variant(&b, 16, 32);
+        let eval = b.eval_data("d").unwrap();
+        b.execute(&v, eval.rows(0, 32), None).unwrap(); // compile clean
+        let _g = fault::ArmGuard::arm("exec-error:1.0:2");
+        for _ in 0..2 {
+            let err = b.execute(&v, eval.rows(0, 32), None).unwrap_err().to_string();
+            assert!(err.contains("injected transient execute fault"), "{err}");
+            assert!(err.contains("d/Fp16"), "error must name the plan: {err}");
+        }
+        let out = b.execute(&v, eval.rows(0, 32), None).unwrap();
+        assert_eq!(out.batch, 32, "backend must recover once the fault count is spent");
+    }
+
+    /// The `exec-panic` fault point panics mid-batch; the backend (and
+    /// its plan cache) survives a caught panic.
+    #[test]
+    fn injected_exec_panic_leaves_backend_usable() {
+        let mut b = backend();
+        let v = fp_variant(&b, 16, 32);
+        let eval = b.eval_data("d").unwrap();
+        b.execute(&v, eval.rows(0, 32), None).unwrap();
+        let _g = fault::ArmGuard::arm("exec-panic:1.0:1");
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.execute(&v, eval.rows(0, 32), None);
+        }));
+        assert!(caught.is_err(), "armed exec-panic must fire");
+        let out = b.execute(&v, eval.rows(0, 32), None).unwrap();
+        assert_eq!(out.batch, 32, "backend must stay usable after a caught panic");
     }
 }

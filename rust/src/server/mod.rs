@@ -37,9 +37,21 @@
 //! stochastic-computing key.  Batches are staged and inferred strictly
 //! in arrival order, so serving output for a fixed seed is as
 //! deterministic as the pre-pipelined loop.
+//!
+//! **Fault tolerance** (see `docs/ROBUSTNESS.md`): every submitted
+//! request yields exactly one typed [`Completion`] — served
+//! ([`CompletionOutcome::Ok`]), served reduced under overload
+//! ([`CompletionOutcome::Degraded`]), rejected past its deadline
+//! ([`CompletionOutcome::Rejected`]), or failed after exhausting
+//! execute retries ([`CompletionOutcome::Failed`]).  Transient backend
+//! errors and panics are retried with linear backoff
+//! ([`RobustnessPolicy`]); a stalled batching thread is detected by a
+//! heartbeat watchdog that closes the pipeline and turns the hang into
+//! a diagnostic error.  With every knob at its default-off setting the
+//! dispatch path is bit-identical to the policy-free loop.
 
-use std::sync::atomic::Ordering;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::AriConfig;
@@ -49,6 +61,7 @@ use crate::coordinator::{
 use crate::data::EvalData;
 use crate::metrics::MetricsRegistry;
 use crate::runtime::Backend;
+use crate::util::fault;
 use crate::util::queue::BoundedQueue;
 use crate::util::sim;
 use crate::util::Pcg64;
@@ -70,6 +83,29 @@ pub struct Request {
     pub row: usize,
     /// When the generator produced the request.
     pub submitted: Instant,
+    /// Optional completion deadline.  A request still waiting for its
+    /// first-stage dispatch past this instant is rejected instead of
+    /// occupying a batch slot ([`CompletionOutcome::Rejected`]).
+    pub deadline: Option<Instant>,
+}
+
+/// How a request's single accounted [`Completion`] came to be.  Every
+/// submitted request gets exactly one, whatever faults the session
+/// absorbed along the way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompletionOutcome {
+    /// Served by the normal ladder walk (possibly escalated).
+    Ok,
+    /// Served the reduced-stage answer because the dispatcher was in
+    /// overload and suppressed escalation; the prediction is real but
+    /// below the configured confidence bar.
+    Degraded,
+    /// Deadline expired before first-stage dispatch; `pred` is `-1`
+    /// and no inference ran for this request.
+    Rejected,
+    /// Backend execution failed after exhausting the retry budget;
+    /// `pred` is `-1`.
+    Failed,
 }
 
 /// Completed request with its outcome.
@@ -79,7 +115,7 @@ pub struct Completion {
     pub id: u64,
     /// The request's dataset row.
     pub row: usize,
-    /// Predicted class served back.
+    /// Predicted class served back (`-1` when rejected or failed).
     pub pred: i32,
     /// Ladder stage that produced the prediction (0 = reduced model).
     pub stage: usize,
@@ -87,6 +123,8 @@ pub struct Completion {
     pub escalated: bool,
     /// Submit-to-complete latency.
     pub latency: Duration,
+    /// How this completion was produced.
+    pub outcome: CompletionOutcome,
 }
 
 /// Aggregated serving report.
@@ -131,6 +169,14 @@ pub struct ServeReport {
     /// batches **and** escalation-stage flushes (the latter were
     /// uncounted before this field existed).
     pub padded_slots: u64,
+    /// Requests served the reduced-stage answer under overload.
+    pub degraded: u64,
+    /// Requests rejected because their deadline expired before dispatch.
+    pub rejected: u64,
+    /// Requests failed after exhausting the execute retry budget.
+    pub failed: u64,
+    /// Backend execute retries performed across the session.
+    pub retries: u64,
 }
 
 /// Serving options beyond the config.
@@ -143,6 +189,117 @@ pub struct ServeOptions {
 impl Default for ServeOptions {
     fn default() -> Self {
         Self { escalation: EscalationPolicy::Immediate }
+    }
+}
+
+/// The serving loop's fault-handling knobs, derived from the
+/// `[server]` config section (see `docs/CONFIG.md` and
+/// `docs/ROBUSTNESS.md`).  [`RobustnessPolicy::default`] turns every
+/// mechanism off, which keeps the dispatch path bit-identical to the
+/// policy-free loop.
+#[derive(Clone, Copy, Debug)]
+pub struct RobustnessPolicy {
+    /// Per-request deadline measured from submission; `None` disables
+    /// deadline rejection.
+    pub deadline: Option<Duration>,
+    /// Extra execute attempts after the first failure (errors *and*
+    /// panics are retried).  0 fails the batch on the first error.
+    pub retries: u32,
+    /// Backoff before retry `k` is `retry_backoff * k` (linear).
+    pub retry_backoff: Duration,
+    /// Queue-depth overload threshold in requests (staged backlog plus
+    /// queued escalations); 0 disables.
+    pub overload_queue: usize,
+    /// Observed-p95-latency overload threshold; `None` disables.
+    pub overload_p95: Option<Duration>,
+    /// Declare the batching thread stalled after this long without a
+    /// heartbeat; `None` disables the watchdog.
+    pub watchdog_stall: Option<Duration>,
+}
+
+impl Default for RobustnessPolicy {
+    fn default() -> Self {
+        Self {
+            deadline: None,
+            retries: 0,
+            retry_backoff: Duration::ZERO,
+            overload_queue: 0,
+            overload_p95: None,
+            watchdog_stall: None,
+        }
+    }
+}
+
+impl RobustnessPolicy {
+    /// Build the policy from the `[server]` config keys (a `0` /
+    /// absent key disables the corresponding mechanism).
+    pub fn from_config(cfg: &AriConfig) -> Self {
+        Self {
+            deadline: (cfg.deadline_us > 0).then(|| Duration::from_micros(cfg.deadline_us)),
+            retries: cfg.retries,
+            retry_backoff: Duration::from_micros(cfg.retry_backoff_us),
+            overload_queue: cfg.overload_queue,
+            overload_p95: (cfg.overload_p95_us > 0).then(|| Duration::from_micros(cfg.overload_p95_us)),
+            watchdog_stall: (cfg.watchdog_stall_us > 0).then(|| Duration::from_micros(cfg.watchdog_stall_us)),
+        }
+    }
+}
+
+/// Liveness beacon the batching thread increments once per arrival
+/// iteration; the serving watchdog declares a stall when it stops
+/// advancing.  `doc(hidden)`-pub so the model suites can drive
+/// [`batching_loop`] directly.
+#[doc(hidden)]
+#[derive(Debug, Default)]
+pub struct Heartbeat(AtomicU64);
+
+impl Heartbeat {
+    /// Record one unit of batching-loop progress.
+    pub fn beat(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Beats recorded so far.
+    pub fn count(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Render a caught panic payload for an error message.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Run `f` with the policy's retry budget.  A panic inside `f` is
+/// caught (through [`sim::catching`], so deliberate panics don't abort
+/// a model schedule) and treated as one more transient failure.  Each
+/// retry bumps `metrics.retries` and sleeps `retry_backoff * attempt`.
+fn with_retry<T>(
+    policy: &RobustnessPolicy,
+    metrics: &MetricsRegistry,
+    mut f: impl FnMut() -> crate::Result<T>,
+) -> crate::Result<T> {
+    let mut attempt = 0u32;
+    loop {
+        let err = match sim::catching(&mut f) {
+            Ok(Ok(v)) => return Ok(v),
+            Ok(Err(e)) => e,
+            Err(p) => anyhow::anyhow!("backend panicked during execute: {}", panic_msg(p.as_ref())),
+        };
+        if attempt >= policy.retries {
+            return Err(err);
+        }
+        attempt += 1;
+        metrics.retries.fetch_add(1, Ordering::Relaxed);
+        if !policy.retry_backoff.is_zero() {
+            std::thread::sleep(policy.retry_backoff * attempt);
+        }
     }
 }
 
@@ -313,6 +470,12 @@ fn flush_batcher(
 /// and monomorphises to exactly the old code.  The
 /// `lossy-shutdown-drain` fault (dev/test builds only) re-introduces
 /// the historical lossy shutdown exit for the mutation suite.
+///
+/// `hb` is beaten once per arrival iteration; the serving watchdog
+/// reads it to tell a stalled loop from a slow one.  The
+/// [`fault::BATCH_STALL`] injection point simulates a hard stall: the
+/// loop stops beating and parks until something (normally the
+/// watchdog) closes the pipeline.
 #[doc(hidden)]
 pub fn batching_loop<S: RequestSource, C: ServeClock>(
     mut rx: S,
@@ -322,11 +485,19 @@ pub fn batching_loop<S: RequestSource, C: ServeClock>(
     data: &EvalData,
     staged: &BoundedQueue<StagedBatch>,
     empties: &BoundedQueue<StagedBatch>,
+    hb: &Heartbeat,
 ) {
     let mut batcher: Batcher<Request> = Batcher::new(policy);
     let mut received = 0usize;
     let mut now = clock.now();
     loop {
+        hb.beat();
+        if fault::inject(fault::BATCH_STALL) {
+            while !staged.is_closed() {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            break;
+        }
         if staged.is_closed() {
             break;
         }
@@ -393,6 +564,11 @@ struct Dispatcher<'a> {
     data: &'a EvalData,
     metrics: &'a MetricsRegistry,
     escalation: EscalationPolicy,
+    policy: RobustnessPolicy,
+    /// Approximate requests waiting in the staging pipeline, refreshed
+    /// by the serving loop before each dispatch; feeds the queue-depth
+    /// overload signal together with the escalation queues.
+    backlog_hint: usize,
     /// Deferred escalations: one queue of requests per non-first stage
     /// (index 0 unused).  Only the request is queued — input rows are
     /// re-gathered from the dataset at flush time, replacing the old
@@ -407,6 +583,10 @@ struct Dispatcher<'a> {
     ladder_out: LadderBatch,
     /// Gather buffer for escalation flushes.
     gather: Vec<f32>,
+    /// Reused buffers for the deadline filter (requests still live
+    /// after rejection, and their re-gathered rows).
+    live_items: Vec<Pending<Request>>,
+    live_x: Vec<f32>,
 }
 
 impl<'a> Dispatcher<'a> {
@@ -415,6 +595,7 @@ impl<'a> Dispatcher<'a> {
         data: &'a EvalData,
         metrics: &'a MetricsRegistry,
         escalation: EscalationPolicy,
+        policy: RobustnessPolicy,
         expected: usize,
     ) -> Self {
         Self {
@@ -422,17 +603,113 @@ impl<'a> Dispatcher<'a> {
             data,
             metrics,
             escalation,
+            policy,
+            backlog_hint: 0,
             esc_queues: vec![Vec::new(); ladder.n_stages()],
             completions: Vec::with_capacity(expected),
             chunk: 0,
             scratch: LadderScratch::new(),
             ladder_out: LadderBatch::empty(),
             gather: Vec::new(),
+            live_items: Vec::new(),
+            live_x: Vec::new(),
         }
     }
 
-    /// Dispatch one first-stage batch through the ladder.
+    /// Whether the dispatcher should serve reduced-stage answers
+    /// instead of escalating: queue depth (staged backlog plus queued
+    /// escalations) or observed p95 latency past the configured
+    /// threshold.  Recovers automatically — the signal is re-evaluated
+    /// per dispatched batch.
+    fn overload_active(&self) -> bool {
+        if self.policy.overload_queue > 0 {
+            let depth = self.backlog_hint + self.esc_queues.iter().map(Vec::len).sum::<usize>();
+            if depth >= self.policy.overload_queue {
+                return true;
+            }
+        }
+        if let Some(t) = self.policy.overload_p95 {
+            if self.metrics.latency.count() >= 16 && self.metrics.latency.quantile(0.95) >= t {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Record a `Failed` completion for every request of a batch whose
+    /// execution exhausted the retry budget.  The session keeps
+    /// serving — a backend fault must cost the batch, not the run.
+    /// The `lost-completion` fault (dev/test builds only) drops the
+    /// completion records, re-introducing a lost-request bug for the
+    /// mutation suite.
+    fn fail_batch(&mut self, items: &[Pending<Request>], err: &anyhow::Error) {
+        self.metrics.bump("execute_failures", 1);
+        sim::probe("fail_batch", items.len() as u64, 0);
+        let _ = err;
+        let now = Instant::now();
+        for p in items {
+            self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            if sim::fault("lost-completion") {
+                continue;
+            }
+            self.completions.push(Completion {
+                id: p.payload.id,
+                row: p.payload.row,
+                pred: -1,
+                stage: 0,
+                escalated: false,
+                latency: now.duration_since(p.payload.submitted),
+                outcome: CompletionOutcome::Failed,
+            });
+        }
+    }
+
+    /// Dispatch one first-stage batch: reject expired-deadline
+    /// requests, then run the survivors through the ladder.  The
+    /// deadline filter's fast path (no request carries a deadline) is
+    /// a single scan, so sessions without deadlines pay nothing.
     fn dispatch(&mut self, engine: &mut dyn Backend, items: &[Pending<Request>], x: &[f32]) -> crate::Result<()> {
+        if !items.iter().any(|p| p.payload.deadline.is_some()) {
+            return self.dispatch_live(engine, items, x);
+        }
+        let mut live = std::mem::take(&mut self.live_items);
+        let mut live_x = std::mem::take(&mut self.live_x);
+        live.clear();
+        live_x.clear();
+        let dim = self.data.input_dim;
+        let now = Instant::now();
+        for (i, p) in items.iter().enumerate() {
+            if p.payload.deadline.is_some_and(|d| now >= d) {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                self.completions.push(Completion {
+                    id: p.payload.id,
+                    row: p.payload.row,
+                    pred: -1,
+                    stage: 0,
+                    escalated: false,
+                    latency: now.duration_since(p.payload.submitted),
+                    outcome: CompletionOutcome::Rejected,
+                });
+            } else {
+                live.push(Pending { payload: p.payload, enqueued: p.enqueued });
+                live_x.extend_from_slice(&x[i * dim..(i + 1) * dim]);
+            }
+        }
+        let r = self.dispatch_live(engine, &live, &live_x);
+        self.live_items = live;
+        self.live_x = live_x;
+        r
+    }
+
+    /// Dispatch the deadline-surviving requests through the ladder.
+    fn dispatch_live(
+        &mut self,
+        engine: &mut dyn Backend,
+        items: &[Pending<Request>],
+        x: &[f32],
+    ) -> crate::Result<()> {
         let n = items.len();
         if n == 0 {
             return Ok(());
@@ -444,9 +721,24 @@ impl<'a> Dispatcher<'a> {
         self.metrics
             .padded_slots
             .fetch_add((self.ladder.stages[0].variant.batch - n) as u64, Ordering::Relaxed);
+        if self.overload_active() {
+            return self.dispatch_degraded(engine, items, x);
+        }
+        let policy = self.policy;
+        let metrics = self.metrics;
+        let ladder = self.ladder;
+        let chunk = self.chunk;
         match self.escalation {
             EscalationPolicy::Immediate => {
-                self.ladder.infer_batch_into(engine, x, n, self.chunk, &mut self.scratch, &mut self.ladder_out)?;
+                let scratch = &mut self.scratch;
+                let out = &mut self.ladder_out;
+                let run = with_retry(&policy, metrics, || {
+                    ladder.infer_batch_into(engine, x, n, chunk, &mut *scratch, &mut *out)
+                });
+                if let Err(e) = run {
+                    self.fail_batch(items, &e);
+                    return Ok(());
+                }
                 self.metrics.add_energy_uj(self.ladder_out.energy_uj);
                 // full_batches counts batches that actually reached the
                 // final (full) model; intermediate stages don't qualify.
@@ -469,11 +761,22 @@ impl<'a> Dispatcher<'a> {
                         stage: self.ladder_out.stage[i],
                         escalated: self.ladder_out.stage[i] > 0,
                         latency: lat,
+                        outcome: CompletionOutcome::Ok,
                     });
                 }
             }
             EscalationPolicy::Deferred => {
-                let (red, _) = self.ladder.run_stage_scratch(engine, 0, x, n, self.chunk, &mut self.scratch)?;
+                let scratch = &mut self.scratch;
+                let run = with_retry(&policy, metrics, || {
+                    ladder.run_stage_scratch(engine, 0, x, n, chunk, &mut *scratch).map(|(out, _)| out)
+                });
+                let red = match run {
+                    Ok(red) => red,
+                    Err(e) => {
+                        self.fail_batch(items, &e);
+                        return Ok(());
+                    }
+                };
                 self.metrics.add_energy_uj(n as f64 * self.ladder.stages[0].energy_uj);
                 let now = Instant::now();
                 for (i, p) in items.iter().enumerate() {
@@ -492,6 +795,7 @@ impl<'a> Dispatcher<'a> {
                             stage: 0,
                             escalated: false,
                             latency: lat,
+                            outcome: CompletionOutcome::Ok,
                         });
                     } else {
                         self.esc_queues[1].push(p.payload);
@@ -508,6 +812,62 @@ impl<'a> Dispatcher<'a> {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Overload path: run the reduced stage only and serve its answer
+    /// for every request — margin-accepted rows complete `Ok` exactly
+    /// as they would off-overload, the rest are served `Degraded`
+    /// instead of escalating.  Escalation pressure therefore stops
+    /// growing, and once the overload signal clears the normal path
+    /// resumes on the next batch.
+    fn dispatch_degraded(
+        &mut self,
+        engine: &mut dyn Backend,
+        items: &[Pending<Request>],
+        x: &[f32],
+    ) -> crate::Result<()> {
+        let n = items.len();
+        sim::probe("degraded", n as u64, 0);
+        let policy = self.policy;
+        let metrics = self.metrics;
+        let ladder = self.ladder;
+        let chunk = self.chunk;
+        let scratch = &mut self.scratch;
+        let run = with_retry(&policy, metrics, || {
+            ladder.run_stage_scratch(engine, 0, x, n, chunk, &mut *scratch).map(|(out, _)| out)
+        });
+        let red = match run {
+            Ok(red) => red,
+            Err(e) => {
+                self.fail_batch(items, &e);
+                return Ok(());
+            }
+        };
+        self.metrics.add_energy_uj(n as f64 * self.ladder.stages[0].energy_uj);
+        let now = Instant::now();
+        for (i, p) in items.iter().enumerate() {
+            self.metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
+            let lat = now.duration_since(p.payload.submitted);
+            self.metrics.latency.record(lat);
+            self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            let outcome = if crate::margin::accepts(red.margin[i], self.ladder.stages[0].threshold) {
+                CompletionOutcome::Ok
+            } else {
+                self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                CompletionOutcome::Degraded
+            };
+            self.completions.push(Completion {
+                id: p.payload.id,
+                row: p.payload.row,
+                pred: red.pred[i],
+                stage: 0,
+                escalated: false,
+                latency: lat,
+                outcome,
+            });
+        }
+        engine.recycle_outputs(red);
         Ok(())
     }
 
@@ -530,9 +890,30 @@ impl<'a> Dispatcher<'a> {
         for i in 0..take {
             gather.extend_from_slice(self.data.row(self.esc_queues[stage][i].row));
         }
-        let result = self.ladder.run_stage_scratch(engine, stage, &gather, take, key_seed, &mut self.scratch);
+        let policy = self.policy;
+        let metrics = self.metrics;
+        let ladder = self.ladder;
+        let scratch = &mut self.scratch;
+        let gather_ref = &gather;
+        let result = with_retry(&policy, metrics, || {
+            ladder.run_stage_scratch(engine, stage, gather_ref, take, key_seed, &mut *scratch)
+        });
         self.gather = gather;
-        let (out, waste) = result?;
+        let (out, waste) = match result {
+            Ok(r) => r,
+            Err(e) => {
+                // The flush exhausted its retries: the `take` queued
+                // escalations fail as a unit and leave the queue, so
+                // the session keeps draining instead of aborting.
+                let failed: Vec<Pending<Request>> = self.esc_queues[stage][..take]
+                    .iter()
+                    .map(|&req| Pending { payload: req, enqueued: req.submitted })
+                    .collect();
+                self.fail_batch(&failed, &e);
+                self.esc_queues[stage].drain(..take);
+                return Ok(());
+            }
+        };
         self.metrics.add_energy_uj(take as f64 * self.ladder.stages[stage].energy_uj);
         // `padded-slots-first-stage-only` (dev/test builds only) skips
         // the flush-side count, re-introducing the historical
@@ -564,6 +945,7 @@ impl<'a> Dispatcher<'a> {
                     stage,
                     escalated: true,
                     latency: lat,
+                    outcome: CompletionOutcome::Ok,
                 });
             } else {
                 self.esc_queues[stage + 1].push(req);
@@ -627,11 +1009,13 @@ pub fn run_serving_ladder(
         cfg.batch_size,
         ladder.stages[0].variant.batch
     );
+    let robustness = RobustnessPolicy::from_config(cfg);
     let (tx, rx) = mpsc::channel::<Request>();
     let n_requests = cfg.requests;
     let n_rows = data.n;
     let rate = cfg.arrival_rate;
     let seed = cfg.seed;
+    let deadline = robustness.deadline;
     // Generator thread: open-loop Poisson arrivals (or back-to-back).
     let gen = std::thread::spawn(move || {
         let mut rng = Pcg64::new(seed, 99);
@@ -641,7 +1025,9 @@ pub fn run_serving_ladder(
                 std::thread::sleep(Duration::from_secs_f64(gap));
             }
             let row = rng.below(n_rows as u64) as usize;
-            if tx.send(Request { id, row, submitted: Instant::now() }).is_err() {
+            let submitted = Instant::now();
+            let req = Request { id, row, submitted, deadline: deadline.map(|d| submitted + d) };
+            if tx.send(req).is_err() {
                 return;
             }
         }
@@ -649,7 +1035,7 @@ pub fn run_serving_ladder(
 
     let metrics = MetricsRegistry::new();
     let policy = BatcherPolicy::new(cfg.batch_size, Duration::from_micros(cfg.batch_timeout_us));
-    let mut disp = Dispatcher::new(ladder, data, &metrics, opts.escalation, n_requests);
+    let mut disp = Dispatcher::new(ladder, data, &metrics, opts.escalation, robustness, n_requests);
     // The fixed set of staging buffers that circulates through the
     // pipeline for the whole session.
     let staged: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
@@ -657,38 +1043,121 @@ pub fn run_serving_ladder(
     for _ in 0..PIPELINE_DEPTH {
         let _ = empties.push(StagedBatch::default());
     }
+    let hb = Heartbeat::default();
+    let stalled = AtomicBool::new(false);
+    // Watchdog stop signal: flipped (under the lock, then notified)
+    // once the serving loop exits, so the watchdog never outlives the
+    // scope.  Plain `std` primitives — the watchdog measures real time
+    // even in dev/test builds.
+    let wd_stop: (Mutex<bool>, Condvar) = (Mutex::new(false), Condvar::new());
     let t_start = Instant::now();
     let input_dim = data.input_dim;
+    let batch_size = cfg.batch_size;
     let serve_result: crate::Result<()> = std::thread::scope(|s| {
         let staged_ref = &staged;
         let empties_ref = &empties;
-        let _batching =
-            s.spawn(move || batching_loop(rx, &StdClock, policy, n_requests, data, staged_ref, empties_ref));
+        let hb_ref = &hb;
+        let _batching = s.spawn(move || {
+            batching_loop(rx, &StdClock, policy, n_requests, data, staged_ref, empties_ref, hb_ref)
+        });
+        if let Some(stall_after) = robustness.watchdog_stall {
+            let stalled_ref = &stalled;
+            let wd_ref = &wd_stop;
+            s.spawn(move || {
+                let (lock, cv) = wd_ref;
+                let mut last = hb_ref.count();
+                let mut last_change = Instant::now();
+                let mut done = lock.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    let poll = Duration::from_millis(100).min(stall_after);
+                    let (g, _) = cv.wait_timeout(done, poll).unwrap_or_else(|e| e.into_inner());
+                    done = g;
+                    if *done {
+                        return;
+                    }
+                    let beats = hb_ref.count();
+                    if beats != last {
+                        last = beats;
+                        last_change = Instant::now();
+                        continue;
+                    }
+                    if last_change.elapsed() >= stall_after {
+                        // Convert the hang into a diagnostic failure:
+                        // closing both queues releases every pipeline
+                        // thread, and the flag turns the session into
+                        // an `Err` below.
+                        stalled_ref.store(true, Ordering::SeqCst);
+                        staged_ref.close();
+                        empties_ref.close();
+                        return;
+                    }
+                }
+            });
+        }
         // Inference loop on the calling thread; the guard closes the
         // pipeline on every exit path so the batching thread never
         // blocks forever.
         let _guard = CloseOnDrop { staged: &staged, empties: &empties };
-        while let Some(mut batch) = staged.pop() {
-            let n = batch.items.len();
-            let r = disp.dispatch(engine, &batch.items, &batch.x[..n * input_dim]);
-            batch.items.clear();
-            batch.x.clear();
-            let _ = empties.push(batch);
-            r?;
-        }
-        Ok(())
+        let r = (|| {
+            while let Some(mut batch) = staged.pop() {
+                // Refresh the overload signal's view of the staged
+                // backlog (batches waiting x configured batch size —
+                // an upper bound on queued requests).
+                disp.backlog_hint = staged.len() * batch_size;
+                let n = batch.items.len();
+                let r = disp.dispatch(engine, &batch.items, &batch.x[..n * input_dim]);
+                batch.items.clear();
+                batch.x.clear();
+                let _ = empties.push(batch);
+                r?;
+            }
+            Ok(())
+        })();
+        *wd_stop.0.lock().unwrap_or_else(|e| e.into_inner()) = true;
+        wd_stop.1.notify_all();
+        r
     });
+    if stalled.load(Ordering::SeqCst) {
+        // The generator is left to notice the closed channel on its
+        // next send; joining it here could wait on arrival sleeps.
+        drop(gen);
+        anyhow::bail!(
+            "serving pipeline stalled: no batching heartbeat for {:?}; watchdog closed the pipeline",
+            robustness.watchdog_stall.unwrap_or_default()
+        );
+    }
     serve_result?;
     disp.finish(engine)?;
     gen.join().ok();
 
     let wall = t_start.elapsed();
     let completions = std::mem::take(&mut disp.completions);
+    anyhow::ensure!(
+        completions.len() == n_requests,
+        "serving session lost completions: {} accounted of {} submitted",
+        completions.len(),
+        n_requests
+    );
+    #[cfg(debug_assertions)]
+    {
+        let mut ids: Vec<u64> = completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n_requests, "duplicate completion ids");
+    }
     let n_stages = ladder.n_stages();
+    // Accuracy, parity and the stage mix are computed over *served*
+    // predictions only (Ok | Degraded) — rejected and failed requests
+    // carry no prediction and would read as misses.
+    let mut served = 0usize;
     let mut accuracy = 0.0;
     let mut parity_ok = 0usize;
     let mut stage_fractions = vec![0.0f64; n_stages];
     for c in &completions {
+        if matches!(c.outcome, CompletionOutcome::Rejected | CompletionOutcome::Failed) {
+            continue;
+        }
+        served += 1;
         if c.pred == data.y[c.row] {
             accuracy += 1.0;
         }
@@ -699,19 +1168,19 @@ pub fn run_serving_ladder(
         }
         stage_fractions[c.stage] += 1.0;
     }
-    accuracy /= completions.len().max(1) as f64;
+    accuracy /= served.max(1) as f64;
     for f in &mut stage_fractions {
-        *f /= completions.len().max(1) as f64;
+        *f /= served.max(1) as f64;
     }
     let energy_uj = metrics.energy_uj();
     Ok(ServeReport {
         throughput_rps: completions.len() as f64 / wall.as_secs_f64(),
         accuracy,
-        full_parity: full_pred.map(|_| parity_ok as f64 / completions.len().max(1) as f64),
+        full_parity: full_pred.map(|_| parity_ok as f64 / served.max(1) as f64),
         escalation_fraction: metrics.escalation_fraction(),
         stage_fractions,
         energy_uj,
-        energy_full_uj: completions.len() as f64 * ladder.e_full(),
+        energy_full_uj: served as f64 * ladder.e_full(),
         p50: metrics.latency.quantile(0.5),
         p95: metrics.latency.quantile(0.95),
         p99: metrics.latency.quantile(0.99),
@@ -719,6 +1188,10 @@ pub fn run_serving_ladder(
         queue_wait_mean: metrics.queue_wait.mean(),
         queue_wait_samples: metrics.queue_wait.count(),
         padded_slots: metrics.padded_slots.load(Ordering::Relaxed),
+        degraded: metrics.degraded.load(Ordering::Relaxed),
+        rejected: metrics.rejected.load(Ordering::Relaxed),
+        failed: metrics.failed.load(Ordering::Relaxed),
+        retries: metrics.retries.load(Ordering::Relaxed),
         completions,
         wall,
     })
@@ -746,6 +1219,7 @@ impl ServeReport {
             "served {} requests in {:.2?} ({:.0} req/s)\n\
              accuracy {:.4}{}  escalation {:.2}%  stage mix: {stages}\n\
              latency mean {:?} p50 {:?} p95 {:?} p99 {:?} (queue wait mean {:?})\n\
+             robustness: degraded {} rejected {} failed {} retries {}\n\
              energy {:.1} µJ vs always-full {:.1} µJ -> savings {:.1}%",
             self.completions.len(),
             self.wall,
@@ -758,6 +1232,10 @@ impl ServeReport {
             self.p95,
             self.p99,
             self.queue_wait_mean,
+            self.degraded,
+            self.rejected,
+            self.failed,
+            self.retries,
             self.energy_uj,
             self.energy_full_uj,
             100.0 * self.savings(),
@@ -793,15 +1271,29 @@ pub mod model {
     /// Run `batches` (lists of dataset row indices) through a
     /// deferred-escalation dispatcher exactly as the serving loop
     /// would — same `dispatch`/`flush_stage`/`finish` code — then
-    /// collect the probe stream.
+    /// collect the probe stream.  Uses the default (all-off)
+    /// robustness policy; see [`drive_deferred_with`].
     pub fn drive_deferred(
         engine: &mut dyn Backend,
         ladder: &Ladder,
         data: &EvalData,
         batches: &[Vec<usize>],
     ) -> crate::Result<DeferredSession> {
+        drive_deferred_with(engine, ladder, data, batches, RobustnessPolicy::default())
+    }
+
+    /// [`drive_deferred`] with an explicit [`RobustnessPolicy`], so the
+    /// model suites can schedule deadline / retry / overload behaviour
+    /// deterministically.
+    pub fn drive_deferred_with(
+        engine: &mut dyn Backend,
+        ladder: &Ladder,
+        data: &EvalData,
+        batches: &[Vec<usize>],
+        policy: RobustnessPolicy,
+    ) -> crate::Result<DeferredSession> {
         let metrics = MetricsRegistry::new();
-        let mut disp = Dispatcher::new(ladder, data, &metrics, EscalationPolicy::Deferred, 64);
+        let mut disp = Dispatcher::new(ladder, data, &metrics, EscalationPolicy::Deferred, policy, 64);
         let t0 = Instant::now();
         let mut next_id = 0u64;
         let mut x = Vec::new();
@@ -811,7 +1303,7 @@ pub mod model {
                 let items: Vec<Pending<Request>> = rows
                     .iter()
                     .map(|&row| {
-                        let req = Request { id: next_id, row, submitted: t0 };
+                        let req = Request { id: next_id, row, submitted: t0, deadline: None };
                         next_id += 1;
                         Pending { payload: req, enqueued: t0 }
                     })
@@ -873,10 +1365,15 @@ mod tests {
             queue_wait_mean: Duration::ZERO,
             queue_wait_samples: 0,
             padded_slots: 0,
+            degraded: 2,
+            rejected: 1,
+            failed: 3,
+            retries: 4,
         };
         assert!((r.savings() - 0.55).abs() < 1e-12);
         assert!(r.summary().contains("55.0%"));
         assert!(r.summary().contains("s1 30.0%"));
+        assert!(r.summary().contains("degraded 2 rejected 1 failed 3 retries 4"), "{}", r.summary());
     }
 
     fn fixture_ladder(engine: &mut NativeBackend, threshold: ThresholdPolicy) -> (Ladder, EvalData) {
@@ -896,7 +1393,10 @@ mod tests {
     fn staged_items(data: &EvalData, n: usize) -> (Vec<Pending<Request>>, Vec<f32>) {
         let t0 = Instant::now();
         let items: Vec<Pending<Request>> = (0..n)
-            .map(|i| Pending { payload: Request { id: i as u64, row: i, submitted: t0 }, enqueued: t0 })
+            .map(|i| Pending {
+                payload: Request { id: i as u64, row: i, submitted: t0, deadline: None },
+                enqueued: t0,
+            })
             .collect();
         let mut x = Vec::new();
         for p in &items {
@@ -917,7 +1417,8 @@ mod tests {
         // never exceed sqrt(2): T=2 escalates everything.
         let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::Fixed(2.0));
         let metrics = MetricsRegistry::new();
-        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Deferred, 8);
+        let mut disp =
+            Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Deferred, RobustnessPolicy::default(), 8);
         let (items, x) = staged_items(&data, 5);
         disp.dispatch(&mut engine, &items, &x).unwrap();
         assert_eq!(disp.completions.len(), 0, "nothing accepted at FP8 under T=2");
@@ -940,7 +1441,8 @@ mod tests {
         let mut engine = NativeBackend::synthetic();
         let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::MMax);
         let metrics = MetricsRegistry::new();
-        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Immediate, 16);
+        let mut disp =
+            Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Immediate, RobustnessPolicy::default(), 16);
         let (items, x) = staged_items(&data, 16);
         disp.dispatch(&mut engine, &items, &x).unwrap();
         // Dispatch used chunk id 1.
@@ -994,5 +1496,176 @@ mod tests {
         ids.dedup();
         assert_eq!(ids.len(), 200, "every id exactly once");
         assert!(report.p95 >= report.p50 && report.p99 >= report.p95);
+        // With every robustness knob at its default and no faults
+        // armed, nothing degrades, rejects, fails or retries.
+        assert!(report.completions.iter().all(|c| c.outcome == CompletionOutcome::Ok));
+        assert_eq!(report.degraded + report.rejected + report.failed + report.retries, 0);
+    }
+
+    /// Requests whose deadline already passed are rejected with one
+    /// typed completion each; the surviving rows are served the same
+    /// predictions a direct ladder call produces for them.
+    #[test]
+    fn expired_deadlines_reject_without_starving_live_requests() {
+        let mut engine = NativeBackend::synthetic();
+        let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::MMax);
+        let metrics = MetricsRegistry::new();
+        let mut disp = Dispatcher::new(
+            &ladder,
+            &data,
+            &metrics,
+            EscalationPolicy::Immediate,
+            RobustnessPolicy::default(),
+            8,
+        );
+        let t0 = Instant::now();
+        let mut items = Vec::new();
+        let mut x = Vec::new();
+        for i in 0..6usize {
+            // Even ids carry an already-expired deadline (t0 is in the
+            // past by dispatch time); odd ids have none.
+            let deadline = (i % 2 == 0).then_some(t0);
+            items.push(Pending {
+                payload: Request { id: i as u64, row: i, submitted: t0, deadline },
+                enqueued: t0,
+            });
+            x.extend_from_slice(data.row(i));
+        }
+        disp.dispatch(&mut engine, &items, &x).unwrap();
+        assert_eq!(disp.completions.len(), 6, "one completion per request, rejected included");
+        for c in &disp.completions {
+            if c.id % 2 == 0 {
+                assert_eq!(c.outcome, CompletionOutcome::Rejected, "id {}", c.id);
+                assert_eq!(c.pred, -1);
+            } else {
+                assert_eq!(c.outcome, CompletionOutcome::Ok, "id {}", c.id);
+            }
+        }
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 3);
+        // The live rows (1, 3, 5) were dispatched as one 3-row batch
+        // with chunk id 1 — exactly what a direct call produces.
+        let mut live_x = Vec::new();
+        for i in [1usize, 3, 5] {
+            live_x.extend_from_slice(data.row(i));
+        }
+        let want = ladder.infer_batch(&mut engine, &live_x, 3, 1).unwrap();
+        let live: Vec<&Completion> =
+            disp.completions.iter().filter(|c| c.outcome == CompletionOutcome::Ok).collect();
+        for (k, c) in live.iter().enumerate() {
+            assert_eq!(c.pred, want.pred[k], "live row {k}");
+        }
+    }
+
+    /// Under queue-depth overload the dispatcher serves the reduced
+    /// answer flagged `Degraded` and queues no escalations; once the
+    /// signal clears, the very next batch escalates normally again.
+    #[test]
+    fn overload_serves_degraded_and_recovers() {
+        let mut engine = NativeBackend::synthetic();
+        // T=2 escalates everything, so any non-degraded dispatch queues
+        // all its rows.
+        let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::Fixed(2.0));
+        let metrics = MetricsRegistry::new();
+        let policy = RobustnessPolicy { overload_queue: 4, ..RobustnessPolicy::default() };
+        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Deferred, policy, 16);
+        disp.backlog_hint = 8; // over the threshold of 4
+        let (items, x) = staged_items(&data, 5);
+        disp.dispatch(&mut engine, &items, &x).unwrap();
+        assert_eq!(disp.completions.len(), 5, "overload serves immediately at stage 0");
+        assert!(disp
+            .completions
+            .iter()
+            .all(|c| c.stage == 0 && !c.escalated && c.outcome == CompletionOutcome::Degraded));
+        assert!(disp.esc_queues.iter().all(Vec::is_empty), "escalation suppressed under overload");
+        assert_eq!(metrics.degraded.load(Ordering::Relaxed), 5);
+        // Load drops: the same dispatcher escalates again.
+        disp.backlog_hint = 0;
+        let (items2, x2) = staged_items(&data, 5);
+        disp.dispatch(&mut engine, &items2, &x2).unwrap();
+        assert_eq!(disp.completions.len(), 5, "T=2 accepts nothing at stage 0 off-overload");
+        assert_eq!(disp.esc_queues[1].len(), 5);
+        disp.finish(&mut engine).unwrap();
+        assert_eq!(disp.completions.len(), 10);
+        assert!(disp.completions[5..].iter().all(|c| c.escalated && c.outcome == CompletionOutcome::Ok));
+    }
+
+    /// Transient execute faults — one typed error and one panic — are
+    /// retried until the batch serves, and the served predictions are
+    /// bit-identical to an undisturbed run of the same batch and chunk.
+    #[test]
+    fn transient_execute_failures_retry_to_identical_predictions() {
+        let mut native = NativeBackend::synthetic();
+        let (ladder, data) = fixture_ladder(&mut native, ThresholdPolicy::MMax);
+        // Call 0 (first attempt, stage 0) errors; call 1 (the retried
+        // stage-0 execute) panics; the third attempt runs clean.
+        let mut flaky = crate::runtime::FlakyBackend::new(native).fail_on_call(0).panic_on_call(1);
+        let metrics = MetricsRegistry::new();
+        let policy = RobustnessPolicy { retries: 3, ..RobustnessPolicy::default() };
+        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Immediate, policy, 8);
+        let (items, x) = staged_items(&data, 8);
+        disp.dispatch(&mut flaky, &items, &x).unwrap();
+        assert_eq!(disp.completions.len(), 8);
+        assert!(disp.completions.iter().all(|c| c.outcome == CompletionOutcome::Ok));
+        assert!(metrics.retries.load(Ordering::Relaxed) >= 2, "error and panic both retried");
+        // All scheduled faults are behind us: the same engine now
+        // reproduces the served predictions for chunk 1.
+        let want = ladder.infer_batch(&mut flaky, &x, 8, 1).unwrap();
+        for (i, c) in disp.completions.iter().enumerate() {
+            assert_eq!(c.pred, want.pred[i], "row {i}");
+        }
+    }
+
+    /// When the retry budget runs out the batch fails as a unit —
+    /// every request gets exactly one `Failed` completion — and the
+    /// session keeps serving the next batch.
+    #[test]
+    fn exhausted_retries_fail_the_batch_not_the_session() {
+        let mut native = NativeBackend::synthetic();
+        let (ladder, data) = fixture_ladder(&mut native, ThresholdPolicy::MMax);
+        let mut flaky = crate::runtime::FlakyBackend::new(native).fail_on_call(0).fail_on_call(1);
+        let metrics = MetricsRegistry::new();
+        let policy = RobustnessPolicy { retries: 1, ..RobustnessPolicy::default() };
+        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Immediate, policy, 8);
+        let (items, x) = staged_items(&data, 4);
+        disp.dispatch(&mut flaky, &items, &x).unwrap();
+        assert_eq!(disp.completions.len(), 4, "the failed batch still accounts every request");
+        assert!(disp.completions.iter().all(|c| c.outcome == CompletionOutcome::Failed && c.pred == -1));
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 4);
+        assert_eq!(metrics.retries.load(Ordering::Relaxed), 1);
+        // The next batch is untouched by the earlier failure.
+        let (items2, x2) = staged_items(&data, 4);
+        disp.dispatch(&mut flaky, &items2, &x2).unwrap();
+        assert_eq!(disp.completions.len(), 8);
+        assert!(disp.completions[4..].iter().all(|c| c.outcome == CompletionOutcome::Ok));
+    }
+
+    /// A batching thread that stops beating is detected by the
+    /// watchdog, which closes the pipeline and turns the would-be hang
+    /// into a diagnostic error.
+    #[test]
+    fn watchdog_turns_a_stalled_batching_thread_into_an_error() {
+        let _g = fault::ArmGuard::arm("batch-stall:1.0:1");
+        let mut engine = NativeBackend::synthetic();
+        let data = engine.eval_data("fashion_syn").unwrap();
+        let mut cfg = AriConfig::default();
+        cfg.dataset = "fashion_syn".into();
+        cfg.requests = 16;
+        cfg.batch_size = 8;
+        cfg.batch_timeout_us = 200;
+        cfg.arrival_rate = 0.0;
+        cfg.watchdog_stall_us = 50_000;
+        let spec = LadderSpec {
+            dataset: cfg.dataset.clone(),
+            mode: Mode::Fp,
+            levels: vec![8, 16],
+            batch: 32,
+            threshold: ThresholdPolicy::MMax,
+            seed: cfg.seed as u32,
+        };
+        let ladder = Ladder::calibrate(&mut engine, spec, &data, 64).unwrap();
+        let err = run_serving_ladder(&mut engine, &ladder, &cfg, &data, None, ServeOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stalled"), "{err}");
     }
 }

@@ -102,6 +102,9 @@ pub struct JsonEntry {
     pub iters: usize,
     /// Items (samples/elements) processed per iteration, if meaningful.
     pub items_per_iter: Option<u64>,
+    /// Extra numeric fields rendered verbatim as additional JSON keys on
+    /// the entry (e.g. a serving run's robustness counters).
+    pub extras: Vec<(String, f64)>,
 }
 
 fn json_escape(s: &str) -> String {
@@ -135,8 +138,12 @@ impl JsonEntry {
             _ => ("null".to_string(), "null".to_string()),
         };
         let items = self.items_per_iter.map_or("null".to_string(), |n| n.to_string());
+        let mut extras = String::new();
+        for (k, v) in &self.extras {
+            extras.push_str(&format!(",\"{}\":{}", json_escape(k), json_f64(*v)));
+        }
         format!(
-            "{{\"name\":\"{}\",\"mean_ns\":{},\"std_ns\":{},\"iters\":{},\"items_per_iter\":{items},\"ns_per_item\":{per_item},\"items_per_sec\":{per_sec}}}",
+            "{{\"name\":\"{}\",\"mean_ns\":{},\"std_ns\":{},\"iters\":{},\"items_per_iter\":{items},\"ns_per_item\":{per_item},\"items_per_sec\":{per_sec}{extras}}}",
             json_escape(&self.name),
             json_f64(self.mean_ns),
             json_f64(self.std_ns),
@@ -168,6 +175,7 @@ impl JsonReport {
             std_ns: r.std_ns,
             iters: r.iters,
             items_per_iter,
+            extras: Vec::new(),
         });
     }
 
@@ -176,6 +184,15 @@ impl JsonReport {
     pub fn record(&mut self, r: &BenchResult, items_per_iter: Option<(u64, &'static str)>) {
         r.report(items_per_iter);
         self.add(r, items_per_iter.map(|(n, _)| n));
+    }
+
+    /// [`add`](Self::add), plus extra numeric fields appended to the
+    /// entry's JSON object — `bench_serve` attaches each session's
+    /// robustness counters (degraded/rejected/failed/retries) this way.
+    pub fn add_extra(&mut self, r: &BenchResult, items_per_iter: Option<u64>, extras: &[(&str, f64)]) {
+        self.add(r, items_per_iter);
+        let entry = self.entries.last_mut().expect("add just pushed an entry");
+        entry.extras = extras.iter().map(|(k, v)| (k.to_string(), *v)).collect();
     }
 
     /// The full JSON document.  The header records the active SIMD
@@ -244,6 +261,11 @@ mod tests {
             Some(32),
         );
         report.add(&BenchResult { name: "plain".into(), mean_ns: 250.0, std_ns: 0.0, iters: 3 }, None);
+        report.add_extra(
+            &BenchResult { name: "extra".into(), mean_ns: 500.0, std_ns: 0.0, iters: 1 },
+            None,
+            &[("degraded", 7.0), ("retries", 0.0)],
+        );
         let doc = report.render();
         assert!(doc.starts_with("{\"schema\":\"ari-bench v1\""), "{doc}");
         assert!(doc.contains("\"bench\":\"bench_test\""));
@@ -253,6 +275,8 @@ mod tests {
         assert!(doc.contains("\"ns_per_item\":31.250"));
         assert!(doc.contains("\"items_per_sec\":32000000.000"));
         assert!(doc.contains("\"items_per_iter\":null"));
+        assert!(doc.contains("\"degraded\":7.000"), "extras rendered: {doc}");
+        assert!(doc.contains("\"retries\":0.000"), "extras rendered: {doc}");
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(doc.matches('{').count(), doc.matches('}').count());
         assert_eq!(doc.matches('[').count(), doc.matches(']').count());

@@ -1,0 +1,300 @@
+//! Runtime fault injection: a process-wide registry of injectable
+//! faults, armed per *fault point* with a probability, an optional
+//! remaining-shot count and a deterministic per-point PRNG stream.
+//!
+//! Unlike the test-only [`crate::util::sim::fault`] switches (which are
+//! compiled out of release builds and re-introduce *specific historical
+//! bugs*), this registry is always compiled and injects *generic
+//! environmental* faults — backend errors, panics, latency spikes,
+//! queue stalls, worker death — so the serving pipeline's recovery
+//! paths (retry, supervision, degradation, watchdog) can be exercised
+//! from tests, benches, chaos CI and the `ari serve --faults` flag.
+//!
+//! The disarmed fast path is a single relaxed atomic load ([`armed`]),
+//! so instrumented hot paths cost nothing in normal operation.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! spec    := point[:prob[:count]] ("," point[:prob[:count]])* ["@" seed]
+//! point   := one of the names in [`POINTS`]
+//! prob    := f64 in [0, 1]      (default 1.0)
+//! count   := u64 max injections (default unlimited)
+//! seed    := u64 PRNG seed      (default 0)
+//! ```
+//!
+//! Example: `exec-error:0.05,worker-death:1.0:2@42` — 5% of backend
+//! executions fail, and the first two worker-death draws kill their
+//! worker, all decided by streams seeded from 42.
+//!
+//! `ARI_FAULTS` (see [`arm_from_env`]) accepts either a bare seed —
+//! arming the canonical chaos schedule ([`chaos_spec`]) used by the CI
+//! `chaos` job — or a full spec string.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use super::prng::Pcg64;
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Fault point: [`crate::runtime::NativeBackend::execute`] returns a
+/// typed error (transient — the dispatcher retries it).
+pub const EXEC_ERROR: &str = "exec-error";
+/// Fault point: `execute` panics mid-batch (converted to a retryable
+/// error by the dispatcher's panic shield).
+pub const EXEC_PANIC: &str = "exec-panic";
+/// Fault point: `execute` sleeps [`STALL`] before running — an
+/// artificial latency spike that drives the overload detector.
+pub const EXEC_DELAY: &str = "exec-delay";
+/// Fault point: a [`crate::util::queue::BoundedQueue`] operation sleeps
+/// [`STALL`] before taking the lock — a bounded pipeline hiccup.
+pub const QUEUE_STALL: &str = "queue-stall";
+/// Fault point: a parked [`crate::util::pool`] worker exits its loop as
+/// if its thread died; the pool supervisor respawns it.
+pub const WORKER_DEATH: &str = "worker-death";
+/// Fault point: the server's batching loop stops staging work (a *true*
+/// stall — only the watchdog can convert it into a diagnostic failure,
+/// so it is never part of [`chaos_spec`]).
+pub const BATCH_STALL: &str = "batch-stall";
+
+/// Every fault point the runtime defines; [`arm_spec`] rejects names
+/// outside this list so typos fail loudly instead of arming nothing.
+pub const POINTS: &[&str] = &[EXEC_ERROR, EXEC_PANIC, EXEC_DELAY, QUEUE_STALL, WORKER_DEATH, BATCH_STALL];
+
+/// Duration of an injected [`EXEC_DELAY`] / [`QUEUE_STALL`] hiccup.
+/// Long enough to back the pipeline up behind a 2-slot staging queue,
+/// short enough that a chaos run still terminates promptly.
+pub const STALL: Duration = Duration::from_millis(2);
+
+/// Number of armed fault points; 0 keeps [`inject`] on its one-load
+/// fast path.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+struct Arm {
+    point: &'static str,
+    prob: f64,
+    /// Remaining injections, `None` = unlimited.
+    remaining: Option<u64>,
+    rng: Pcg64,
+}
+
+static REGISTRY: Mutex<Vec<Arm>> = Mutex::new(Vec::new());
+
+/// Serialises [`ArmGuard`] holders: the registry is process-wide state,
+/// so concurrently-armed tests would see each other's faults.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // The registry holds plain data (no invariants spanning a panic),
+    // so a poisoned lock is safe to recover.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// True when any fault point is armed.  One relaxed atomic load — this
+/// is the hot-path gate instrumented code checks before calling
+/// [`inject`].
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed) != 0
+}
+
+/// Draw the armed fault at `point`: returns `true` when the caller
+/// should inject its failure.  Decrements the arm's remaining-shot
+/// count on a hit.  Always `false` for unarmed points and after the
+/// count is exhausted.
+pub fn inject(point: &str) -> bool {
+    if !armed() {
+        return false;
+    }
+    let mut reg = lock(&REGISTRY);
+    let Some(arm) = reg.iter_mut().find(|a| a.point == point) else {
+        return false;
+    };
+    if arm.remaining == Some(0) {
+        return false;
+    }
+    if arm.rng.next_f64() >= arm.prob {
+        return false;
+    }
+    if let Some(n) = &mut arm.remaining {
+        *n -= 1;
+    }
+    true
+}
+
+/// Parse and arm `spec` (grammar in the module docs), replacing any
+/// previously armed schedule.  Rejects unknown point names, malformed
+/// numbers and probabilities outside `[0, 1]`.
+pub fn arm_spec(spec: &str) -> Result<()> {
+    let (points, seed) = match spec.rsplit_once('@') {
+        Some((p, s)) => {
+            let seed = parse_u64(s).map_err(|_| anyhow::anyhow!("bad fault seed {s:?} in spec {spec:?}"))?;
+            (p, seed)
+        }
+        None => (spec, 0),
+    };
+    let mut arms = Vec::new();
+    for (i, part) in points.split(',').enumerate() {
+        let part = part.trim();
+        ensure!(!part.is_empty(), "empty fault point in spec {spec:?}");
+        let mut fields = part.split(':');
+        let name = fields.next().unwrap_or_default();
+        let Some(&point) = POINTS.iter().find(|&&p| p == name) else {
+            bail!("unknown fault point {name:?} (known: {})", POINTS.join(", "));
+        };
+        let prob = match fields.next() {
+            Some(p) => p.parse::<f64>().map_err(|_| anyhow::anyhow!("bad probability {p:?} for {name}"))?,
+            None => 1.0,
+        };
+        ensure!((0.0..=1.0).contains(&prob), "probability {prob} for {name} outside [0, 1]");
+        let remaining = match fields.next() {
+            Some(c) => Some(parse_u64(c).map_err(|_| anyhow::anyhow!("bad count {c:?} for {name}"))?),
+            None => None,
+        };
+        ensure!(fields.next().is_none(), "too many `:` fields in {part:?}");
+        // Independent stream per arm position: same seed, different
+        // draws per point, deterministic replay for a given spec.
+        arms.push(Arm { point, prob, remaining, rng: Pcg64::new(seed, i as u64 + 1) });
+    }
+    let mut reg = lock(&REGISTRY);
+    ARMED.store(arms.len(), Ordering::Relaxed);
+    *reg = arms;
+    Ok(())
+}
+
+fn parse_u64(s: &str) -> std::result::Result<u64, std::num::ParseIntError> {
+    let s = s.trim();
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse(),
+    }
+}
+
+/// Disarm every fault point and clear the registry.
+pub fn disarm_all() {
+    let mut reg = lock(&REGISTRY);
+    ARMED.store(0, Ordering::Relaxed);
+    reg.clear();
+}
+
+/// The canonical chaos schedule for a given seed: every *recoverable*
+/// fault point at a small probability ([`BATCH_STALL`] excluded — a
+/// true stall is a watchdog test, not a survivable environment).  Used
+/// by the CI `chaos` job via `ARI_FAULTS=<seed>`.
+pub fn chaos_spec(seed: u64) -> String {
+    format!("{EXEC_ERROR}:0.02,{EXEC_PANIC}:0.005,{EXEC_DELAY}:0.05,{QUEUE_STALL}:0.02,{WORKER_DEATH}:1.0:2@{seed}")
+}
+
+/// Arm from a user-facing value (`--faults` / `ARI_FAULTS`): a bare
+/// integer arms [`chaos_spec`] with that seed, anything else is parsed
+/// as a full spec.  Returns the normalised spec that was armed
+/// (callers echo it so a failing run can be replayed exactly).
+pub fn arm_value(raw: &str) -> Result<String> {
+    let raw = raw.trim();
+    let spec = match parse_u64(raw) {
+        Ok(seed) => chaos_spec(seed),
+        Err(_) => raw.to_string(),
+    };
+    arm_spec(&spec)?;
+    Ok(spec)
+}
+
+/// Arm from the `ARI_FAULTS` environment variable, if set (see
+/// [`arm_value`] for the accepted forms).
+pub fn arm_from_env() -> Result<Option<String>> {
+    let Ok(raw) = std::env::var("ARI_FAULTS") else {
+        return Ok(None);
+    };
+    if raw.trim().is_empty() {
+        return Ok(None);
+    }
+    arm_value(&raw).map(Some)
+}
+
+/// RAII arming for tests: holds a process-wide serial lock (so
+/// concurrently-running tests cannot see each other's faults), arms
+/// `spec`, and disarms everything on drop.
+pub struct ArmGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl ArmGuard {
+    /// Serialise, then arm `spec`.  Panics on a malformed spec — tests
+    /// should fail loudly, not silently run fault-free.
+    pub fn arm(spec: &str) -> Self {
+        let serial = lock(&SERIAL);
+        arm_spec(spec).expect("invalid fault spec");
+        ArmGuard { _serial: serial }
+    }
+}
+
+impl Drop for ArmGuard {
+    fn drop(&mut self) {
+        disarm_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_by_default_and_fast_path_false() {
+        let _g = ArmGuard::arm(EXEC_DELAY); // serialise with other fault tests
+        disarm_all();
+        assert!(!armed());
+        assert!(!inject(EXEC_ERROR));
+    }
+
+    #[test]
+    fn certain_fault_fires_and_count_exhausts() {
+        let _g = ArmGuard::arm("exec-error:1.0:2");
+        assert!(inject(EXEC_ERROR));
+        assert!(inject(EXEC_ERROR));
+        assert!(!inject(EXEC_ERROR), "count must exhaust after two shots");
+        assert!(!inject(EXEC_PANIC), "unarmed points never fire");
+    }
+
+    #[test]
+    fn zero_probability_never_fires() {
+        let _g = ArmGuard::arm("worker-death:0.0");
+        for _ in 0..100 {
+            assert!(!inject(WORKER_DEATH));
+        }
+    }
+
+    #[test]
+    fn seeded_draws_are_deterministic() {
+        let draw = |spec: &str| {
+            let _g = ArmGuard::arm(spec);
+            (0..64).map(|_| inject(EXEC_DELAY)).collect::<Vec<bool>>()
+        };
+        let a = draw("exec-delay:0.5@7");
+        let b = draw("exec-delay:0.5@7");
+        let c = draw("exec-delay:0.5@8");
+        assert_eq!(a, b, "same spec must replay identically");
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "p=0.5 should mix over 64 draws");
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        let _g = ArmGuard::arm("exec-delay:0.0"); // serialise with other fault tests
+        disarm_all();
+        for bad in ["nope", "exec-error:2.0", "exec-error:0.5:x", "exec-error:0.5:1:9", "", "exec-error@zz"] {
+            assert!(arm_spec(bad).is_err(), "spec {bad:?} must be rejected");
+        }
+        assert!(!armed(), "failed arming must not leave faults armed");
+    }
+
+    #[test]
+    fn chaos_spec_round_trips_and_guard_disarms() {
+        {
+            let _g = ArmGuard::arm(&chaos_spec(42));
+            assert!(armed());
+        }
+        assert!(!armed(), "guard drop must disarm");
+    }
+}

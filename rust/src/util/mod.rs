@@ -4,11 +4,13 @@
 //! `proptest`, so this module carries minimal, well-tested replacements:
 //! a PCG-family PRNG, descriptive statistics, a streaming histogram, a
 //! line-oriented mini-TOML parser, a persistent parked worker pool, a
-//! bounded blocking queue, a tiny property-testing harness and a
+//! bounded blocking queue, a runtime fault-injection registry
+//! ([`fault`]), a tiny property-testing harness and a
 //! deterministic-interleaving scheduler ([`sim`]) the concurrency
 //! primitives are checked under.
 
 pub mod benchkit;
+pub mod fault;
 pub mod histogram;
 pub mod minitoml;
 pub mod pool;

@@ -27,11 +27,12 @@
 //! serial path (the global pool then has zero workers and every job
 //! runs inline).
 
+use crate::util::fault;
 use crate::util::sim::{self, Condvar, Mutex, Thread};
 use std::any::Any;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex as StdMutex, OnceLock, TryLockError};
 
 /// Rows below which an extra worker is not worth waking.
 const MIN_ROWS_PER_WORKER: usize = 8;
@@ -171,6 +172,8 @@ struct Shared {
     submit: Mutex<()>,
     /// Live worker threads (for leak tests and introspection).
     live: AtomicUsize,
+    /// Total workers ever spawned — names respawned workers uniquely.
+    spawned: AtomicUsize,
 }
 
 /// A persistent pool of parked worker threads.  See the module docs;
@@ -182,9 +185,24 @@ struct Shared {
 /// (`tests/model_pool.rs`); in release builds the wrappers are the std
 /// primitives.  The **global** pool must never be used from inside a
 /// schedule — model tests construct their own instances.
+///
+/// **Supervision**: a worker that dies (its loop unwinds, or the
+/// [`fault::WORKER_DEATH`] fault point fires) is replaced at the next
+/// [`WorkerPool::run`] submission, under the submit lock, so the pool
+/// never serves below capacity for more than one inter-batch gap.
+/// This is eventually consistent by design — a death is only *observed*
+/// at a submission boundary — and jobs are never lost meanwhile: the
+/// claim loop is pull-based, so the submitter drains whatever dead
+/// workers don't.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<Thread>,
+    /// Capacity: the worker count the pool was built with and is
+    /// supervised back up to.
+    workers: usize,
+    /// Handles of every spawned worker, including dead ones (joining a
+    /// finished thread is immediate); locked because supervision
+    /// appends while `Drop` drains.
+    handles: StdMutex<Vec<Thread>>,
 }
 
 impl WorkerPool {
@@ -204,20 +222,23 @@ impl WorkerPool {
             done_cv: Condvar::new(),
             submit: Mutex::new(()),
             live: AtomicUsize::new(0),
+            spawned: AtomicUsize::new(0),
         });
         let mut handles = Vec::with_capacity(workers);
-        for i in 0..workers {
+        for _ in 0..workers {
             let sh = Arc::clone(&shared);
             sh.live.fetch_add(1, Ordering::SeqCst);
+            let i = shared.spawned.fetch_add(1, Ordering::SeqCst);
             let handle = sim::spawn_thread(format!("ari-pool-{i}"), move || worker_loop(sh)).expect("spawn pool worker");
             handles.push(handle);
         }
-        Self { shared, handles }
+        Self { shared, workers, handles: StdMutex::new(handles) }
     }
 
-    /// Number of worker threads this pool was built with.
+    /// Number of worker threads this pool was built with (its supervised
+    /// capacity — see the struct docs).
     pub fn worker_count(&self) -> usize {
-        self.handles.len()
+        self.workers
     }
 
     /// Worker threads currently alive (equals [`Self::worker_count`]
@@ -235,7 +256,7 @@ impl WorkerPool {
         if n == 0 {
             return;
         }
-        if n == 1 || self.handles.is_empty() {
+        if n == 1 || self.workers == 0 {
             for job in jobs {
                 job();
             }
@@ -243,13 +264,23 @@ impl WorkerPool {
         }
         // A second submitter (or a job submitting from inside the pool)
         // runs inline rather than queueing: the pool's win is parking,
-        // not scheduling depth.
-        let Ok(_submit) = self.shared.submit.try_lock() else {
-            for job in jobs {
-                job();
+        // not scheduling depth.  A poisoned submit lock is recovered —
+        // it protects no data, only mutual exclusion.
+        let _submit = match self.shared.submit.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                for job in jobs {
+                    job();
+                }
+                return;
             }
-            return;
         };
+        // Supervision point: replace any workers that died since the
+        // last submission, before this batch is published.
+        if self.shared.live.load(Ordering::SeqCst) < self.workers {
+            self.respawn_missing();
+        }
         let desc = BatchDesc {
             base: jobs.as_mut_ptr() as *mut (),
             len: n,
@@ -257,7 +288,7 @@ impl WorkerPool {
             run_one: run_erased::<F>,
         };
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
             st.batch = Some(BatchPtr(&desc));
             st.epoch = st.epoch.wrapping_add(1);
             st.pending = n;
@@ -286,10 +317,10 @@ impl WorkerPool {
             done += 1;
         }
         let payload = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
             st.pending -= done;
             while st.pending > 0 || st.active > 0 {
-                st = self.shared.done_cv.wait(st).unwrap();
+                st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
             // Unpublish before returning: `desc` dies with this frame.
             st.batch = None;
@@ -311,34 +342,70 @@ impl WorkerPool {
             panic::resume_unwind(payload);
         }
     }
+
+    /// Spawn replacements until `live` is back at capacity.  Called
+    /// under the submit lock, so respawns never race each other; a
+    /// spawn failure leaves the pool short (the claim loop still
+    /// completes every batch) and retries at the next submission.
+    fn respawn_missing(&self) {
+        while self.shared.live.load(Ordering::SeqCst) < self.workers {
+            let sh = Arc::clone(&self.shared);
+            sh.live.fetch_add(1, Ordering::SeqCst);
+            let i = self.shared.spawned.fetch_add(1, Ordering::SeqCst);
+            match sim::spawn_thread(format!("ari-pool-{i}"), move || worker_loop(sh)) {
+                Ok(handle) => self.handles.lock().unwrap_or_else(|e| e.into_inner()).push(handle),
+                Err(_) => {
+                    self.shared.live.fetch_sub(1, Ordering::SeqCst);
+                    return;
+                }
+            }
+        }
+    }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
-        for handle in self.handles.drain(..) {
+        let handles = std::mem::take(self.handles.get_mut().unwrap_or_else(|e| e.into_inner()));
+        for handle in handles {
             handle.join().ok();
         }
     }
 }
 
 fn worker_loop(shared: Arc<Shared>) {
+    // Exactly-once live accounting on *every* exit path — shutdown,
+    // injected death, or an unwind out of the loop itself — so the
+    // supervisor's capacity check never drifts.
+    struct LiveGuard(Arc<Shared>);
+    impl Drop for LiveGuard {
+        fn drop(&mut self) {
+            self.0.live.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let _live = LiveGuard(Arc::clone(&shared));
     let mut seen = 0u64;
     loop {
         // Park until there is a fresh batch (or shutdown).
         let batch = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if st.shutdown {
-                    shared.live.fetch_sub(1, Ordering::SeqCst);
                     return;
                 }
                 if st.epoch != seen {
                     seen = st.epoch;
+                    // Injected worker death, drawn once per observed
+                    // epoch: exit *before* registering in `active`, as
+                    // a crashed thread would — no job is lost (claims
+                    // are pull-based) and no counter is torn.
+                    if fault::inject(fault::WORKER_DEATH) {
+                        return;
+                    }
                     if let Some(b) = st.batch {
                         st.active += 1;
                         break b;
@@ -346,7 +413,7 @@ fn worker_loop(shared: Arc<Shared>) {
                     // Batch already fully drained and unpublished:
                     // nothing to do for this epoch.
                 }
-                st = shared.work_cv.wait(st).unwrap();
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
         // Drain jobs.  `desc` stays valid while we are registered in
@@ -370,7 +437,7 @@ fn worker_loop(shared: Arc<Shared>) {
             }
             done += 1;
         }
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
         st.pending -= done;
         st.active -= 1;
         if panic_payload.is_some() && st.panic_payload.is_none() {
@@ -628,6 +695,80 @@ mod tests {
         );
         assert_eq!(hits.load(Ordering::SeqCst), 4);
         assert_eq!(pool.live_workers(), 2);
+    }
+
+    /// Supervision: workers killed by the `worker-death` fault are
+    /// respawned at the next submission, every batch still completes,
+    /// and the pool returns to full capacity.
+    #[test]
+    fn dead_workers_are_respawned_to_capacity() {
+        let pool = WorkerPool::new(3);
+        {
+            let _g = fault::ArmGuard::arm("worker-death:1.0:2");
+            let hits = AtomicUsize::new(0);
+            pool.run(
+                (0..6)
+                    .map(|_| {
+                        let hits = &hits;
+                        move || {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            assert_eq!(hits.load(Ordering::SeqCst), 6, "batch must complete despite dying workers");
+            // Each worker draws the fault when it observes the batch
+            // epoch; wait for both shots to be spent.
+            for _ in 0..2000 {
+                if pool.live_workers() <= 1 {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            assert_eq!(pool.live_workers(), 1, "two armed deaths must fire");
+        }
+        // The next submission supervises the pool back to capacity
+        // before publishing and still runs every job.
+        let hits = AtomicUsize::new(0);
+        pool.run(
+            (0..8)
+                .map(|_| {
+                    let hits = &hits;
+                    move || {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+        assert_eq!(pool.live_workers(), 3, "pool must respawn to capacity");
+        assert_eq!(pool.worker_count(), 3, "capacity itself never changes");
+    }
+
+    /// A batch completes and the submitter stays unblocked even when a
+    /// worker dies *between* registering batches (pull-based claims
+    /// mean the submitter drains whatever dead workers don't).
+    #[test]
+    fn all_workers_dead_still_completes_inline() {
+        let pool = WorkerPool::new(2);
+        {
+            let _g = fault::ArmGuard::arm("worker-death:1.0");
+            let hits = AtomicUsize::new(0);
+            for round in 0..4 {
+                let jobs: Vec<_> = (0..5)
+                    .map(|_| {
+                        let hits = &hits;
+                        move || {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        }
+                    })
+                    .collect();
+                pool.run(jobs);
+                assert_eq!(hits.load(Ordering::SeqCst) % 5, 0, "round {round}");
+            }
+            assert_eq!(hits.load(Ordering::SeqCst), 20, "every job ran every round");
+        }
+        drop(pool); // joins respawned and dead handles alike
     }
 
     #[test]

@@ -28,7 +28,16 @@
 //! builds those wrappers *are* `std::sync::{Mutex, Condvar}`; in
 //! dev/test builds every lock and wait is a scheduling point the
 //! deterministic-interleaving harness can enumerate.
+//!
+//! **Poison tolerance**: the protected state is a plain ring + closed
+//! flag with no invariant that can be torn mid-panic (every mutation is
+//! a single `push_back`/`pop_front`/flag store), so a panic elsewhere
+//! in a holder's thread must not cascade into `PoisonError` unwinds in
+//! every other pipeline thread — all lock/wait sites recover the guard.
+//! The [`crate::util::fault::QUEUE_STALL`] fault point injects a
+//! bounded delay ahead of `push`/`pop` to exercise backpressure paths.
 
+use crate::util::fault;
 use crate::util::sim::{Condvar, Mutex};
 use std::collections::VecDeque;
 
@@ -65,7 +74,10 @@ impl<T> BoundedQueue<T> {
     /// the item will be delivered by exactly one `pop` (close never
     /// discards accepted items).
     pub fn push(&self, item: T) -> Result<(), T> {
-        let mut inner = self.inner.lock().unwrap();
+        if fault::inject(fault::QUEUE_STALL) {
+            std::thread::sleep(fault::STALL);
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if inner.closed {
                 return Err(item);
@@ -76,7 +88,7 @@ impl<T> BoundedQueue<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            inner = self.not_full.wait(inner).unwrap();
+            inner = self.not_full.wait(inner).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -84,7 +96,10 @@ impl<T> BoundedQueue<T> {
     /// means closed *and* fully drained — items queued before `close`
     /// are always delivered, in FIFO order, each to exactly one popper.
     pub fn pop(&self) -> Option<T> {
-        let mut inner = self.inner.lock().unwrap();
+        if fault::inject(fault::QUEUE_STALL) {
+            std::thread::sleep(fault::STALL);
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(item) = inner.buf.pop_front() {
                 drop(inner);
@@ -94,7 +109,7 @@ impl<T> BoundedQueue<T> {
             if inner.closed {
                 return None;
             }
-            inner = self.not_empty.wait(inner).unwrap();
+            inner = self.not_empty.wait(inner).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -103,19 +118,19 @@ impl<T> BoundedQueue<T> {
     /// remaining items (which are never discarded) before `None`.
     /// Idempotent.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     /// Whether [`Self::close`] has been called.
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).closed
     }
 
     /// Items currently queued.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().buf.len()
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).buf.len()
     }
 
     /// Whether the queue is currently empty.
@@ -195,6 +210,42 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.close();
         assert_eq!(h.join().unwrap(), Err(8));
+    }
+
+    /// A panic while holding the ring's lock must not take the queue
+    /// down with it: the state is a plain ring, so later operations
+    /// recover the guard and keep serving.
+    #[test]
+    fn operations_survive_a_poisoned_lock() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let _ = std::thread::spawn(move || {
+            let _guard = q2.inner.lock();
+            panic!("poison the queue lock");
+        })
+        .join();
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.pop(), None);
+    }
+
+    /// An injected queue stall delays but never drops or reorders:
+    /// FIFO delivery is unchanged with `queue-stall` armed at p=1.
+    #[test]
+    fn queue_stall_fault_delays_but_conserves() {
+        let _g = fault::ArmGuard::arm("queue-stall:1.0:4");
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Failure injection: every loader/runtime error path must fail loudly
-//! with a useful message, never panic or silently mis-serve.  Runs
-//! entirely offline: artifact directories are produced on the fly by the
-//! deterministic fixture writer.
+//! with a useful message — naming the offending file, so a corrupt
+//! artifact directory is diagnosable from the error alone — never panic
+//! or silently mis-serve.  Runs entirely offline: artifact directories
+//! are produced on the fly by the deterministic fixture writer, then
+//! corrupted (truncated blobs, garbage metadata, malformed manifests)
+//! before loading through `NativeBackend`.
 
 use std::path::{Path, PathBuf};
 
@@ -54,6 +57,69 @@ fn corrupt_weights_surface_through_the_backend() {
     let err = backend.load_dataset("tiny").unwrap_err().to_string();
     assert!(err.contains("overruns"), "{err}");
     std::fs::remove_dir_all(dir).ok();
+}
+
+/// `load_dataset` over a truncated weights blob: the error must name
+/// the dataset and the offending file pair, not just the decode
+/// failure.
+#[test]
+fn backend_error_names_corrupt_weights_file() {
+    let dir = fixture_artifacts("namedweights");
+    let ds = dir.join("tiny");
+    let blob = std::fs::read(ds.join("weights.bin")).unwrap();
+    std::fs::write(ds.join("weights.bin"), &blob[..blob.len() / 2]).unwrap();
+    let mut backend = NativeBackend::from_artifacts(&dir).unwrap();
+    let err = backend.load_dataset("tiny").unwrap_err().to_string();
+    assert!(err.contains("dataset tiny"), "error must name the dataset: {err}");
+    assert!(err.contains("weights.bin"), "error must name the file: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// `load_dataset` over garbage `weights.meta`: still a typed error
+/// naming the file pair — never a panic.
+#[test]
+fn backend_error_names_malformed_weights_meta() {
+    let dir = fixture_artifacts("namedmeta");
+    std::fs::write(dir.join("tiny").join("weights.meta"), "this is not ari-meta\n").unwrap();
+    let mut backend = NativeBackend::from_artifacts(&dir).unwrap();
+    let err = backend.load_dataset("tiny").unwrap_err().to_string();
+    assert!(err.contains("dataset tiny"), "error must name the dataset: {err}");
+    assert!(err.contains("weights.bin/.meta"), "error must name the file pair: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// `load_dataset` over a truncated eval blob: the error names the eval
+/// file pair, distinguishing it from a weights corruption.
+#[test]
+fn backend_error_names_truncated_eval_file() {
+    let dir = fixture_artifacts("namedeval");
+    let ds = dir.join("tiny");
+    let blob = std::fs::read(ds.join("eval.bin")).unwrap();
+    std::fs::write(ds.join("eval.bin"), &blob[..blob.len() / 2]).unwrap();
+    let mut backend = NativeBackend::from_artifacts(&dir).unwrap();
+    let err = backend.load_dataset("tiny").unwrap_err().to_string();
+    assert!(err.contains("dataset tiny"), "error must name the dataset: {err}");
+    assert!(err.contains("eval.bin"), "error must name the file: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A malformed `manifest.txt` (bad magic, or a bad entry) fails at
+/// backend open with an error naming the manifest file.
+#[test]
+fn malformed_manifest_error_names_the_manifest_file() {
+    for (tag, text) in [
+        ("magic", "not-a-manifest v9\n"),
+        ("kind", "ari-manifest v1\nvariant tiny kind=quantum level=1 batch=1 file=x.hlo.txt\n"),
+    ] {
+        let dir = fixture_artifacts(&format!("badmanifest-{tag}"));
+        std::fs::write(dir.join("manifest.txt"), text).unwrap();
+        let err = match NativeBackend::from_artifacts(&dir) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("malformed manifest ({tag}) must not open"),
+        };
+        assert!(err.contains("manifest.txt"), "error must name the manifest ({tag}): {err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
 }
 
 #[test]

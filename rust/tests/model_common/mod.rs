@@ -13,9 +13,9 @@ use std::time::{Duration, Instant};
 use ari::config::{Mode, ThresholdPolicy};
 use ari::coordinator::{Batcher, BatcherPolicy, Ladder, LadderSpec};
 use ari::data::EvalData;
-use ari::runtime::{Backend, NativeBackend};
-use ari::server::model::drive_deferred;
-use ari::server::{batching_loop, Request, ServeClock, StagedBatch};
+use ari::runtime::{Backend, FlakyBackend, NativeBackend};
+use ari::server::model::{drive_deferred, drive_deferred_with};
+use ari::server::{batching_loop, CompletionOutcome, Heartbeat, Request, RobustnessPolicy, ServeClock, StagedBatch};
 use ari::util::queue::BoundedQueue;
 use ari::util::sim;
 
@@ -69,7 +69,7 @@ pub fn run_sim_serving_model(
                 sim::sleep(Duration::from_micros(700));
             }
             let submitted = t0 + Duration::from_nanos(sim::vnow());
-            tx.send(Request { id, row: id as usize % n_rows, submitted });
+            tx.send(Request { id, row: id as usize % n_rows, submitted, deadline: None });
         }
         // tx drops here: the loop sees Disconnected once drained.
     });
@@ -98,7 +98,9 @@ pub fn run_sim_serving_model(
     });
 
     let policy = BatcherPolicy::new(max_batch, max_wait);
-    batching_loop(rx, &VClock { t0 }, policy, n_requests as usize, data, &staged, &empties);
+    let hb = Heartbeat::default();
+    batching_loop(rx, &VClock { t0 }, policy, n_requests as usize, data, &staged, &empties, &hb);
+    assert!(hb.count() > 0, "batching loop must heartbeat");
     gen.join().unwrap();
     consumer.join().unwrap();
 
@@ -187,4 +189,38 @@ pub fn assert_padding_double_entry(engine: &mut dyn Backend, ladder: &Ladder, da
         "padded_slots out of double-entry balance (dispatch {dispatch_pad} + flush {flush_pad})"
     );
     assert_eq!(session.completions.len(), 5, "escalate-all session must still serve every request");
+}
+
+/// Exactly-one-typed-completion under a mid-session execute failure:
+/// run two 20-row escalate-all batches through the deferred dispatcher
+/// over a [`FlakyBackend`] whose `execute` call `fail_call` errors
+/// (with no retry budget, so the failing batch fails as a unit), and
+/// assert that every submitted request still yields exactly one typed
+/// completion — served or `Failed`, never lost, never duplicated.
+/// The `lost-completion` mutation (see `model_mutations.rs`) drops the
+/// failed batch's records and must make this check fail.
+pub fn assert_conservation_under_execute_failure(fail_call: u64) {
+    let mut native = NativeBackend::synthetic();
+    let (ladder, data) = escalate_all_fixture(&mut native);
+    let mut flaky = FlakyBackend::new(native).fail_on_call(fail_call);
+    let batches: Vec<Vec<usize>> = (0..2).map(|b| (0..20).map(|k| (b * 20 + k) % data.n).collect()).collect();
+    let session =
+        drive_deferred_with(&mut flaky, &ladder, &data, &batches, RobustnessPolicy::default()).unwrap();
+    assert_eq!(session.completions.len(), 40, "fail@{fail_call}: every request needs exactly one completion");
+    let mut ids: Vec<u64> = session.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 40, "fail@{fail_call}: duplicate completion ids");
+    for c in &session.completions {
+        match c.outcome {
+            CompletionOutcome::Failed => assert_eq!(c.pred, -1, "fail@{fail_call}: failed completions are typed"),
+            _ => assert!(c.pred >= 0, "fail@{fail_call}: served completions carry a prediction"),
+        }
+    }
+    if fail_call < flaky.calls() {
+        assert!(
+            session.completions.iter().any(|c| c.outcome == CompletionOutcome::Failed),
+            "fail@{fail_call}: the injected failure must surface as Failed completions"
+        );
+    }
 }

@@ -13,7 +13,10 @@
 //! * `padded-slots-first-stage-only` — `padded_slots` used to count
 //!   first-stage padding only, missing escalation flushes;
 //! * `unchunked-drain` — the batcher's shutdown drain used to return
-//!   arbitrarily large batches, exceeding the compiled batch size.
+//!   arbitrarily large batches, exceeding the compiled batch size;
+//! * `lost-completion` — a batch that exhausted its execute retries
+//!   used to vanish without completions, silently losing its requests
+//!   instead of accounting them as `Failed`.
 //!
 //! Every test holds a `FaultGuard`, which serialises fault-injection
 //! through a process-wide lock; this suite is its own test binary so
@@ -30,8 +33,8 @@ use std::time::Duration;
 use ari::runtime::NativeBackend;
 use ari::util::sim;
 use model_common::{
-    assert_drain_chunked, assert_padding_double_entry, assert_sc_keys_unique, escalate_all_fixture,
-    run_sim_serving_model,
+    assert_conservation_under_execute_failure, assert_drain_chunked, assert_padding_double_entry,
+    assert_sc_keys_unique, escalate_all_fixture, run_sim_serving_model,
 };
 
 /// True when `f` panics (i.e. the invariant check fired).
@@ -91,4 +94,19 @@ fn drain_model_catches_unchunked_drain() {
     assert_drain_chunked(2, 5); // sanity: passes clean
     let _fault = sim::FaultGuard::enable("unchunked-drain");
     assert!(check_fails(|| assert_drain_chunked(2, 5)), "drain model must catch the unchunked shutdown drain");
+}
+
+/// The exactly-one-completion model must fail when a batch that
+/// exhausted its retries drops its completion records instead of
+/// accounting every request as `Failed`.  Failing execute call 0 puts
+/// the whole first batch on the `fail_batch` path, so the faulted run
+/// loses 20 completions.
+#[test]
+fn conservation_model_catches_lost_completions() {
+    assert_conservation_under_execute_failure(0); // sanity: passes clean
+    let _fault = sim::FaultGuard::enable("lost-completion");
+    assert!(
+        check_fails(|| assert_conservation_under_execute_failure(0)),
+        "completion-conservation model must catch dropped Failed completions"
+    );
 }

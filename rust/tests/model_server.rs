@@ -13,7 +13,9 @@
 //! * no SC batch key is ever reused across first-stage dispatches and
 //!   escalation flushes;
 //! * `padded_slots` balances against an independent recomputation over
-//!   first-stage **and** escalation-flush padding.
+//!   first-stage **and** escalation-flush padding;
+//! * under an execute failure at *any* call position, every submitted
+//!   request still yields exactly one typed completion.
 //!
 //! Compiled only when the sim harness is (dev/test builds or
 //! `--features sim`).
@@ -26,8 +28,8 @@ use std::time::Duration;
 use ari::runtime::NativeBackend;
 use ari::util::sim;
 use model_common::{
-    assert_drain_chunked, assert_padding_double_entry, assert_sc_keys_unique, escalate_all_fixture,
-    run_sim_serving_model,
+    assert_conservation_under_execute_failure, assert_drain_chunked, assert_padding_double_entry,
+    assert_sc_keys_unique, escalate_all_fixture, run_sim_serving_model,
 };
 
 /// Closed-loop burst through the pipelined arrival loop under random
@@ -92,4 +94,17 @@ fn deferred_padded_slots_balance_double_entry() {
     let mut engine = NativeBackend::synthetic();
     let (ladder, data) = escalate_all_fixture(&mut engine);
     assert_padding_double_entry(&mut engine, &ladder, &data);
+}
+
+/// Execute fails mid-session at *every* call position in turn —
+/// first-stage dispatches, in-dispatch escalation flushes and shutdown
+/// flushes alike — and every submitted request still completes exactly
+/// once, with the failing batch surfacing as typed `Failed`
+/// completions.  Position 8 is past the session's last execute, which
+/// doubles as the clean-run sanity case.
+#[test]
+fn execute_failure_at_every_position_conserves_completions() {
+    for fail_call in 0..=8 {
+        assert_conservation_under_execute_failure(fail_call);
+    }
 }
