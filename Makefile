@@ -7,13 +7,28 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test doc fmt bench bench-json bench-serve serve-smoke chaos-smoke artifacts artifacts-quick clean
+.PHONY: build test lint verify doc fmt bench bench-json bench-serve serve-smoke chaos-smoke artifacts artifacts-quick clean
 
 build:
 	$(CARGO) build --release
 
 test:
 	$(CARGO) test -q
+
+# Repo-native static analysis (docs/LINTS.md): the ari-lint tool walks
+# rust/src + rust/tests and enforces the serving core's concurrency,
+# clock, poison, hot-path-allocation, unsafe-audit and fault-registry
+# contracts.  Escape hatch for experiments: ARI_LINT_SKIP=1 make lint
+# (CI always runs it for real).
+lint:
+ifdef ARI_LINT_SKIP
+	@echo "ari-lint: skipped (ARI_LINT_SKIP set)"
+else
+	$(CARGO) run --release -p ari-lint -- --root .
+endif
+
+# The one-stop local gate: what CI's build-test + lint legs enforce.
+verify: build test lint
 
 doc:
 	$(CARGO) doc --no-deps

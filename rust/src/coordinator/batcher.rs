@@ -71,6 +71,8 @@ impl<T> Batcher<T> {
 
     /// Enqueue a request now.
     pub fn push(&mut self, payload: T) {
+        // ari-lint: allow(clock-discipline): convenience enqueue for tests and one-shot
+        // callers; the serving loop threads its single per-iteration read via `push_at`.
         self.queue.push_back(Pending { payload, enqueued: Instant::now() });
     }
 

@@ -32,6 +32,9 @@ use crate::util::sim::{self, Condvar, Mutex, Thread};
 use std::any::Any;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+// ari-lint: allow(sim-discipline): `StdMutex` guards only the supervision handle
+// list (appended on spawn, drained in `Drop`) — never part of the job protocol
+// the sim scheduler model-checks.
 use std::sync::{Arc, Mutex as StdMutex, OnceLock, TryLockError};
 
 /// Rows below which an extra worker is not worth waking.
@@ -112,6 +115,9 @@ pub fn global() -> &'static WorkerPool {
 /// decrement would deadlock the submitter).
 type RunOne = unsafe fn(*mut (), usize) -> Option<Box<dyn Any + Send>>;
 
+// SAFETY: callers must pass a `base` obtained from a live `Vec<F>` spine whose
+// element type matches this instantiation's `F`; see the body for the full
+// per-read contract.
 unsafe fn run_erased<F: FnOnce() + Send>(base: *mut (), idx: usize) -> Option<Box<dyn Any + Send>> {
     // SAFETY: the submitter guarantees `base` points at a live `Vec<F>`
     // spine of at least `idx + 1` elements, that every index is claimed
@@ -516,6 +522,7 @@ mod tests {
 
     #[test]
     fn first_job_runs_on_caller_thread() {
+        // ari-lint: allow(sim-discipline): plain result collector for a real-thread test.
         use std::sync::Mutex;
         let main_id = std::thread::current().id();
         let ids = Mutex::new(Vec::new());
@@ -644,6 +651,8 @@ mod tests {
         for _ in 0..4 {
             let pool = Arc::clone(&pool);
             let total = Arc::clone(&total);
+            // ari-lint: allow(sim-discipline): concurrent-submitter stress leg on real
+            // OS threads — exercises the global pool under genuine preemption.
             handles.push(std::thread::spawn(move || {
                 for _ in 0..20 {
                     let local = AtomicUsize::new(0);

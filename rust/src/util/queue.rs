@@ -166,6 +166,8 @@ mod tests {
         let q2 = Arc::clone(&q);
         let pushed = Arc::new(AtomicUsize::new(0));
         let pushed2 = Arc::clone(&pushed);
+        // ari-lint: allow(sim-discipline): real-thread blocking leg — exercises the
+        // actual OS condvar wakeup, which the sim scheduler abstracts away.
         let h = std::thread::spawn(move || {
             q2.push(1).unwrap(); // blocks: capacity 1, slot taken
             pushed2.store(1, Ordering::SeqCst);
@@ -195,6 +197,7 @@ mod tests {
     fn close_wakes_blocked_popper() {
         let q = Arc::new(BoundedQueue::<u32>::new(2));
         let q2 = Arc::clone(&q);
+        // ari-lint: allow(sim-discipline): real-thread blocking leg (see above).
         let h = std::thread::spawn(move || q2.pop());
         std::thread::sleep(Duration::from_millis(20));
         q.close();
@@ -206,6 +209,7 @@ mod tests {
         let q = Arc::new(BoundedQueue::new(1));
         q.push(7u32).unwrap();
         let q2 = Arc::clone(&q);
+        // ari-lint: allow(sim-discipline): real-thread blocking leg (see above).
         let h = std::thread::spawn(move || q2.push(8));
         std::thread::sleep(Duration::from_millis(20));
         q.close();
@@ -220,6 +224,8 @@ mod tests {
         let q = Arc::new(BoundedQueue::new(2));
         q.push(1u32).unwrap();
         let q2 = Arc::clone(&q);
+        // ari-lint: allow(sim-discipline): poisoning requires a real panicking thread;
+        // sim threads abort the whole schedule on panic instead of poisoning locks.
         let _ = std::thread::spawn(move || {
             let _guard = q2.inner.lock();
             panic!("poison the queue lock");

@@ -24,29 +24,39 @@ struct CountingAlloc;
 static COUNTING: AtomicBool = AtomicBool::new(false);
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: a pure pass-through to `System` plus a relaxed atomic bump — every
+// GlobalAlloc contract obligation is discharged by `System` itself.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller obligations are exactly `System::alloc`'s; we add no state.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
         }
+        // SAFETY: `layout` is forwarded unchanged from our own caller.
         unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: caller obligations are exactly `System::alloc_zeroed`'s.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
         }
+        // SAFETY: `layout` is forwarded unchanged from our own caller.
         unsafe { System.alloc_zeroed(layout) }
     }
 
+    // SAFETY: caller obligations are exactly `System::realloc`'s.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
             ALLOCS.fetch_add(1, Ordering::Relaxed);
         }
+        // SAFETY: `ptr`/`layout`/`new_size` are forwarded unchanged.
         unsafe { System.realloc(ptr, layout, new_size) }
     }
 
+    // SAFETY: caller obligations are exactly `System::dealloc`'s.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // SAFETY: `ptr` was allocated by this allocator, i.e. by `System`.
         unsafe { System.dealloc(ptr, layout) }
     }
 }

@@ -7,6 +7,8 @@
 #![allow(dead_code)] // each test crate uses a subset of these helpers
 
 use std::sync::Arc;
+// ari-lint: allow(sim-discipline): invariant checkers collect results from real
+// stress threads; a plain std Mutex keeps them independent of the sim scheduler.
 use std::sync::Mutex as PlainMutex;
 use std::time::{Duration, Instant};
 

@@ -12,6 +12,8 @@
 #![cfg(any(debug_assertions, feature = "sim"))]
 
 use std::sync::Arc;
+// ari-lint: allow(sim-discipline): the stress legs below use real OS threads on
+// purpose (genuine preemption); a plain std Mutex collects their results.
 use std::sync::Mutex as PlainMutex;
 use std::time::Duration;
 
@@ -174,6 +176,7 @@ fn real_threads_linearisability_smoke() {
     let mut producers = Vec::new();
     for p in 0..3u32 {
         let q2 = Arc::clone(&q);
+        // ari-lint: allow(sim-discipline): real-thread stress leg under genuine preemption.
         producers.push(std::thread::spawn(move || {
             for k in 0..50u32 {
                 q2.push(p * 1000 + k).unwrap();
@@ -184,6 +187,7 @@ fn real_threads_linearisability_smoke() {
     for _ in 0..2 {
         let q2 = Arc::clone(&q);
         let got2 = Arc::clone(&got);
+        // ari-lint: allow(sim-discipline): real-thread stress leg under genuine preemption.
         consumers.push(std::thread::spawn(move || {
             while let Some(v) = q2.pop() {
                 got2.lock().unwrap().push(v);
@@ -212,6 +216,7 @@ fn real_threads_close_while_full_wakes_every_pusher() {
     let mut pushers = Vec::new();
     for i in 1..=4u32 {
         let q2 = Arc::clone(&q);
+        // ari-lint: allow(sim-discipline): real-thread stress leg under genuine preemption.
         pushers.push(std::thread::spawn(move || q2.push(i)));
     }
     // Give the pushers time to genuinely block on the full queue.
@@ -236,6 +241,7 @@ fn real_threads_property_close_splits_prefix_suffix() {
         let cut = rng.below(n_items as u64 + 1) as usize;
         let q = Arc::new(BoundedQueue::new(cap));
         let q2 = Arc::clone(&q);
+        // ari-lint: allow(sim-discipline): real-thread stress leg under genuine preemption.
         let producer = std::thread::spawn(move || {
             let mut rejected = Vec::new();
             for k in 0..n_items {

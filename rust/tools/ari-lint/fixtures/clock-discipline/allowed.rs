@@ -1,0 +1,18 @@
+//! ari-lint fixture: a justified allow suppresses clock-discipline, and
+//! `#[cfg(test)]` code is exempt.  Lexed as
+//! `rust/src/server/clockfix.rs` by the self-test; never compiled.
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    // ari-lint: allow(clock-discipline): fixture — the ServeClock impl itself reads the real clock.
+    Instant::now()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_reads_the_clock_freely() {
+        let _ = std::time::Instant::now();
+    }
+}

@@ -1,0 +1,10 @@
+//! ari-lint fixture: raw clock reads in the serving core must fire
+//! clock-discipline.  Lexed as `rust/src/server/clockfix.rs` by the
+//! self-test; never compiled.
+
+use std::time::{Instant, SystemTime};
+
+pub fn poll() -> Instant {
+    let _wall = SystemTime::now();
+    Instant::now()
+}

@@ -1,0 +1,8 @@
+//! ari-lint fixture: arms every fixture fault point.  Lexed as
+//! `rust/tests/fault_arm.rs` by the self-test; never compiled.
+
+#[test]
+fn arms_every_point() {
+    let _a = "exec-error:1.0:2";
+    let _b = "queue-stall:1.0:4";
+}

@@ -1,0 +1,11 @@
+//! ari-lint fixture: a fault registry consistent with its taxonomy
+//! table, every point armed.  Lexed as `rust/src/util/fault.rs` by the
+//! self-test; never compiled.
+
+/// Fault point: the backend returns a typed error.
+pub const EXEC_ERROR: &str = "exec-error";
+/// Fault point: a queue operation sleeps before taking the lock.
+pub const QUEUE_STALL: &str = "queue-stall";
+
+/// Every fault point this fixture defines.
+pub const POINTS: &[&str] = &[EXEC_ERROR, QUEUE_STALL];

@@ -1,0 +1,9 @@
+//! ari-lint fixture: arms only two of the three fixture fault points —
+//! `worker-death` stays unarmed.  Lexed as `rust/tests/fault_arm.rs` by
+//! the self-test; never compiled.
+
+#[test]
+fn arms_some_points() {
+    let _a = "exec-error:1.0:2";
+    let _b = "queue-stall:1.0:4";
+}

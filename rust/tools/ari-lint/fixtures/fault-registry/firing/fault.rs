@@ -1,0 +1,14 @@
+//! ari-lint fixture: a fault registry that drifted from its taxonomy
+//! table — `worker-death` is undocumented AND unarmed, and the doc
+//! table lists a phantom `exec-haunt`.  Lexed as
+//! `rust/src/util/fault.rs` by the self-test; never compiled.
+
+/// Fault point: the backend returns a typed error.
+pub const EXEC_ERROR: &str = "exec-error";
+/// Fault point: a queue operation sleeps before taking the lock.
+pub const QUEUE_STALL: &str = "queue-stall";
+/// Fault point: a pool worker exits as if its thread died.
+pub const WORKER_DEATH: &str = "worker-death";
+
+/// Every fault point this fixture defines.
+pub const POINTS: &[&str] = &[EXEC_ERROR, QUEUE_STALL, WORKER_DEATH];

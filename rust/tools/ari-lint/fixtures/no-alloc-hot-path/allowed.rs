@@ -1,0 +1,15 @@
+//! ari-lint fixture: a clean scratch-reuse hot fn passes, and a
+//! justified allow suppresses the one allocating line.  Lexed as
+//! `rust/src/coordinator/hot.rs` by the self-test (manifest lists
+//! `hot_fn` and `hot_fn_logged`); never compiled.
+
+pub fn hot_fn(out: &mut Vec<u32>, scratch: &mut Vec<u32>) {
+    scratch.clear();
+    out.extend(scratch.drain(..));
+}
+
+pub fn hot_fn_logged(out: &mut Vec<u32>) -> String {
+    out.clear();
+    // ari-lint: allow(no-alloc-hot-path): fixture — the error path allocates only on failure.
+    format!("drained {}", out.len())
+}

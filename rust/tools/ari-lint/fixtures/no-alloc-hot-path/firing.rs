@@ -1,0 +1,15 @@
+//! ari-lint fixture: allocation tokens inside a manifest-listed fn must
+//! fire no-alloc-hot-path; unlisted fns may allocate freely.  Lexed as
+//! `rust/src/coordinator/hot.rs` by the self-test (manifest lists only
+//! `hot_fn`); never compiled.
+
+pub fn hot_fn(out: &mut Vec<u32>) {
+    let scratch = Vec::new();
+    out.extend(scratch);
+    let boxed = Box::new(0u32);
+    out.push(*boxed);
+}
+
+pub fn cold_fn() -> Vec<String> {
+    vec![format!("cold code may allocate")]
+}

@@ -1,0 +1,16 @@
+//! ari-lint fixture: poison-tolerant recovery passes, and a justified
+//! allow suppresses the strict site.  Lexed as
+//! `rust/src/util/counter.rs` by the self-test; never compiled.
+
+use crate::util::sim::Mutex;
+
+pub fn bump(m: &Mutex<u32>) -> u32 {
+    let mut g = m.lock().unwrap_or_else(|e| e.into_inner());
+    *g += 1;
+    *g
+}
+
+pub fn strict(m: &Mutex<u32>) -> u32 {
+    // ari-lint: allow(poison-tolerance): fixture — panic-on-poison is the intended abort here.
+    *m.lock().unwrap()
+}

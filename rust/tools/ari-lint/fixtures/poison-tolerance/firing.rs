@@ -1,0 +1,16 @@
+//! ari-lint fixture: lock/wait results consumed by unwrap/expect must
+//! fire poison-tolerance.  Lexed as `rust/src/util/counter.rs` by the
+//! self-test; never compiled.
+
+use crate::util::sim::{Condvar, Mutex};
+
+pub fn bump(m: &Mutex<u32>) -> u32 {
+    let mut g = m.lock().unwrap();
+    *g += 1;
+    *g
+}
+
+pub fn wait_ready(m: &Mutex<bool>, cv: &Condvar) {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    let _g = cv.wait(g).expect("ready");
+}

@@ -1,0 +1,15 @@
+//! ari-lint fixture: justified allows suppress sim-discipline.
+//! Lexed as `rust/src/util/worker.rs` by the self-test; never compiled.
+
+// ari-lint: allow(sim-discipline): fixture — a const-initialised registry needs the std Mutex.
+use std::sync::Mutex;
+
+static REGISTRY: Mutex<Vec<u32>> = Mutex::new(Vec::new());
+
+pub fn start() {
+    // ari-lint: allow(sim-discipline): fixture — real-thread stress leg outside the model.
+    let h = std::thread::spawn(|| {
+        REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).push(1);
+    });
+    let _ = h.join();
+}

@@ -1,0 +1,12 @@
+//! ari-lint fixture: every raw concurrency primitive here must fire
+//! sim-discipline.  Lexed as `rust/src/util/worker.rs` by the
+//! self-test; never compiled.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+pub fn start(shared: Arc<Mutex<u32>>, cv: Condvar, tx: mpsc::Sender<u32>) {
+    let _h = std::thread::spawn(move || {
+        let _ = (shared, cv, tx);
+    });
+}

@@ -1,0 +1,24 @@
+//! ari-lint fixture: SAFETY comments and `# Safety` doc sections
+//! satisfy unsafe-audit, and `unsafe fn(..)` pointer types are exempt.
+//! Lexed as `rust/src/tensor/fixture.rs` by the self-test; never
+//! compiled.
+
+/// Increment through a raw pointer.
+///
+/// # Safety
+/// `p` must be non-null, properly aligned, and valid for reads and
+/// writes.
+pub unsafe fn raw_add(p: *mut u32) {
+    *p += 1;
+}
+
+pub fn read_first(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    // SAFETY: the assert above guarantees the slice is non-empty, so
+    // reading the first element is in bounds.
+    unsafe { *v.as_ptr() }
+}
+
+/// An erased hook — the `unsafe fn` here is a pointer *type*, not a
+/// declaration, and needs no SAFETY comment of its own.
+pub type ExecHook = unsafe fn(*mut ()) -> u32;

@@ -1,0 +1,11 @@
+//! ari-lint fixture: `unsafe` without a SAFETY justification must fire
+//! unsafe-audit.  Lexed as `rust/src/tensor/fixture.rs` by the
+//! self-test; never compiled.
+
+pub fn read_first(v: &[u8]) -> u8 {
+    unsafe { *v.as_ptr() }
+}
+
+pub unsafe fn raw_add(p: *mut u32) {
+    *p += 1;
+}

@@ -1,0 +1,1052 @@
+//! `ari-lint` — repo-native static analysis for the ARI serving core.
+//!
+//! PRs 5–7 built the serving runtime around contracts that existed only
+//! by convention; this crate turns them into machine-checked lints
+//! (full rationale and the suppression grammar live in docs/LINTS.md):
+//!
+//! * **sim-discipline** — no raw `std::sync::{Mutex, Condvar, mpsc}` or
+//!   `std::thread::spawn` outside `util::sim`, so model checking sees
+//!   every scheduling point.
+//! * **clock-discipline** — no `Instant::now()` / `SystemTime::now()`
+//!   in `server` / `coordinator` outside the `ServeClock` plumbing.
+//! * **poison-tolerance** — no `.lock()` / `.wait()` / `.wait_timeout()`
+//!   result consumed by `.unwrap()` / `.expect()` in non-test source.
+//! * **no-alloc-hot-path** — functions listed in the checked-in
+//!   manifest (`hotpath.txt`) may not contain allocation tokens.
+//! * **unsafe-audit** — every `unsafe` block / fn / impl carries a
+//!   `// SAFETY:` comment or `# Safety` doc section.
+//! * **fault-registry** — `util::fault::POINTS` matches the taxonomy
+//!   table in docs/ROBUSTNESS.md and every point is armed by a test.
+//!
+//! Suppression is per-site: `// ari-lint: allow(<lint>): <justification>`
+//! on the flagged line or a comment/attribute line directly above it.
+//! A malformed suppression is itself a finding (**allow-syntax**), and
+//! every well-formed one is listed in the report so nothing is waived
+//! silently.
+//!
+//! The crate is dependency-free (the repo builds offline with vendored
+//! crates only), so the Rust "parser" is a small hand-written lexer
+//! that blanks comments, strings and char literals while preserving
+//! line structure; the lints scan the blanked code text.  That keeps
+//! them honest about what they are — lexical contract checks, not type
+//! analysis — which is exactly enough for the conventions above.
+
+/// Lint name: raw `std::sync` primitives / `std::thread::spawn`.
+pub const SIM_DISCIPLINE: &str = "sim-discipline";
+/// Lint name: raw clock reads in `server` / `coordinator`.
+pub const CLOCK_DISCIPLINE: &str = "clock-discipline";
+/// Lint name: lock/wait results consumed by `.unwrap()` / `.expect()`.
+pub const POISON_TOLERANCE: &str = "poison-tolerance";
+/// Lint name: allocation tokens in manifest-listed hot-path functions.
+pub const NO_ALLOC_HOT_PATH: &str = "no-alloc-hot-path";
+/// Lint name: `unsafe` without a `SAFETY:` justification.
+pub const UNSAFE_AUDIT: &str = "unsafe-audit";
+/// Lint name: fault points out of sync with docs or never armed.
+pub const FAULT_REGISTRY: &str = "fault-registry";
+/// Lint name: malformed `ari-lint: allow(...)` comments.
+pub const ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// Every lint this tool knows, in reporting order.
+pub const LINTS: &[&str] = &[
+    SIM_DISCIPLINE,
+    CLOCK_DISCIPLINE,
+    POISON_TOLERANCE,
+    NO_ALLOC_HOT_PATH,
+    UNSAFE_AUDIT,
+    FAULT_REGISTRY,
+    ALLOW_SYNTAX,
+];
+
+/// One violation: `file:line: lint: msg`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path.
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    /// One of [`LINTS`].
+    pub lint: &'static str,
+    /// Human-readable message.
+    pub msg: String,
+}
+
+/// One well-formed `ari-lint: allow(...)` comment (whether or not it
+/// suppressed a finding this run — stale allows stay visible).
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    /// Repo-relative path.
+    pub file: String,
+    /// 1-indexed line of the allow comment.
+    pub line: usize,
+    /// The lint being allowed.
+    pub lint: String,
+    /// The required justification text.
+    pub justification: String,
+}
+
+/// The result of linting a tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unsuppressed violations.
+    pub findings: Vec<Finding>,
+    /// Every well-formed allow comment in the tree.
+    pub suppressions: Vec<Suppression>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+/// One hot-path manifest entry: `file::func`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Repo-relative path of the file defining the function.
+    pub file: String,
+    /// The function name (definition, not call sites).
+    pub func: String,
+}
+
+/// Everything the linter consumes, decoupled from the filesystem so
+/// the self-tests can lint fixture and mutated sources in memory.
+#[derive(Debug, Default)]
+pub struct Input {
+    /// `(repo-relative path, content)` for every `.rs` file to scan.
+    pub files: Vec<(String, String)>,
+    /// `(path, content)` of docs/ROBUSTNESS.md, when present.
+    pub robustness_md: Option<(String, String)>,
+    /// Hot-path manifest entries.
+    pub manifest: Vec<ManifestEntry>,
+}
+
+/// Parse the `hotpath.txt` manifest: one `path::func` per line, `#`
+/// comments and blank lines ignored.
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((file, func)) = line.rsplit_once("::") else {
+            return Err(format!("hotpath.txt line {}: expected `path::func`, got {:?}", i + 1, line));
+        };
+        if file.is_empty() || func.is_empty() || !func.chars().all(is_ident_char) {
+            return Err(format!("hotpath.txt line {}: malformed entry {:?}", i + 1, line));
+        }
+        out.push(ManifestEntry { file: file.to_string(), func: func.to_string() });
+    }
+    Ok(out)
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does a raw (or byte-raw) string literal open at `chars[i]`?
+/// Returns `(hashes, index just past the opening quote)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// A lexed source file: comments, strings and char literals blanked out
+/// of `code` (line structure preserved), with the comment and
+/// string-literal text kept per line for the SAFETY / allow / armed-by
+/// checks.
+pub struct Lexed {
+    /// Blanked code, all lines joined by `\n`.
+    code: String,
+    /// Byte offset of each line start within `code`.
+    line_start: Vec<usize>,
+    /// Blanked code per line.
+    code_lines: Vec<String>,
+    /// Comment text per line (`//`, `///`, `//!`, `/* */` contents).
+    comment_lines: Vec<String>,
+    /// String-literal contents per line.
+    string_lines: Vec<String>,
+    /// Lines inside a `#[cfg(test)]` item.
+    is_test: Vec<bool>,
+    /// Lints allowed per line by well-formed allow comments.
+    allows: Vec<Vec<String>>,
+    /// Malformed allow comments (reported as `allow-syntax`).
+    bad_allows: Vec<(usize, String)>,
+    /// Well-formed allow comments: `(line0, lint, justification)`.
+    good_allows: Vec<(usize, String, String)>,
+}
+
+enum LexState {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+impl Lexed {
+    /// Lex `src` (state machine over chars; no allocation surprises,
+    /// no real parsing).
+    pub fn new(src: &str) -> Lexed {
+        let chars: Vec<char> = src.chars().collect();
+        let mut code_lines: Vec<String> = Vec::new();
+        let mut comment_lines: Vec<String> = Vec::new();
+        let mut string_lines: Vec<String> = Vec::new();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut stringv = String::new();
+        let mut st = LexState::Code;
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            if c == '\n' {
+                if matches!(st, LexState::LineComment) {
+                    st = LexState::Code;
+                }
+                code_lines.push(std::mem::take(&mut code));
+                comment_lines.push(std::mem::take(&mut comment));
+                string_lines.push(std::mem::take(&mut stringv));
+                i += 1;
+                continue;
+            }
+            match st {
+                LexState::Code => {
+                    let next = chars.get(i + 1).copied();
+                    if c == '/' && next == Some('/') {
+                        st = LexState::LineComment;
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        st = LexState::BlockComment(1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '"' {
+                        st = LexState::Str;
+                        code.push(' ');
+                        i += 1;
+                    } else if (c == 'r' || c == 'b') && !(i > 0 && is_ident_char(chars[i - 1])) {
+                        if let Some((hashes, after)) = raw_string_open(&chars, i) {
+                            for _ in i..after {
+                                code.push(' ');
+                            }
+                            st = LexState::RawStr(hashes);
+                            i = after;
+                        } else if c == 'b' && next == Some('"') {
+                            // Byte string: same escape rules as Str.
+                            code.push_str("  ");
+                            st = LexState::Str;
+                            i += 2;
+                        } else {
+                            code.push(c); // plain ident starting with r/b
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        let is_char = match chars.get(i + 1) {
+                            Some('\\') => true,
+                            Some(&x) if x != '\'' => chars.get(i + 2) == Some(&'\''),
+                            _ => false,
+                        };
+                        if is_char {
+                            st = LexState::CharLit;
+                            code.push(' ');
+                        } else {
+                            code.push('\''); // lifetime or loop label
+                        }
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                LexState::LineComment => {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+                LexState::BlockComment(depth) => {
+                    let next = chars.get(i + 1).copied();
+                    if c == '*' && next == Some('/') {
+                        st = if depth == 1 { LexState::Code } else { LexState::BlockComment(depth - 1) };
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '/' && next == Some('*') {
+                        st = LexState::BlockComment(depth + 1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::Str => {
+                    if c == '\\' {
+                        code.push(' ');
+                        if chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                            code.push(' ');
+                            stringv.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        st = LexState::Code;
+                        code.push(' ');
+                        i += 1;
+                    } else {
+                        stringv.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::RawStr(hashes) => {
+                    let mut closes = c == '"';
+                    for h in 0..hashes as usize {
+                        closes = closes && chars.get(i + 1 + h) == Some(&'#');
+                    }
+                    if closes {
+                        for _ in 0..=hashes {
+                            code.push(' ');
+                        }
+                        st = LexState::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        stringv.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::CharLit => {
+                    if c == '\\' {
+                        code.push(' ');
+                        if chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                            code.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else {
+                        if c == '\'' {
+                            st = LexState::Code;
+                        }
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        code_lines.push(code);
+        comment_lines.push(comment);
+        string_lines.push(stringv);
+
+        let mut all = String::new();
+        let mut line_start = Vec::with_capacity(code_lines.len());
+        for (i, l) in code_lines.iter().enumerate() {
+            line_start.push(all.len());
+            all.push_str(l);
+            if i + 1 < code_lines.len() {
+                all.push('\n');
+            }
+        }
+        let is_test = compute_test_regions(&all, &line_start, code_lines.len());
+        let mut lexed = Lexed {
+            code: all,
+            line_start,
+            code_lines,
+            comment_lines,
+            string_lines,
+            is_test,
+            allows: Vec::new(),
+            bad_allows: Vec::new(),
+            good_allows: Vec::new(),
+        };
+        lexed.parse_allows();
+        lexed
+    }
+
+    /// 0-indexed line of a byte offset into `code`.
+    fn line_of(&self, offset: usize) -> usize {
+        match self.line_start.binary_search(&offset) {
+            Ok(l) => l,
+            Err(ins) => ins - 1,
+        }
+    }
+
+    fn parse_allows(&mut self) {
+        self.allows = vec![Vec::new(); self.comment_lines.len()];
+        let marker = "ari-lint: allow(";
+        for i in 0..self.comment_lines.len() {
+            let text = self.comment_lines[i].clone();
+            let mut from = 0usize;
+            while let Some(rel) = text[from..].find(marker) {
+                let after = from + rel + marker.len();
+                from = after;
+                let Some(close) = text[after..].find(')') else {
+                    self.bad_allows.push((i, "unclosed `ari-lint: allow(`".to_string()));
+                    break;
+                };
+                let name = text[after..after + close].trim().to_string();
+                let rest = &text[after + close + 1..];
+                if !LINTS.contains(&name.as_str()) {
+                    self.bad_allows.push((i, format!("unknown lint {name:?} in allow")));
+                    continue;
+                }
+                let Some(just) = rest.strip_prefix(':') else {
+                    let m = format!("allow({name}) is missing its `: <justification>` — say why");
+                    self.bad_allows.push((i, m));
+                    continue;
+                };
+                let just = just.trim();
+                // The justification ends at the next allow marker, if
+                // several share one line (they never should).
+                let just = just.split("ari-lint: allow(").next().unwrap_or("").trim();
+                if just.is_empty() {
+                    let m = format!("allow({name}) has an empty justification — say why");
+                    self.bad_allows.push((i, m));
+                    continue;
+                }
+                self.allows[i].push(name.clone());
+                self.good_allows.push((i, name, just.to_string()));
+            }
+        }
+    }
+
+    /// True when line `l0` (0-indexed) is covered by a comment matching
+    /// `pred` — on the same line, or on contiguous comment-only /
+    /// attribute-only lines directly above (the SAFETY / allow walk).
+    fn covered_by(&self, l0: usize, pred: &dyn Fn(&Lexed, usize) -> bool) -> bool {
+        if pred(self, l0) {
+            return true;
+        }
+        let mut l = l0;
+        for _ in 0..50 {
+            if l == 0 {
+                return false;
+            }
+            l -= 1;
+            let code = self.code_lines[l].trim();
+            let has_comment = !self.comment_lines[l].trim().is_empty();
+            if code.is_empty() && !has_comment {
+                return false; // fully blank line ends the walk
+            }
+            if code.is_empty() || code.starts_with("#[") || code.starts_with("#![") {
+                if has_comment && pred(self, l) {
+                    return true;
+                }
+                continue; // comment-only or attribute line: keep walking
+            }
+            return false; // real code ends the walk
+        }
+        false
+    }
+
+    fn allowed(&self, l0: usize, lint: &str) -> bool {
+        let pred = move |lex: &Lexed, l: usize| lex.allows[l].iter().any(|a| a == lint);
+        self.covered_by(l0, &pred)
+    }
+
+    fn has_safety_comment(&self, l0: usize) -> bool {
+        fn pred(lex: &Lexed, l: usize) -> bool {
+            lex.comment_lines[l].contains("SAFETY:") || lex.comment_lines[l].contains("# Safety")
+        }
+        self.covered_by(l0, &pred)
+    }
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item (in this repo:
+/// always a `mod tests { ... }` block; a non-mod item falls back to
+/// marking the single following item line).
+fn compute_test_regions(code: &str, line_start: &[usize], n_lines: usize) -> Vec<bool> {
+    let mut t = vec![false; n_lines];
+    let bytes = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = code[from..].find("#[cfg(test)]") {
+        let attr_at = from + rel;
+        from = attr_at + 1;
+        let attr_line = line_of_in(line_start, attr_at);
+        // Look for a `mod` keyword within the next few hundred bytes.
+        let mut window_end = (attr_at + 400).min(code.len());
+        while !code.is_char_boundary(window_end) {
+            window_end -= 1;
+        }
+        let window = &code[attr_at..window_end];
+        let mut mod_at = None;
+        let mut wfrom = 0usize;
+        while let Some(mrel) = window[wfrom..].find("mod") {
+            let abs = attr_at + wfrom + mrel;
+            wfrom += mrel + 3;
+            let before_ok = abs == 0 || !is_ident_byte(bytes[abs - 1]);
+            let after_ok = abs + 3 >= bytes.len() || !is_ident_byte(bytes[abs + 3]);
+            if before_ok && after_ok {
+                mod_at = Some(abs);
+                break;
+            }
+        }
+        let marked = mod_at
+            .and_then(|m| code[m..].find('{').map(|b| m + b))
+            .and_then(|open| match_delim(bytes, open, b'{', b'}'))
+            .map(|close| line_of_in(line_start, close));
+        match marked {
+            Some(close_line) => {
+                for l in attr_line..=close_line.min(n_lines - 1) {
+                    t[l] = true;
+                }
+            }
+            None => {
+                // Attribute on a non-mod item (or an unclosed mod):
+                // conservatively mark the attribute line and the next
+                // non-blank code line.
+                t[attr_line] = true;
+                for (l, flag) in t.iter_mut().enumerate().take(n_lines).skip(attr_line + 1) {
+                    let ls = line_start[l];
+                    let le = if l + 1 < line_start.len() { line_start[l + 1] } else { code.len() };
+                    if !code[ls..le].trim().is_empty() {
+                        *flag = true;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    t
+}
+
+fn line_of_in(line_start: &[usize], offset: usize) -> usize {
+    match line_start.binary_search(&offset) {
+        Ok(l) => l,
+        Err(ins) => ins - 1,
+    }
+}
+
+/// Find the matching close delimiter for the open delimiter at `open`.
+fn match_delim(bytes: &[u8], open: usize, o: u8, c: u8) -> Option<usize> {
+    let mut depth = 0i64;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        if b == o {
+            depth += 1;
+        } else if b == c {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// Whole-ident occurrences of `needle` in `hay` (byte offsets).
+fn find_ident_occurrences(hay: &str, needle: &str) -> Vec<usize> {
+    let bytes = hay.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        from = at + 1;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + needle.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Leading identifier of `s`.
+fn leading_ident(s: &str) -> &str {
+    let end = s.find(|c: char| !is_ident_char(c)).unwrap_or(s.len());
+    &s[..end]
+}
+
+fn is_test_file(path: &str) -> bool {
+    path.starts_with("rust/tests/") || path.contains("/tests/")
+}
+
+fn is_sim_file(path: &str) -> bool {
+    path.ends_with("util/sim.rs")
+}
+
+// ---------------------------------------------------------------------
+// The lints
+// ---------------------------------------------------------------------
+
+fn lint_sim_discipline(path: &str, lex: &Lexed, out: &mut Vec<Finding>) {
+    if is_sim_file(path) {
+        return;
+    }
+    for at in find_ident_occurrences(&lex.code, "std::thread::spawn") {
+        out.push(Finding {
+            file: path.to_string(),
+            line: lex.line_of(at) + 1,
+            lint: SIM_DISCIPLINE,
+            msg: "raw `std::thread::spawn` — use `sim::spawn` so model checking sees the thread".to_string(),
+        });
+    }
+    let banned = ["Mutex", "Condvar", "mpsc"];
+    let bytes = lex.code.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = lex.code[from..].find("std::sync::") {
+        let at = from + rel;
+        from = at + 1;
+        if at > 0 && is_ident_byte(bytes[at - 1]) {
+            continue;
+        }
+        let rest = &lex.code[at + "std::sync::".len()..];
+        if rest.starts_with('{') {
+            // `use std::sync::{...}` group, possibly multi-line.
+            let open = at + "std::sync::".len();
+            let Some(close) = match_delim(bytes, open, b'{', b'}') else { continue };
+            let group = &lex.code[open..close];
+            for b in banned {
+                for grel in find_ident_occurrences(group, b) {
+                    out.push(Finding {
+                        file: path.to_string(),
+                        line: lex.line_of(open + grel) + 1,
+                        lint: SIM_DISCIPLINE,
+                        msg: format!("raw `std::sync::{b}` — use the `util::sim` wrapper (docs/LINTS.md)"),
+                    });
+                }
+            }
+        } else {
+            let ident = leading_ident(rest);
+            if banned.contains(&ident) {
+                out.push(Finding {
+                    file: path.to_string(),
+                    line: lex.line_of(at) + 1,
+                    lint: SIM_DISCIPLINE,
+                    msg: format!("raw `std::sync::{ident}` — use the `util::sim` wrapper (docs/LINTS.md)"),
+                });
+            }
+        }
+    }
+}
+
+fn lint_clock_discipline(path: &str, lex: &Lexed, out: &mut Vec<Finding>) {
+    if !(path.contains("src/server/") || path.contains("src/coordinator/")) {
+        return;
+    }
+    for needle in ["Instant::now", "SystemTime::now"] {
+        for at in find_ident_occurrences(&lex.code, needle) {
+            let l0 = lex.line_of(at);
+            if lex.is_test[l0] {
+                continue;
+            }
+            out.push(Finding {
+                file: path.to_string(),
+                line: l0 + 1,
+                lint: CLOCK_DISCIPLINE,
+                msg: format!("`{needle}()` in the serving core — thread time through `ServeClock`"),
+            });
+        }
+    }
+}
+
+fn lint_poison_tolerance(path: &str, lex: &Lexed, out: &mut Vec<Finding>) {
+    if is_sim_file(path) || is_test_file(path) {
+        return;
+    }
+    let bytes = lex.code.as_bytes();
+    for needle in [".lock(", ".wait(", ".wait_timeout("] {
+        let mut from = 0usize;
+        while let Some(rel) = lex.code[from..].find(needle) {
+            let at = from + rel;
+            from = at + 1;
+            let l0 = lex.line_of(at);
+            if lex.is_test[l0] {
+                continue;
+            }
+            let open = at + needle.len() - 1;
+            let Some(close) = match_delim(bytes, open, b'(', b')') else { continue };
+            let mut j = close + 1;
+            while j < bytes.len() && (bytes[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if j >= bytes.len() || bytes[j] != b'.' {
+                continue;
+            }
+            let method = leading_ident(&lex.code[j + 1..]);
+            if method == "unwrap" || method == "expect" {
+                let m = needle.trim_start_matches('.').trim_end_matches('(');
+                out.push(Finding {
+                    file: path.to_string(),
+                    line: l0 + 1,
+                    lint: POISON_TOLERANCE,
+                    msg: format!("`.{m}(..).{method}()` panics on poison — use `unwrap_or_else(|e| e.into_inner())`"),
+                });
+            }
+        }
+    }
+}
+
+/// Allocation tokens banned inside hot-path manifest functions.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    "Box::new",
+    "format!",
+    "String::new",
+    "String::from",
+    "with_capacity",
+    ".to_vec",
+    ".to_string",
+    ".to_owned",
+    ".clone",
+    ".collect",
+];
+
+fn lint_no_alloc(entry: &ManifestEntry, lexeds: &[(String, Lexed)], out: &mut Vec<Finding>) {
+    let Some((path, lex)) = lexeds.iter().find(|(p, _)| *p == entry.file) else {
+        out.push(Finding {
+            file: entry.file.clone(),
+            line: 1,
+            lint: NO_ALLOC_HOT_PATH,
+            msg: format!("hot-path manifest names `{}` but the file was not scanned", entry.func),
+        });
+        return;
+    };
+    let needle = format!("fn {}", entry.func);
+    let bytes = lex.code.as_bytes();
+    let def = find_ident_occurrences(&lex.code, &needle).into_iter().find(|&at| !lex.is_test[lex.line_of(at)]);
+    let Some(def) = def else {
+        out.push(Finding {
+            file: path.clone(),
+            line: 1,
+            lint: NO_ALLOC_HOT_PATH,
+            msg: format!("hot-path manifest names `{}` but no such fn is defined here", entry.func),
+        });
+        return;
+    };
+    // First `{` at paren depth 0 after the signature opens the body.
+    let mut depth = 0i64;
+    let mut open = None;
+    for (i, &b) in bytes.iter().enumerate().skip(def) {
+        match b {
+            b'(' => depth += 1,
+            b')' => depth -= 1,
+            b'{' if depth == 0 => {
+                open = Some(i);
+                break;
+            }
+            _ => {}
+        }
+    }
+    let Some(open) = open else { return };
+    let Some(close) = match_delim(bytes, open, b'{', b'}') else { return };
+    let body = &lex.code[open..close];
+    for token in ALLOC_TOKENS {
+        // Method tokens match ident-bounded after a `.`, so `.clone()`
+        // and `.collect::<..>()` hit but `.clone_from(..)` does not.
+        let hits: Vec<usize> = if let Some(m) = token.strip_prefix('.') {
+            find_ident_occurrences(body, m)
+                .into_iter()
+                .filter(|&at| at > 0 && body.as_bytes()[at - 1] == b'.')
+                .map(|at| at - 1)
+                .collect()
+        } else {
+            find_ident_occurrences(body, token.trim_end_matches('!'))
+                .into_iter()
+                .filter(|&at| !token.ends_with('!') || body[at + token.len() - 1..].starts_with('!'))
+                .collect()
+        };
+        for at in hits {
+            out.push(Finding {
+                file: path.clone(),
+                line: lex.line_of(open + at) + 1,
+                lint: NO_ALLOC_HOT_PATH,
+                msg: format!("allocation token `{token}` in hot-path fn `{}` (hotpath.txt)", entry.func),
+            });
+        }
+    }
+}
+
+fn lint_unsafe_audit(path: &str, lex: &Lexed, out: &mut Vec<Finding>) {
+    let bytes = lex.code.as_bytes();
+    for at in find_ident_occurrences(&lex.code, "unsafe") {
+        let mut j = at + "unsafe".len();
+        while j < bytes.len() && (bytes[j] as char).is_whitespace() {
+            j += 1;
+        }
+        if lex.code[j..].starts_with("fn") {
+            let mut k = j + 2;
+            while k < bytes.len() && (bytes[k] as char).is_whitespace() {
+                k += 1;
+            }
+            if k < bytes.len() && bytes[k] == b'(' {
+                continue; // `unsafe fn(..)` function-pointer type, not a declaration
+            }
+        }
+        let l0 = lex.line_of(at);
+        if !lex.has_safety_comment(l0) {
+            out.push(Finding {
+                file: path.to_string(),
+                line: l0 + 1,
+                lint: UNSAFE_AUDIT,
+                msg: "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc section) above".to_string(),
+            });
+        }
+    }
+}
+
+fn lint_fault_registry(input: &Input, lexeds: &[(String, Lexed)], out: &mut Vec<Finding>) {
+    let Some((fault_path, fault_lex)) = lexeds.iter().find(|(p, _)| p.ends_with("util/fault.rs")) else {
+        return; // tree without a fault registry (fixture runs): nothing to check
+    };
+    // `pub const NAME: &str = "value";` — values live in string
+    // literals, so parse names from code and values from string text.
+    let mut consts: Vec<(String, String, usize)> = Vec::new();
+    for (i, code) in fault_lex.code_lines.iter().enumerate() {
+        let t = code.trim_start();
+        let Some(rest) = t.strip_prefix("pub const ") else { continue };
+        let name = leading_ident(rest);
+        if name.is_empty() || !rest[name.len()..].trim_start().starts_with(": &str") {
+            continue;
+        }
+        let value = fault_lex.string_lines[i].trim().to_string();
+        if !value.is_empty() {
+            consts.push((name.to_string(), value, i));
+        }
+    }
+    // `pub const POINTS: &[&str] = &[A, B, ...];`
+    let mut points: Vec<(String, usize)> = Vec::new();
+    let mut points_line = 1usize;
+    if let Some(at) = fault_lex.code.find("const POINTS") {
+        points_line = fault_lex.line_of(at) + 1;
+        // The `[` we want is the initialiser's, after the `=` — not the
+        // one in the `&[&str]` type annotation.
+        let eq = fault_lex.code[at..].find('=').map(|e| at + e).unwrap_or(at);
+        if let Some(bo) = fault_lex.code[eq..].find('[') {
+            let open = eq + bo;
+            if let Some(close) = match_delim(fault_lex.code.as_bytes(), open, b'[', b']') {
+                for ident in fault_lex.code[open + 1..close].split(',') {
+                    let ident = ident.trim();
+                    if ident.is_empty() {
+                        continue;
+                    }
+                    match consts.iter().find(|(n, _, _)| n.as_str() == ident) {
+                        Some((_, value, line0)) => points.push((value.clone(), line0 + 1)),
+                        None => out.push(Finding {
+                            file: fault_path.clone(),
+                            line: points_line,
+                            lint: FAULT_REGISTRY,
+                            msg: format!("POINTS entry `{ident}` has no `pub const .. : &str` here"),
+                        }),
+                    }
+                }
+            }
+        }
+    } else {
+        out.push(Finding {
+            file: fault_path.clone(),
+            line: 1,
+            lint: FAULT_REGISTRY,
+            msg: "no `const POINTS` table found in util/fault.rs".to_string(),
+        });
+        return;
+    }
+    // The taxonomy table in docs/ROBUSTNESS.md.
+    let Some((md_path, md)) = &input.robustness_md else {
+        out.push(Finding {
+            file: fault_path.clone(),
+            line: points_line,
+            lint: FAULT_REGISTRY,
+            msg: "docs/ROBUSTNESS.md not found — the fault-point taxonomy table must document every point".to_string(),
+        });
+        return;
+    };
+    let mut doc_points: Vec<(String, usize)> = Vec::new();
+    let mut in_section = false;
+    for (i, line) in md.lines().enumerate() {
+        let t = line.trim();
+        if t.starts_with("###") {
+            in_section = t.contains("Fault points");
+            continue;
+        }
+        if in_section && t.starts_with('#') {
+            in_section = false;
+        }
+        if in_section && t.starts_with('|') {
+            let mut back = t.split('`');
+            if let (Some(_), Some(name)) = (back.next(), back.next()) {
+                doc_points.push((name.to_string(), i + 1));
+            }
+        }
+    }
+    for (p, line) in &points {
+        if !doc_points.iter().any(|(d, _)| d == p) {
+            out.push(Finding {
+                file: md_path.clone(),
+                line: 1,
+                lint: FAULT_REGISTRY,
+                msg: format!("fault point `{p}` (util/fault.rs:{line}) missing from the taxonomy table"),
+            });
+        }
+    }
+    for (d, line) in &doc_points {
+        if !points.iter().any(|(p, _)| p == d) {
+            out.push(Finding {
+                file: md_path.clone(),
+                line: *line,
+                lint: FAULT_REGISTRY,
+                msg: format!("documented fault point `{d}` is not defined in util::fault::POINTS"),
+            });
+        }
+    }
+    // Every point must be armed by at least one test (a string literal
+    // containing the point name inside test code).
+    for (p, line) in &points {
+        let armed = lexeds.iter().any(|(path, lex)| {
+            lex.string_lines
+                .iter()
+                .enumerate()
+                .any(|(l, s)| (is_test_file(path) || lex.is_test[l]) && s.contains(p.as_str()))
+        });
+        if !armed {
+            out.push(Finding {
+                file: fault_path.clone(),
+                line: *line,
+                lint: FAULT_REGISTRY,
+                msg: format!("fault point `{p}` is never armed by any test (`ArmGuard::arm`)"),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------
+
+/// Lint a tree.  Findings covered by a well-formed allow comment are
+/// suppressed; every allow comment (used or not) is reported.
+pub fn run(input: &Input) -> Report {
+    let lexeds: Vec<(String, Lexed)> = input.files.iter().map(|(p, s)| (p.clone(), Lexed::new(s))).collect();
+    let mut raw: Vec<Finding> = Vec::new();
+    for (path, lex) in &lexeds {
+        lint_sim_discipline(path, lex, &mut raw);
+        lint_clock_discipline(path, lex, &mut raw);
+        lint_poison_tolerance(path, lex, &mut raw);
+        lint_unsafe_audit(path, lex, &mut raw);
+        for (l0, msg) in &lex.bad_allows {
+            raw.push(Finding { file: path.clone(), line: l0 + 1, lint: ALLOW_SYNTAX, msg: msg.clone() });
+        }
+    }
+    for entry in &input.manifest {
+        lint_no_alloc(entry, &lexeds, &mut raw);
+    }
+    lint_fault_registry(input, &lexeds, &mut raw);
+
+    let mut findings = Vec::new();
+    for f in raw {
+        let suppressed = f.lint != ALLOW_SYNTAX
+            && lexeds.iter().any(|(p, lex)| *p == f.file && f.line >= 1 && lex.allowed(f.line - 1, f.lint));
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+
+    let mut suppressions = Vec::new();
+    for (path, lex) in &lexeds {
+        for (l0, lint, just) in &lex.good_allows {
+            suppressions.push(Suppression {
+                file: path.clone(),
+                line: l0 + 1,
+                lint: lint.clone(),
+                justification: just.clone(),
+            });
+        }
+    }
+    suppressions.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+
+    Report { findings, suppressions, files: lexeds.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(path: &str, src: &str) -> Report {
+        run(&Input { files: vec![(path.to_string(), src.to_string())], robustness_md: None, manifest: Vec::new() })
+    }
+
+    #[test]
+    fn lexer_blanks_comments_strings_chars_and_keeps_lifetimes() {
+        let src = "let s = \"std::sync::Mutex\"; // std::sync::Mutex\nlet l: &'static str = x;\n";
+        let lex = Lexed::new(src);
+        assert!(!lex.code.contains("std::sync::Mutex"), "strings and comments must be blanked");
+        assert!(lex.comment_lines[0].contains("std::sync::Mutex"));
+        assert!(lex.string_lines[0].contains("std::sync::Mutex"));
+        assert!(lex.code.contains("&'static str"), "lifetimes survive blanking");
+        let lex2 = Lexed::new("let c = 'x'; let e = '\\n';\n");
+        assert!(!lex2.code.contains("'x'"), "char literals are blanked");
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings() {
+        let lex = Lexed::new("let s = r#\"a \"quoted\" std::sync::Mutex\"#;\nlet t = 1;\n");
+        assert!(!lex.code.contains("Mutex"));
+        assert!(lex.code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let lex = Lexed::new(src);
+        assert!(!lex.is_test[0]);
+        assert!(lex.is_test[1] && lex.is_test[2] && lex.is_test[3] && lex.is_test[4]);
+        assert!(!lex.is_test[5]);
+    }
+
+    #[test]
+    fn sim_discipline_flags_paths_and_use_groups() {
+        let src = "use std::sync::{Arc, Mutex as M, Condvar};\nfn f() { std::thread::spawn(|| {}); }\n";
+        let r = one("rust/src/x.rs", src);
+        let lints: Vec<_> = r.findings.iter().map(|f| f.lint).collect();
+        assert_eq!(lints.iter().filter(|&&l| l == SIM_DISCIPLINE).count(), 3, "{:?}", r.findings);
+        assert!(r.findings.iter().any(|f| f.msg.contains("Mutex")));
+        assert!(r.findings.iter().any(|f| f.msg.contains("Condvar")));
+        assert!(r.findings.iter().any(|f| f.msg.contains("spawn")));
+        assert!(!r.findings.iter().any(|f| f.msg.contains("Arc")), "Arc is allowed");
+    }
+
+    #[test]
+    fn allow_suppresses_and_is_reported() {
+        let src = "// ari-lint: allow(sim-discipline): fixture reason.\nuse std::sync::Mutex;\n";
+        let r = one("rust/src/x.rs", src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressions.len(), 1);
+        assert_eq!(r.suppressions[0].justification, "fixture reason.");
+    }
+
+    #[test]
+    fn allow_without_justification_is_a_finding() {
+        let src = "// ari-lint: allow(sim-discipline)\nuse std::sync::Mutex;\n";
+        let r = one("rust/src/x.rs", src);
+        assert!(r.findings.iter().any(|f| f.lint == ALLOW_SYNTAX), "{:?}", r.findings);
+        assert!(r.findings.iter().any(|f| f.lint == SIM_DISCIPLINE), "a malformed allow must not suppress");
+    }
+
+    #[test]
+    fn manifest_parses_and_rejects_garbage() {
+        let m = parse_manifest("# c\nrust/src/a.rs::f\n\nrust/src/b.rs::g\n").unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[1].func, "g");
+        assert!(parse_manifest("no-separator\n").is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! CLI driver for `ari-lint`: walk `rust/src` + `rust/tests`, lint,
+//! print `file:line: lint: message` findings plus the suppression
+//! summary, and exit non-zero when anything fires.  `make lint` runs
+//! this; see docs/LINTS.md.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use ari_lint::{parse_manifest, run, Input};
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(r) => root = PathBuf::from(r),
+                None => {
+                    eprintln!("ari-lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: ari-lint [--root <repo-root>]");
+                println!("Lints rust/src and rust/tests against the serving-core contracts (docs/LINTS.md).");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("ari-lint: unknown argument {other:?} (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in ["rust/src", "rust/tests"] {
+        let abs = root.join(dir);
+        if !abs.is_dir() {
+            eprintln!("ari-lint: {} not found — is --root pointing at the repo root?", abs.display());
+            return ExitCode::from(2);
+        }
+        collect_rs(&abs, &mut files);
+    }
+    files.sort();
+
+    let mut input = Input::default();
+    for path in &files {
+        match std::fs::read_to_string(path) {
+            Ok(src) => input.files.push((rel(path, &root), src)),
+            Err(e) => {
+                eprintln!("ari-lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let md_path = root.join("docs/ROBUSTNESS.md");
+    if let Ok(md) = std::fs::read_to_string(&md_path) {
+        input.robustness_md = Some((rel(&md_path, &root), md));
+    }
+    input.manifest = match parse_manifest(include_str!("../hotpath.txt")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("ari-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let report = run(&input);
+    for f in &report.findings {
+        println!("{}:{}: {}: {}", f.file, f.line, f.lint, f.msg);
+    }
+    if !report.suppressions.is_empty() {
+        println!("suppressions ({}):", report.suppressions.len());
+        for s in &report.suppressions {
+            println!("  {}:{}: allow({}): {}", s.file, s.line, s.lint, s.justification);
+        }
+    }
+    println!(
+        "ari-lint: {} finding(s), {} suppression(s), {} file(s) scanned",
+        report.findings.len(),
+        report.suppressions.len(),
+        report.files
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            // Skip the vendored crates: they are third-party code.
+            if path.file_name().is_some_and(|n| n == "vendor") {
+                continue;
+            }
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn rel(path: &Path, root: &Path) -> String {
+    path.strip_prefix(root).unwrap_or(path).to_string_lossy().replace('\\', "/")
+}

@@ -1,0 +1,216 @@
+//! ari-lint self-tests, in the spirit of PR 6's self-checked invariant
+//! machinery: the fixture corpus proves every lint both fires and is
+//! suppressible via a justified allow; the mutation tests prove the
+//! linter guards the *real* tree (deleting a SAFETY comment or
+//! re-introducing a raw `Mutex` produces findings, i.e. fails `make
+//! lint`); the staleness test pins `hotpath.txt` to actual function
+//! definitions so renames cannot silently drop hot-path coverage.
+
+use ari_lint::{
+    parse_manifest, run, Input, ManifestEntry, Report, CLOCK_DISCIPLINE, FAULT_REGISTRY, NO_ALLOC_HOT_PATH,
+    POISON_TOLERANCE, SIM_DISCIPLINE, UNSAFE_AUDIT,
+};
+
+/// Repo root, resolved from this crate's manifest dir.
+const ROOT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../../..");
+
+fn read_repo(rel: &str) -> String {
+    let path = format!("{ROOT}/{rel}");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+fn lint_one(path: &str, src: &str) -> Report {
+    let files = vec![(path.to_string(), src.to_string())];
+    run(&Input { files, robustness_md: None, manifest: Vec::new() })
+}
+
+fn count(r: &Report, lint: &str) -> usize {
+    r.findings.iter().filter(|f| f.lint == lint).count()
+}
+
+fn entry(file: &str, func: &str) -> ManifestEntry {
+    ManifestEntry { file: file.to_string(), func: func.to_string() }
+}
+
+/// Lint a fault-registry fixture tree: a fault.rs, an arming test file,
+/// and a ROBUSTNESS.md, at their real repo-relative paths.
+fn lint_fault_tree(fault: &str, arm: &str, md: &str) -> Report {
+    let input = Input {
+        files: vec![
+            ("rust/src/util/fault.rs".to_string(), fault.to_string()),
+            ("rust/tests/fault_arm.rs".to_string(), arm.to_string()),
+        ],
+        robustness_md: Some(("docs/ROBUSTNESS.md".to_string(), md.to_string())),
+        manifest: Vec::new(),
+    };
+    run(&input)
+}
+
+// ------------------------------------------------------------------
+// Fixture corpus: one firing and one allowed snippet per lint.
+// ------------------------------------------------------------------
+
+#[test]
+fn sim_discipline_fixture_fires() {
+    let r = lint_one("rust/src/util/worker.rs", include_str!("../fixtures/sim-discipline/firing.rs"));
+    assert_eq!(count(&r, SIM_DISCIPLINE), 4, "{:?}", r.findings);
+    assert_eq!(r.findings.len(), 4, "{:?}", r.findings);
+    assert!(r.suppressions.is_empty());
+}
+
+#[test]
+fn sim_discipline_fixture_allowed() {
+    let r = lint_one("rust/src/util/worker.rs", include_str!("../fixtures/sim-discipline/allowed.rs"));
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressions.len(), 2, "{:?}", r.suppressions);
+    assert!(r.suppressions.iter().all(|s| s.lint == SIM_DISCIPLINE && !s.justification.is_empty()));
+}
+
+#[test]
+fn clock_discipline_fixture_fires() {
+    let r = lint_one("rust/src/server/clockfix.rs", include_str!("../fixtures/clock-discipline/firing.rs"));
+    assert_eq!(count(&r, CLOCK_DISCIPLINE), 2, "{:?}", r.findings);
+    assert_eq!(r.findings.len(), 2, "{:?}", r.findings);
+}
+
+#[test]
+fn clock_discipline_fixture_allowed() {
+    let r = lint_one("rust/src/server/clockfix.rs", include_str!("../fixtures/clock-discipline/allowed.rs"));
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressions.len(), 1, "{:?}", r.suppressions);
+}
+
+#[test]
+fn clock_discipline_ignores_files_outside_the_serving_core() {
+    // The same raw clock reads are fine in, say, util or benches.
+    let r = lint_one("rust/src/util/clockfix.rs", include_str!("../fixtures/clock-discipline/firing.rs"));
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn poison_tolerance_fixture_fires() {
+    let r = lint_one("rust/src/util/counter.rs", include_str!("../fixtures/poison-tolerance/firing.rs"));
+    assert_eq!(count(&r, POISON_TOLERANCE), 2, "{:?}", r.findings);
+    assert_eq!(r.findings.len(), 2, "{:?}", r.findings);
+}
+
+#[test]
+fn poison_tolerance_fixture_allowed() {
+    let r = lint_one("rust/src/util/counter.rs", include_str!("../fixtures/poison-tolerance/allowed.rs"));
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressions.len(), 1, "{:?}", r.suppressions);
+}
+
+#[test]
+fn no_alloc_fixture_fires() {
+    let src = include_str!("../fixtures/no-alloc-hot-path/firing.rs");
+    let input = Input {
+        files: vec![("rust/src/coordinator/hot.rs".to_string(), src.to_string())],
+        robustness_md: None,
+        manifest: vec![entry("rust/src/coordinator/hot.rs", "hot_fn")],
+    };
+    let r = run(&input);
+    // `hot_fn` allocates twice (Vec::new, Box::new); the unlisted
+    // `cold_fn` allocates too and must NOT be flagged.
+    assert_eq!(count(&r, NO_ALLOC_HOT_PATH), 2, "{:?}", r.findings);
+    assert_eq!(r.findings.len(), 2, "{:?}", r.findings);
+}
+
+#[test]
+fn no_alloc_fixture_allowed() {
+    let src = include_str!("../fixtures/no-alloc-hot-path/allowed.rs");
+    let input = Input {
+        files: vec![("rust/src/coordinator/hot.rs".to_string(), src.to_string())],
+        robustness_md: None,
+        manifest: vec![
+            entry("rust/src/coordinator/hot.rs", "hot_fn"),
+            entry("rust/src/coordinator/hot.rs", "hot_fn_logged"),
+        ],
+    };
+    let r = run(&input);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressions.len(), 1, "{:?}", r.suppressions);
+}
+
+#[test]
+fn unsafe_audit_fixture_fires() {
+    let r = lint_one("rust/src/tensor/fixture.rs", include_str!("../fixtures/unsafe-audit/firing.rs"));
+    assert_eq!(count(&r, UNSAFE_AUDIT), 2, "{:?}", r.findings);
+    assert_eq!(r.findings.len(), 2, "{:?}", r.findings);
+}
+
+#[test]
+fn unsafe_audit_fixture_allowed() {
+    let r = lint_one("rust/src/tensor/fixture.rs", include_str!("../fixtures/unsafe-audit/allowed.rs"));
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn fault_registry_fixture_fires() {
+    let fault = include_str!("../fixtures/fault-registry/firing/fault.rs");
+    let arm = include_str!("../fixtures/fault-registry/firing/arm_test.rs");
+    let md = include_str!("../fixtures/fault-registry/firing/ROBUSTNESS.md");
+    let r = lint_fault_tree(fault, arm, md);
+    // Drifted three ways: `worker-death` is undocumented AND unarmed,
+    // and the doc table lists a phantom `exec-haunt`.
+    assert_eq!(count(&r, FAULT_REGISTRY), 3, "{:?}", r.findings);
+    assert_eq!(r.findings.iter().filter(|f| f.msg.contains("worker-death")).count(), 2, "{:?}", r.findings);
+    assert_eq!(r.findings.iter().filter(|f| f.msg.contains("exec-haunt")).count(), 1, "{:?}", r.findings);
+}
+
+#[test]
+fn fault_registry_fixture_allowed() {
+    let fault = include_str!("../fixtures/fault-registry/allowed/fault.rs");
+    let arm = include_str!("../fixtures/fault-registry/allowed/arm_test.rs");
+    let md = include_str!("../fixtures/fault-registry/allowed/ROBUSTNESS.md");
+    let r = lint_fault_tree(fault, arm, md);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+// ------------------------------------------------------------------
+// Mutation tests against the real tree: the contracts the issue names
+// must actually be guarded, not just demonstrable on fixtures.
+// ------------------------------------------------------------------
+
+#[test]
+fn mutation_deleting_safety_comments_fails_the_lint() {
+    let rel = "rust/src/tensor/mod.rs";
+    let src = read_repo(rel);
+    let base = count(&lint_one(rel, &src), UNSAFE_AUDIT);
+    let mutated = src.replace("SAFETY:", "NOTE:").replace("# Safety", "# Notes");
+    assert_ne!(src, mutated, "tensor/mod.rs has no SAFETY comments left to mutate");
+    let after = count(&lint_one(rel, &mutated), UNSAFE_AUDIT);
+    assert!(after > base, "deleting SAFETY comments must add unsafe-audit findings (got {base} -> {after})");
+    assert!(after > 0);
+}
+
+#[test]
+fn mutation_reintroducing_a_raw_mutex_fails_the_lint() {
+    let rel = "rust/src/util/queue.rs";
+    let src = read_repo(rel);
+    let base = count(&lint_one(rel, &src), SIM_DISCIPLINE);
+    let mutated = format!("use std::sync::Mutex as Sneaky;\n{src}");
+    let after = count(&lint_one(rel, &mutated), SIM_DISCIPLINE);
+    assert_eq!(after, base + 1, "a re-introduced raw Mutex must add exactly one sim-discipline finding");
+}
+
+// ------------------------------------------------------------------
+// Manifest staleness: every hotpath.txt entry must resolve to a real
+// function definition in the current tree.
+// ------------------------------------------------------------------
+
+#[test]
+fn hotpath_manifest_resolves_against_the_real_tree() {
+    let manifest = parse_manifest(include_str!("../hotpath.txt")).expect("hotpath.txt parses");
+    assert!(!manifest.is_empty(), "hotpath.txt lists no functions");
+    let mut input = Input::default();
+    for e in &manifest {
+        if !input.files.iter().any(|(p, _)| p == &e.file) {
+            input.files.push((e.file.clone(), read_repo(&e.file)));
+        }
+    }
+    input.manifest = manifest;
+    let r = run(&input);
+    let stale: Vec<_> = r.findings.iter().filter(|f| f.msg.contains("manifest names")).collect();
+    assert!(stale.is_empty(), "stale hotpath.txt entries: {stale:?}");
+}
