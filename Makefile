@@ -75,26 +75,58 @@ bench-serve:
 	ARI_BENCH_SMOKE=1 ARI_BENCH_JSON=$(abspath BENCH_serve.json) $(CARGO) bench --bench bench_serve
 	@echo "wrote BENCH_serve.json"
 
-# Short deferred-policy serving session on the synthetic fixtures: a
-# 3-level FP ladder under open-loop load, exercising the shutdown drain
-# and per-stage escalation-flush paths end to end (the paths the PR 3
-# batcher/SC-key fixes cover).
+# Short deferred-policy serving session on the synthetic fixtures, in
+# two legs.  Leg 1: the in-process generator — a 3-level FP ladder
+# under open-loop load, exercising the shutdown drain and per-stage
+# escalation-flush paths end to end (the paths the PR 3 batcher/SC-key
+# fixes cover).  Leg 2: the same session over loopback TCP — `ari serve
+# --listen` in the background driven by the real `ari-client` load
+# generator (length-prefixed wire protocol, docs/PROTOCOL.md),
+# exercising accept/decode/admission, write backpressure and the
+# network drain path.  If the client fails the server is killed so the
+# target cannot hang; otherwise the server's exit status is the
+# verdict (its in-process conservation ledger).
 serve-smoke:
 	$(CARGO) run --release --bin ari -- serve --deferred --backend native \
 		"levels=[8,12,16]" server.requests=512 server.batch_size=32 server.arrival_rate=6000
+	$(CARGO) build --release --bin ari --bin ari-client
+	$(CARGO) run --release --bin ari -- serve --deferred --backend native \
+		"levels=[8,12,16]" dataset=fashion_syn server.requests=512 server.batch_size=32 \
+		--listen 127.0.0.1:7171 & srv=$$!; \
+	if $(CARGO) run --release --bin ari-client -- --connect 127.0.0.1:7171 \
+		--dataset fashion_syn --requests 512 --seed 42 --reconnects 64; then \
+		wait $$srv; \
+	else \
+		kill $$srv 2>/dev/null; wait $$srv; exit 1; \
+	fi
 
 # The serve-smoke session under a seeded random fault schedule
 # (docs/ROBUSTNESS.md): ARI_FAULTS defaults to seed 1 locally — a bare
 # seed arms util::fault's canonical chaos spec (injected backend
-# errors/panics, latency spikes, queue stalls, worker death); the CI
-# chaos job seeds it from the run id instead.  The session must survive
-# via retries, pool supervision and graceful degradation
-# (server.overload_queue) with every request completing exactly once —
-# enforced in-process — and the armed spec is echoed for exact replay.
+# errors/panics, latency spikes, queue stalls, worker death, plus the
+# five wire faults: conn-drop, frame-trunc, frame-corrupt, write-split,
+# accept-stall); the CI chaos job seeds it from the run id instead.
+# Leg 1 (in-process) must survive via retries, pool supervision and
+# graceful degradation (server.overload_queue) with every request
+# completing exactly once — enforced in-process — and the armed spec is
+# echoed for exact replay.  Leg 2 runs the same schedule over loopback
+# TCP: the client reconnects through dropped connections and truncated
+# streams, and the server's wire conservation ledger
+# (responses + dropped = admitted + shed) is enforced in-process.
 chaos-smoke:
 	ARI_FAULTS=$${ARI_FAULTS:-1} $(CARGO) run --release --bin ari -- serve --deferred --backend native \
 		"levels=[8,12,16]" server.requests=512 server.batch_size=32 server.arrival_rate=6000 \
 		server.overload_queue=64
+	$(CARGO) build --release --bin ari --bin ari-client
+	ARI_FAULTS=$${ARI_FAULTS:-1} $(CARGO) run --release --bin ari -- serve --deferred --backend native \
+		"levels=[8,12,16]" dataset=fashion_syn server.requests=512 server.batch_size=32 \
+		server.overload_queue=64 --listen 127.0.0.1:7272 & srv=$$!; \
+	if $(CARGO) run --release --bin ari-client -- --connect 127.0.0.1:7272 \
+		--dataset fashion_syn --requests 512 --seed 42 --reconnects 64; then \
+		wait $$srv; \
+	else \
+		kill $$srv 2>/dev/null; wait $$srv; exit 1; \
+	fi
 
 # Train the MLPs and AOT-lower every resolution variant to HLO text
 # (L1/L2 python layer; needs jax).  Output: ./artifacts/

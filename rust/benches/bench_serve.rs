@@ -19,6 +19,8 @@
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{EscalationPolicy, Ladder, LadderSpec};
 use ari::runtime::{Backend, NativeBackend};
+use ari::server::net::client::{run_client, ClientConfig};
+use ari::server::net::run_net_serving;
 use ari::server::{run_serving_ladder, ServeOptions, ServeReport};
 use ari::util::benchkit::{section, smoke, BenchResult, JsonReport};
 use ari::util::fault;
@@ -137,6 +139,80 @@ fn main() {
         println!(
             "{:<40} {:>9.0} {:>10.1?} {:>10.1?} {:>10.1?} {:>11.1?}",
             name, r.throughput_rps, r.p50, r.p95, r.p99, r.queue_wait_mean
+        );
+    }
+
+    // Wire tier: the same pipeline behind the length-prefixed TCP
+    // front-end, driven by the real load generator over loopback.  The
+    // client's echoed send stamps measure true round-trip wire latency
+    // (both directions plus full server residency); the server entry
+    // splits pre-dispatch wait into ingress (net) and batcher (queue)
+    // components.
+    section("loopback TCP serving: round-trip wire latency over 127.0.0.1 (closed loop x 8)");
+    println!("{:<40} {:>9} {:>10} {:>10} {:>10} {:>11}", "case", "req/s", "p50", "p95", "p99", "net wait");
+    {
+        let mut engine = NativeBackend::synthetic();
+        let data = engine.eval_data("fashion_syn").unwrap();
+        let mut cfg = AriConfig::default();
+        cfg.dataset = "fashion_syn".into();
+        cfg.mode = Mode::Fp;
+        cfg.batch_size = 32;
+        cfg.requests = req(768);
+        cfg.batch_timeout_us = 500;
+        cfg.net_linger_us = 100_000;
+        let spec = LadderSpec {
+            dataset: cfg.dataset.clone(),
+            mode: Mode::Fp,
+            levels: vec![8, 16],
+            batch: cfg.batch_size,
+            threshold: ThresholdPolicy::MMax,
+            seed: cfg.seed as u32,
+        };
+        let ladder = Ladder::calibrate(&mut engine, spec, &data, data.n / 2).unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut ccfg = ClientConfig::default();
+        ccfg.addr = listener.local_addr().unwrap().to_string();
+        ccfg.requests = cfg.requests;
+        ccfg.seed = cfg.seed;
+        let cdata = data.clone();
+        // ari-lint: allow(sim-discipline): the bench client models the outside world
+        // on a real thread over a real socket — kernel TCP cannot run under the sim
+        // scheduler.
+        let client = std::thread::spawn(move || run_client(&ccfg, &cdata));
+        let r = run_net_serving(&mut engine, &ladder, &cfg, data.input_dim, ServeOptions::default(), listener)
+            .unwrap();
+        let c = client.join().expect("bench client panicked").unwrap();
+        let name = "2L imm tcp closed-loop";
+        json.add_extra(
+            &BenchResult { name: name.to_string(), mean_ns: c.wall.as_nanos() as f64, std_ns: 0.0, iters: 1 },
+            Some(c.received),
+            &[
+                ("sent", c.sent as f64),
+                ("lost", c.lost as f64),
+                ("reconnects", c.reconnects as f64),
+                ("shed", r.shed as f64),
+            ],
+        );
+        for (suffix, d) in [
+            ("wire p50", c.p50),
+            ("wire p95", c.p95),
+            ("wire p99", c.p99),
+            ("net_wait", r.net_wait_mean),
+            ("queue_wait", r.queue_wait_mean),
+        ] {
+            json.add(
+                &BenchResult {
+                    name: format!("{name} {suffix}"),
+                    mean_ns: d.as_nanos() as f64,
+                    std_ns: 0.0,
+                    iters: 1,
+                },
+                None,
+            );
+        }
+        println!(
+            "{:<40} {:>9.0} {:>10.1?} {:>10.1?} {:>10.1?} {:>11.1?}",
+            name, r.throughput_rps, c.p50, c.p95, c.p99, r.net_wait_mean
         );
     }
 

@@ -1,0 +1,139 @@
+//! `ari-client` — load generator for the ARI TCP serving tier.
+//!
+//! ```text
+//! ari-client --connect 127.0.0.1:7070 [--mode open|partial|closed] [--rate R]
+//!            [--requests N] [--seed S] [--concurrency K] [--outstanding M]
+//!            [--dataset NAME] [--timeout-ms T] [--reconnects R] [--json NAME]
+//! ```
+//!
+//! Drives a `ari serve --listen ADDR` server over the length-prefixed
+//! wire protocol (`docs/PROTOCOL.md`) in one of three load shapes
+//! (open, partial-open, closed loop), reconnecting with exponential
+//! backoff — which also absorbs the server's startup race in the smoke
+//! targets.  Rows come from the same dataset and RNG stream as the
+//! server's in-process generator, so a fixed seed is row-for-row
+//! comparable with an in-process session.
+//!
+//! Prints the client report (sent/received/lost, outcome mix, wire
+//! p50/p95/p99); with `ARI_BENCH_JSON` set, also records the wire
+//! latency quantiles as `ari-bench v1` entries (`make bench-serve`
+//! routes them into `BENCH_serve.json`).
+
+use std::time::Duration;
+
+use ari::runtime::{Backend, NativeBackend};
+use ari::server::net::client::{run_client, ClientConfig, LoadMode};
+use ari::util::benchkit::{BenchResult, JsonReport};
+
+const HELP: &str = "ari-client — load generator for the ARI TCP serving tier\n\
+flags:\n  --connect ADDR      server address (required), e.g. 127.0.0.1:7070\n  \
+--mode M            open | partial | closed (default closed)\n  \
+--rate R            Poisson req/s for open/partial (0 = back-to-back)\n  \
+--requests N        requests to send (default 256)\n  \
+--seed S            workload seed (match the server's for parity)\n  \
+--concurrency K     closed-loop window (default 8)\n  \
+--outstanding M     partial-open outstanding cap (default 32)\n  \
+--dataset NAME      synthetic dataset to draw rows from (default fashion_syn)\n  \
+--timeout-ms T      idle timeout before outstanding requests count lost (default 5000)\n  \
+--reconnects R      max (re)connect attempts (default 8)\n  \
+--json NAME         ARI_BENCH_JSON entry prefix (default ari-client)\n\
+see docs/PROTOCOL.md for the wire format.";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_flag<'a>(it: &mut std::iter::Peekable<std::slice::Iter<'a, String>>, flag: &str) -> ari::Result<&'a str> {
+    it.next().map(|s| s.as_str()).ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+}
+
+fn run() -> ari::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = ClientConfig::default();
+    let mut addr: Option<String> = None;
+    let mut mode_name = String::from("closed");
+    let mut concurrency = 8usize;
+    let mut outstanding = 32usize;
+    let mut dataset = String::from("fashion_syn");
+    let mut json_name = String::from("ari-client");
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--connect" => addr = Some(parse_flag(&mut it, "--connect")?.to_string()),
+            "--mode" => mode_name = parse_flag(&mut it, "--mode")?.to_string(),
+            "--rate" => cfg.rate = parse_flag(&mut it, "--rate")?.parse()?,
+            "--requests" => cfg.requests = parse_flag(&mut it, "--requests")?.parse()?,
+            "--seed" => cfg.seed = parse_flag(&mut it, "--seed")?.parse()?,
+            "--concurrency" => concurrency = parse_flag(&mut it, "--concurrency")?.parse()?,
+            "--outstanding" => outstanding = parse_flag(&mut it, "--outstanding")?.parse()?,
+            "--dataset" => dataset = parse_flag(&mut it, "--dataset")?.to_string(),
+            "--timeout-ms" => cfg.timeout = Duration::from_millis(parse_flag(&mut it, "--timeout-ms")?.parse()?),
+            "--reconnects" => cfg.max_reconnects = parse_flag(&mut it, "--reconnects")?.parse()?,
+            "--json" => json_name = parse_flag(&mut it, "--json")?.to_string(),
+            "--help" | "-h" => {
+                println!("{HELP}");
+                return Ok(());
+            }
+            other => anyhow::bail!("unknown flag {other:?}\n{HELP}"),
+        }
+    }
+    cfg.addr = addr.ok_or_else(|| anyhow::anyhow!("--connect ADDR is required\n{HELP}"))?;
+    cfg.mode = match mode_name.as_str() {
+        "open" => LoadMode::Open,
+        "partial" => LoadMode::PartialOpen { max_outstanding: outstanding },
+        "closed" => LoadMode::Closed { concurrency },
+        other => anyhow::bail!("unknown --mode {other:?} (open | partial | closed)"),
+    };
+
+    // Rows come from the same synthetic fixture suite the native
+    // backend serves, so client and server agree on dimensions and
+    // content without sharing artifacts over the wire.
+    let engine = NativeBackend::synthetic();
+    let data = engine.eval_data(&dataset)?;
+    println!(
+        "ari-client -> {} ({} x {} req, mode {}, rate {}, seed {})",
+        cfg.addr, dataset, cfg.requests, mode_name, cfg.rate, cfg.seed
+    );
+    let report = run_client(&cfg, &data)?;
+    println!("{}", report.summary());
+
+    let mut json = JsonReport::new(&json_name);
+    json.add_extra(
+        &BenchResult {
+            name: format!("{json_name} wall"),
+            mean_ns: report.wall.as_nanos() as f64,
+            std_ns: 0.0,
+            iters: 1,
+        },
+        Some(report.received),
+        &[
+            ("sent", report.sent as f64),
+            ("lost", report.lost as f64),
+            ("wire_errors", report.wire_errors as f64),
+            ("reconnects", report.reconnects as f64),
+        ],
+    );
+    for (suffix, d) in [
+        ("wire p50", report.p50),
+        ("wire p95", report.p95),
+        ("wire p99", report.p99),
+        ("wire mean", report.mean_latency),
+    ] {
+        json.add(
+            &BenchResult {
+                name: format!("{json_name} {suffix}"),
+                mean_ns: d.as_nanos() as f64,
+                std_ns: 0.0,
+                iters: 1,
+            },
+            None,
+        );
+    }
+    if let Some(p) = json.write_if_requested() {
+        println!("wrote {p:?}");
+    }
+    Ok(())
+}

@@ -149,6 +149,27 @@ pub struct AriConfig {
     /// many µs fails the session diagnostically instead of hanging.
     /// 0 disables the watchdog.
     pub watchdog_stall_us: u64,
+    /// TCP listen address for the network serving tier (`[net] listen`,
+    /// e.g. `"127.0.0.1:7070"`).  Empty (the default) disables the
+    /// front-end entirely: serving runs the in-process generator path,
+    /// bit-identical to a build without the net module.
+    pub listen: String,
+    /// Accepted-connection cap; excess accepts are refused immediately.
+    pub net_max_conns: usize,
+    /// Slow-loris read deadline in µs: a connection dangling a partial
+    /// frame longer than this is closed with a typed `Stalled` error.
+    /// 0 disables.
+    pub net_read_deadline_us: u64,
+    /// Per-connection admitted-but-unanswered request cap; excess
+    /// requests are shed with typed `Rejected` responses.
+    pub net_max_in_flight: usize,
+    /// Per-connection encoded-but-unflushed response byte cap; past it
+    /// new requests are shed until the socket drains.
+    pub net_write_buf_cap: usize,
+    /// Grace period in µs: a peer accepting no bytes for this long is
+    /// dropped, and an idle listener with no connections left begins
+    /// shutdown after it.
+    pub net_linger_us: u64,
 }
 
 impl Default for AriConfig {
@@ -173,6 +194,12 @@ impl Default for AriConfig {
             overload_queue: 0,
             overload_p95_us: 0,
             watchdog_stall_us: 3_000_000,
+            listen: String::new(),
+            net_max_conns: 64,
+            net_read_deadline_us: 2_000_000,
+            net_max_in_flight: 256,
+            net_write_buf_cap: 65_536,
+            net_linger_us: 1_000_000,
         }
     }
 }
@@ -304,6 +331,29 @@ impl AriConfig {
         if let Some(v) = doc.get_int("server", "watchdog_stall_us") {
             anyhow::ensure!(v >= 0, "server.watchdog_stall_us must be >= 0, got {v}");
             self.watchdog_stall_us = v as u64;
+        }
+        if let Some(v) = doc.get_str("net", "listen") {
+            self.listen = v.to_string();
+        }
+        if let Some(v) = doc.get_int("net", "max_conns") {
+            anyhow::ensure!(v > 0, "net.max_conns must be > 0, got {v}");
+            self.net_max_conns = v as usize;
+        }
+        if let Some(v) = doc.get_int("net", "read_deadline_us") {
+            anyhow::ensure!(v >= 0, "net.read_deadline_us must be >= 0, got {v}");
+            self.net_read_deadline_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("net", "max_in_flight") {
+            anyhow::ensure!(v > 0, "net.max_in_flight must be > 0, got {v}");
+            self.net_max_in_flight = v as usize;
+        }
+        if let Some(v) = doc.get_int("net", "write_buf_cap") {
+            anyhow::ensure!(v > 0, "net.write_buf_cap must be > 0, got {v}");
+            self.net_write_buf_cap = v as usize;
+        }
+        if let Some(v) = doc.get_int("net", "linger_us") {
+            anyhow::ensure!(v >= 0, "net.linger_us must be >= 0, got {v}");
+            self.net_linger_us = v as u64;
         }
         Ok(())
     }
@@ -504,6 +554,42 @@ arrival_rate = 1000.5
         let mut c = AriConfig::default();
         assert!(c.apply_overrides(&["server.retries=65".into()]).is_err(), "retry cap");
         assert!(c.apply_overrides(&["server.deadline_us=-1".into()]).is_err(), "negative deadline");
+    }
+
+    /// The `[net]` keys: listen defaults empty (front-end off, serving
+    /// bit-identical to the in-process path), supervision knobs parse
+    /// with range validation, and a rejected value leaves the config
+    /// untouched.
+    #[test]
+    fn net_keys_parse_and_validate() {
+        let c = AriConfig::default();
+        assert!(c.listen.is_empty(), "net front-end defaults off");
+        assert_eq!(c.net_max_conns, 64);
+        assert_eq!(c.net_read_deadline_us, 2_000_000);
+        assert_eq!(c.net_max_in_flight, 256);
+        assert_eq!(c.net_write_buf_cap, 65_536);
+        assert_eq!(c.net_linger_us, 1_000_000);
+        let mut c = AriConfig::default();
+        c.apply_overrides(&[
+            "net.listen=127.0.0.1:7070".into(),
+            "net.max_conns=8".into(),
+            "net.read_deadline_us=500000".into(),
+            "net.max_in_flight=32".into(),
+            "net.write_buf_cap=4096".into(),
+            "net.linger_us=250000".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.listen, "127.0.0.1:7070");
+        assert_eq!(c.net_max_conns, 8);
+        assert_eq!(c.net_read_deadline_us, 500_000);
+        assert_eq!(c.net_max_in_flight, 32);
+        assert_eq!(c.net_write_buf_cap, 4096);
+        assert_eq!(c.net_linger_us, 250_000);
+        let mut c = AriConfig::default();
+        assert!(c.apply_overrides(&["net.max_conns=0".into()]).is_err(), "zero conn cap");
+        assert!(c.apply_overrides(&["net.max_in_flight=0".into()]).is_err(), "zero in-flight cap");
+        assert!(c.apply_overrides(&["net.read_deadline_us=-1".into()]).is_err(), "negative deadline");
+        assert_eq!(c.net_max_conns, 64, "rejected override must not corrupt the config");
     }
 
     #[test]

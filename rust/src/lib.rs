@@ -38,7 +38,7 @@
 //! | [`margin`] | margin statistics + threshold calibration (Mmax / M99 / M95) |
 //! | [`runtime`] | the [`runtime::Backend`] trait, native + PJRT backends, fixtures |
 //! | [`coordinator`] | the ARI N-level ladder (+ 2-level cascade wrapper): batcher, per-stage escalation, energy accounting |
-//! | [`server`] | threaded request loop + workload generators |
+//! | [`server`] | threaded request loop + workload generators; TCP front-end ([`server::net`]) speaking the length-prefixed wire protocol (`docs/PROTOCOL.md`) |
 //! | [`metrics`] | counters + latency histograms |
 //! | [`experiments`] | regeneration drivers for every paper table & figure |
 

@@ -3,7 +3,7 @@
 //! ```text
 //! ari info       [--artifacts DIR] [--backend B]
 //! ari calibrate  [--artifacts DIR] [--backend B] [overrides…]   per-stage threshold table
-//! ari serve      [--artifacts DIR] [--backend B] [--config FILE] [--deferred] [overrides…]
+//! ari serve      [--artifacts DIR] [--backend B] [--config FILE] [--deferred] [--listen ADDR] [overrides…]
 //! ari sweep      [--artifacts DIR] [--backend B] [--ladder] [overrides…]   ladder tradeoff table
 //! ari experiment <id|all> [--artifacts DIR] [--backend B] [--out DIR]
 //! ari bench-exec [--artifacts DIR] [--backend B] [overrides…]   raw execute timing
@@ -49,6 +49,7 @@ struct Cli {
     deferred: bool,
     ladder: bool,
     faults: Option<String>,
+    listen: Option<String>,
     positional: Vec<String>,
     overrides: Vec<String>,
 }
@@ -62,6 +63,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
         deferred: false,
         ladder: false,
         faults: None,
+        listen: None,
         positional: Vec::new(),
         overrides: Vec::new(),
     };
@@ -75,6 +77,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
             "--deferred" => cli.deferred = true,
             "--ladder" => cli.ladder = true,
             "--faults" => cli.faults = Some(next_val(&mut it, "--faults")?.to_string()),
+            "--listen" => cli.listen = Some(next_val(&mut it, "--listen")?.to_string()),
             "--help" | "-h" => {
                 println!("{}", HELP);
                 std::process::exit(0);
@@ -94,8 +97,10 @@ const HELP: &str = "ari — Adaptive Resolution Inference\n\
 commands:\n  info | calibrate | serve | sweep | experiment <id|all> | bench-exec | fixture\n\
 flags: --artifacts DIR  --backend auto|native|pjrt  --config FILE  --out DIR  --deferred  --ladder\n  \
 --faults SPEC  arm fault injection for serve (point[:prob[:count]],…[@seed] or a bare chaos seed;\n  \
-               also read from ARI_FAULTS; see docs/ROBUSTNESS.md)\n\
-overrides: dataset=… mode=fp|sc reduced_level=… levels=[8,12,16] threshold=mmax|m99|m95|<f> server.batch_size=… server.requests=… server.arrival_rate=…";
+               also read from ARI_FAULTS; see docs/ROBUSTNESS.md)\n  \
+--listen ADDR  serve over TCP (length-prefixed wire protocol, see docs/PROTOCOL.md) instead of\n  \
+               the in-process generator; overrides net.listen (drive it with ari-client)\n\
+overrides: dataset=… mode=fp|sc reduced_level=… levels=[8,12,16] threshold=mmax|m99|m95|<f> server.batch_size=… server.requests=… server.arrival_rate=… net.listen=…";
 
 fn load_config(cli: &Cli) -> ari::Result<AriConfig> {
     let mut cfg = match &cli.config {
@@ -155,14 +160,13 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
             }
         }
         "serve" => {
-            let cfg = load_config(&cli)?;
+            let mut cfg = load_config(&cli)?;
+            if let Some(l) = &cli.listen {
+                // The CLI flag wins over `[net] listen` from the file.
+                cfg.listen = l.clone();
+            }
             let mut engine = open_backend(&cfg.artifacts, cli.backend)?;
             let (ladder, data, n_calib) = build_ladder(engine.as_mut(), &cfg)?;
-            // Baseline full-model predictions for parity reporting.
-            let kind = cfg.mode.kind();
-            let full_level = *ladder.spec.levels.last().unwrap();
-            let full_v = engine.manifest().variant(&cfg.dataset, kind, full_level, cfg.batch_size)?.clone();
-            let full_out = engine.run_dataset(&full_v, &data, cfg.seed as u32)?;
             let opts = ServeOptions {
                 escalation: if cli.deferred { EscalationPolicy::Deferred } else { EscalationPolicy::Immediate },
             };
@@ -175,21 +179,46 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
                 engine.name()
             );
             print!("{}", ladder.calibration_report());
-            // Arm fault injection last, so chaos hits the serving
-            // session rather than calibration or the baseline pass
-            // (neither has a retry path).  `--faults` wins over the
-            // `ARI_FAULTS` environment variable; the normalised spec
-            // is echoed so a failing run can be replayed exactly.
-            let armed_spec = match &cli.faults {
-                Some(v) => Some(ari::util::fault::arm_value(v)?),
-                None => ari::util::fault::arm_from_env()?,
-            };
-            if let Some(spec) = &armed_spec {
-                println!("faults armed: {spec}");
+            if cfg.listen.is_empty() {
+                // In-process serving: baseline full-model predictions
+                // for parity reporting.
+                let kind = cfg.mode.kind();
+                let full_level = *ladder.spec.levels.last().unwrap();
+                let full_v = engine.manifest().variant(&cfg.dataset, kind, full_level, cfg.batch_size)?.clone();
+                let full_out = engine.run_dataset(&full_v, &data, cfg.seed as u32)?;
+                // Arm fault injection last, so chaos hits the serving
+                // session rather than calibration or the baseline pass
+                // (neither has a retry path).  `--faults` wins over the
+                // `ARI_FAULTS` environment variable; the normalised spec
+                // is echoed so a failing run can be replayed exactly.
+                let armed_spec = match &cli.faults {
+                    Some(v) => Some(ari::util::fault::arm_value(v)?),
+                    None => ari::util::fault::arm_from_env()?,
+                };
+                if let Some(spec) = &armed_spec {
+                    println!("faults armed: {spec}");
+                }
+                let report = run_serving_ladder(engine.as_mut(), &ladder, &cfg, &data, Some(&full_out.pred), opts)?;
+                ari::util::fault::disarm_all();
+                println!("{}", report.summary());
+            } else {
+                // TCP serving tier: bind first so the client side of a
+                // smoke script can start polling, then arm faults so
+                // chaos hits the wire + serving session only.
+                let listener = std::net::TcpListener::bind(&cfg.listen)?;
+                println!("listening on {} (wire protocol: docs/PROTOCOL.md; drive with ari-client)", listener.local_addr()?);
+                let armed_spec = match &cli.faults {
+                    Some(v) => Some(ari::util::fault::arm_value(v)?),
+                    None => ari::util::fault::arm_from_env()?,
+                };
+                if let Some(spec) = &armed_spec {
+                    println!("faults armed: {spec}");
+                }
+                let report =
+                    ari::server::net::run_net_serving(engine.as_mut(), &ladder, &cfg, data.input_dim, opts, listener)?;
+                ari::util::fault::disarm_all();
+                println!("{}", report.summary());
             }
-            let report = run_serving_ladder(engine.as_mut(), &ladder, &cfg, &data, Some(&full_out.pred), opts)?;
-            ari::util::fault::disarm_all();
-            println!("{}", report.summary());
         }
         "sweep" => {
             let cfg = load_config(&cli)?;

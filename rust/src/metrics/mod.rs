@@ -95,8 +95,14 @@ pub struct MetricsRegistry {
     pub energy_nj: AtomicU64,
     /// End-to-end request latency.
     pub latency: LatencyHist,
-    /// Queue wait before the reduced pass.
+    /// Queue wait: batcher enqueue → dispatch (batch formation plus
+    /// staged-queue residency).
     pub queue_wait: LatencyHist,
+    /// Network/ingress wait: request submission (wire ingress for TCP
+    /// sessions, generator hand-off in-process) → batcher enqueue.
+    /// Separating this from [`Self::queue_wait`] is what lets a serving
+    /// report tell a slow wire from a congested batcher.
+    pub net_wait: LatencyHist,
     /// Requests served a reduced-stage answer under overload
     /// (escalation suppressed — [`crate::server::CompletionOutcome::Degraded`]).
     pub degraded: AtomicU64,

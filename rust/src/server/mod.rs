@@ -57,6 +57,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+pub mod net;
+
 use crate::config::AriConfig;
 use crate::coordinator::{
     Batcher, BatcherPolicy, Cascade, EscalationPolicy, Ladder, LadderBatch, LadderScratch, Pending,
@@ -122,6 +124,10 @@ pub struct Completion {
     pub pred: i32,
     /// Ladder stage that produced the prediction (0 = reduced model).
     pub stage: usize,
+    /// Margin (top-1 minus top-2 confidence) at the serving stage;
+    /// `0.0` when no inference ran (rejected / failed).  Carried so the
+    /// wire protocol can ship a confidence score with each response.
+    pub margin: f32,
     /// Whether any escalation stage ran for this request.
     pub escalated: bool,
     /// Submit-to-complete latency.
@@ -163,11 +169,20 @@ pub struct ServeReport {
     pub p99: Duration,
     /// Mean request latency.
     pub mean_latency: Duration,
-    /// Mean wait in the batching queue before the first-stage pass
-    /// (recorded under both escalation policies).
+    /// Mean wait in the batching queue before the first-stage pass:
+    /// batcher enqueue → dispatch (recorded under both escalation
+    /// policies).
     pub queue_wait_mean: Duration,
     /// Queue-wait samples recorded (one per dispatched request).
     pub queue_wait_samples: u64,
+    /// Mean ingress wait before the batcher saw the request:
+    /// submission → batcher enqueue.  Wire transit + decode + admission
+    /// for TCP sessions; generator hand-off in-process.  Together with
+    /// [`Self::queue_wait_mean`] this splits pre-dispatch latency into
+    /// "the network was slow" vs "the batcher was congested".
+    pub net_wait_mean: Duration,
+    /// Net-wait samples recorded (one per dispatched request).
+    pub net_wait_samples: u64,
     /// Batch slots dispatched without a request in them — first-stage
     /// batches **and** escalation-stage flushes (the latter were
     /// uncounted before this field existed).
@@ -574,13 +589,41 @@ impl Drop for CloseOnDrop<'_> {
     }
 }
 
+/// Where the dispatcher finds a request's input row.
+///
+/// In-process serving indexes the workload dataset by `Request::row`
+/// and re-gathers escalation rows from it at flush time.  Net serving
+/// has no dataset — rows arrive over the wire and live in the staging
+/// buffers only — so the dispatcher keeps its own per-stage escalation
+/// row copies (`esc_rows`) instead.
+enum RowSource<'a> {
+    /// `Request::row` indexes this dataset.
+    Dataset(&'a EvalData),
+    /// Rows arrive inline with each staged batch (`Request::row` is an
+    /// opaque ticket for the caller); escalations copy their row into
+    /// the dispatcher's `esc_rows`.
+    Inline {
+        /// Features per row.
+        dim: usize,
+    },
+}
+
+impl RowSource<'_> {
+    fn dim(&self) -> usize {
+        match self {
+            RowSource::Dataset(d) => d.input_dim,
+            RowSource::Inline { dim } => *dim,
+        }
+    }
+}
+
 /// The inference side of the serving loop: ladder dispatch, escalation
 /// queues, completion recording.  Owns every reusable buffer of the
 /// dispatch path (ladder scratch, recycled ladder result, escalation
 /// gather), so the steady state allocates nothing per batch.
 struct Dispatcher<'a> {
     ladder: &'a Ladder,
-    data: &'a EvalData,
+    rows: RowSource<'a>,
     metrics: &'a MetricsRegistry,
     escalation: EscalationPolicy,
     policy: RobustnessPolicy,
@@ -589,10 +632,14 @@ struct Dispatcher<'a> {
     /// overload signal together with the escalation queues.
     backlog_hint: usize,
     /// Deferred escalations: one queue of requests per non-first stage
-    /// (index 0 unused).  Only the request is queued — input rows are
-    /// re-gathered from the dataset at flush time, replacing the old
-    /// per-escalation row copy.
+    /// (index 0 unused).  With a [`RowSource::Dataset`] only the
+    /// request is queued — input rows are re-gathered from the dataset
+    /// at flush time, replacing the old per-escalation row copy.
     esc_queues: Vec<Vec<Request>>,
+    /// Escalation row copies, parallel to `esc_queues`, used only with
+    /// [`RowSource::Inline`] (queue `s` holds `esc_queues[s].len() *
+    /// dim` floats).  Amortised like every other dispatch buffer.
+    esc_rows: Vec<Vec<f32>>,
     completions: Vec<Completion>,
     /// Every dispatched batch — first-stage or escalation flush — draws
     /// a fresh id from this counter, so SC keys are never reused.
@@ -611,7 +658,7 @@ struct Dispatcher<'a> {
 impl<'a> Dispatcher<'a> {
     fn new(
         ladder: &'a Ladder,
-        data: &'a EvalData,
+        rows: RowSource<'a>,
         metrics: &'a MetricsRegistry,
         escalation: EscalationPolicy,
         policy: RobustnessPolicy,
@@ -619,12 +666,13 @@ impl<'a> Dispatcher<'a> {
     ) -> Self {
         Self {
             ladder,
-            data,
+            rows,
             metrics,
             escalation,
             policy,
             backlog_hint: 0,
             esc_queues: vec![Vec::new(); ladder.n_stages()],
+            esc_rows: vec![Vec::new(); ladder.n_stages()],
             completions: Vec::with_capacity(expected),
             chunk: 0,
             scratch: LadderScratch::new(),
@@ -677,6 +725,7 @@ impl<'a> Dispatcher<'a> {
                 row: p.payload.row,
                 pred: -1,
                 stage: 0,
+                margin: 0.0,
                 escalated: false,
                 latency: now.duration_since(p.payload.submitted),
                 outcome: CompletionOutcome::Failed,
@@ -696,7 +745,7 @@ impl<'a> Dispatcher<'a> {
         let mut live_x = std::mem::take(&mut self.live_x);
         live.clear();
         live_x.clear();
-        let dim = self.data.input_dim;
+        let dim = self.rows.dim();
         let now = stamp_now();
         for (i, p) in items.iter().enumerate() {
             if p.payload.deadline.is_some_and(|d| now >= d) {
@@ -707,6 +756,7 @@ impl<'a> Dispatcher<'a> {
                     row: p.payload.row,
                     pred: -1,
                     stage: 0,
+                    margin: 0.0,
                     escalated: false,
                     latency: now.duration_since(p.payload.submitted),
                     outcome: CompletionOutcome::Rejected,
@@ -733,6 +783,9 @@ impl<'a> Dispatcher<'a> {
         if n == 0 {
             return Ok(());
         }
+        // Dispatch-start stamp: closes each request's queue-wait
+        // interval (enqueue → dispatch) before service time begins.
+        let t_disp = stamp_now();
         self.chunk += 1;
         sim::probe("sc_key", self.chunk as u64, 0);
         sim::probe("dispatch", n as u64, self.ladder.stages[0].variant.batch as u64);
@@ -768,7 +821,8 @@ impl<'a> Dispatcher<'a> {
                 for (i, p) in items.iter().enumerate() {
                     let lat = now.duration_since(p.payload.submitted);
                     self.metrics.latency.record(lat);
-                    self.metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
+                    self.metrics.net_wait.record(p.enqueued.duration_since(p.payload.submitted));
+                    self.metrics.queue_wait.record(t_disp.duration_since(p.enqueued));
                     self.metrics.completed.fetch_add(1, Ordering::Relaxed);
                     if self.ladder_out.stage[i] > 0 {
                         self.metrics.escalated.fetch_add(1, Ordering::Relaxed);
@@ -778,6 +832,7 @@ impl<'a> Dispatcher<'a> {
                         row: p.payload.row,
                         pred: self.ladder_out.pred[i],
                         stage: self.ladder_out.stage[i],
+                        margin: self.ladder_out.margin[i],
                         escalated: self.ladder_out.stage[i] > 0,
                         latency: lat,
                         outcome: CompletionOutcome::Ok,
@@ -799,10 +854,11 @@ impl<'a> Dispatcher<'a> {
                 self.metrics.add_energy_uj(n as f64 * self.ladder.stages[0].energy_uj);
                 let now = stamp_now();
                 for (i, p) in items.iter().enumerate() {
-                    // Queue wait is recorded at dispatch under *both*
-                    // policies, so MetricsRegistry::report() stays
-                    // comparable across them.
-                    self.metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
+                    // Both waits are recorded at first dispatch under
+                    // *both* policies, so MetricsRegistry::report()
+                    // stays comparable across them.
+                    self.metrics.net_wait.record(p.enqueued.duration_since(p.payload.submitted));
+                    self.metrics.queue_wait.record(t_disp.duration_since(p.enqueued));
                     if crate::margin::accepts(red.margin[i], self.ladder.stages[0].threshold) {
                         let lat = now.duration_since(p.payload.submitted);
                         self.metrics.latency.record(lat);
@@ -812,11 +868,15 @@ impl<'a> Dispatcher<'a> {
                             row: p.payload.row,
                             pred: red.pred[i],
                             stage: 0,
+                            margin: red.margin[i],
                             escalated: false,
                             latency: lat,
                             outcome: CompletionOutcome::Ok,
                         });
                     } else {
+                        if let RowSource::Inline { dim } = self.rows {
+                            self.esc_rows[1].extend_from_slice(&x[i * dim..(i + 1) * dim]);
+                        }
                         self.esc_queues[1].push(p.payload);
                     }
                 }
@@ -848,6 +908,7 @@ impl<'a> Dispatcher<'a> {
     ) -> crate::Result<()> {
         let n = items.len();
         sim::probe("degraded", n as u64, 0);
+        let t_disp = stamp_now();
         let policy = self.policy;
         let metrics = self.metrics;
         let ladder = self.ladder;
@@ -866,7 +927,8 @@ impl<'a> Dispatcher<'a> {
         self.metrics.add_energy_uj(n as f64 * self.ladder.stages[0].energy_uj);
         let now = stamp_now();
         for (i, p) in items.iter().enumerate() {
-            self.metrics.queue_wait.record(p.enqueued.duration_since(p.payload.submitted));
+            self.metrics.net_wait.record(p.enqueued.duration_since(p.payload.submitted));
+            self.metrics.queue_wait.record(t_disp.duration_since(p.enqueued));
             let lat = now.duration_since(p.payload.submitted);
             self.metrics.latency.record(lat);
             self.metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -881,6 +943,7 @@ impl<'a> Dispatcher<'a> {
                 row: p.payload.row,
                 pred: red.pred[i],
                 stage: 0,
+                margin: red.margin[i],
                 escalated: false,
                 latency: lat,
                 outcome,
@@ -906,8 +969,15 @@ impl<'a> Dispatcher<'a> {
         sim::probe("flush", stage as u64, take as u64);
         let mut gather = std::mem::take(&mut self.gather);
         gather.clear();
-        for i in 0..take {
-            gather.extend_from_slice(self.data.row(self.esc_queues[stage][i].row));
+        match self.rows {
+            RowSource::Dataset(data) => {
+                for i in 0..take {
+                    gather.extend_from_slice(data.row(self.esc_queues[stage][i].row));
+                }
+            }
+            // Inline rows were copied at escalation time; they sit at
+            // the queue's front in arrival order.
+            RowSource::Inline { dim } => gather.extend_from_slice(&self.esc_rows[stage][..take * dim]),
         }
         let policy = self.policy;
         let metrics = self.metrics;
@@ -930,6 +1000,9 @@ impl<'a> Dispatcher<'a> {
                     .collect();
                 self.fail_batch(&failed, &e);
                 self.esc_queues[stage].drain(..take);
+                if let RowSource::Inline { dim } = self.rows {
+                    self.esc_rows[stage].drain(..take * dim);
+                }
                 return Ok(());
             }
         };
@@ -962,15 +1035,24 @@ impl<'a> Dispatcher<'a> {
                     row: req.row,
                     pred: out.pred[i],
                     stage,
+                    margin: out.margin[i],
                     escalated: true,
                     latency: lat,
                     outcome: CompletionOutcome::Ok,
                 });
             } else {
+                if let RowSource::Inline { dim } = self.rows {
+                    // The flushed rows live in `gather` (disjoint field
+                    // from `esc_rows`, so the borrows don't collide).
+                    self.esc_rows[stage + 1].extend_from_slice(&self.gather[i * dim..(i + 1) * dim]);
+                }
                 self.esc_queues[stage + 1].push(req);
             }
         }
         self.esc_queues[stage].drain(..take);
+        if let RowSource::Inline { dim } = self.rows {
+            self.esc_rows[stage].drain(..take * dim);
+        }
         engine.recycle_outputs(out);
         Ok(())
     }
@@ -1058,7 +1140,7 @@ pub fn run_serving_ladder(
 
     let metrics = MetricsRegistry::new();
     let policy = BatcherPolicy::new(cfg.batch_size, Duration::from_micros(cfg.batch_timeout_us));
-    let mut disp = Dispatcher::new(ladder, data, &metrics, opts.escalation, robustness, n_requests);
+    let mut disp = Dispatcher::new(ladder, RowSource::Dataset(data), &metrics, opts.escalation, robustness, n_requests);
     // The fixed set of staging buffers that circulates through the
     // pipeline for the whole session.
     let staged: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
@@ -1216,6 +1298,8 @@ pub fn run_serving_ladder(
         mean_latency: metrics.latency.mean(),
         queue_wait_mean: metrics.queue_wait.mean(),
         queue_wait_samples: metrics.queue_wait.count(),
+        net_wait_mean: metrics.net_wait.mean(),
+        net_wait_samples: metrics.net_wait.count(),
         padded_slots: metrics.padded_slots.load(Ordering::Relaxed),
         degraded: metrics.degraded.load(Ordering::Relaxed),
         rejected: metrics.rejected.load(Ordering::Relaxed),
@@ -1247,7 +1331,7 @@ impl ServeReport {
         format!(
             "served {} requests in {:.2?} ({:.0} req/s)\n\
              accuracy {:.4}{}  escalation {:.2}%  stage mix: {stages}\n\
-             latency mean {:?} p50 {:?} p95 {:?} p99 {:?} (queue wait mean {:?})\n\
+             latency mean {:?} p50 {:?} p95 {:?} p99 {:?} (net wait mean {:?}, queue wait mean {:?})\n\
              robustness: degraded {} rejected {} failed {} retries {}\n\
              energy {:.1} µJ vs always-full {:.1} µJ -> savings {:.1}%",
             self.completions.len(),
@@ -1260,6 +1344,7 @@ impl ServeReport {
             self.p50,
             self.p95,
             self.p99,
+            self.net_wait_mean,
             self.queue_wait_mean,
             self.degraded,
             self.rejected,
@@ -1322,7 +1407,7 @@ pub mod model {
         policy: RobustnessPolicy,
     ) -> crate::Result<DeferredSession> {
         let metrics = MetricsRegistry::new();
-        let mut disp = Dispatcher::new(ladder, data, &metrics, EscalationPolicy::Deferred, policy, 64);
+        let mut disp = Dispatcher::new(ladder, RowSource::Dataset(data), &metrics, EscalationPolicy::Deferred, policy, 64);
         // ari-lint: allow(clock-discipline): model-check driver, not the serving loop —
         // the stamp only seeds synthetic request timestamps for the harness.
         let t0 = Instant::now();
@@ -1395,6 +1480,8 @@ mod tests {
             mean_latency: Duration::ZERO,
             queue_wait_mean: Duration::ZERO,
             queue_wait_samples: 0,
+            net_wait_mean: Duration::ZERO,
+            net_wait_samples: 0,
             padded_slots: 0,
             degraded: 2,
             rejected: 1,
@@ -1448,8 +1535,14 @@ mod tests {
         // never exceed sqrt(2): T=2 escalates everything.
         let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::Fixed(2.0));
         let metrics = MetricsRegistry::new();
-        let mut disp =
-            Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Deferred, RobustnessPolicy::default(), 8);
+        let mut disp = Dispatcher::new(
+            &ladder,
+            RowSource::Dataset(&data),
+            &metrics,
+            EscalationPolicy::Deferred,
+            RobustnessPolicy::default(),
+            8,
+        );
         let (items, x) = staged_items(&data, 5);
         disp.dispatch(&mut engine, &items, &x).unwrap();
         assert_eq!(disp.completions.len(), 0, "nothing accepted at FP8 under T=2");
@@ -1472,8 +1565,14 @@ mod tests {
         let mut engine = NativeBackend::synthetic();
         let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::MMax);
         let metrics = MetricsRegistry::new();
-        let mut disp =
-            Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Immediate, RobustnessPolicy::default(), 16);
+        let mut disp = Dispatcher::new(
+            &ladder,
+            RowSource::Dataset(&data),
+            &metrics,
+            EscalationPolicy::Immediate,
+            RobustnessPolicy::default(),
+            16,
+        );
         let (items, x) = staged_items(&data, 16);
         disp.dispatch(&mut engine, &items, &x).unwrap();
         // Dispatch used chunk id 1.
@@ -1543,7 +1642,7 @@ mod tests {
         let metrics = MetricsRegistry::new();
         let mut disp = Dispatcher::new(
             &ladder,
-            &data,
+            RowSource::Dataset(&data),
             &metrics,
             EscalationPolicy::Immediate,
             RobustnessPolicy::default(),
@@ -1598,7 +1697,7 @@ mod tests {
         let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::Fixed(2.0));
         let metrics = MetricsRegistry::new();
         let policy = RobustnessPolicy { overload_queue: 4, ..RobustnessPolicy::default() };
-        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Deferred, policy, 16);
+        let mut disp = Dispatcher::new(&ladder, RowSource::Dataset(&data), &metrics, EscalationPolicy::Deferred, policy, 16);
         disp.backlog_hint = 8; // over the threshold of 4
         let (items, x) = staged_items(&data, 5);
         disp.dispatch(&mut engine, &items, &x).unwrap();
@@ -1632,7 +1731,7 @@ mod tests {
         let mut flaky = crate::runtime::FlakyBackend::new(native).fail_on_call(0).panic_on_call(1);
         let metrics = MetricsRegistry::new();
         let policy = RobustnessPolicy { retries: 3, ..RobustnessPolicy::default() };
-        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Immediate, policy, 8);
+        let mut disp = Dispatcher::new(&ladder, RowSource::Dataset(&data), &metrics, EscalationPolicy::Immediate, policy, 8);
         let (items, x) = staged_items(&data, 8);
         disp.dispatch(&mut flaky, &items, &x).unwrap();
         assert_eq!(disp.completions.len(), 8);
@@ -1656,7 +1755,7 @@ mod tests {
         let mut flaky = crate::runtime::FlakyBackend::new(native).fail_on_call(0).fail_on_call(1);
         let metrics = MetricsRegistry::new();
         let policy = RobustnessPolicy { retries: 1, ..RobustnessPolicy::default() };
-        let mut disp = Dispatcher::new(&ladder, &data, &metrics, EscalationPolicy::Immediate, policy, 8);
+        let mut disp = Dispatcher::new(&ladder, RowSource::Dataset(&data), &metrics, EscalationPolicy::Immediate, policy, 8);
         let (items, x) = staged_items(&data, 4);
         disp.dispatch(&mut flaky, &items, &x).unwrap();
         assert_eq!(disp.completions.len(), 4, "the failed batch still accounts every request");

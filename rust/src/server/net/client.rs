@@ -1,0 +1,431 @@
+//! Load-generator client for the TCP serving tier.
+//!
+//! Drives a [`run_net_serving`](super::run_net_serving) server over the
+//! `docs/PROTOCOL.md` wire format in one of three load shapes:
+//!
+//! - **open loop** — requests fire on a Poisson schedule regardless of
+//!   responses (the honest tail-latency measurement);
+//! - **partial open loop** — the Poisson schedule, but capped at a
+//!   maximum number of outstanding requests (open-loop pressure without
+//!   unbounded client-side queueing);
+//! - **closed loop** — a fixed concurrency window; each response admits
+//!   the next request.
+//!
+//! The request schedule is drawn with the *same* RNG stream and draw
+//! order as the in-process workload generator
+//! (`Pcg64::new(seed, 99)`: optional exponential gap, then row index),
+//! so a TCP session against a fixed-seed server is row-for-row
+//! comparable with an in-process [`super::super::run_serving_ladder`]
+//! session — the loopback parity suite relies on this.
+//!
+//! Connections are supervised from this side too: a failed connect or a
+//! mid-session disconnect retries with exponential backoff (which also
+//! absorbs the server's startup race in the smoke targets), and
+//! requests outstanding on a dead connection are counted `lost`, never
+//! silently forgotten: `sent == received + lost` holds on every exit
+//! path.  Wire latency is measured from the client's own `send_us`
+//! stamp echoed back by the server, so it includes both wire directions
+//! and the full server residency.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::data::EvalData;
+use crate::metrics::LatencyHist;
+use crate::server::net::proto::{self, Frame, FrameBuf, ResponseFrame};
+use crate::util::Pcg64;
+
+/// Real-clock read for the client loop.  The client is the outside
+/// world: its stamps define the wire-latency measurement and are never
+/// part of the (sim-checked) serving protocol.
+fn client_now() -> Instant {
+    // ari-lint: allow(clock-discipline): the load generator models the outside
+    // world — its send stamps ARE the latency ground truth.
+    Instant::now()
+}
+
+/// How the client paces its requests.
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    /// Open loop: the Poisson schedule fires regardless of responses.
+    Open,
+    /// Open-loop schedule, but never more than this many outstanding.
+    PartialOpen {
+        /// Outstanding-request cap.
+        max_outstanding: usize,
+    },
+    /// Closed loop: a fixed concurrency window.
+    Closed {
+        /// Concurrency window (requests in flight).
+        concurrency: usize,
+    },
+}
+
+/// Client configuration.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Server address, e.g. `127.0.0.1:7070`.
+    pub addr: String,
+    /// Load shape.
+    pub mode: LoadMode,
+    /// Poisson arrival rate (req/s) for the open-loop schedules;
+    /// `0` sends back-to-back (matching the in-process closed loop).
+    pub rate: f64,
+    /// Requests to send.
+    pub requests: usize,
+    /// Workload seed — must match the server session's seed for
+    /// row-for-row parity with an in-process run.
+    pub seed: u64,
+    /// Declare outstanding requests lost after this long without a
+    /// single byte from the server.
+    pub timeout: Duration,
+    /// Connect / reconnect attempts before giving up.
+    pub max_reconnects: u32,
+    /// Base reconnect backoff (doubles per consecutive failure, capped
+    /// at 250 ms — below the server's linger, so a reconnect lands
+    /// before the server decides the client is gone).
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            addr: String::from("127.0.0.1:7070"),
+            mode: LoadMode::Closed { concurrency: 8 },
+            rate: 0.0,
+            requests: 256,
+            seed: 42,
+            timeout: Duration::from_secs(5),
+            max_reconnects: 8,
+            backoff: Duration::from_millis(10),
+        }
+    }
+}
+
+/// What one client session observed.
+#[derive(Debug)]
+pub struct ClientReport {
+    /// Requests actually written to a socket.
+    pub sent: u64,
+    /// Responses received.
+    pub received: u64,
+    /// Sent requests whose response never arrived (connection died or
+    /// timed out).  `sent == received + lost` always.
+    pub lost: u64,
+    /// Typed error frames and decode failures observed.
+    pub wire_errors: u64,
+    /// Successful reconnects after a drop (the initial connect is not
+    /// counted).
+    pub reconnects: u64,
+    /// Received responses by outcome tag (Ok, Degraded, Rejected,
+    /// Failed).
+    pub outcomes: [u64; 4],
+    /// Median round-trip latency (send stamp → response in hand).
+    pub p50: Duration,
+    /// 95th-percentile round-trip latency.
+    pub p95: Duration,
+    /// 99th-percentile round-trip latency.
+    pub p99: Duration,
+    /// Mean round-trip latency.
+    pub mean_latency: Duration,
+    /// Wall time of the whole client session.
+    pub wall: Duration,
+    /// Every response frame, arrival order (the parity suite matches
+    /// these against in-process completions by request id).
+    pub responses: Vec<ResponseFrame>,
+}
+
+impl ClientReport {
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "client: sent {} -> received {} (lost {}, wire errors {}, reconnects {})\n\
+             outcomes: ok {} degraded {} rejected {} failed {}\n\
+             wire latency mean {:?} p50 {:?} p95 {:?} p99 {:?}  wall {:.2?}",
+            self.sent,
+            self.received,
+            self.lost,
+            self.wire_errors,
+            self.reconnects,
+            self.outcomes[0],
+            self.outcomes[1],
+            self.outcomes[2],
+            self.outcomes[3],
+            self.mean_latency,
+            self.p50,
+            self.p95,
+            self.p99,
+            self.wall,
+        )
+    }
+}
+
+/// One live client connection: the socket plus its reusable frame
+/// buffers.
+struct ClientConn {
+    stream: TcpStream,
+    rbuf: FrameBuf,
+    wbuf: Vec<u8>,
+    wsent: usize,
+}
+
+impl ClientConn {
+    fn connect(addr: &str) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream, rbuf: FrameBuf::new(), wbuf: Vec::new(), wsent: 0 })
+    }
+
+    /// Flush pending output; `Err` means the connection is dead.
+    fn flush(&mut self) -> Result<(), ()> {
+        while self.wsent < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wsent..]) {
+                Ok(0) => return Err(()),
+                Ok(n) => self.wsent += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+        if self.wsent == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wsent = 0;
+        }
+        Ok(())
+    }
+}
+
+/// Run one client session against a serving-tier address.
+///
+/// Rows are drawn from `data` with the in-process generator's RNG
+/// stream (see the module docs).  Returns the session report; client
+/// conservation (`sent == received + lost`) is `ensure!`d before
+/// returning.  A session that exhausts its reconnect budget returns a
+/// *partial* report (the caller sees `lost > 0` and `sent <
+/// requests`), not an error — under chaos injection a bounded-loss
+/// session is the expected outcome, and the caller decides what loss
+/// budget is acceptable.
+pub fn run_client(cfg: &ClientConfig, data: &EvalData) -> crate::Result<ClientReport> {
+    // Pre-draw the schedule with the generator's exact draw order:
+    // (optional exponential gap, then row index) per request.
+    let mut rng = Pcg64::new(cfg.seed, 99);
+    let mut sched: Vec<(Duration, usize)> = Vec::with_capacity(cfg.requests);
+    let mut at = Duration::ZERO;
+    for _ in 0..cfg.requests {
+        if cfg.rate > 0.0 {
+            at += Duration::from_secs_f64(rng.exponential(cfg.rate));
+        }
+        sched.push((at, rng.below(data.n as u64) as usize));
+    }
+
+    let epoch = client_now();
+    let hist = LatencyHist::default();
+    let mut responses: Vec<ResponseFrame> = Vec::with_capacity(cfg.requests);
+    let mut outcomes = [0u64; 4];
+    let (mut sent, mut received, mut lost, mut wire_errors, mut reconnects) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    let mut conn: Option<ClientConn> = None;
+    let mut attempts = 0u32;
+    let mut next_idx = 0usize;
+    let mut outstanding = 0u64;
+    let mut last_activity = epoch;
+    let mut chunk = [0u8; 4096];
+
+    loop {
+        let now = client_now();
+        if next_idx == cfg.requests && outstanding == 0 {
+            break;
+        }
+
+        if conn.is_none() {
+            if attempts > cfg.max_reconnects {
+                // Reconnect budget exhausted: whatever is unanswered is
+                // lost; unsent requests stay unsent (sent < requests).
+                lost += outstanding;
+                outstanding = 0;
+                break;
+            }
+            if attempts > 0 {
+                let backoff = (cfg.backoff * 2u32.saturating_pow(attempts - 1)).min(Duration::from_millis(250));
+                std::thread::sleep(backoff);
+            }
+            match ClientConn::connect(&cfg.addr) {
+                Ok(c) => {
+                    if attempts > 0 && sent > 0 {
+                        reconnects += 1;
+                    }
+                    conn = Some(c);
+                    attempts = 0;
+                    last_activity = client_now();
+                }
+                Err(_) => {
+                    attempts += 1;
+                }
+            }
+            continue;
+        }
+
+        let mut progress = false;
+        let mut dead = false;
+        if let Some(c) = conn.as_mut() {
+            // Send every request the load shape says is due.
+            while next_idx < cfg.requests {
+                let (due_at, row) = sched[next_idx];
+                let due = match cfg.mode {
+                    LoadMode::Open => now.duration_since(epoch) >= due_at,
+                    LoadMode::PartialOpen { max_outstanding } => {
+                        now.duration_since(epoch) >= due_at && (outstanding as usize) < max_outstanding
+                    }
+                    LoadMode::Closed { concurrency } => (outstanding as usize) < concurrency,
+                };
+                if !due {
+                    break;
+                }
+                let send_us = now.duration_since(epoch).as_micros() as u64;
+                proto::encode_request(&mut c.wbuf, next_idx as u64, send_us, data.row(row));
+                next_idx += 1;
+                sent += 1;
+                outstanding += 1;
+                progress = true;
+            }
+            if c.flush().is_err() {
+                dead = true;
+            }
+
+            // Read and decode whatever the server has for us.
+            if !dead {
+                match c.stream.read(&mut chunk) {
+                    Ok(0) => dead = true,
+                    Ok(n) => {
+                        progress = true;
+                        last_activity = now;
+                        c.rbuf.extend(&chunk[..n]);
+                        loop {
+                            match c.rbuf.next_frame() {
+                                Ok(Some(Frame::Response(r))) => {
+                                    received += 1;
+                                    outstanding = outstanding.saturating_sub(1);
+                                    outcomes[proto::outcome_tag(r.outcome) as usize] += 1;
+                                    let now_us = client_now().duration_since(epoch).as_micros() as u64;
+                                    hist.record(Duration::from_micros(now_us.saturating_sub(r.send_us)));
+                                    responses.push(r);
+                                }
+                                Ok(Some(Frame::Error(_))) => {
+                                    // Typed rejection: the server told us
+                                    // why and will close; our in-flight
+                                    // requests on this conn are gone.
+                                    wire_errors += 1;
+                                    dead = true;
+                                    break;
+                                }
+                                Ok(Some(Frame::Request(_))) => {
+                                    // Servers never send requests.
+                                    wire_errors += 1;
+                                    dead = true;
+                                    break;
+                                }
+                                Ok(None) => break,
+                                Err(_) => {
+                                    // Garbled stream (e.g. frame-corrupt /
+                                    // frame-trunc injection upstream).
+                                    wire_errors += 1;
+                                    dead = true;
+                                    break;
+                                }
+                            }
+                        }
+                        c.rbuf.compact();
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => dead = true,
+                }
+            }
+        }
+
+        if dead {
+            lost += outstanding;
+            outstanding = 0;
+            conn = None;
+            attempts += 1;
+            continue;
+        }
+
+        if outstanding > 0 && now.duration_since(last_activity) >= cfg.timeout {
+            // The server went quiet on us: count the stragglers lost
+            // and (if there is more to send) start a fresh connection.
+            lost += outstanding;
+            outstanding = 0;
+            if next_idx == cfg.requests {
+                break;
+            }
+            conn = None;
+            attempts += 1;
+            continue;
+        }
+
+        if !progress {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    anyhow::ensure!(
+        received + lost == sent,
+        "client conservation broken: {} received + {} lost != {} sent",
+        received,
+        lost,
+        sent
+    );
+    Ok(ClientReport {
+        sent,
+        received,
+        lost,
+        wire_errors,
+        reconnects,
+        outcomes,
+        p50: hist.quantile(0.5),
+        p95: hist.quantile(0.95),
+        p99: hist.quantile(0.99),
+        mean_latency: hist.mean(),
+        wall: epoch.elapsed(),
+        responses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The client's schedule must replay the in-process generator's
+    /// draw order exactly: optional gap first, then the row — per
+    /// request, from the same `(seed, 99)` stream.
+    #[test]
+    fn schedule_matches_generator_draw_order() {
+        let (seed, n_rows, n_req, rate) = (7u64, 50u64, 20usize, 800.0f64);
+        let mut gen_rng = Pcg64::new(seed, 99);
+        let mut expect = Vec::new();
+        for _ in 0..n_req {
+            let _gap = gen_rng.exponential(rate);
+            expect.push(gen_rng.below(n_rows) as usize);
+        }
+        let mut cli_rng = Pcg64::new(seed, 99);
+        let mut got = Vec::new();
+        for _ in 0..n_req {
+            let _gap = cli_rng.exponential(rate);
+            got.push(cli_rng.below(n_rows) as usize);
+        }
+        assert_eq!(expect, got);
+    }
+
+    /// Rate 0 must skip the exponential draw entirely (the in-process
+    /// closed loop does), or every row index shifts by one draw.
+    #[test]
+    fn zero_rate_skips_gap_draws() {
+        let mut a = Pcg64::new(3, 99);
+        let mut b = Pcg64::new(3, 99);
+        let rows_a: Vec<u64> = (0..10).map(|_| a.below(17)).collect();
+        let rows_b: Vec<u64> = (0..10).map(|_| b.below(17)).collect();
+        assert_eq!(rows_a, rows_b);
+    }
+}

@@ -1,0 +1,1166 @@
+//! Wire-hardened TCP serving tier: a length-prefixed binary front-end
+//! for the pipelined ladder server.
+//!
+//! Layout:
+//!
+//! - [`proto`] — the frame grammar (see `docs/PROTOCOL.md`): incremental
+//!   allocation-reusing decoder, typed [`proto::ProtoError`] taxonomy,
+//!   append-style encoders.
+//! - [`client`] — the load-generator used by `ari-client` and the
+//!   loopback test/bench suites (open-, partial-open- and closed-loop).
+//! - this module — [`run_net_serving`]: a **std-only non-blocking**
+//!   accept/read/write loop feeding the exact same bounded-queue
+//!   pipeline and [`super::Dispatcher`] as the in-process
+//!   [`super::run_serving_ladder`].
+//!
+//! Threading model (mirrors the in-process server, with the network
+//! front-end replacing the workload generator *and* batching thread):
+//!
+//! 1. the **net thread** owns the listener, every connection, and the
+//!    batcher.  One readiness sweep per iteration: accept new
+//!    connections, read + decode frames, admit or shed requests, fire
+//!    due batches into the staged queue, route completions back to
+//!    their connection, and flush write buffers — all non-blocking, one
+//!    real-clock read per iteration;
+//! 2. the **calling thread** runs ladder inference exactly as
+//!    in-process, pushing each [`Completion`] into a third bounded
+//!    queue the net thread drains;
+//! 3. an optional **watchdog** thread (same heartbeat protocol as the
+//!    in-process server) converts a stuck net loop *or* a stuck drain
+//!    into a diagnostic `Err` by closing all three queues — a stalled
+//!    shutdown never hangs the caller.
+//!
+//! Connection supervision (see `docs/PROTOCOL.md` for the client-visible
+//! contract): a read deadline bounds how long a peer may dangle a
+//! partial frame (slow-loris); per-connection in-flight and write-buffer
+//! caps shed excess load with typed `Rejected` responses instead of
+//! queueing unboundedly; a peer that stops reading its responses is
+//! dropped after `linger` without write progress.  Shutdown drains the
+//! batcher, flushes every socket, and only then closes — connections
+//! that cannot be flushed are force-dropped after a bounded grace
+//! period, with every undelivered response counted.
+//!
+//! **Conservation**: every admitted request produces exactly one typed
+//! [`Completion`] (the dispatcher's invariant), and every completion is
+//! routed exactly once — delivered to its (still-live) connection or
+//! counted against a dead one.  [`run_net_serving`] `ensure!`s both
+//! sums before reporting, under every network fault the [`fault`]
+//! registry can inject (`conn-drop`, `frame-trunc`, `frame-corrupt`,
+//! `write-split`, `accept-stall`).
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+// ari-lint: allow(sim-discipline): the net watchdog's stop signal runs on real
+// primitives by design, exactly like the in-process serving watchdog — it measures
+// real time and is never part of a model-checked protocol.
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub mod client;
+pub mod proto;
+
+use crate::config::AriConfig;
+use crate::coordinator::{Batcher, BatcherPolicy, Ladder};
+use crate::metrics::MetricsRegistry;
+use crate::runtime::Backend;
+use crate::util::fault;
+use crate::util::queue::BoundedQueue;
+
+use super::{
+    panic_msg, Completion, CompletionOutcome, Dispatcher, Heartbeat, Request, RobustnessPolicy, RowSource,
+    ServeOptions, StagedBatch, PIPELINE_DEPTH,
+};
+
+/// Completions in flight between the inference loop and the net
+/// thread.  Deep enough that routing never backpressures dispatch in
+/// the steady state; bounded so a dead net loop cannot hide an
+/// unbounded completion pile.
+const COMP_QUEUE_DEPTH: usize = 256;
+
+/// Per-connection read chunk (stack buffer).
+const READ_CHUNK: usize = 4096;
+
+/// Net-loop sleep when a full sweep made no progress (no accepts, no
+/// bytes, no completions).  Short enough to keep loopback latency in
+/// the sub-millisecond range; long enough not to spin a core.
+const IDLE_SLEEP: Duration = Duration::from_micros(500);
+
+/// One real-clock read per net-loop iteration.  The front-end schedules
+/// against real socket readiness and real wall time and is exercised
+/// over real loopback TCP, never under the sim scheduler — so unlike
+/// the in-process arrival loop there is no virtual clock to thread
+/// through it.
+fn net_now() -> Instant {
+    // ari-lint: allow(clock-discipline): the TCP front-end is driven by real socket
+    // readiness; it is never model-checked under the sim scheduler (see the doc
+    // comment above and docs/TESTING.md).
+    Instant::now()
+}
+
+/// Connection-supervision knobs, derived from the `[net]` config
+/// section (see `docs/CONFIG.md`).
+struct NetPolicy {
+    /// Accepted-connection cap; excess accepts are closed immediately.
+    max_conns: usize,
+    /// How long a peer may dangle a partial frame before the connection
+    /// is closed with a typed [`proto::ProtoError::Stalled`] error
+    /// (slow-loris defence).  `None` disables.
+    read_deadline: Option<Duration>,
+    /// Per-connection admitted-but-unanswered cap; excess requests are
+    /// shed with typed `Rejected` responses.
+    max_in_flight: usize,
+    /// Per-connection encoded-but-unflushed byte cap; past it new
+    /// requests are shed and responses stay queued until the socket
+    /// drains.
+    write_buf_cap: usize,
+    /// Grace period: a connection with pending bytes but no write
+    /// progress for this long is dropped, and an idle listener with no
+    /// remaining connections for this long begins shutdown.
+    linger: Duration,
+}
+
+impl NetPolicy {
+    fn from_config(cfg: &AriConfig) -> Self {
+        Self {
+            max_conns: cfg.net_max_conns,
+            read_deadline: (cfg.net_read_deadline_us > 0).then(|| Duration::from_micros(cfg.net_read_deadline_us)),
+            max_in_flight: cfg.net_max_in_flight,
+            write_buf_cap: cfg.net_write_buf_cap,
+            linger: Duration::from_micros(cfg.net_linger_us),
+        }
+    }
+}
+
+/// Routing record for one admitted request: which connection slot (and
+/// which incarnation of it) receives the response, plus the client's
+/// echo fields.  `Request::row` indexes the ticket table, so the
+/// dispatcher needs no wire knowledge at all.
+#[derive(Clone, Copy)]
+struct Ticket {
+    /// Client-chosen request id, echoed verbatim in the response.
+    id: u64,
+    /// Client send stamp (µs), echoed verbatim in the response.
+    send_us: u64,
+    /// Connection slab slot.
+    conn: u32,
+    /// Slot generation at admission; a mismatch at routing time means
+    /// the connection died and was (possibly) replaced.
+    gen: u32,
+}
+
+/// One live connection's state: reusable read/write buffers, the
+/// response queue, and the supervision counters.
+struct Conn {
+    stream: TcpStream,
+    /// Slot generation this connection was created under.
+    gen: u32,
+    /// Incremental frame decoder (reusable allocation).
+    rbuf: proto::FrameBuf,
+    /// When the currently-buffered partial frame started arriving;
+    /// `None` when the decoder sits on a frame boundary.  Doubles as
+    /// the ingress stamp of the next completed frame (net-wait metric)
+    /// and as the slow-loris deadline anchor.
+    partial_since: Option<Instant>,
+    /// Completed responses not yet encoded into `wbuf`.
+    pending: VecDeque<proto::ResponseFrame>,
+    /// Encoded-but-possibly-unflushed output bytes.
+    wbuf: Vec<u8>,
+    /// Flushed prefix of `wbuf`.
+    wsent: usize,
+    /// End offset in `wbuf` of each encoded *response* frame (error
+    /// frames are not tracked — they are diagnostics, not responses).
+    /// Popped as the flush cursor passes them to count deliveries.
+    frame_ends: VecDeque<usize>,
+    /// Admitted-but-unanswered requests on this connection.
+    in_flight: usize,
+    /// Last instant `wsent` advanced (or the accept instant).
+    last_write_progress: Instant,
+    /// Stop reading; close once everything queued has been flushed
+    /// (set on protocol errors).
+    close_after_flush: bool,
+    /// Peer closed its write half (EOF seen).
+    read_closed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, gen: u32, now: Instant) -> Self {
+        Self {
+            stream,
+            gen,
+            rbuf: proto::FrameBuf::new(),
+            partial_since: None,
+            pending: VecDeque::new(),
+            wbuf: Vec::new(),
+            wsent: 0,
+            frame_ends: VecDeque::new(),
+            in_flight: 0,
+            last_write_progress: now,
+            close_after_flush: false,
+            read_closed: false,
+        }
+    }
+}
+
+/// The net thread's accounting, returned to the caller when the loop
+/// exits and `ensure!`d against the dispatcher's completion count.
+#[derive(Default)]
+struct NetStats {
+    conns_accepted: u64,
+    conns_refused: u64,
+    protocol_errors: u64,
+    frames_in: u64,
+    admitted: u64,
+    shed: u64,
+    /// Completions drained from the pipeline and routed (== `admitted`
+    /// on every successful session).
+    routed: u64,
+    /// Response frames fully flushed to a socket.
+    responses_sent: u64,
+    /// Responses owed to a connection that died first (routed to a
+    /// dead slot, or queued/encoded on a connection that was dropped).
+    dropped_dead: u64,
+    /// Routed completions by [`proto::outcome_tag`] (Ok, Degraded,
+    /// Rejected, Failed).
+    outcomes: [u64; 4],
+}
+
+/// Gather the rows of the batcher's just-fired FIFO prefix out of the
+/// ingress row ring into the staged batch's reusable buffer.  Hot path
+/// (see `hotpath.txt`): the ring and the buffer both reach steady-state
+/// capacity after the first few batches.
+fn stage_net_rows(rows: &mut VecDeque<f32>, dim: usize, buf: &mut StagedBatch) {
+    buf.x.clear();
+    let n = buf.items.len();
+    buf.x.extend(rows.drain(..n * dim));
+}
+
+/// Flush a connection's pending output bytes into its socket.  Returns
+/// whether any byte moved; `Err` means the connection must be dropped.
+/// Hosts the `write-split` (short writes, forcing client-side
+/// reassembly) and `frame-trunc` (emit a partial frame, then die)
+/// fault points.
+fn flush_conn(c: &mut Conn, now: Instant) -> Result<bool, ()> {
+    let mut progress = false;
+    while c.wsent < c.wbuf.len() {
+        let mut limit = c.wbuf.len() - c.wsent;
+        if fault::inject(fault::WRITE_SPLIT) {
+            limit = limit.min(3);
+        }
+        let trunc = fault::inject(fault::FRAME_TRUNC);
+        if trunc {
+            limit = (limit + 1) / 2;
+        }
+        match c.stream.write(&c.wbuf[c.wsent..c.wsent + limit]) {
+            Ok(0) => return Err(()),
+            Ok(n) => {
+                c.wsent += n;
+                c.last_write_progress = now;
+                progress = true;
+                if trunc {
+                    return Err(());
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return Err(()),
+        }
+    }
+    Ok(progress)
+}
+
+/// Reclaim the flushed prefix of a connection's write buffer, keeping
+/// the tracked frame-end offsets valid.
+fn compact_wbuf(c: &mut Conn) {
+    if c.wsent == 0 {
+        return;
+    }
+    let sent = c.wsent;
+    c.wbuf.copy_within(sent.., 0);
+    c.wbuf.truncate(c.wbuf.len() - sent);
+    for e in &mut c.frame_ends {
+        *e -= sent;
+    }
+    c.wsent = 0;
+}
+
+/// Net-loop phase.
+enum Phase {
+    /// Accepting connections, reading, admitting, serving.
+    Accepting,
+    /// Request budget reached (or clients gone): no more reads; flush
+    /// the batcher's tail into the pipeline.
+    Draining,
+    /// Batcher empty, staged queue closed: route the last completions
+    /// and flush every socket.
+    Flushing,
+}
+
+/// The network front-end: listener, connection slab, ingress batcher,
+/// and the queue endpoints it shares with the inference loop.  Runs on
+/// its own scoped thread via [`NetFront::run`].
+struct NetFront<'q> {
+    listener: TcpListener,
+    policy: NetPolicy,
+    /// Features per request row (requests with any other count are shed).
+    dim: usize,
+    /// Per-request completion deadline (the pipeline's, not the wire's).
+    deadline: Option<Duration>,
+    /// Session request budget: after this many admitted + shed the
+    /// session drains (loopback suites size it to the client's load).
+    budget: usize,
+    batcher: Batcher<Request>,
+    staged: &'q BoundedQueue<StagedBatch>,
+    empties: &'q BoundedQueue<StagedBatch>,
+    comps: &'q BoundedQueue<Completion>,
+    hb: &'q Heartbeat,
+    conns: Vec<Option<Conn>>,
+    /// Per-slot generation counters (bumped on every close, clean or
+    /// not, so stale tickets can never route to a slot's next tenant).
+    gens: Vec<u32>,
+    tickets: Vec<Ticket>,
+    /// Free ticket indices (tickets are recycled like every other
+    /// steady-state buffer).
+    free: Vec<u32>,
+    /// Ingress row ring, FIFO-parallel to the batcher's queue.
+    rows: VecDeque<f32>,
+    /// Pipeline-internal request id counter.
+    seq: u64,
+    ever_accepted: bool,
+    stats: NetStats,
+}
+
+impl<'q> NetFront<'q> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        listener: TcpListener,
+        policy: NetPolicy,
+        dim: usize,
+        deadline: Option<Duration>,
+        budget: usize,
+        batcher_policy: BatcherPolicy,
+        staged: &'q BoundedQueue<StagedBatch>,
+        empties: &'q BoundedQueue<StagedBatch>,
+        comps: &'q BoundedQueue<Completion>,
+        hb: &'q Heartbeat,
+    ) -> Self {
+        Self {
+            listener,
+            policy,
+            dim,
+            deadline,
+            budget,
+            batcher: Batcher::new(batcher_policy),
+            staged,
+            empties,
+            comps,
+            hb,
+            conns: Vec::new(),
+            gens: Vec::new(),
+            tickets: Vec::new(),
+            free: Vec::new(),
+            rows: VecDeque::new(),
+            seq: 0,
+            ever_accepted: false,
+            stats: NetStats::default(),
+        }
+    }
+
+    fn live_conns(&self) -> usize {
+        self.conns.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Requests answered one way or the other so far.
+    fn handled(&self) -> u64 {
+        self.stats.admitted + self.stats.shed
+    }
+
+    /// Account a dying connection's undeliverable responses.
+    fn drop_conn_state(&mut self, c: &Conn) {
+        self.stats.dropped_dead += c.pending.len() as u64 + c.frame_ends.len() as u64;
+    }
+
+    /// Drop every remaining connection (error/stuck-shutdown path);
+    /// their queued responses are counted, not lost silently.
+    fn abandon(&mut self) {
+        for slot in 0..self.conns.len() {
+            if let Some(c) = self.conns[slot].take() {
+                self.drop_conn_state(&c);
+                self.gens[slot] = self.gens[slot].wrapping_add(1);
+            }
+        }
+    }
+
+    /// Close every remaining (fully flushed) connection cleanly.
+    fn close_all(&mut self) {
+        for slot in 0..self.conns.len() {
+            if self.conns[slot].take().is_some() {
+                self.gens[slot] = self.gens[slot].wrapping_add(1);
+            }
+        }
+    }
+
+    /// Accept every waiting connection (non-blocking).  Hosts the
+    /// `accept-stall` fault point (a stalled accept loop — new peers
+    /// wait, existing ones are unaffected).
+    fn accept_new(&mut self, now: Instant) -> bool {
+        if fault::inject(fault::ACCEPT_STALL) {
+            std::thread::sleep(fault::STALL);
+        }
+        let mut progress = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    progress = true;
+                    if self.live_conns() >= self.policy.max_conns || stream.set_nonblocking(true).is_err() {
+                        // Refusal is the backpressure of last resort:
+                        // the peer sees an immediate close and may
+                        // retry with backoff.
+                        self.stats.conns_refused += 1;
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    let slot = match self.conns.iter().position(Option::is_none) {
+                        Some(s) => s,
+                        None => {
+                            self.conns.push(None);
+                            self.gens.push(0);
+                            self.conns.len() - 1
+                        }
+                    };
+                    self.conns[slot] = Some(Conn::new(stream, self.gens[slot], now));
+                    self.stats.conns_accepted += 1;
+                    self.ever_accepted = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                // Transient accept errors (per-connection resets
+                // surfacing here): skip this sweep, try again next.
+                Err(_) => break,
+            }
+        }
+        progress
+    }
+
+    /// Record a protocol violation: queue a typed error frame for the
+    /// peer, stop reading, and close once the error has been flushed.
+    fn proto_violation(&mut self, c: &mut Conn, e: proto::ProtoError) {
+        proto::encode_error(&mut c.wbuf, e.code(), e.detail());
+        c.close_after_flush = true;
+        c.read_closed = true;
+        c.rbuf.clear();
+        c.partial_since = None;
+        self.stats.protocol_errors += 1;
+    }
+
+    /// Admit one decoded request into the batching pipeline (hot path —
+    /// see `hotpath.txt`; its row bytes were already appended to the
+    /// ingress ring by the caller, and the recycled ticket table makes
+    /// the steady state allocation-free).
+    #[allow(clippy::too_many_arguments)]
+    fn admit_request(
+        &mut self,
+        in_flight: &mut usize,
+        gen: u32,
+        slot: u32,
+        id: u64,
+        send_us: u64,
+        ingress: Instant,
+        now: Instant,
+    ) {
+        let t = Ticket { id, send_us, conn: slot, gen };
+        let ticket = match self.free.pop() {
+            Some(i) => {
+                self.tickets[i as usize] = t;
+                i as usize
+            }
+            None => {
+                self.tickets.push(t);
+                self.tickets.len() - 1
+            }
+        };
+        let seq = self.seq;
+        self.seq += 1;
+        self.batcher.push_at(
+            Request { id: seq, row: ticket, submitted: ingress, deadline: self.deadline.map(|d| ingress + d) },
+            now,
+        );
+        *in_flight += 1;
+        self.stats.admitted += 1;
+    }
+
+    /// Decode every complete frame buffered on `c`, admitting or
+    /// shedding requests.  The first frame completed by this read
+    /// inherits the partial-frame ingress stamp (its bytes started
+    /// arriving earlier); later frames arrived wholly in this read.
+    fn decode_frames(&mut self, c: &mut Conn, slot: usize, now: Instant) {
+        let mut pending_ingress = c.partial_since.take();
+        loop {
+            match c.rbuf.next_frame() {
+                Ok(Some(proto::Frame::Request(rf))) => {
+                    self.stats.frames_in += 1;
+                    let ingress = pending_ingress.take().unwrap_or(now);
+                    let backlogged = c.wbuf.len() - c.wsent >= self.policy.write_buf_cap;
+                    if rf.n_features() != self.dim
+                        || c.in_flight >= self.policy.max_in_flight
+                        || backlogged
+                        || self.handled() >= self.budget as u64
+                    {
+                        // Shed: a typed Rejected response straight to
+                        // the response queue — the pipeline never sees
+                        // the request, the client gets an answer.
+                        c.pending.push_back(proto::ResponseFrame {
+                            id: rf.id,
+                            send_us: rf.send_us,
+                            outcome: CompletionOutcome::Rejected,
+                            stage: 0,
+                            pred: -1,
+                            margin: 0.0,
+                        });
+                        self.stats.shed += 1;
+                    } else {
+                        self.rows.extend(rf.features());
+                        self.admit_request(&mut c.in_flight, c.gen, slot as u32, rf.id, rf.send_us, ingress, now);
+                    }
+                }
+                // Only clients send requests; a response or error frame
+                // arriving at the server is a protocol violation.
+                Ok(Some(proto::Frame::Response(_))) => {
+                    self.proto_violation(c, proto::ProtoError::BadKind { kind: proto::KIND_RESPONSE });
+                    return;
+                }
+                Ok(Some(proto::Frame::Error(_))) => {
+                    self.proto_violation(c, proto::ProtoError::BadKind { kind: proto::KIND_ERROR });
+                    return;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    self.proto_violation(c, e);
+                    return;
+                }
+            }
+        }
+        if c.rbuf.has_partial() {
+            c.partial_since = pending_ingress.or(Some(now));
+        }
+        c.rbuf.compact();
+    }
+
+    /// One supervision sweep over every connection: read + decode
+    /// (while `read_allowed`), slow-loris check, response encode +
+    /// flush, and the close/kill decisions.  Hosts the `conn-drop`
+    /// (peer vanishes) and `frame-corrupt` (a read byte flips) fault
+    /// points.
+    fn pump_conns(&mut self, now: Instant, read_allowed: bool) -> bool {
+        let mut progress = false;
+        let mut chunk = [0u8; READ_CHUNK];
+        for slot in 0..self.conns.len() {
+            let Some(mut c) = self.conns[slot].take() else { continue };
+            let mut kill = false;
+
+            if fault::inject(fault::CONN_DROP) {
+                self.drop_conn_state(&c);
+                self.gens[slot] = self.gens[slot].wrapping_add(1);
+                continue;
+            }
+
+            if read_allowed && !c.read_closed && !c.close_after_flush {
+                match c.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        progress = true;
+                        c.read_closed = true;
+                        if c.rbuf.has_partial() {
+                            self.proto_violation(&mut c, proto::ProtoError::Truncated);
+                        }
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        if fault::inject(fault::FRAME_CORRUPT) {
+                            chunk[0] ^= 0x40;
+                        }
+                        c.rbuf.extend(&chunk[..n]);
+                        self.decode_frames(&mut c, slot, now);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => kill = true,
+                }
+            }
+
+            // Slow-loris: a partial frame outliving the read deadline
+            // closes the connection with a typed Stalled error.
+            if !kill && !c.read_closed {
+                if let (Some(dl), Some(t0)) = (self.policy.read_deadline, c.partial_since) {
+                    if now.duration_since(t0) >= dl {
+                        self.proto_violation(&mut c, proto::ProtoError::Stalled);
+                    }
+                }
+            }
+
+            if !kill {
+                // Encode completed responses up to the write-buffer
+                // cap, then flush as much as the socket accepts.
+                while c.wbuf.len() - c.wsent < self.policy.write_buf_cap {
+                    let Some(rf) = c.pending.pop_front() else { break };
+                    proto::encode_response(&mut c.wbuf, &rf);
+                    c.frame_ends.push_back(c.wbuf.len());
+                }
+                match flush_conn(&mut c, now) {
+                    Ok(p) => {
+                        progress |= p;
+                        while c.frame_ends.front().is_some_and(|&e| e <= c.wsent) {
+                            c.frame_ends.pop_front();
+                            self.stats.responses_sent += 1;
+                        }
+                        compact_wbuf(&mut c);
+                    }
+                    Err(()) => kill = true,
+                }
+            }
+
+            // A peer holding unflushed bytes without accepting a single
+            // one for `linger` is gone in all but name.
+            if !kill && c.wsent < c.wbuf.len() && now.duration_since(c.last_write_progress) >= self.policy.linger {
+                kill = true;
+            }
+
+            if kill {
+                self.drop_conn_state(&c);
+                self.gens[slot] = self.gens[slot].wrapping_add(1);
+                progress = true;
+                continue;
+            }
+
+            let flushed = c.wsent == c.wbuf.len() && c.pending.is_empty();
+            if (c.read_closed || c.close_after_flush) && c.in_flight == 0 && flushed {
+                // Clean close: everything owed has been delivered.
+                self.gens[slot] = self.gens[slot].wrapping_add(1);
+                progress = true;
+                continue;
+            }
+            self.conns[slot] = Some(c);
+        }
+        progress
+    }
+
+    /// Fire every due batch into the pipeline.  Buffers come from the
+    /// `empties` queue non-blockingly — when both staging buffers are
+    /// in flight the batcher simply holds the batch until the next
+    /// sweep (the pipeline is the backpressure).  Returns `false` when
+    /// the pipeline is closed.
+    fn fire_ready(&mut self, now: Instant) -> bool {
+        while self.batcher.ready(now) {
+            let Some(mut buf) = self.empties.try_pop() else { break };
+            if self.batcher.try_fire_into(now, &mut buf.items).is_none() {
+                let _ = self.empties.try_push(buf);
+                break;
+            }
+            stage_net_rows(&mut self.rows, self.dim, &mut buf);
+            // Never blocks: a buffer just left the 2-deep circulation,
+            // so the staged queue has a free slot.
+            if self.staged.push(buf).is_err() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Shutdown flush: drain the batcher's tail into the pipeline in
+    /// `<= max_batch` chunks.  Returns `(progress, alive)`.
+    fn flush_batcher(&mut self) -> (bool, bool) {
+        let mut progress = false;
+        while !self.batcher.is_empty() {
+            let Some(mut buf) = self.empties.try_pop() else { break };
+            if self.batcher.drain_into(&mut buf.items).is_none() {
+                let _ = self.empties.try_push(buf);
+                break;
+            }
+            stage_net_rows(&mut self.rows, self.dim, &mut buf);
+            if self.staged.push(buf).is_err() {
+                return (progress, false);
+            }
+            progress = true;
+        }
+        (progress, true)
+    }
+
+    /// Drain every completion the inference loop has produced, routing
+    /// each to its connection (or counting it against a dead one).
+    fn route_completions(&mut self) -> bool {
+        let mut progress = false;
+        while let Some(done) = self.comps.try_pop() {
+            progress = true;
+            self.stats.routed += 1;
+            self.stats.outcomes[proto::outcome_tag(done.outcome) as usize] += 1;
+            let ti = done.row;
+            let t = self.tickets[ti];
+            let live = self
+                .conns
+                .get_mut(t.conn as usize)
+                .and_then(Option::as_mut)
+                .filter(|conn| conn.gen == t.gen);
+            match live {
+                Some(conn) => {
+                    conn.pending.push_back(proto::ResponseFrame {
+                        id: t.id,
+                        send_us: t.send_us,
+                        outcome: done.outcome,
+                        stage: done.stage as u8,
+                        pred: done.pred,
+                        margin: done.margin,
+                    });
+                    conn.in_flight = conn.in_flight.saturating_sub(1);
+                }
+                None => self.stats.dropped_dead += 1,
+            }
+            self.free.push(ti as u32);
+        }
+        progress
+    }
+
+    /// The net loop: accept → read/decode/admit → fire → route → flush,
+    /// then the two-step shutdown (drain the batcher, flush the
+    /// sockets).  Beats the watchdog heartbeat once per sweep while
+    /// accepting/draining, but only on *progress* while flushing — a
+    /// stuck drain therefore stops the heartbeat and lets the watchdog
+    /// convert the hang into a diagnostic error.
+    fn run(mut self) -> NetStats {
+        let mut phase = Phase::Accepting;
+        let mut idle_conns_since: Option<Instant> = None;
+        let mut last_progress = net_now();
+        // How long the flush phase tolerates zero progress before
+        // force-dropping the stragglers (bounded shutdown even with the
+        // watchdog disabled).
+        let force_drop_after = self.policy.linger.max(Duration::from_millis(250));
+        loop {
+            let now = net_now();
+            match phase {
+                Phase::Accepting => {
+                    self.hb.beat();
+                    if self.staged.is_closed() {
+                        // Watchdog or inference error: release everything.
+                        self.abandon();
+                        return self.stats;
+                    }
+                    let mut progress = self.accept_new(now);
+                    progress |= self.pump_conns(now, true);
+                    if !self.fire_ready(now) {
+                        self.abandon();
+                        return self.stats;
+                    }
+                    progress |= self.route_completions();
+                    if self.handled() >= self.budget as u64 {
+                        phase = Phase::Draining;
+                    } else if self.ever_accepted && self.live_conns() == 0 {
+                        // Clients came and went: linger briefly for a
+                        // reconnect, then begin shutdown.
+                        let since = *idle_conns_since.get_or_insert(now);
+                        if now.duration_since(since) >= self.policy.linger {
+                            phase = Phase::Draining;
+                        }
+                    } else {
+                        idle_conns_since = None;
+                    }
+                    if !progress && matches!(phase, Phase::Accepting) {
+                        std::thread::sleep(IDLE_SLEEP);
+                    }
+                }
+                Phase::Draining => {
+                    self.hb.beat();
+                    if self.staged.is_closed() {
+                        self.abandon();
+                        return self.stats;
+                    }
+                    let (mut progress, alive) = self.flush_batcher();
+                    if !alive {
+                        self.abandon();
+                        return self.stats;
+                    }
+                    progress |= self.route_completions();
+                    progress |= self.pump_conns(now, false);
+                    if self.batcher.is_empty() {
+                        self.staged.close();
+                        phase = Phase::Flushing;
+                        last_progress = now;
+                    } else if !progress {
+                        std::thread::sleep(IDLE_SLEEP);
+                    }
+                }
+                Phase::Flushing => {
+                    let mut progress = self.route_completions();
+                    progress |= self.pump_conns(now, false);
+                    if progress {
+                        self.hb.beat();
+                        last_progress = now;
+                    }
+                    let comps_done = self.comps.is_closed() && self.comps.len() == 0;
+                    let unflushed = self
+                        .conns
+                        .iter()
+                        .flatten()
+                        .any(|c| c.wsent < c.wbuf.len() || !c.pending.is_empty());
+                    if comps_done && !unflushed {
+                        self.close_all();
+                        return self.stats;
+                    }
+                    if now.duration_since(last_progress) >= force_drop_after {
+                        if comps_done {
+                            // Only stuck sockets remain: force-drop
+                            // them (counted) and finish.
+                            self.abandon();
+                            return self.stats;
+                        }
+                        // Inference is stuck: keep *not* beating so the
+                        // watchdog closes the pipeline; the closed
+                        // completion queue unblocks this loop above.
+                    }
+                    if !progress {
+                        std::thread::sleep(IDLE_SLEEP);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Aggregated report of one network serving session: the wire-side
+/// conservation ledger plus the same latency/energy metrics as the
+/// in-process [`super::ServeReport`].
+#[derive(Debug)]
+pub struct NetServeReport {
+    /// Connections accepted over the session.
+    pub conns_accepted: u64,
+    /// Connections refused (over the `max_conns` cap).
+    pub conns_refused: u64,
+    /// Connections closed for a protocol violation (each got a typed
+    /// error frame; see `docs/PROTOCOL.md`).
+    pub protocol_errors: u64,
+    /// Request frames decoded.
+    pub frames_in: u64,
+    /// Requests admitted into the inference pipeline.
+    pub admitted: u64,
+    /// Requests shed at admission with a typed `Rejected` response
+    /// (in-flight cap, write backpressure, dimension mismatch, or
+    /// session budget).
+    pub shed: u64,
+    /// Response frames fully delivered to a socket.
+    pub responses_sent: u64,
+    /// Responses owed to connections that died first.  Always
+    /// `responses_sent + dropped_dead == admitted + shed`.
+    pub dropped_dead: u64,
+    /// Routed pipeline completions by outcome tag (Ok, Degraded,
+    /// Rejected, Failed).  Shed requests are *not* in here — they
+    /// never reached the pipeline.
+    pub outcomes: [u64; 4],
+    /// Wall time of the whole session.
+    pub wall: Duration,
+    /// Admitted requests per second of wall time.
+    pub throughput_rps: f64,
+    /// Median server-side request latency (ingress → completion).
+    pub p50: Duration,
+    /// 95th-percentile server-side latency.
+    pub p95: Duration,
+    /// 99th-percentile server-side latency.
+    pub p99: Duration,
+    /// Mean server-side latency.
+    pub mean_latency: Duration,
+    /// Mean wire-ingress wait (frame start → batcher enqueue).
+    pub net_wait_mean: Duration,
+    /// Net-wait samples (one per dispatched request).
+    pub net_wait_samples: u64,
+    /// Mean batcher wait (enqueue → dispatch).
+    pub queue_wait_mean: Duration,
+    /// Queue-wait samples (one per dispatched request).
+    pub queue_wait_samples: u64,
+    /// Pipeline completions served reduced under overload.
+    pub degraded: u64,
+    /// Pipeline completions rejected past their deadline (distinct from
+    /// [`Self::shed`], which never entered the pipeline).
+    pub rejected: u64,
+    /// Pipeline completions failed after exhausting execute retries.
+    pub failed: u64,
+    /// Backend execute retries across the session.
+    pub retries: u64,
+    /// Modelled energy spent (µJ).
+    pub energy_uj: f64,
+    /// Modelled energy an always-full policy would have spent on the
+    /// served (Ok + Degraded) requests (µJ).
+    pub energy_full_uj: f64,
+    /// Fraction of pipeline completions that escalated.
+    pub escalation_fraction: f64,
+}
+
+impl NetServeReport {
+    /// Savings vs running every served request on the full model.
+    pub fn savings(&self) -> f64 {
+        if self.energy_full_uj == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.energy_uj / self.energy_full_uj
+    }
+
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "net: {} conns accepted ({} refused, {} protocol errors), {} frames in\n\
+             requests: {} admitted + {} shed -> {} responses sent, {} dropped to dead conns\n\
+             outcomes: ok {} degraded {} rejected {} failed {}  escalation {:.2}%\n\
+             served in {:.2?} ({:.0} req/s)\n\
+             latency mean {:?} p50 {:?} p95 {:?} p99 {:?} (net wait mean {:?}, queue wait mean {:?})\n\
+             robustness: degraded {} rejected {} failed {} retries {}\n\
+             energy {:.1} µJ vs always-full {:.1} µJ -> savings {:.1}%",
+            self.conns_accepted,
+            self.conns_refused,
+            self.protocol_errors,
+            self.frames_in,
+            self.admitted,
+            self.shed,
+            self.responses_sent,
+            self.dropped_dead,
+            self.outcomes[0],
+            self.outcomes[1],
+            self.outcomes[2],
+            self.outcomes[3],
+            100.0 * self.escalation_fraction,
+            self.wall,
+            self.throughput_rps,
+            self.mean_latency,
+            self.p50,
+            self.p95,
+            self.p99,
+            self.net_wait_mean,
+            self.queue_wait_mean,
+            self.degraded,
+            self.rejected,
+            self.failed,
+            self.retries,
+            self.energy_uj,
+            self.energy_full_uj,
+            100.0 * self.savings(),
+        )
+    }
+}
+
+/// Closes all three pipeline queues on drop, so an inference error (or
+/// panic) on the serving thread always releases the net thread.
+struct CloseAllOnDrop<'q> {
+    staged: &'q BoundedQueue<StagedBatch>,
+    empties: &'q BoundedQueue<StagedBatch>,
+    comps: &'q BoundedQueue<Completion>,
+}
+
+impl Drop for CloseAllOnDrop<'_> {
+    fn drop(&mut self) {
+        self.staged.close();
+        self.empties.close();
+        self.comps.close();
+    }
+}
+
+/// Serve ladder inference over a length-prefixed TCP protocol (see
+/// `docs/PROTOCOL.md`).  The caller binds the listener (tests use an
+/// ephemeral port); requests arrive over the wire instead of from the
+/// in-process generator, but flow through the *same* batcher, bounded
+/// pipeline, dispatcher and robustness machinery as
+/// [`super::run_serving_ladder`] — with `--listen` unset none of this
+/// code runs and serving is bit-identical to the in-process path.
+///
+/// The session ends when `cfg.requests` requests have been admitted or
+/// shed (the loopback suites' budget), or when every client has
+/// disconnected and `linger` has passed; shutdown drains the batcher,
+/// completes every admitted request, and flushes every socket.  On
+/// success the report satisfies two conservation invariants, `ensure!`d
+/// here: every admitted request was routed exactly once, and every
+/// admitted-or-shed request's response was either delivered or counted
+/// against a dead connection.
+pub fn run_net_serving(
+    engine: &mut dyn Backend,
+    ladder: &Ladder,
+    cfg: &AriConfig,
+    input_dim: usize,
+    opts: ServeOptions,
+    listener: TcpListener,
+) -> crate::Result<NetServeReport> {
+    anyhow::ensure!(
+        cfg.batch_size <= ladder.stages[0].variant.batch,
+        "server batch_size {} exceeds the ladder's compiled batch {}",
+        cfg.batch_size,
+        ladder.stages[0].variant.batch
+    );
+    anyhow::ensure!(
+        input_dim > 0 && input_dim <= proto::MAX_FEATURES as usize,
+        "input_dim {} outside the wire protocol's 1..={} feature bound",
+        input_dim,
+        proto::MAX_FEATURES
+    );
+    listener.set_nonblocking(true)?;
+    let robustness = RobustnessPolicy::from_config(cfg);
+    let netpol = NetPolicy::from_config(cfg);
+    let metrics = MetricsRegistry::new();
+    let mut disp = Dispatcher::new(
+        ladder,
+        RowSource::Inline { dim: input_dim },
+        &metrics,
+        opts.escalation,
+        robustness,
+        cfg.requests,
+    );
+    let staged: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
+    let empties: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
+    for _ in 0..PIPELINE_DEPTH {
+        let _ = empties.push(StagedBatch::default());
+    }
+    let comps: BoundedQueue<Completion> = BoundedQueue::new(COMP_QUEUE_DEPTH);
+    let hb = Heartbeat::default();
+    let stalled = AtomicBool::new(false);
+    let wd_stop: (Mutex<bool>, Condvar) = (Mutex::new(false), Condvar::new());
+    let t_start = net_now();
+    let batch_size = cfg.batch_size;
+    let batcher_policy = BatcherPolicy::new(cfg.batch_size, Duration::from_micros(cfg.batch_timeout_us));
+    let (serve_result, stats): (crate::Result<()>, crate::Result<NetStats>) = std::thread::scope(|s| {
+        let front = NetFront::new(
+            listener,
+            netpol,
+            input_dim,
+            robustness.deadline,
+            cfg.requests,
+            batcher_policy,
+            &staged,
+            &empties,
+            &comps,
+            &hb,
+        );
+        let net = s.spawn(move || front.run());
+        if let Some(stall_after) = robustness.watchdog_stall {
+            let stalled_ref = &stalled;
+            let wd_ref = &wd_stop;
+            let hb_ref = &hb;
+            let staged_ref = &staged;
+            let empties_ref = &empties;
+            let comps_ref = &comps;
+            s.spawn(move || {
+                let (lock, cv) = wd_ref;
+                let mut last = hb_ref.count();
+                // ari-lint: allow(clock-discipline): the watchdog measures *real* stall
+                // time by design, exactly like the in-process serving watchdog.
+                let mut last_change = Instant::now();
+                let mut done = lock.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    let poll = Duration::from_millis(100).min(stall_after);
+                    let (g, _) = cv.wait_timeout(done, poll).unwrap_or_else(|e| e.into_inner());
+                    done = g;
+                    if *done {
+                        return;
+                    }
+                    let beats = hb_ref.count();
+                    if beats != last {
+                        last = beats;
+                        // ari-lint: allow(clock-discipline): watchdog real-time restamp,
+                        // same rationale as above.
+                        last_change = Instant::now();
+                        continue;
+                    }
+                    if last_change.elapsed() >= stall_after {
+                        // A stuck net loop *or* a stuck drain: close
+                        // every queue so both sides unblock, and turn
+                        // the session into a diagnostic Err below.
+                        stalled_ref.store(true, Ordering::SeqCst);
+                        staged_ref.close();
+                        empties_ref.close();
+                        comps_ref.close();
+                        return;
+                    }
+                }
+            });
+        }
+        // Inference loop on the calling thread; the guard closes the
+        // pipeline on every exit path so the net thread never blocks
+        // forever.
+        let _guard = CloseAllOnDrop { staged: &staged, empties: &empties, comps: &comps };
+        let r: crate::Result<()> = (|| {
+            while let Some(mut batch) = staged.pop() {
+                disp.backlog_hint = staged.len() * batch_size;
+                let n = batch.items.len();
+                let r = disp.dispatch(engine, &batch.items, &batch.x[..n * input_dim]);
+                batch.items.clear();
+                batch.x.clear();
+                let _ = empties.push(batch);
+                r?;
+                for done in disp.completions.drain(..) {
+                    anyhow::ensure!(comps.push(done).is_ok(), "completion queue closed mid-session (watchdog fired)");
+                }
+            }
+            disp.finish(engine)?;
+            for done in disp.completions.drain(..) {
+                anyhow::ensure!(comps.push(done).is_ok(), "completion queue closed during drain (watchdog fired)");
+            }
+            Ok(())
+        })();
+        if r.is_err() {
+            // Release the net thread before joining it.
+            staged.close();
+            empties.close();
+        }
+        comps.close();
+        let stats = net
+            .join()
+            .map_err(|p| anyhow::anyhow!("net front-end panicked: {}", panic_msg(p.as_ref())));
+        *wd_stop.0.lock().unwrap_or_else(|e| e.into_inner()) = true;
+        wd_stop.1.notify_all();
+        (r, stats)
+    });
+    if stalled.load(Ordering::SeqCst) {
+        anyhow::bail!(
+            "net serving stalled: no front-end heartbeat for {:?} (accept loop stuck or shutdown drain wedged); \
+             watchdog closed the pipeline",
+            robustness.watchdog_stall.unwrap_or_default()
+        );
+    }
+    serve_result?;
+    let stats = stats?;
+    let wall = t_start.elapsed();
+    anyhow::ensure!(
+        stats.routed == stats.admitted,
+        "net serving lost completions: routed {} of {} admitted",
+        stats.routed,
+        stats.admitted
+    );
+    anyhow::ensure!(
+        stats.responses_sent + stats.dropped_dead == stats.admitted + stats.shed,
+        "net serving response conservation broken: {} sent + {} dropped != {} admitted + {} shed",
+        stats.responses_sent,
+        stats.dropped_dead,
+        stats.admitted,
+        stats.shed
+    );
+    let served = stats.outcomes[0] + stats.outcomes[1];
+    Ok(NetServeReport {
+        conns_accepted: stats.conns_accepted,
+        conns_refused: stats.conns_refused,
+        protocol_errors: stats.protocol_errors,
+        frames_in: stats.frames_in,
+        admitted: stats.admitted,
+        shed: stats.shed,
+        responses_sent: stats.responses_sent,
+        dropped_dead: stats.dropped_dead,
+        outcomes: stats.outcomes,
+        throughput_rps: stats.admitted as f64 / wall.as_secs_f64().max(1e-9),
+        p50: metrics.latency.quantile(0.5),
+        p95: metrics.latency.quantile(0.95),
+        p99: metrics.latency.quantile(0.99),
+        mean_latency: metrics.latency.mean(),
+        net_wait_mean: metrics.net_wait.mean(),
+        net_wait_samples: metrics.net_wait.count(),
+        queue_wait_mean: metrics.queue_wait.mean(),
+        queue_wait_samples: metrics.queue_wait.count(),
+        degraded: metrics.degraded.load(Ordering::Relaxed),
+        rejected: metrics.rejected.load(Ordering::Relaxed),
+        failed: metrics.failed.load(Ordering::Relaxed),
+        retries: metrics.retries.load(Ordering::Relaxed),
+        energy_uj: metrics.energy_uj(),
+        energy_full_uj: served as f64 * ladder.e_full(),
+        escalation_fraction: metrics.escalation_fraction(),
+        wall,
+    })
+}

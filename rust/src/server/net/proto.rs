@@ -1,0 +1,560 @@
+//! The ARI wire protocol: length-prefixed binary frames.
+//!
+//! Every frame is a little-endian `u32` payload length followed by the
+//! payload, whose first byte is the frame kind:
+//!
+//! ```text
+//! request  (kind 1): id u64 | send_us u64 | n_features u32 | n × f32
+//! response (kind 2): id u64 | send_us u64 | outcome u8 | stage u8 | pred i32 | margin f32
+//! error    (kind 3): code u8 | detail u32
+//! ```
+//!
+//! The decoder ([`FrameBuf::next_frame`]) is **total over arbitrary
+//! bytes**: every input either yields a frame, asks for more bytes, or
+//! returns a typed [`ProtoError`] — it never panics and never
+//! allocates.  Malformed input is unrecoverable by design (a corrupted
+//! length prefix desynchronises the stream), so the contract is "typed
+//! error, then a clean connection close", mirrored on the peer by an
+//! error frame when the socket still works.  See `docs/PROTOCOL.md`
+//! for the full grammar and error taxonomy.
+
+use crate::server::CompletionOutcome;
+
+/// Frame kind tag: client → server inference request.
+pub const KIND_REQUEST: u8 = 1;
+/// Frame kind tag: server → client completion response.
+pub const KIND_RESPONSE: u8 = 2;
+/// Frame kind tag: a typed protocol error, sent before closing.
+pub const KIND_ERROR: u8 = 3;
+
+/// Most features a request frame may carry; bounds the decode buffer a
+/// malicious length prefix can demand.
+pub const MAX_FEATURES: u32 = 4096;
+/// Largest legal payload: a request frame carrying [`MAX_FEATURES`]
+/// features (fixed header 21 bytes + 4 bytes per feature).
+pub const MAX_FRAME_LEN: u32 = REQ_HEADER + 4 * MAX_FEATURES;
+
+/// Request payload bytes before the feature data: kind + id + send_us
+/// + n_features.
+const REQ_HEADER: u32 = 1 + 8 + 8 + 4;
+/// Response payload length: kind + id + send_us + outcome + stage +
+/// pred + margin.
+const RESP_LEN: u32 = 1 + 8 + 8 + 1 + 1 + 4 + 4;
+/// Error payload length: kind + code + detail.
+const ERR_LEN: u32 = 1 + 1 + 4;
+
+/// Why a byte stream failed to decode.  One variant per way the wire
+/// can lie; [`ProtoError::code`] gives the tag shipped in an error
+/// frame so the peer learns *why* it is being closed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    /// The length prefix is zero or exceeds [`MAX_FRAME_LEN`].
+    BadLength {
+        /// The offending length prefix.
+        len: u32,
+    },
+    /// The payload's first byte is not a known frame kind.
+    BadKind {
+        /// The offending kind byte.
+        kind: u8,
+    },
+    /// The payload length contradicts its kind's wire size.
+    SizeMismatch {
+        /// The frame kind whose size was violated.
+        kind: u8,
+        /// The offending payload length.
+        len: u32,
+    },
+    /// A response frame carries an unknown outcome tag.
+    BadOutcome {
+        /// The offending outcome tag.
+        tag: u8,
+    },
+    /// A request frame claims more than [`MAX_FEATURES`] features.
+    TooManyFeatures {
+        /// The claimed feature count.
+        n: u32,
+    },
+    /// The stream ended mid-frame (connection closed with a partial
+    /// frame buffered).
+    Truncated,
+    /// The peer stopped mid-frame past the read deadline (slow-loris).
+    Stalled,
+}
+
+impl ProtoError {
+    /// Wire tag for an error frame's `code` field.
+    pub fn code(&self) -> u8 {
+        match self {
+            ProtoError::BadLength { .. } => 1,
+            ProtoError::BadKind { .. } => 2,
+            ProtoError::SizeMismatch { .. } => 3,
+            ProtoError::BadOutcome { .. } => 4,
+            ProtoError::TooManyFeatures { .. } => 5,
+            ProtoError::Truncated => 6,
+            ProtoError::Stalled => 7,
+        }
+    }
+
+    /// The detail value shipped alongside [`Self::code`] in an error
+    /// frame (the offending length/kind/tag/count; 0 where the variant
+    /// carries none).
+    pub fn detail(&self) -> u32 {
+        match *self {
+            ProtoError::BadLength { len } => len,
+            ProtoError::BadKind { kind } => kind as u32,
+            ProtoError::SizeMismatch { len, .. } => len,
+            ProtoError::BadOutcome { tag } => tag as u32,
+            ProtoError::TooManyFeatures { n } => n,
+            ProtoError::Truncated | ProtoError::Stalled => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::BadLength { len } => write!(f, "bad frame length {len}"),
+            ProtoError::BadKind { kind } => write!(f, "unknown frame kind {kind}"),
+            ProtoError::SizeMismatch { kind, len } => write!(f, "payload length {len} wrong for kind {kind}"),
+            ProtoError::BadOutcome { tag } => write!(f, "unknown outcome tag {tag}"),
+            ProtoError::TooManyFeatures { n } => write!(f, "request claims {n} features (max {MAX_FEATURES})"),
+            ProtoError::Truncated => write!(f, "stream truncated mid-frame"),
+            ProtoError::Stalled => write!(f, "peer stalled mid-frame past the read deadline"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Map a completion outcome to its wire tag.
+pub fn outcome_tag(o: CompletionOutcome) -> u8 {
+    match o {
+        CompletionOutcome::Ok => 0,
+        CompletionOutcome::Degraded => 1,
+        CompletionOutcome::Rejected => 2,
+        CompletionOutcome::Failed => 3,
+    }
+}
+
+/// Map a wire tag back to its completion outcome.
+pub fn tag_outcome(tag: u8) -> Result<CompletionOutcome, ProtoError> {
+    match tag {
+        0 => Ok(CompletionOutcome::Ok),
+        1 => Ok(CompletionOutcome::Degraded),
+        2 => Ok(CompletionOutcome::Rejected),
+        3 => Ok(CompletionOutcome::Failed),
+        tag => Err(ProtoError::BadOutcome { tag }),
+    }
+}
+
+/// A decoded inference request, borrowing its feature bytes from the
+/// decode buffer (no copy until the server stages the row).
+#[derive(Clone, Copy, Debug)]
+pub struct RequestFrame<'a> {
+    /// Client-chosen request id, echoed in the response.
+    pub id: u64,
+    /// Client send timestamp (µs since its session start), echoed in
+    /// the response so the client can measure wire latency.
+    pub send_us: u64,
+    /// Raw little-endian feature bytes (`4 * n_features` of them).
+    feat: &'a [u8],
+}
+
+impl RequestFrame<'_> {
+    /// Features carried by this request.
+    pub fn n_features(&self) -> usize {
+        self.feat.len() / 4
+    }
+
+    /// Iterate the feature row without copying.
+    pub fn features(&self) -> impl Iterator<Item = f32> + '_ {
+        self.feat.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+    }
+}
+
+/// A decoded completion response.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResponseFrame {
+    /// The request id this answers.
+    pub id: u64,
+    /// The request's `send_us`, echoed verbatim.
+    pub send_us: u64,
+    /// How the completion was produced.
+    pub outcome: CompletionOutcome,
+    /// Ladder stage that served the prediction.
+    pub stage: u8,
+    /// Predicted class (`-1` when rejected or failed).
+    pub pred: i32,
+    /// Serving-stage margin (top-1 minus top-2 confidence).
+    pub margin: f32,
+}
+
+/// A decoded error frame: the peer's parting diagnosis before close.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ErrorFrame {
+    /// [`ProtoError::code`] of the error the peer hit.
+    pub code: u8,
+    /// [`ProtoError::detail`] of the error the peer hit.
+    pub detail: u32,
+}
+
+/// One decoded frame, borrowing from the decode buffer.
+#[derive(Clone, Copy, Debug)]
+pub enum Frame<'a> {
+    /// An inference request.
+    Request(RequestFrame<'a>),
+    /// A completion response.
+    Response(ResponseFrame),
+    /// A protocol-error notification.
+    Error(ErrorFrame),
+}
+
+/// Incremental, allocation-reusing frame decoder.  Feed it bytes as
+/// they arrive ([`FrameBuf::extend`]); pull complete frames with
+/// [`FrameBuf::next_frame`]; call [`FrameBuf::compact`] after draining
+/// so consumed bytes are reclaimed instead of growing the buffer.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// Consumed prefix: bytes before this offset belong to frames
+    /// already returned.
+    start: usize,
+}
+
+impl FrameBuf {
+    /// Empty decoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append freshly read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Mutable view of the unconsumed bytes (the fault layer flips a
+    /// bit here to simulate wire corruption).
+    pub fn pending_mut(&mut self) -> &mut [u8] {
+        &mut self.buf[self.start..]
+    }
+
+    /// Unconsumed bytes buffered.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Whether a partial frame is buffered — the slow-loris signal: a
+    /// peer that leaves this true past the read deadline is stalled.
+    pub fn has_partial(&self) -> bool {
+        self.pending() > 0
+    }
+
+    /// Drop everything (connection reset).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.start = 0;
+    }
+
+    /// Reclaim consumed bytes: slide the unconsumed tail to the front.
+    /// Amortised O(pending); call once per read cycle, after the
+    /// decode loop returns `Ok(None)`.
+    pub fn compact(&mut self) {
+        if self.start == 0 {
+            return;
+        }
+        let n = self.buf.len() - self.start;
+        self.buf.copy_within(self.start.., 0);
+        self.buf.truncate(n);
+        self.start = 0;
+    }
+
+    /// Decode the next complete frame, if one is buffered.
+    ///
+    /// Total over arbitrary input: `Ok(Some(frame))` consumes one
+    /// frame, `Ok(None)` means "need more bytes", `Err` is a typed
+    /// protocol error after which the stream is unrecoverable (the
+    /// caller closes the connection).  Never panics, never allocates.
+    pub fn next_frame(&mut self) -> Result<Option<Frame<'_>>, ProtoError> {
+        let start = self.start;
+        let avail = self.buf.len() - start;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([
+            self.buf[start],
+            self.buf[start + 1],
+            self.buf[start + 2],
+            self.buf[start + 3],
+        ]);
+        if len == 0 || len > MAX_FRAME_LEN {
+            return Err(ProtoError::BadLength { len });
+        }
+        if avail < 4 + len as usize {
+            return Ok(None);
+        }
+        // Consume before borrowing the payload for the return value.
+        self.start = start + 4 + len as usize;
+        let payload = &self.buf[start + 4..start + 4 + len as usize];
+        parse_payload(payload, len)
+    }
+}
+
+/// Parse one complete payload.  `payload.len() == len` and `len >= 1`
+/// are guaranteed by the caller.
+fn parse_payload(payload: &[u8], len: u32) -> Result<Option<Frame<'_>>, ProtoError> {
+    match payload[0] {
+        KIND_REQUEST => {
+            if len < REQ_HEADER {
+                return Err(ProtoError::SizeMismatch { kind: KIND_REQUEST, len });
+            }
+            let n = u32::from_le_bytes([payload[17], payload[18], payload[19], payload[20]]);
+            if n > MAX_FEATURES {
+                return Err(ProtoError::TooManyFeatures { n });
+            }
+            if len != REQ_HEADER + 4 * n {
+                return Err(ProtoError::SizeMismatch { kind: KIND_REQUEST, len });
+            }
+            Ok(Some(Frame::Request(RequestFrame {
+                id: u64_at(payload, 1),
+                send_us: u64_at(payload, 9),
+                feat: &payload[REQ_HEADER as usize..],
+            })))
+        }
+        KIND_RESPONSE => {
+            if len != RESP_LEN {
+                return Err(ProtoError::SizeMismatch { kind: KIND_RESPONSE, len });
+            }
+            Ok(Some(Frame::Response(ResponseFrame {
+                id: u64_at(payload, 1),
+                send_us: u64_at(payload, 9),
+                outcome: tag_outcome(payload[17])?,
+                stage: payload[18],
+                pred: i32::from_le_bytes([payload[19], payload[20], payload[21], payload[22]]),
+                margin: f32::from_le_bytes([payload[23], payload[24], payload[25], payload[26]]),
+            })))
+        }
+        KIND_ERROR => {
+            if len != ERR_LEN {
+                return Err(ProtoError::SizeMismatch { kind: KIND_ERROR, len });
+            }
+            Ok(Some(Frame::Error(ErrorFrame {
+                code: payload[1],
+                detail: u32::from_le_bytes([payload[2], payload[3], payload[4], payload[5]]),
+            })))
+        }
+        kind => Err(ProtoError::BadKind { kind }),
+    }
+}
+
+/// Read a little-endian `u64` at `off` (bounds checked by the caller's
+/// size verification).
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes([
+        b[off],
+        b[off + 1],
+        b[off + 2],
+        b[off + 3],
+        b[off + 4],
+        b[off + 5],
+        b[off + 6],
+        b[off + 7],
+    ])
+}
+
+/// Append one encoded request frame to `out` (a reusable write
+/// buffer — never cleared here).
+pub fn encode_request(out: &mut Vec<u8>, id: u64, send_us: u64, row: &[f32]) {
+    assert!(row.len() <= MAX_FEATURES as usize, "request row exceeds MAX_FEATURES");
+    let len = REQ_HEADER + 4 * row.len() as u32;
+    out.extend_from_slice(&len.to_le_bytes());
+    out.push(KIND_REQUEST);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&send_us.to_le_bytes());
+    out.extend_from_slice(&(row.len() as u32).to_le_bytes());
+    for v in row {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Append one encoded response frame to `out`.
+pub fn encode_response(out: &mut Vec<u8>, r: &ResponseFrame) {
+    out.extend_from_slice(&RESP_LEN.to_le_bytes());
+    out.push(KIND_RESPONSE);
+    out.extend_from_slice(&r.id.to_le_bytes());
+    out.extend_from_slice(&r.send_us.to_le_bytes());
+    out.push(outcome_tag(r.outcome));
+    out.push(r.stage);
+    out.extend_from_slice(&r.pred.to_le_bytes());
+    out.extend_from_slice(&r.margin.to_le_bytes());
+}
+
+/// Append one encoded error frame to `out`.
+pub fn encode_error(out: &mut Vec<u8>, code: u8, detail: u32) {
+    out.extend_from_slice(&ERR_LEN.to_le_bytes());
+    out.push(KIND_ERROR);
+    out.push(code);
+    out.extend_from_slice(&detail.to_le_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips() {
+        let mut wire = Vec::new();
+        let row = [0.5f32, -1.25, 3.0];
+        encode_request(&mut wire, 42, 7_000, &row);
+        let mut fb = FrameBuf::new();
+        fb.extend(&wire);
+        let Frame::Request(r) = fb.next_frame().unwrap().unwrap() else {
+            panic!("expected a request frame");
+        };
+        assert_eq!(r.id, 42);
+        assert_eq!(r.send_us, 7_000);
+        assert_eq!(r.n_features(), 3);
+        let got: Vec<f32> = r.features().collect();
+        assert_eq!(got, row);
+        assert!(matches!(fb.next_frame(), Ok(None)));
+    }
+
+    #[test]
+    fn response_and_error_round_trip() {
+        let resp = ResponseFrame {
+            id: 9,
+            send_us: 123,
+            outcome: CompletionOutcome::Degraded,
+            stage: 2,
+            pred: -1,
+            margin: 0.75,
+        };
+        let mut wire = Vec::new();
+        encode_response(&mut wire, &resp);
+        encode_error(&mut wire, ProtoError::Truncated.code(), 0);
+        let mut fb = FrameBuf::new();
+        fb.extend(&wire);
+        let Frame::Response(got) = fb.next_frame().unwrap().unwrap() else {
+            panic!("expected a response frame");
+        };
+        assert_eq!(got, resp);
+        let Frame::Error(e) = fb.next_frame().unwrap().unwrap() else {
+            panic!("expected an error frame");
+        };
+        assert_eq!(e.code, ProtoError::Truncated.code());
+        assert_eq!(e.detail, 0);
+        assert!(matches!(fb.next_frame(), Ok(None)));
+    }
+
+    #[test]
+    fn partial_frames_wait_for_more_bytes() {
+        let mut wire = Vec::new();
+        encode_request(&mut wire, 1, 0, &[1.0, 2.0]);
+        let mut fb = FrameBuf::new();
+        for (i, b) in wire.iter().enumerate() {
+            assert!(
+                matches!(fb.next_frame(), Ok(None)),
+                "no frame before byte {i} of {} arrived",
+                wire.len()
+            );
+            fb.extend(std::slice::from_ref(b));
+        }
+        assert!(matches!(fb.next_frame(), Ok(Some(Frame::Request(_)))));
+        assert!(!fb.has_partial());
+    }
+
+    #[test]
+    fn zero_and_oversized_lengths_are_typed_errors() {
+        let mut fb = FrameBuf::new();
+        fb.extend(&0u32.to_le_bytes());
+        assert_eq!(fb.next_frame().unwrap_err(), ProtoError::BadLength { len: 0 });
+        fb.clear();
+        fb.extend(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        assert_eq!(fb.next_frame().unwrap_err(), ProtoError::BadLength { len: MAX_FRAME_LEN + 1 });
+    }
+
+    #[test]
+    fn bad_kind_size_and_outcome_are_typed_errors() {
+        let mut fb = FrameBuf::new();
+        fb.extend(&1u32.to_le_bytes());
+        fb.extend(&[99u8]);
+        assert_eq!(fb.next_frame().unwrap_err(), ProtoError::BadKind { kind: 99 });
+
+        fb.clear();
+        fb.extend(&2u32.to_le_bytes());
+        fb.extend(&[KIND_ERROR, 0]);
+        assert_eq!(fb.next_frame().unwrap_err(), ProtoError::SizeMismatch { kind: KIND_ERROR, len: 2 });
+
+        // A response with an unknown outcome tag.
+        let mut wire = Vec::new();
+        encode_response(
+            &mut wire,
+            &ResponseFrame {
+                id: 0,
+                send_us: 0,
+                outcome: CompletionOutcome::Ok,
+                stage: 0,
+                pred: 0,
+                margin: 0.0,
+            },
+        );
+        wire[4 + 17] = 200; // outcome byte
+        fb.clear();
+        fb.extend(&wire);
+        assert_eq!(fb.next_frame().unwrap_err(), ProtoError::BadOutcome { tag: 200 });
+    }
+
+    #[test]
+    fn feature_count_is_bounded_and_checked() {
+        // Claimed n_features beyond the cap.
+        let mut wire = Vec::new();
+        let len = 21u32;
+        wire.extend_from_slice(&len.to_le_bytes());
+        wire.push(KIND_REQUEST);
+        wire.extend_from_slice(&[0u8; 16]); // id + send_us
+        wire.extend_from_slice(&(MAX_FEATURES + 1).to_le_bytes());
+        let mut fb = FrameBuf::new();
+        fb.extend(&wire);
+        assert_eq!(fb.next_frame().unwrap_err(), ProtoError::TooManyFeatures { n: MAX_FEATURES + 1 });
+
+        // Claimed n_features inconsistent with the payload length.
+        let mut wire = Vec::new();
+        encode_request(&mut wire, 0, 0, &[1.0, 2.0]);
+        // Rewrite n_features to 3 without adding bytes.
+        wire[4 + 17..4 + 21].copy_from_slice(&3u32.to_le_bytes());
+        let mut fb = FrameBuf::new();
+        fb.extend(&wire);
+        assert_eq!(
+            fb.next_frame().unwrap_err(),
+            ProtoError::SizeMismatch { kind: KIND_REQUEST, len: 21 + 8 }
+        );
+    }
+
+    #[test]
+    fn compact_reclaims_consumed_bytes() {
+        let mut fb = FrameBuf::new();
+        let mut wire = Vec::new();
+        encode_error(&mut wire, 1, 0);
+        for _ in 0..100 {
+            fb.extend(&wire);
+            assert!(matches!(fb.next_frame(), Ok(Some(Frame::Error(_)))));
+            fb.compact();
+            assert_eq!(fb.pending(), 0);
+        }
+        // The buffer never grew past one frame.
+        assert!(fb.buf.capacity() <= 4 * wire.len(), "compact must bound the buffer");
+    }
+
+    #[test]
+    fn outcome_tags_round_trip() {
+        for o in [
+            CompletionOutcome::Ok,
+            CompletionOutcome::Degraded,
+            CompletionOutcome::Rejected,
+            CompletionOutcome::Failed,
+        ] {
+            assert_eq!(tag_outcome(outcome_tag(o)).unwrap(), o);
+        }
+        assert_eq!(tag_outcome(4).unwrap_err(), ProtoError::BadOutcome { tag: 4 });
+    }
+}

@@ -6,9 +6,11 @@
 //! compiled out of release builds and re-introduce *specific historical
 //! bugs*), this registry is always compiled and injects *generic
 //! environmental* faults — backend errors, panics, latency spikes,
-//! queue stalls, worker death — so the serving pipeline's recovery
-//! paths (retry, supervision, degradation, watchdog) can be exercised
-//! from tests, benches, chaos CI and the `ari serve --faults` flag.
+//! queue stalls, worker death, and wire faults (connection drops,
+//! truncated/corrupted frames, split writes, accept stalls) — so the
+//! serving pipeline's recovery paths (retry, supervision, degradation,
+//! watchdog, protocol-error close) can be exercised from tests,
+//! benches, chaos CI and the `ari serve --faults` flag.
 //!
 //! The disarmed fast path is a single relaxed atomic load ([`armed`]),
 //! so instrumented hot paths cost nothing in normal operation.
@@ -61,10 +63,43 @@ pub const WORKER_DEATH: &str = "worker-death";
 /// stall — only the watchdog can convert it into a diagnostic failure,
 /// so it is never part of [`chaos_spec`]).
 pub const BATCH_STALL: &str = "batch-stall";
+/// Fault point: the net front-end abruptly closes an accepted TCP
+/// connection before reading — an IoT node vanishing mid-session.
+/// Requests already admitted from that connection still complete; their
+/// responses are counted as dropped-on-dead-connection, never lost.
+pub const CONN_DROP: &str = "conn-drop";
+/// Fault point: a connection's outbound stream is cut mid-frame (half a
+/// response is written, then the socket dies) — the peer must surface a
+/// typed `Truncated` protocol error, not a hang or a panic.
+pub const FRAME_TRUNC: &str = "frame-trunc";
+/// Fault point: one bit of a freshly read inbound byte is flipped before
+/// decoding — wire corruption.  The decoder must return a typed
+/// protocol error (or an honestly different valid frame), never panic.
+pub const FRAME_CORRUPT: &str = "frame-corrupt";
+/// Fault point: an outbound flush writes at most a few bytes — a
+/// congested peer — forcing the frame reassembly and write-backpressure
+/// paths instead of the common whole-frame write.
+pub const WRITE_SPLIT: &str = "write-split";
+/// Fault point: the accept path sleeps [`STALL`] before polling the
+/// listener — connection setup latency that exercises client
+/// reconnect-with-backoff.
+pub const ACCEPT_STALL: &str = "accept-stall";
 
 /// Every fault point the runtime defines; [`arm_spec`] rejects names
 /// outside this list so typos fail loudly instead of arming nothing.
-pub const POINTS: &[&str] = &[EXEC_ERROR, EXEC_PANIC, EXEC_DELAY, QUEUE_STALL, WORKER_DEATH, BATCH_STALL];
+pub const POINTS: &[&str] = &[
+    EXEC_ERROR,
+    EXEC_PANIC,
+    EXEC_DELAY,
+    QUEUE_STALL,
+    WORKER_DEATH,
+    BATCH_STALL,
+    CONN_DROP,
+    FRAME_TRUNC,
+    FRAME_CORRUPT,
+    WRITE_SPLIT,
+    ACCEPT_STALL,
+];
 
 /// Duration of an injected [`EXEC_DELAY`] / [`QUEUE_STALL`] hiccup.
 /// Long enough to back the pipeline up behind a 2-slot staging queue,
@@ -186,8 +221,18 @@ pub fn disarm_all() {
 /// fault point at a small probability ([`BATCH_STALL`] excluded — a
 /// true stall is a watchdog test, not a survivable environment).  Used
 /// by the CI `chaos` job via `ARI_FAULTS=<seed>`.
+///
+/// The network points ride along count-limited: their injection sites
+/// live only in `server::net`, so an in-process session never draws
+/// them, while the loopback-TCP chaos leg gets a bounded number of
+/// drops/truncations/corruptions plus a persistent low-probability
+/// write-split — enough to exercise every wire recovery path without
+/// turning the session into a reconnect storm.
 pub fn chaos_spec(seed: u64) -> String {
-    format!("{EXEC_ERROR}:0.02,{EXEC_PANIC}:0.005,{EXEC_DELAY}:0.05,{QUEUE_STALL}:0.02,{WORKER_DEATH}:1.0:2@{seed}")
+    format!(
+        "{EXEC_ERROR}:0.02,{EXEC_PANIC}:0.005,{EXEC_DELAY}:0.05,{QUEUE_STALL}:0.02,{WORKER_DEATH}:1.0:2,\
+         {CONN_DROP}:1.0:2,{FRAME_TRUNC}:1.0:1,{FRAME_CORRUPT}:1.0:2,{WRITE_SPLIT}:0.05,{ACCEPT_STALL}:1.0:2@{seed}"
+    )
 }
 
 /// Arm from a user-facing value (`--faults` / `ARI_FAULTS`): a bare

@@ -113,6 +113,36 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking enqueue for callers that must never park (the net
+    /// front-end's readiness loop).  `Ok(())` delivers exactly once,
+    /// `Err(item)` hands the item back when the queue is full *or*
+    /// closed — the caller distinguishes via [`Self::is_closed`] if it
+    /// matters.  No fault injection here: the blocking twins already
+    /// exercise [`crate::util::fault::QUEUE_STALL`], and a stall inside
+    /// a readiness loop would be a busy-spin, not backpressure.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if inner.closed || inner.buf.len() >= self.cap {
+            return Err(item);
+        }
+        inner.buf.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking dequeue: `None` when the queue is currently empty
+    /// (open or closed — callers polling a closing pipeline check
+    /// [`Self::is_closed`] to tell "drained for now" from "drained for
+    /// good").  Wakes one blocked pusher on success, like [`Self::pop`].
+    pub fn try_pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let item = inner.buf.pop_front()?;
+        drop(inner);
+        self.not_full.notify_one();
+        Some(item)
+    }
+
     /// Close the queue: every blocked pusher wakes and gets its item
     /// back as `Err`, every blocked popper wakes and drains the
     /// remaining items (which are never discarded) before `None`.
@@ -252,6 +282,45 @@ mod tests {
         for i in 0..4 {
             assert_eq!(q.pop(), Some(i));
         }
+    }
+
+    /// The non-blocking twins: full/empty/closed all report via the
+    /// return value without parking, and a `try_pop` success wakes a
+    /// blocked pusher exactly like `pop` does.
+    #[test]
+    fn try_ops_never_block() {
+        let q = BoundedQueue::new(1);
+        assert_eq!(q.try_pop(), None, "empty queue: try_pop is None, not a hang");
+        q.try_push(1u32).unwrap();
+        assert_eq!(q.try_push(2), Err(2), "full queue: try_push hands the item back");
+        assert_eq!(q.try_pop(), Some(1));
+        q.close();
+        assert_eq!(q.try_push(3), Err(3), "closed queue: try_push hands the item back");
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn try_pop_wakes_blocked_pusher() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0usize).unwrap();
+        let q2 = Arc::clone(&q);
+        // ari-lint: allow(sim-discipline): real-thread blocking leg (see above).
+        let h = std::thread::spawn(move || q2.push(1));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.try_pop(), Some(0));
+        assert_eq!(h.join().unwrap(), Ok(()), "try_pop must notify not_full");
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn try_and_blocking_ops_interleave_fifo() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.push(3).unwrap();
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
     }
 
     #[test]

@@ -73,7 +73,9 @@ fn deferred_escalation_preserves_results() {
 /// Regression: queue-wait metrics used to be recorded only on the
 /// Immediate path, making `MetricsRegistry::report()` incomparable
 /// across escalation policies.  Both policies must record exactly one
-/// queue-wait sample per dispatched request.
+/// queue-wait sample per dispatched request — and, since the ingress
+/// wait (submission → batcher enqueue) was split out of it, exactly one
+/// net-wait sample too.
 #[test]
 fn queue_wait_recorded_under_both_policies() {
     let cfg = base_cfg();
@@ -83,6 +85,11 @@ fn queue_wait_recorded_under_both_policies() {
             report.queue_wait_samples,
             cfg.requests as u64,
             "{esc:?} must record one queue-wait sample per request"
+        );
+        assert_eq!(
+            report.net_wait_samples,
+            cfg.requests as u64,
+            "{esc:?} must record one ingress-wait sample per request"
         );
     }
 }

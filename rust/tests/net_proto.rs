@@ -1,0 +1,203 @@
+//! Property/fuzz tests for the wire-protocol decoder: the
+//! [`FrameBuf`] contract is *totality* — arbitrary bytes, delivered at
+//! arbitrary split boundaries, either decode, ask for more input, or
+//! produce a typed [`ProtoError`]; never a panic, never a hang.  Valid
+//! streams must round-trip bit-exactly (including NaN feature
+//! payloads) regardless of how the bytes are chunked.
+
+use ari::server::net::proto::{
+    encode_error, encode_request, encode_response, Frame, FrameBuf, ProtoError, ResponseFrame, MAX_FRAME_LEN,
+};
+use ari::server::CompletionOutcome;
+use ari::util::proptest::{run, Config};
+use ari::util::Pcg64;
+
+/// An owned, bit-exact record of a decoded frame (frames borrow the
+/// decode buffer, so they cannot be held across `next_frame` calls).
+#[derive(Debug, PartialEq, Eq)]
+enum Rec {
+    Req { id: u64, send_us: u64, feat_bits: Vec<u32> },
+    Resp { id: u64, send_us: u64, outcome: CompletionOutcome, stage: u8, pred: i32, margin_bits: u32 },
+    Err { code: u8, detail: u32 },
+}
+
+fn record(f: Frame<'_>) -> Rec {
+    match f {
+        Frame::Request(r) => Rec::Req {
+            id: r.id,
+            send_us: r.send_us,
+            feat_bits: r.features().map(f32::to_bits).collect(),
+        },
+        Frame::Response(r) => Rec::Resp {
+            id: r.id,
+            send_us: r.send_us,
+            outcome: r.outcome,
+            stage: r.stage,
+            pred: r.pred,
+            margin_bits: r.margin.to_bits(),
+        },
+        Frame::Error(e) => Rec::Err { code: e.code, detail: e.detail },
+    }
+}
+
+/// Encode a random valid frame onto `wire`, returning its record.
+/// Feature rows and margins use arbitrary `u32` bit patterns (NaNs and
+/// infinities included) so round-trip comparison is at the bit level.
+fn push_random_frame(rng: &mut Pcg64, wire: &mut Vec<u8>) -> Rec {
+    match rng.below(3) {
+        0 => {
+            let n = rng.below(48) as usize;
+            let bits: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            let row: Vec<f32> = bits.iter().map(|&b| f32::from_bits(b)).collect();
+            let (id, send_us) = (rng.next_u64(), rng.next_u64());
+            encode_request(wire, id, send_us, &row);
+            Rec::Req { id, send_us, feat_bits: bits }
+        }
+        1 => {
+            let outcome = match rng.below(4) {
+                0 => CompletionOutcome::Ok,
+                1 => CompletionOutcome::Degraded,
+                2 => CompletionOutcome::Rejected,
+                _ => CompletionOutcome::Failed,
+            };
+            let r = ResponseFrame {
+                id: rng.next_u64(),
+                send_us: rng.next_u64(),
+                outcome,
+                stage: rng.below(8) as u8,
+                pred: rng.next_u32() as i32,
+                margin: f32::from_bits(rng.next_u32()),
+            };
+            encode_response(wire, &r);
+            Rec::Resp {
+                id: r.id,
+                send_us: r.send_us,
+                outcome,
+                stage: r.stage,
+                pred: r.pred,
+                margin_bits: r.margin.to_bits(),
+            }
+        }
+        _ => {
+            let (code, detail) = (rng.below(256) as u8, rng.next_u32());
+            encode_error(wire, code, detail);
+            Rec::Err { code, detail }
+        }
+    }
+}
+
+/// Feed `wire` into a fresh decoder in random-sized chunks, draining
+/// completely after each chunk.  Returns the decoded records and the
+/// typed error that ended the stream, if any.
+fn decode_chunked(rng: &mut Pcg64, wire: &[u8], max_chunk: u64) -> (Vec<Rec>, Option<ProtoError>) {
+    let mut fb = FrameBuf::new();
+    let mut got = Vec::new();
+    let mut off = 0;
+    while off < wire.len() {
+        let chunk = (1 + rng.below(max_chunk) as usize).min(wire.len() - off);
+        fb.extend(&wire[off..off + chunk]);
+        off += chunk;
+        loop {
+            match fb.next_frame() {
+                Ok(Some(f)) => got.push(record(f)),
+                Ok(None) => break,
+                Err(e) => return (got, Some(e)),
+            }
+        }
+        fb.compact();
+    }
+    (got, None)
+}
+
+/// Totality over garbage: random bytes at random split boundaries must
+/// never panic (the proptest harness catches panics), and the decode
+/// loop must terminate with a bounded frame count — every yielded
+/// frame consumes at least 5 wire bytes (4-byte length + 1 payload
+/// byte).
+#[test]
+fn arbitrary_bytes_never_panic_and_terminate() {
+    run(Config::cases(256), |rng| {
+        let n = rng.below(600) as usize;
+        let wire: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        let (got, err) = decode_chunked(rng, &wire, 64);
+        assert!(got.len() <= wire.len() / 5, "{} frames from {} bytes", got.len(), wire.len());
+        if let Some(e) = err {
+            // The error is typed: it has a wire code in the documented
+            // taxonomy (docs/PROTOCOL.md) and a detail value.
+            assert!((1..=7).contains(&e.code()), "unexpected error code {} for {e:?}", e.code());
+            let _ = e.detail();
+        }
+    });
+}
+
+/// Valid streams round-trip bit-exactly at every split granularity —
+/// byte-at-a-time up to whole-stream — with no error and no partial
+/// residue.
+#[test]
+fn valid_streams_round_trip_bit_exact_across_splits() {
+    run(Config::cases(128), |rng| {
+        let n_frames = 1 + rng.below(8) as usize;
+        let mut wire = Vec::new();
+        let expect: Vec<Rec> = (0..n_frames).map(|_| push_random_frame(rng, &mut wire)).collect();
+        let max_chunk = 1 + rng.below(wire.len() as u64 + 1);
+        let (got, err) = decode_chunked(rng, &wire, max_chunk);
+        assert_eq!(err, None, "valid stream must not error");
+        assert_eq!(got, expect, "round trip must be bit-exact");
+    });
+}
+
+/// One flipped byte in an otherwise valid stream: the decoder yields a
+/// prefix of intact frames, then either a typed error or frames that
+/// are merely *different* (a flipped feature bit is still a valid
+/// frame) — never a panic, never more frames than the stream carried
+/// bytes for.
+#[test]
+fn single_byte_corruption_is_typed_or_survivable() {
+    run(Config::cases(192), |rng| {
+        let n_frames = 1 + rng.below(6) as usize;
+        let mut wire = Vec::new();
+        for _ in 0..n_frames {
+            push_random_frame(rng, &mut wire);
+        }
+        let pos = rng.below(wire.len() as u64) as usize;
+        let flip = 1u8 << rng.below(8);
+        wire[pos] ^= flip;
+        let (got, err) = decode_chunked(rng, &wire, 32);
+        assert!(got.len() <= wire.len() / 5);
+        if let Some(e) = err {
+            assert!((1..=7).contains(&e.code()));
+        }
+    });
+}
+
+/// The `Truncated` contract: any *proper* prefix of a single valid
+/// frame decodes to nothing and leaves a partial buffered — the signal
+/// the connection layer converts into [`ProtoError::Truncated`] on EOF
+/// (the length prefix itself never errors on valid frames).
+#[test]
+fn every_proper_prefix_is_partial_not_error() {
+    run(Config::cases(64), |rng| {
+        let mut wire = Vec::new();
+        push_random_frame(rng, &mut wire);
+        let cut = 1 + rng.below(wire.len() as u64 - 1) as usize;
+        let mut fb = FrameBuf::new();
+        fb.extend(&wire[..cut]);
+        match fb.next_frame() {
+            Ok(None) => assert!(fb.has_partial(), "a proper prefix must leave a partial frame"),
+            Ok(Some(_)) => panic!("a proper prefix must not decode to a frame"),
+            Err(e) => panic!("a proper prefix of a valid frame must not error: {e:?}"),
+        }
+    });
+}
+
+/// A length prefix past [`MAX_FRAME_LEN`] is rejected *immediately* —
+/// the decoder must not wait for (or allocate) the claimed payload.
+#[test]
+fn oversized_length_rejected_before_buffering_payload() {
+    run(Config::cases(64), |rng| {
+        let len = MAX_FRAME_LEN + 1 + rng.next_u32() % 1_000_000;
+        let mut fb = FrameBuf::new();
+        fb.extend(&len.to_le_bytes());
+        assert_eq!(fb.next_frame().unwrap_err(), ProtoError::BadLength { len });
+    });
+}

@@ -1,0 +1,217 @@
+//! Loopback integration suite for the TCP serving tier: a real
+//! `run_net_serving` session on an ephemeral port, driven by the real
+//! `run_client` load generator over 127.0.0.1.
+//!
+//! Three contracts are pinned here:
+//!
+//! 1. **Parity** — wire serving is a transport, not a model change: for
+//!    a fixed seed, every TCP response carries bit-identical
+//!    pred/stage/margin to the same request served by the in-process
+//!    [`run_serving`] loop (FP mode, where per-row results are
+//!    independent of batch composition).
+//! 2. **Exactly-one-completion under faults** — each network fault
+//!    point, armed alone, still yields exactly one typed completion per
+//!    request on both sides of the wire: the server's conservation
+//!    ledger balances and the client accounts every sent request as
+//!    received or lost.
+//! 3. **Chaos** — the canonical `chaos_spec` schedule (all recoverable
+//!    points, the five net points included) over loopback TCP completes
+//!    under the watchdog with both ledgers balanced.
+
+use std::collections::HashMap;
+
+use ari::config::{AriConfig, Mode, ThresholdPolicy};
+use ari::coordinator::{Cascade, CascadeSpec};
+use ari::runtime::{Backend, NativeBackend};
+use ari::server::net::client::{run_client, ClientConfig, ClientReport};
+use ari::server::net::{run_net_serving, NetServeReport};
+use ari::server::{run_serving, ServeOptions};
+use ari::util::fault;
+
+fn base_cfg() -> AriConfig {
+    let mut cfg = AriConfig::default();
+    cfg.dataset = "fashion_syn".into();
+    cfg.mode = Mode::Fp;
+    cfg.reduced_level = 10;
+    cfg.threshold = ThresholdPolicy::MMax;
+    cfg.batch_size = 32;
+    cfg.requests = 192;
+    cfg.batch_timeout_us = 1000;
+    // Bound every shutdown path the tests can hit: idle-linger drain,
+    // write-stuck drop, and the slow-loris read deadline.
+    cfg.net_linger_us = 100_000;
+    cfg.net_read_deadline_us = 200_000;
+    cfg
+}
+
+/// Run one loopback session: server on this thread, client on its own.
+fn serve_loopback(cfg: &AriConfig, tune: impl FnOnce(&mut ClientConfig)) -> (NetServeReport, ClientReport) {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data(&cfg.dataset).unwrap();
+    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(cfg), &data, data.n / 2).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let mut ccfg = ClientConfig::default();
+    ccfg.addr = listener.local_addr().unwrap().to_string();
+    ccfg.seed = cfg.seed;
+    ccfg.requests = cfg.requests;
+    ccfg.rate = cfg.arrival_rate;
+    // Keep loss detection well under the test timeout.
+    ccfg.timeout = std::time::Duration::from_secs(1);
+    tune(&mut ccfg);
+    let cdata = data.clone();
+    // ari-lint: allow(sim-discipline): the loopback client models the outside world
+    // on a real thread over a real socket; the sim scheduler cannot (and should not)
+    // interleave kernel TCP.
+    let client = std::thread::spawn(move || run_client(&ccfg, &cdata));
+    let report = run_net_serving(&mut engine, &cascade.ladder, cfg, data.input_dim, ServeOptions::default(), listener)
+        .expect("net serving session failed");
+    let creport = client.join().expect("client thread panicked").expect("client session failed");
+    (report, creport)
+}
+
+/// The exactly-one-completion ledger, asserted on both ends of the wire.
+fn assert_conservation(report: &NetServeReport, creport: &ClientReport) {
+    assert_eq!(
+        report.responses_sent + report.dropped_dead,
+        report.admitted + report.shed,
+        "server response conservation broken"
+    );
+    assert_eq!(creport.received + creport.lost, creport.sent, "client conservation broken");
+    assert!(
+        creport.received <= report.responses_sent,
+        "client received {} > server sent {}",
+        creport.received,
+        report.responses_sent
+    );
+}
+
+/// Fault-free loopback serving must be a pure transport: every request
+/// answered, and every answer bit-identical to the in-process server's
+/// completion for the same seed (same rows, same ladder, FP mode).
+#[test]
+fn loopback_scores_match_in_process_serving() {
+    // Probability-0 arm: holds the fault registry's serial lock so a
+    // concurrently-running fault test in this binary cannot inject into
+    // the parity session, while injecting nothing itself.
+    let _quiesce = fault::ArmGuard::arm("conn-drop:0.0");
+    let cfg = base_cfg();
+
+    // In-process reference session, same seed and fixture.
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data(&cfg.dataset).unwrap();
+    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, data.n / 2).unwrap();
+    let inproc = run_serving(&mut engine, &cascade, &cfg, &data, None, ServeOptions::default()).unwrap();
+    let by_id: HashMap<u64, (i32, u8, u32)> = inproc
+        .completions
+        .iter()
+        .map(|c| (c.id, (c.pred, c.stage as u8, c.margin.to_bits())))
+        .collect();
+    assert_eq!(by_id.len(), cfg.requests);
+
+    let (report, creport) = serve_loopback(&cfg, |_| {});
+    assert_conservation(&report, &creport);
+    assert_eq!(report.admitted, cfg.requests as u64, "nothing may be shed in a fault-free session");
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.protocol_errors, 0);
+    assert_eq!(report.responses_sent, cfg.requests as u64);
+    assert_eq!(creport.received, cfg.requests as u64);
+    assert_eq!(creport.lost, 0);
+    assert_eq!(creport.wire_errors, 0);
+    assert_eq!(creport.outcomes, [cfg.requests as u64, 0, 0, 0], "defaults-off serving must be all Ok");
+
+    // One ingress-wait and one queue-wait sample per dispatched request.
+    assert_eq!(report.net_wait_samples, cfg.requests as u64);
+    assert_eq!(report.queue_wait_samples, cfg.requests as u64);
+
+    assert_eq!(creport.responses.len(), cfg.requests);
+    for r in &creport.responses {
+        let (pred, stage, margin_bits) = by_id[&r.id];
+        assert_eq!(r.pred, pred, "pred mismatch for request {}", r.id);
+        assert_eq!(r.stage, stage, "stage mismatch for request {}", r.id);
+        assert_eq!(r.margin.to_bits(), margin_bits, "margin bits mismatch for request {}", r.id);
+    }
+}
+
+/// `conn-drop`: the server abruptly closes an accepted connection.  The
+/// client reconnects with backoff; every request still resolves to
+/// exactly one completion or one counted loss.
+#[test]
+fn conn_drop_conserves_every_request() {
+    let _g = fault::ArmGuard::arm("conn-drop:1.0:1");
+    let (report, creport) = serve_loopback(&base_cfg(), |_| {});
+    assert_conservation(&report, &creport);
+    assert_eq!(creport.sent, 192, "the client must still send its whole schedule");
+}
+
+/// `frame-trunc`: a response stream is cut mid-frame.  The client sees
+/// a truncated stream (dead connection), reconnects, and both ledgers
+/// still balance — the half-written response is counted dropped, never
+/// delivered twice and never lost silently.
+#[test]
+fn frame_trunc_conserves_every_request() {
+    let _g = fault::ArmGuard::arm("frame-trunc:1.0:1");
+    let (report, creport) = serve_loopback(&base_cfg(), |_| {});
+    assert_conservation(&report, &creport);
+    assert_eq!(creport.sent, 192);
+}
+
+/// `frame-corrupt`: one inbound byte is flipped before decoding.  The
+/// decoder must produce a typed protocol error (or an honestly
+/// different valid frame) — and whatever it produces, conservation
+/// holds on both sides.
+#[test]
+fn frame_corrupt_conserves_every_request() {
+    let _g = fault::ArmGuard::arm("frame-corrupt:1.0:1");
+    let (report, creport) = serve_loopback(&base_cfg(), |_| {});
+    assert_conservation(&report, &creport);
+    assert_eq!(creport.sent, 192);
+}
+
+/// `write-split`: outbound flushes are chopped to a few bytes.  Purely
+/// a pacing fault — nothing may be lost, every response reassembles.
+#[test]
+fn write_split_loses_nothing() {
+    let _g = fault::ArmGuard::arm("write-split:0.4");
+    let (report, creport) = serve_loopback(&base_cfg(), |_| {});
+    assert_conservation(&report, &creport);
+    assert_eq!(creport.lost, 0, "split writes must only delay frames, not lose them");
+    assert_eq!(creport.received, 192);
+    assert_eq!(report.responses_sent, 192);
+}
+
+/// `accept-stall`: connection setup stalls.  The client's
+/// connect-with-backoff absorbs it; nothing is lost.
+#[test]
+fn accept_stall_loses_nothing() {
+    let _g = fault::ArmGuard::arm("accept-stall:1.0:2");
+    let (report, creport) = serve_loopback(&base_cfg(), |_| {});
+    assert_conservation(&report, &creport);
+    assert_eq!(creport.lost, 0);
+    assert_eq!(creport.received, 192);
+}
+
+/// The canonical chaos schedule — every recoverable fault point, the
+/// five wire points included — over real loopback TCP, with the
+/// watchdog armed: the session must complete (not hang, not bail) with
+/// both conservation ledgers balanced and at least some requests
+/// actually served.
+#[test]
+fn chaos_session_over_loopback_conserves_and_terminates() {
+    let spec = fault::chaos_spec(7);
+    for p in ["conn-drop", "frame-trunc", "frame-corrupt", "write-split", "accept-stall"] {
+        assert!(spec.contains(p), "canonical chaos spec must cover the {p} point");
+    }
+    let _g = fault::ArmGuard::arm(&spec);
+    let mut cfg = base_cfg();
+    // Survive the exec-error/exec-panic legs of the schedule, and let
+    // the watchdog bound any stuck drain.
+    cfg.retries = 3;
+    cfg.retry_backoff_us = 100;
+    cfg.watchdog_stall_us = 2_000_000;
+    let (report, creport) = serve_loopback(&cfg, |c| {
+        c.max_reconnects = 16;
+    });
+    assert_conservation(&report, &creport);
+    assert!(creport.received > 0, "a chaos session must still serve some requests");
+    assert_eq!(creport.sent, creport.received + creport.lost);
+}
