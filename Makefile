@@ -113,6 +113,16 @@ serve-smoke:
 # TCP: the client reconnects through dropped connections and truncated
 # streams, and the server's wire conservation ledger
 # (responses + dropped = admitted + shed) is enforced in-process.
+# Leg 3 is the drift leg: every staged row perturbed (drift-shift) plus
+# exec-delay latency spikes, with the closed-loop controller fully
+# enabled (per-class + load-adaptive + drift recalibration,
+# docs/ROBUSTNESS.md section *Control loop*) — the controller must
+# detect the shifted margin distribution, recalibrate online and finish
+# the session with every request completing exactly once; the batching
+# watchdog (server.watchdog_stall_us default) bounds any stall from the
+# inside, the CI job timeout from the outside.  Fixed seed: the drift
+# leg pins one reproducible schedule rather than following the CI run
+# id.
 chaos-smoke:
 	ARI_FAULTS=$${ARI_FAULTS:-1} $(CARGO) run --release --bin ari -- serve --deferred --backend native \
 		"levels=[8,12,16]" server.requests=512 server.batch_size=32 server.arrival_rate=6000 \
@@ -127,6 +137,12 @@ chaos-smoke:
 	else \
 		kill $$srv 2>/dev/null; wait $$srv; exit 1; \
 	fi
+	$(CARGO) run --release --bin ari -- serve --deferred --backend native \
+		--faults "drift-shift:1.0,exec-delay:0.2@7" \
+		"levels=[8,12,16]" server.requests=512 server.batch_size=32 server.arrival_rate=6000 \
+		control.per_class=true control.load_adaptive=true control.drift=true \
+		control.queue_high=64 control.queue_low=8 \
+		control.drift_window=128 control.drift_tolerance=0.05 control.recal_min=32
 
 # Train the MLPs and AOT-lower every resolution variant to HLO text
 # (L1/L2 python layer; needs jax).  Output: ./artifacts/

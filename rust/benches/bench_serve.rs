@@ -18,6 +18,7 @@
 
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{EscalationPolicy, Ladder, LadderSpec};
+use ari::runtime::fixture::{drift_eval, DriftSpec};
 use ari::runtime::{Backend, NativeBackend};
 use ari::server::net::client::{run_client, ClientConfig};
 use ari::server::net::run_net_serving;
@@ -105,6 +106,56 @@ fn session_with(
 
 fn session(levels: &[usize], rate: f64, requests: usize, policy: EscalationPolicy) -> ServeReport {
     session_with(levels, rate, requests, policy, None, |_| {})
+}
+
+/// One drifted serving session for the control frontier: the 3-level
+/// ladder is calibrated on the *clean* eval split, the request stream
+/// is drawn from a drifted copy (the deterministic fixture transform),
+/// and `exec-delay` spikes load the pipeline.  `adaptive` flips every
+/// `[control]` mode on (with bands sized for the bench's scale);
+/// `false` serves the same stream on static calibrated thresholds.
+fn drift_session(adaptive: bool) -> ServeReport {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let mut cfg = AriConfig::default();
+    cfg.dataset = "fashion_syn".into();
+    cfg.mode = Mode::Fp;
+    cfg.batch_size = 32;
+    cfg.requests = req(512);
+    cfg.arrival_rate = 8000.0;
+    cfg.batch_timeout_us = 500;
+    if adaptive {
+        cfg.control_per_class = true;
+        cfg.control_load_adaptive = true;
+        cfg.control_drift = true;
+        cfg.control_queue_high = 64;
+        cfg.control_queue_low = 8;
+        cfg.control_p95_high_us = 0; // queue signal only: rate-independent
+        cfg.control_drift_window = 128;
+        cfg.control_drift_tolerance = 0.05;
+        cfg.control_recal_min = 32;
+    }
+    let spec = LadderSpec {
+        dataset: cfg.dataset.clone(),
+        mode: Mode::Fp,
+        levels: vec![8, 12, 16],
+        batch: cfg.batch_size,
+        threshold: ThresholdPolicy::MMax,
+        seed: cfg.seed as u32,
+    };
+    let ladder = Ladder::calibrate(&mut engine, spec, &data, data.n / 2).unwrap();
+    let mut drifted = data.clone();
+    drift_eval(&mut drifted, &DriftSpec::default());
+    let _armed = fault::ArmGuard::arm("exec-delay:0.5@7");
+    run_serving_ladder(
+        &mut engine,
+        &ladder,
+        &cfg,
+        &drifted,
+        None,
+        ServeOptions { escalation: EscalationPolicy::Deferred },
+    )
+    .unwrap()
 }
 
 fn main() {
@@ -242,6 +293,45 @@ fn main() {
         println!(
             "{:<40} {:>9.0} {:>10.1?} {:>9.4} {:>9} {:>9}",
             name, r.throughput_rps, r.p95, r.accuracy, r.degraded, r.retries
+        );
+    }
+
+    // Self-stabilizing control frontier: calibrate on the clean split,
+    // then serve a *drifted* request stream (the deterministic fixture
+    // drift transform) under the same injected overload — once with
+    // static calibrated thresholds and once with the closed-loop
+    // controller fully enabled (per-class + load-adaptive + drift
+    // recalibration).  The frontier tracked per commit is
+    // accuracy vs modelled energy vs p95 (see docs/ROBUSTNESS.md,
+    // section *Control loop*).
+    section("closed-loop control: adaptive vs static thresholds under input drift (exec-delay:0.5@7)");
+    println!(
+        "{:<40} {:>9} {:>10} {:>9} {:>11} {:>7}",
+        "case", "req/s", "p95", "accuracy", "energy/inf", "events"
+    );
+    for (cname, adaptive) in [("static", false), ("adaptive", true)] {
+        let r = drift_session(adaptive);
+        let name = format!("3L def drifted {cname}");
+        record(&mut json, &name, &r);
+        let per_inf = r.energy_uj / r.completions.len().max(1) as f64;
+        json.add_extra(
+            &BenchResult {
+                name: format!("{name} energy"),
+                mean_ns: r.energy_uj,
+                std_ns: 0.0,
+                iters: 1,
+            },
+            None,
+            &[("energy_full_uj", r.energy_full_uj), ("energy_per_inf_uj", per_inf)],
+        );
+        println!(
+            "{:<40} {:>9.0} {:>10.1?} {:>9.4} {:>11.3} {:>7}",
+            name,
+            r.throughput_rps,
+            r.p95,
+            r.accuracy,
+            per_inf,
+            r.control_events.len()
         );
     }
 

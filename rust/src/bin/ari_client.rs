@@ -36,7 +36,8 @@ flags:\n  --connect ADDR      server address (required), e.g. 127.0.0.1:7070\n  
 --dataset NAME      synthetic dataset to draw rows from (default fashion_syn)\n  \
 --timeout-ms T      idle timeout before outstanding requests count lost (default 5000)\n  \
 --reconnects R      max (re)connect attempts (default 8)\n  \
---json NAME         ARI_BENCH_JSON entry prefix (default ari-client)\n\
+--json NAME         ARI_BENCH_JSON entry prefix (default ari-client)\n  \
+--stats             fetch and print the server's live stats snapshot, then exit\n\
 see docs/PROTOCOL.md for the wire format.";
 
 fn main() {
@@ -59,9 +60,11 @@ fn run() -> ari::Result<()> {
     let mut outstanding = 32usize;
     let mut dataset = String::from("fashion_syn");
     let mut json_name = String::from("ari-client");
+    let mut stats_only = false;
     let mut it = args.iter().peekable();
     while let Some(a) = it.next() {
         match a.as_str() {
+            "--stats" => stats_only = true,
             "--connect" => addr = Some(parse_flag(&mut it, "--connect")?.to_string()),
             "--mode" => mode_name = parse_flag(&mut it, "--mode")?.to_string(),
             "--rate" => cfg.rate = parse_flag(&mut it, "--rate")?.parse()?,
@@ -81,6 +84,25 @@ fn run() -> ari::Result<()> {
         }
     }
     cfg.addr = addr.ok_or_else(|| anyhow::anyhow!("--connect ADDR is required\n{HELP}"))?;
+    if stats_only {
+        let s = ari::server::net::client::fetch_stats(&cfg.addr, cfg.timeout)?;
+        println!("stats from {}:", cfg.addr);
+        println!(
+            "  requests: {} admitted + {} shed -> {} responses sent ({} completed)",
+            s.admitted, s.shed, s.responses_sent, s.completed
+        );
+        println!("  outcomes: degraded {} rejected {} failed {}", s.degraded, s.rejected, s.failed);
+        println!(
+            "  control: tighten level {} drifted {} recalibrations {}",
+            s.level,
+            if s.drifted { "yes" } else { "no" },
+            s.recals
+        );
+        for (i, st) in s.stages.iter().enumerate() {
+            println!("  stage {i}: served {} threshold {:.6}", st.served, st.threshold);
+        }
+        return Ok(());
+    }
     cfg.mode = match mode_name.as_str() {
         "open" => LoadMode::Open,
         "partial" => LoadMode::PartialOpen { max_outstanding: outstanding },

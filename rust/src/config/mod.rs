@@ -170,6 +170,53 @@ pub struct AriConfig {
     /// dropped, and an idle listener with no connections left begins
     /// shutdown after it.
     pub net_linger_us: u64,
+    /// Serve with per-class stage thresholds (`T_i[c]` keyed by the
+    /// stage's predicted class) instead of one global `T_i` per stage.
+    /// Off by default: global thresholds, bit-identical serving.
+    pub control_per_class: bool,
+    /// Enable the load-adaptive controller: queue depth and
+    /// sliding-window p95 tighten/relax thresholds with hysteresis.
+    /// Off by default.
+    pub control_load_adaptive: bool,
+    /// Enable drift detection + bounded online recalibration of the
+    /// stage-0 threshold from a sliding margin window.  Off by default.
+    pub control_drift: bool,
+    /// Sliding latency window length (samples) used for the control
+    /// loop's p95 signal *and* the `server.overload_p95_us` trigger.
+    pub control_window: usize,
+    /// Sliding-window p95 (µs) above which the controller tightens one
+    /// step.  0 disables the latency signal.
+    pub control_p95_high_us: u64,
+    /// Sliding-window p95 (µs) below which the controller may relax one
+    /// step (together with a drained queue).
+    pub control_p95_low_us: u64,
+    /// Queue depth (requests) at or above which the controller tightens
+    /// one step.  0 disables the depth signal.
+    pub control_queue_high: usize,
+    /// Queue depth at or below which the controller may relax one step.
+    pub control_queue_low: usize,
+    /// Hysteresis hold: a signal must persist for this many consecutive
+    /// dispatched batches before the controller moves one step.
+    pub control_hold: u32,
+    /// Threshold delta per tighten step (thresholds move down by
+    /// `step` per level, clamped at 0 — fewer escalations).
+    pub control_step: f64,
+    /// Maximum tighten level (`max_steps * step` is the largest
+    /// threshold reduction the load controller may apply).
+    pub control_max_steps: u32,
+    /// Sliding window length (stage-0 margin samples) for the drift
+    /// monitor.
+    pub control_drift_window: usize,
+    /// Drift tolerance: absolute deviation of the windowed stage-0
+    /// escalation fraction from the calibration-time baseline that
+    /// flags drift and triggers recalibration.
+    pub control_drift_tolerance: f64,
+    /// Minimum fresh margin samples between recalibrations (bounds the
+    /// recalibration rate).
+    pub control_recal_min: usize,
+    /// Clamp on recalibration: the refreshed threshold may move at most
+    /// this far from the offline-calibrated value.
+    pub control_recal_clamp: f64,
 }
 
 impl Default for AriConfig {
@@ -200,6 +247,21 @@ impl Default for AriConfig {
             net_max_in_flight: 256,
             net_write_buf_cap: 65_536,
             net_linger_us: 1_000_000,
+            control_per_class: false,
+            control_load_adaptive: false,
+            control_drift: false,
+            control_window: 64,
+            control_p95_high_us: 20_000,
+            control_p95_low_us: 5_000,
+            control_queue_high: 64,
+            control_queue_low: 8,
+            control_hold: 3,
+            control_step: 0.1,
+            control_max_steps: 4,
+            control_drift_window: 256,
+            control_drift_tolerance: 0.2,
+            control_recal_min: 64,
+            control_recal_clamp: 0.5,
         }
     }
 }
@@ -355,6 +417,77 @@ impl AriConfig {
             anyhow::ensure!(v >= 0, "net.linger_us must be >= 0, got {v}");
             self.net_linger_us = v as u64;
         }
+        if let Some(v) = doc.get_bool("control", "per_class") {
+            self.control_per_class = v;
+        }
+        if let Some(v) = doc.get_bool("control", "load_adaptive") {
+            self.control_load_adaptive = v;
+        }
+        if let Some(v) = doc.get_bool("control", "drift") {
+            self.control_drift = v;
+        }
+        if let Some(v) = doc.get_int("control", "window") {
+            anyhow::ensure!(v >= 16, "control.window must be >= 16 samples, got {v}");
+            self.control_window = v as usize;
+        }
+        if let Some(v) = doc.get_int("control", "p95_high_us") {
+            anyhow::ensure!(v >= 0, "control.p95_high_us must be >= 0, got {v}");
+            self.control_p95_high_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("control", "p95_low_us") {
+            anyhow::ensure!(v >= 0, "control.p95_low_us must be >= 0, got {v}");
+            self.control_p95_low_us = v as u64;
+        }
+        if let Some(v) = doc.get_int("control", "queue_high") {
+            anyhow::ensure!(v >= 0, "control.queue_high must be >= 0, got {v}");
+            self.control_queue_high = v as usize;
+        }
+        if let Some(v) = doc.get_int("control", "queue_low") {
+            anyhow::ensure!(v >= 0, "control.queue_low must be >= 0, got {v}");
+            self.control_queue_low = v as usize;
+        }
+        if let Some(v) = doc.get_int("control", "hold") {
+            anyhow::ensure!(v >= 1, "control.hold must be >= 1 batch, got {v}");
+            self.control_hold = v as u32;
+        }
+        if let Some(v) = doc.get_float("control", "step") {
+            anyhow::ensure!(v > 0.0, "control.step must be > 0, got {v}");
+            self.control_step = v;
+        }
+        if let Some(v) = doc.get_int("control", "max_steps") {
+            anyhow::ensure!(v >= 1, "control.max_steps must be >= 1, got {v}");
+            self.control_max_steps = v as u32;
+        }
+        if let Some(v) = doc.get_int("control", "drift_window") {
+            anyhow::ensure!(v >= 16, "control.drift_window must be >= 16 samples, got {v}");
+            self.control_drift_window = v as usize;
+        }
+        if let Some(v) = doc.get_float("control", "drift_tolerance") {
+            anyhow::ensure!(v > 0.0 && v <= 1.0, "control.drift_tolerance must be in (0,1], got {v}");
+            self.control_drift_tolerance = v;
+        }
+        if let Some(v) = doc.get_int("control", "recal_min") {
+            anyhow::ensure!(v >= 1, "control.recal_min must be >= 1 sample, got {v}");
+            self.control_recal_min = v as usize;
+        }
+        if let Some(v) = doc.get_float("control", "recal_clamp") {
+            anyhow::ensure!(v >= 0.0, "control.recal_clamp must be >= 0, got {v}");
+            self.control_recal_clamp = v;
+        }
+        // Hysteresis sanity: the relax band must sit strictly below the
+        // tighten band or the controller could oscillate on one signal.
+        anyhow::ensure!(
+            self.control_queue_high == 0 || self.control_queue_low < self.control_queue_high,
+            "control.queue_low ({}) must be < control.queue_high ({})",
+            self.control_queue_low,
+            self.control_queue_high
+        );
+        anyhow::ensure!(
+            self.control_p95_high_us == 0 || self.control_p95_low_us < self.control_p95_high_us,
+            "control.p95_low_us ({}) must be < control.p95_high_us ({})",
+            self.control_p95_low_us,
+            self.control_p95_high_us
+        );
         Ok(())
     }
 
@@ -590,6 +723,76 @@ arrival_rate = 1000.5
         assert!(c.apply_overrides(&["net.max_in_flight=0".into()]).is_err(), "zero in-flight cap");
         assert!(c.apply_overrides(&["net.read_deadline_us=-1".into()]).is_err(), "negative deadline");
         assert_eq!(c.net_max_conns, 64, "rejected override must not corrupt the config");
+    }
+
+    /// The `[control]` keys: every adaptive mode defaults OFF (serving
+    /// bit-identical to a static-threshold build), tuning knobs parse
+    /// with range validation, and inverted hysteresis bands are
+    /// rejected.
+    #[test]
+    fn control_keys_parse_and_validate() {
+        let c = AriConfig::default();
+        assert!(!c.control_per_class, "per-class mode defaults off");
+        assert!(!c.control_load_adaptive, "load controller defaults off");
+        assert!(!c.control_drift, "drift monitor defaults off");
+        assert_eq!(c.control_window, 64);
+        assert_eq!(c.control_p95_high_us, 20_000);
+        assert_eq!(c.control_p95_low_us, 5_000);
+        assert_eq!(c.control_queue_high, 64);
+        assert_eq!(c.control_queue_low, 8);
+        assert_eq!(c.control_hold, 3);
+        assert!((c.control_step - 0.1).abs() < 1e-12);
+        assert_eq!(c.control_max_steps, 4);
+        assert_eq!(c.control_drift_window, 256);
+        assert!((c.control_drift_tolerance - 0.2).abs() < 1e-12);
+        assert_eq!(c.control_recal_min, 64);
+        assert!((c.control_recal_clamp - 0.5).abs() < 1e-12);
+        let mut c = AriConfig::default();
+        c.apply_overrides(&[
+            "control.per_class=true".into(),
+            "control.load_adaptive=true".into(),
+            "control.drift=true".into(),
+            "control.window=32".into(),
+            "control.p95_high_us=10000".into(),
+            "control.p95_low_us=2000".into(),
+            "control.queue_high=128".into(),
+            "control.queue_low=16".into(),
+            "control.hold=2".into(),
+            "control.step=0.05".into(),
+            "control.max_steps=6".into(),
+            "control.drift_window=128".into(),
+            "control.drift_tolerance=0.15".into(),
+            "control.recal_min=32".into(),
+            "control.recal_clamp=0.25".into(),
+        ])
+        .unwrap();
+        assert!(c.control_per_class && c.control_load_adaptive && c.control_drift);
+        assert_eq!(c.control_window, 32);
+        assert_eq!(c.control_p95_high_us, 10_000);
+        assert_eq!(c.control_p95_low_us, 2_000);
+        assert_eq!(c.control_queue_high, 128);
+        assert_eq!(c.control_queue_low, 16);
+        assert_eq!(c.control_hold, 2);
+        assert!((c.control_step - 0.05).abs() < 1e-12);
+        assert_eq!(c.control_max_steps, 6);
+        assert_eq!(c.control_drift_window, 128);
+        assert!((c.control_drift_tolerance - 0.15).abs() < 1e-12);
+        assert_eq!(c.control_recal_min, 32);
+        assert!((c.control_recal_clamp - 0.25).abs() < 1e-12);
+        let mut c = AriConfig::default();
+        assert!(c.apply_overrides(&["control.window=8".into()]).is_err(), "window floor");
+        assert!(c.apply_overrides(&["control.hold=0".into()]).is_err(), "zero hold");
+        assert!(c.apply_overrides(&["control.step=0".into()]).is_err(), "zero step");
+        assert!(c.apply_overrides(&["control.drift_tolerance=1.5".into()]).is_err(), "tolerance range");
+        assert!(
+            c.apply_overrides(&["control.queue_low=200".into()]).is_err(),
+            "relax band above tighten band must be rejected"
+        );
+        assert!(
+            c.apply_overrides(&["control.p95_low_us=30000".into()]).is_err(),
+            "p95 relax band above tighten band must be rejected"
+        );
+        assert_eq!(c.control_window, 64, "rejected override must not corrupt the config");
     }
 
     #[test]

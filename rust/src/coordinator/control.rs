@@ -1,0 +1,680 @@
+//! Closed-loop threshold control — self-stabilizing resolution
+//! (ROADMAP open item 3).
+//!
+//! The ladder's thresholds are calibrated once, offline, against a
+//! fixed split.  This module makes resolution a *runtime* control knob
+//! wired through the dispatcher:
+//!
+//! * **Per-class thresholds** — one `T_i[c]` per stage per predicted
+//!   class (Daghero et al., 2204.03431), calibrated on the same split
+//!   by [`crate::margin::Calibration::from_pairs_classed`].  With MMax
+//!   every per-class threshold is at most the global one, so the mode
+//!   preserves calibration-set parity while escalating fewer rows.
+//! * **Load adaptation** — the dispatcher feeds queue depth and the
+//!   latencies it records into the controller; a *sliding-window* p95
+//!   (never the whole-session histogram — see the PR 7 regression this
+//!   replaces) plus the depth signal tighten thresholds under pressure
+//!   and relax them when idle.  Hysteresis (a hold count plus a dead
+//!   band between the tighten and relax bands) makes flapping
+//!   impossible under constant load.  The maximum tighten level is a
+//!   graded generalisation of the old binary degraded mode.
+//! * **Drift** — a windowed monitor over observed stage-0 margins
+//!   compares the escalation fraction at the *calibrated* threshold
+//!   against the calibration-time baseline; past the tolerance, a
+//!   bounded recalibration refreshes the base threshold from the same
+//!   sliding window (clamped to a configured distance from the offline
+//!   value) without stalling serving.  When the window recovers, the
+//!   base snaps back to the offline calibration.
+//!
+//! Every adaptation step emits a typed
+//! [`crate::metrics::ControlEvent`] into the metrics registry, so the
+//! loop is observable and replayable.  With every knob at its
+//! default-off value the controller returns exactly the ladder's
+//! calibrated thresholds and serving is bit-identical to a build
+//! without it.
+//!
+//! The controller is *driven*, never self-timed: it reads no clocks
+//! (latencies arrive as values from the dispatcher's existing stamps),
+//! takes no locks, and does all its work inline in the dispatch loop —
+//! `O(window)` per batch, allocation-free after construction.
+
+use std::collections::VecDeque;
+
+use crate::config::AriConfig;
+use crate::metrics::{ControlEvent, MetricsRegistry};
+
+use super::ladder::Ladder;
+
+/// Minimum latency samples before the p95 signal may fire (matches the
+/// PR 7 overload detector's warm-up gate).  Windows smaller than this
+/// (tests only; config enforces `window >= 16`) gate on a full window
+/// instead.
+const MIN_P95_SAMPLES: usize = 16;
+
+/// Configuration of the closed-loop threshold controller (the
+/// `[control]` config section).  All three mode switches default off:
+/// a default policy serves bit-identically to a static-threshold
+/// build.
+#[derive(Clone, Debug)]
+pub struct ControlPolicy {
+    /// Serve with per-class stage thresholds instead of one global
+    /// `T_i` per stage.
+    pub per_class: bool,
+    /// Enable load-adaptive tighten/relax with hysteresis.
+    pub load_adaptive: bool,
+    /// Enable drift detection + online recalibration.
+    pub drift: bool,
+    /// Sliding latency window length (samples) for the p95 signal.
+    pub window: usize,
+    /// Window p95 (µs) at or above which load is "high".  0 disables
+    /// the latency signal.
+    pub p95_high_us: u64,
+    /// Window p95 (µs) at or below which load counts as "low".
+    pub p95_low_us: u64,
+    /// Queue depth at or above which load is "high".  0 disables the
+    /// depth signal.
+    pub queue_high: usize,
+    /// Queue depth at or below which load counts as "low".
+    pub queue_low: usize,
+    /// Consecutive batches a signal must persist before one step.
+    pub hold: u32,
+    /// Threshold delta per tighten step.
+    pub step: f64,
+    /// Maximum tighten level.
+    pub max_steps: u32,
+    /// Sliding stage-0 margin window length for the drift monitor.
+    pub drift_window: usize,
+    /// Escalation-fraction deviation from baseline that flags drift.
+    pub drift_tolerance: f64,
+    /// Minimum fresh margin samples between drift evaluations.
+    pub recal_min: usize,
+    /// Maximum distance a recalibrated threshold may move from the
+    /// offline-calibrated value.
+    pub recal_clamp: f64,
+}
+
+impl Default for ControlPolicy {
+    fn default() -> Self {
+        Self::from_config(&AriConfig::default())
+    }
+}
+
+impl ControlPolicy {
+    /// Extract the `[control]` keys from a full configuration.
+    pub fn from_config(cfg: &AriConfig) -> Self {
+        Self {
+            per_class: cfg.control_per_class,
+            load_adaptive: cfg.control_load_adaptive,
+            drift: cfg.control_drift,
+            window: cfg.control_window,
+            p95_high_us: cfg.control_p95_high_us,
+            p95_low_us: cfg.control_p95_low_us,
+            queue_high: cfg.control_queue_high,
+            queue_low: cfg.control_queue_low,
+            hold: cfg.control_hold,
+            step: cfg.control_step,
+            max_steps: cfg.control_max_steps,
+            drift_window: cfg.control_drift_window,
+            drift_tolerance: cfg.control_drift_tolerance,
+            recal_min: cfg.control_recal_min,
+            recal_clamp: cfg.control_recal_clamp,
+        }
+    }
+
+    /// Whether any adaptive mode is on.  When false the controller is a
+    /// bit-identical pass-through over the ladder's thresholds (it may
+    /// still maintain the latency window for the overload detector).
+    pub fn enabled(&self) -> bool {
+        self.per_class || self.load_adaptive || self.drift
+    }
+}
+
+/// The closed-loop threshold controller.  Owned by the dispatcher and
+/// driven from the dispatch loop: latencies and stage-0 margins stream
+/// in per row, [`Controller::end_batch`] advances the control state
+/// once per dispatched batch, and [`Controller::threshold`] answers
+/// every accept decision.
+pub struct Controller {
+    policy: ControlPolicy,
+    /// Sliding end-to-end latency window (µs), newest at the back.
+    lat: VecDeque<u64>,
+    /// Sort scratch for the window quantile (reused, never freed).
+    lat_scratch: Vec<u64>,
+    /// Window p95 as of the last `end_batch` (µs).
+    cached_p95: u64,
+    /// Current tighten level (0 = calibrated thresholds).
+    level: u32,
+    high_streak: u32,
+    low_streak: u32,
+    /// Current per-stage base thresholds (drift recalibration moves
+    /// stage 0; the rest stay at calibration).
+    base: Vec<f64>,
+    /// Immutable offline-calibrated thresholds (recal clamp reference).
+    calibrated: Vec<f64>,
+    /// Current per-stage per-class thresholds (shifted in lock-step
+    /// with `base` under recalibration).
+    class_base: Vec<Vec<f64>>,
+    /// Offline-calibrated per-class thresholds.
+    class_calibrated: Vec<Vec<f64>>,
+    /// Calibration-time stage-0 escalation fraction (drift baseline).
+    base_esc0: f64,
+    /// Sliding window of observed stage-0 margins.
+    m0: VecDeque<f32>,
+    /// Sort scratch for recalibration quantiles.
+    m0_scratch: Vec<f32>,
+    /// Fresh margin samples since the last drift evaluation.
+    since_eval: usize,
+    /// Whether the last drift evaluation exceeded the tolerance.
+    drift_active: bool,
+    /// Sticky: whether drift was ever flagged this session.
+    drifted: bool,
+    /// Completed recalibrations.
+    recals: u64,
+}
+
+impl Controller {
+    /// Snapshot a calibrated ladder's thresholds and baselines and
+    /// start at level 0 (pass-through).
+    pub fn new(policy: ControlPolicy, ladder: &Ladder) -> Self {
+        let base: Vec<f64> = ladder.stages.iter().map(|s| s.threshold).collect();
+        let class_base: Vec<Vec<f64>> = ladder.stages.iter().map(|s| s.class_thresholds.clone()).collect();
+        let base_esc0 = ladder.stages[0].base_escalation;
+        Self {
+            lat: VecDeque::with_capacity(policy.window),
+            lat_scratch: Vec::with_capacity(policy.window),
+            cached_p95: 0,
+            level: 0,
+            high_streak: 0,
+            low_streak: 0,
+            calibrated: base.clone(),
+            class_calibrated: class_base.clone(),
+            base,
+            class_base,
+            base_esc0,
+            m0: VecDeque::with_capacity(policy.drift_window),
+            m0_scratch: Vec::with_capacity(policy.drift_window),
+            since_eval: 0,
+            drift_active: false,
+            drifted: false,
+            recals: 0,
+        }
+    }
+
+    /// The accept threshold for a row predicted as `pred` at `stage` —
+    /// per-class base (when enabled and calibrated for that class)
+    /// minus the current tighten offset, clamped at 0.  A non-finite
+    /// base (the final stage's accept-everything sentinel) is returned
+    /// untouched.  At level 0 with per-class off this is exactly the
+    /// ladder's calibrated threshold: bit-identical decisions.
+    #[inline]
+    pub fn threshold(&self, stage: usize, pred: i32) -> f64 {
+        let base = if self.policy.per_class {
+            let per = &self.class_base[stage];
+            if pred >= 0 && (pred as usize) < per.len() {
+                per[pred as usize]
+            } else {
+                self.base[stage]
+            }
+        } else {
+            self.base[stage]
+        };
+        if self.level == 0 || !base.is_finite() {
+            base
+        } else {
+            (base - self.level as f64 * self.policy.step).max(0.0)
+        }
+    }
+
+    /// Record one end-to-end latency sample (µs) into the sliding
+    /// window, displacing the oldest once full.
+    #[inline]
+    pub fn record_latency_us(&mut self, us: u64) {
+        if self.lat.len() >= self.policy.window {
+            self.lat.pop_front();
+        }
+        self.lat.push_back(us);
+    }
+
+    /// Record one observed stage-0 margin into the drift window.  A
+    /// no-op unless drift monitoring is on (zero steady-state cost for
+    /// the default configuration).
+    #[inline]
+    pub fn observe_margin(&mut self, stage: usize, margin: f32) {
+        if !self.policy.drift || stage != 0 {
+            return;
+        }
+        if self.m0.len() >= self.policy.drift_window {
+            self.m0.pop_front();
+        }
+        self.m0.push_back(margin);
+        self.since_eval += 1;
+    }
+
+    /// Advance the control loop once per dispatched batch: refresh the
+    /// window p95, then run the load and drift steps for whichever
+    /// modes are enabled.  `queue_depth` is the dispatcher's current
+    /// backlog (staged batches × batch size plus deferred escalation
+    /// queue depth).
+    pub fn end_batch(&mut self, queue_depth: usize, metrics: &MetricsRegistry) {
+        self.refresh_p95();
+        if self.policy.load_adaptive {
+            self.step_load(queue_depth, metrics);
+        }
+        if self.policy.drift {
+            self.step_drift(metrics);
+        }
+    }
+
+    /// Sliding-window p95 latency (µs) as of the last
+    /// [`Controller::end_batch`] — the overload detector's signal.
+    pub fn window_p95_us(&self) -> u64 {
+        self.cached_p95
+    }
+
+    /// Latency samples currently in the sliding window.
+    pub fn window_len(&self) -> usize {
+        self.lat.len()
+    }
+
+    /// Whether the p95 signal is warmed up (enough samples to trust).
+    pub fn window_warm(&self) -> bool {
+        self.lat.len() >= MIN_P95_SAMPLES.min(self.policy.window)
+    }
+
+    /// Current tighten level (0 = calibrated thresholds).
+    pub fn tighten_level(&self) -> u32 {
+        self.level
+    }
+
+    /// Whether the monitor currently sees drift.
+    pub fn drift_active(&self) -> bool {
+        self.drift_active
+    }
+
+    /// Whether drift was ever flagged this session.
+    pub fn drifted(&self) -> bool {
+        self.drifted
+    }
+
+    /// Completed online recalibrations.
+    pub fn recals(&self) -> u64 {
+        self.recals
+    }
+
+    /// Current effective global threshold per stage (per-class
+    /// variation aside) — what the stats frame reports.
+    pub fn effective_threshold(&self, stage: usize) -> f64 {
+        let base = self.base[stage];
+        if self.level == 0 || !base.is_finite() {
+            base
+        } else {
+            (base - self.level as f64 * self.policy.step).max(0.0)
+        }
+    }
+
+    fn refresh_p95(&mut self) {
+        if self.lat.is_empty() {
+            self.cached_p95 = 0;
+            return;
+        }
+        self.lat_scratch.clear();
+        self.lat_scratch.extend(self.lat.iter().copied());
+        self.lat_scratch.sort_unstable();
+        let n = self.lat_scratch.len();
+        let idx = ((n as f64 * 0.95).ceil() as usize).clamp(1, n) - 1;
+        self.cached_p95 = self.lat_scratch[idx];
+    }
+
+    /// One hysteresis step of the load controller.  "High" means any
+    /// enabled signal crossed its upper band; "low" means *every*
+    /// enabled signal sits at or below its lower band.  Between the
+    /// bands both streaks reset — the dead band plus the hold count is
+    /// what makes oscillation under constant load impossible.
+    fn step_load(&mut self, queue_depth: usize, metrics: &MetricsRegistry) {
+        let queue_on = self.policy.queue_high > 0;
+        let p95_on = self.policy.p95_high_us > 0;
+        let p95_warm = self.window_warm();
+        let high = (queue_on && queue_depth >= self.policy.queue_high)
+            || (p95_on && p95_warm && self.cached_p95 >= self.policy.p95_high_us);
+        let low = !high
+            && (!queue_on || queue_depth <= self.policy.queue_low)
+            && (!p95_on || !p95_warm || self.cached_p95 <= self.policy.p95_low_us);
+        if high {
+            self.low_streak = 0;
+            self.high_streak += 1;
+            if self.high_streak >= self.policy.hold && self.level < self.policy.max_steps {
+                self.level += 1;
+                self.high_streak = 0;
+                metrics.record_control(ControlEvent::Tighten { level: self.level });
+            }
+        } else if low {
+            self.high_streak = 0;
+            self.low_streak += 1;
+            if self.low_streak >= self.policy.hold && self.level > 0 {
+                self.level -= 1;
+                self.low_streak = 0;
+                metrics.record_control(ControlEvent::Relax { level: self.level });
+            }
+        } else {
+            self.high_streak = 0;
+            self.low_streak = 0;
+        }
+    }
+
+    /// One drift evaluation, rate-limited to every `recal_min` fresh
+    /// samples over a full window — the bound on recalibration work.
+    fn step_drift(&mut self, metrics: &MetricsRegistry) {
+        if self.m0.len() < self.policy.drift_window || self.since_eval < self.policy.recal_min {
+            return;
+        }
+        self.since_eval = 0;
+        let n = self.m0.len();
+        let t_cal = self.calibrated[0];
+        let escalating = self.m0.iter().filter(|&&m| (m as f64) <= t_cal).count();
+        let observed = escalating as f64 / n as f64;
+        let was_active = self.drift_active;
+        self.drift_active = (observed - self.base_esc0).abs() > self.policy.drift_tolerance;
+        if self.drift_active {
+            self.drifted = true;
+            if !was_active {
+                metrics.record_control(ControlEvent::Drift { stage: 0, observed, baseline: self.base_esc0 });
+            }
+            // Refresh: pick the window quantile that restores the
+            // calibration-time escalation fraction, clamped to the
+            // configured distance from the offline calibration.
+            self.m0_scratch.clear();
+            self.m0_scratch.extend(self.m0.iter().copied());
+            self.m0_scratch.sort_unstable_by(f32::total_cmp);
+            let k = ((self.base_esc0 * n as f64).round() as usize).min(n);
+            let target = if k == 0 { 0.0 } else { self.m0_scratch[k - 1] as f64 };
+            let t_new = target.clamp(t_cal - self.policy.recal_clamp, t_cal + self.policy.recal_clamp).max(0.0);
+            if t_new != self.base[0] {
+                metrics.record_control(ControlEvent::Recalibrated { stage: 0, from: self.base[0], to: t_new });
+                self.shift_stage0(t_new);
+                self.recals += 1;
+            }
+        } else if self.base[0] != t_cal {
+            // The window looks calibrated again: snap back to the
+            // offline thresholds.
+            metrics.record_control(ControlEvent::Recalibrated { stage: 0, from: self.base[0], to: t_cal });
+            self.shift_stage0(t_cal);
+            self.recals += 1;
+        }
+    }
+
+    /// Move stage 0's base to `t_new`, carrying the per-class table
+    /// with it (same delta from its calibrated values, floored at 0).
+    fn shift_stage0(&mut self, t_new: f64) {
+        let delta = t_new - self.calibrated[0];
+        self.base[0] = t_new;
+        for (cur, cal) in self.class_base[0].iter_mut().zip(&self.class_calibrated[0]) {
+            *cur = (cal + delta).max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, ThresholdPolicy};
+    use crate::coordinator::ladder::{LadderSpec, LadderStage};
+    use crate::data::{VariantKind, VariantRef};
+
+    fn test_ladder(t0: f64, base_esc0: f64, class_thresholds: Vec<f64>) -> Ladder {
+        let spec = LadderSpec {
+            dataset: "d".into(),
+            mode: Mode::Fp,
+            levels: vec![8, 16],
+            batch: 32,
+            threshold: ThresholdPolicy::MMax,
+            seed: 1,
+        };
+        let stage = |threshold: f64, class_thresholds: Vec<f64>, base_escalation: f64| LadderStage {
+            variant: VariantRef {
+                dataset: "d".into(),
+                kind: VariantKind::Fp,
+                level: 8,
+                batch: 32,
+                file: String::new(),
+            },
+            threshold,
+            calibration: None,
+            energy_uj: 1.0,
+            class_thresholds,
+            base_escalation,
+        };
+        let stages = vec![stage(t0, class_thresholds, base_esc0), stage(f64::NEG_INFINITY, Vec::new(), 0.0)];
+        Ladder { spec, stages }
+    }
+
+    fn load_policy(hold: u32, max_steps: u32) -> ControlPolicy {
+        ControlPolicy {
+            load_adaptive: true,
+            queue_high: 100,
+            queue_low: 10,
+            p95_high_us: 0, // queue signal only: deterministic
+            hold,
+            max_steps,
+            step: 0.1,
+            ..ControlPolicy::default()
+        }
+    }
+
+    /// Disabled controller is a bit-identical pass-through.
+    #[test]
+    fn passthrough_when_disabled() {
+        let ladder = test_ladder(0.4375, 0.2, vec![0.25, 0.4375]);
+        let policy = ControlPolicy::default();
+        assert!(!policy.enabled());
+        let mut ctl = Controller::new(policy, &ladder);
+        let m = MetricsRegistry::new();
+        for i in 0..100 {
+            ctl.record_latency_us(1_000_000 + i);
+            ctl.end_batch(10_000, &m);
+        }
+        assert_eq!(ctl.threshold(0, 0).to_bits(), 0.4375f64.to_bits());
+        assert_eq!(ctl.threshold(0, -1).to_bits(), 0.4375f64.to_bits());
+        assert_eq!(ctl.threshold(1, 3), f64::NEG_INFINITY);
+        assert_eq!(ctl.tighten_level(), 0);
+        assert!(m.control_events().is_empty());
+    }
+
+    /// Sustained high load tightens exactly to `max_steps` and stays
+    /// there; sustained idleness relaxes exactly back to 0 — the cycle
+    /// converges at both ends.
+    #[test]
+    fn tighten_relax_converges() {
+        let ladder = test_ladder(0.5, 0.2, Vec::new());
+        let mut ctl = Controller::new(load_policy(3, 4), &ladder);
+        let m = MetricsRegistry::new();
+        for _ in 0..100 {
+            ctl.end_batch(500, &m); // far above queue_high
+        }
+        assert_eq!(ctl.tighten_level(), 4, "saturates at max_steps");
+        assert!((ctl.threshold(0, 0) - 0.1).abs() < 1e-12, "0.5 - 4*0.1");
+        let tightens = m.control_events().len();
+        assert_eq!(tightens, 4, "no further events once saturated");
+        for _ in 0..100 {
+            ctl.end_batch(0, &m); // fully drained
+        }
+        assert_eq!(ctl.tighten_level(), 0, "relaxes all the way back");
+        assert_eq!(ctl.threshold(0, 0).to_bits(), 0.5f64.to_bits(), "calibrated threshold restored exactly");
+        assert_eq!(m.control_events().len(), 8, "4 tightens + 4 relaxes, nothing more");
+    }
+
+    /// A constant load anywhere — below, inside, or above the dead band
+    /// — cannot make the controller oscillate: after convergence no
+    /// further events are emitted.
+    #[test]
+    fn constant_load_cannot_oscillate() {
+        for depth in [0usize, 10, 11, 50, 99, 100, 500] {
+            let ladder = test_ladder(0.5, 0.2, Vec::new());
+            let mut ctl = Controller::new(load_policy(2, 3), &ladder);
+            let m = MetricsRegistry::new();
+            for _ in 0..200 {
+                ctl.end_batch(depth, &m);
+            }
+            let settled = m.control_events().len();
+            let level = ctl.tighten_level();
+            for _ in 0..200 {
+                ctl.end_batch(depth, &m);
+            }
+            assert_eq!(m.control_events().len(), settled, "depth {depth}: events after convergence");
+            assert_eq!(ctl.tighten_level(), level, "depth {depth}: level moved under constant load");
+            if depth >= 100 {
+                assert_eq!(level, 3, "depth {depth} saturates");
+            } else if depth <= 10 {
+                assert_eq!(level, 0, "depth {depth} stays calibrated");
+            } else {
+                assert_eq!(level, 0, "dead-band depth {depth} never moves");
+            }
+        }
+    }
+
+    /// The hold count is respected: a pressure blip shorter than `hold`
+    /// batches moves nothing.
+    #[test]
+    fn short_blips_are_ignored() {
+        let ladder = test_ladder(0.5, 0.2, Vec::new());
+        let mut ctl = Controller::new(load_policy(3, 4), &ladder);
+        let m = MetricsRegistry::new();
+        for _ in 0..50 {
+            ctl.end_batch(500, &m);
+            ctl.end_batch(500, &m);
+            ctl.end_batch(50, &m); // dead band resets the streak
+        }
+        assert_eq!(ctl.tighten_level(), 0);
+        assert!(m.control_events().is_empty());
+    }
+
+    /// The p95 signal uses the *sliding window*: a historical spike
+    /// scrolls out and the controller relaxes — the regression the
+    /// whole-session histogram could never pass.
+    #[test]
+    fn p95_window_forgets_old_spikes() {
+        let ladder = test_ladder(0.5, 0.2, Vec::new());
+        let policy = ControlPolicy {
+            load_adaptive: true,
+            queue_high: 0, // p95 signal only
+            p95_high_us: 10_000,
+            p95_low_us: 1_000,
+            window: 32,
+            hold: 2,
+            max_steps: 2,
+            ..ControlPolicy::default()
+        };
+        let mut ctl = Controller::new(policy, &ladder);
+        let m = MetricsRegistry::new();
+        for _ in 0..32 {
+            ctl.record_latency_us(50_000);
+        }
+        for _ in 0..4 {
+            ctl.end_batch(0, &m);
+        }
+        assert!(ctl.tighten_level() > 0, "spike tightens");
+        // 32 fast samples displace the whole spike from the window.
+        for _ in 0..32 {
+            ctl.record_latency_us(100);
+        }
+        for _ in 0..8 {
+            ctl.end_batch(0, &m);
+        }
+        assert_eq!(ctl.tighten_level(), 0, "window p95 must decay once the spike scrolls out");
+        assert_eq!(ctl.window_p95_us(), 100);
+    }
+
+    /// Drift detection + recalibration: a shifted margin stream flags
+    /// drift once (rising edge), refreshes the stage-0 threshold toward
+    /// the window quantile within the clamp, and snaps back to the
+    /// offline calibration when the stream recovers.
+    #[test]
+    fn drift_detects_recalibrates_and_recovers() {
+        let ladder = test_ladder(0.5, 0.5, vec![0.4, 0.5]);
+        let policy = ControlPolicy {
+            drift: true,
+            per_class: true,
+            drift_window: 64,
+            drift_tolerance: 0.2,
+            recal_min: 16,
+            recal_clamp: 0.3,
+            ..ControlPolicy::default()
+        };
+        let mut ctl = Controller::new(policy, &ladder);
+        let m = MetricsRegistry::new();
+        // Calibrated world: margins uniform over (0,1)-ish, half below
+        // T=0.5 — matches base_esc0 = 0.5, no drift.
+        for i in 0..128 {
+            ctl.observe_margin(0, (i % 100) as f32 / 100.0);
+            if i % 8 == 7 {
+                ctl.end_batch(0, &m);
+            }
+        }
+        assert!(!ctl.drift_active());
+        assert_eq!(ctl.recals(), 0);
+        // Drifted world: margins collapse toward 0 — nearly everything
+        // would escalate at the calibrated threshold.
+        for i in 0..128 {
+            ctl.observe_margin(0, 0.05 + (i % 10) as f32 / 1000.0);
+            if i % 8 == 7 {
+                ctl.end_batch(0, &m);
+            }
+        }
+        assert!(ctl.drift_active());
+        assert!(ctl.drifted());
+        assert!(ctl.recals() >= 1);
+        let events = m.control_events();
+        assert!(
+            events.iter().any(|e| matches!(e, ControlEvent::Drift { stage: 0, .. })),
+            "drift event emitted: {events:?}"
+        );
+        let t = ctl.threshold(0, 5); // out-of-range class: global base
+        assert!(t < 0.5, "threshold moved down toward the drifted quantile, got {t}");
+        assert!(t >= 0.5 - 0.3 - 1e-12, "clamped to recal_clamp below calibration, got {t}");
+        // Per-class table shifted in lock-step (same delta, floored).
+        let delta = t - 0.5;
+        assert!((ctl.threshold(0, 0) - (0.4 + delta).max(0.0)).abs() < 1e-12);
+        // Recovery: the stream returns to the calibrated distribution.
+        for i in 0..128 {
+            ctl.observe_margin(0, (i % 100) as f32 / 100.0);
+            if i % 8 == 7 {
+                ctl.end_batch(0, &m);
+            }
+        }
+        assert!(!ctl.drift_active());
+        assert_eq!(ctl.threshold(0, 5).to_bits(), 0.5f64.to_bits(), "offline calibration restored exactly");
+        assert_eq!(ctl.threshold(0, 0).to_bits(), 0.4f64.to_bits());
+    }
+
+    /// Per-class mode keys the base threshold on the predicted class
+    /// and composes with the tighten offset.
+    #[test]
+    fn per_class_thresholds_compose_with_tighten() {
+        let ladder = test_ladder(0.5, 0.2, vec![0.2, 0.5, 0.35]);
+        let policy = ControlPolicy { per_class: true, ..load_policy(1, 2) };
+        let mut ctl = Controller::new(policy, &ladder);
+        let m = MetricsRegistry::new();
+        assert_eq!(ctl.threshold(0, 0).to_bits(), 0.2f64.to_bits());
+        assert_eq!(ctl.threshold(0, 2).to_bits(), 0.35f64.to_bits());
+        assert_eq!(ctl.threshold(0, 9).to_bits(), 0.5f64.to_bits(), "unknown class falls back to global");
+        ctl.end_batch(500, &m); // hold=1: tightens immediately
+        assert_eq!(ctl.tighten_level(), 1);
+        assert!((ctl.threshold(0, 0) - 0.1).abs() < 1e-12);
+        assert!((ctl.threshold(0, 2) - 0.25).abs() < 1e-12);
+        assert_eq!(ctl.threshold(1, 0), f64::NEG_INFINITY, "final stage still accepts everything");
+    }
+
+    /// Tightening can never push a threshold below 0 or disturb the
+    /// final stage's accept-everything sentinel.
+    #[test]
+    fn tighten_clamps_at_zero() {
+        let ladder = test_ladder(0.15, 0.2, Vec::new());
+        let mut ctl = Controller::new(load_policy(1, 4), &ladder);
+        let m = MetricsRegistry::new();
+        for _ in 0..8 {
+            ctl.end_batch(500, &m);
+        }
+        assert_eq!(ctl.tighten_level(), 4);
+        assert_eq!(ctl.threshold(0, 0), 0.0, "0.15 - 0.4 clamps at 0");
+        assert_eq!(ctl.threshold(1, 0), f64::NEG_INFINITY);
+    }
+}

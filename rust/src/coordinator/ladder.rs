@@ -84,6 +84,16 @@ pub struct LadderStage {
     pub calibration: Option<Calibration>,
     /// Modelled energy per inference at this stage (µJ).
     pub energy_uj: f64,
+    /// Per-class thresholds `T_i[c]` keyed by this stage's predicted
+    /// class, calibrated on the same split (Daghero et al.,
+    /// 2204.03431).  Empty for the final stage.  Only consulted when
+    /// `control.per_class` is on — the global `threshold` stays the
+    /// bit-identical default.
+    pub class_thresholds: Vec<f64>,
+    /// Calibration-time escalation fraction at `threshold` over all
+    /// calibration elements — the drift monitor's baseline (0.0 for the
+    /// final stage).
+    pub base_escalation: f64,
 }
 
 /// Result of one batch run through a ladder.
@@ -103,6 +113,10 @@ pub struct LadderBatch {
     pub energy_uj: f64,
     /// Stage-0 predictions before any overwrite — kept for analysis.
     pub first_pred: Vec<i32>,
+    /// Stage-0 margins before any overwrite.  Every row carries one
+    /// (escalated rows overwrite `margin` with the deeper stage's), so
+    /// the drift monitor sees the *unbiased* stage-0 margin stream.
+    pub first_margin: Vec<f32>,
     /// Classes per row, as reported by the backend outputs.
     pub n_classes: usize,
 }
@@ -119,6 +133,7 @@ impl LadderBatch {
             stage_counts: Vec::new(),
             energy_uj: 0.0,
             first_pred: Vec::new(),
+            first_margin: Vec::new(),
             n_classes: 0,
         }
     }
@@ -218,12 +233,29 @@ impl Ladder {
                 Mode::Sc => energy.sc_energy(crate::sc::ScConfig::new(spec.levels[i])),
             };
             if i + 1 == n_stages {
-                stages.push(LadderStage { variant, threshold: f64::NEG_INFINITY, calibration: None, energy_uj });
+                stages.push(LadderStage {
+                    variant,
+                    threshold: f64::NEG_INFINITY,
+                    calibration: None,
+                    energy_uj,
+                    class_thresholds: Vec::new(),
+                    base_escalation: 0.0,
+                });
             } else {
                 let out = engine.run_dataset(&variant, &calib_slice, spec.seed.wrapping_add(i as u32 + 1))?;
-                let calibration = Calibration::from_pairs(&full_out.pred, &out.pred, &out.margin);
+                let calibration =
+                    Calibration::from_pairs_classed(&full_out.pred, &out.pred, &out.margin, full_out.n_classes);
                 let threshold = calibration.threshold(spec.threshold);
-                stages.push(LadderStage { variant, threshold, calibration: Some(calibration), energy_uj });
+                let class_thresholds = calibration.class_thresholds(spec.threshold, threshold);
+                let base_escalation = Calibration::escalation_fraction(&out.margin, threshold);
+                stages.push(LadderStage {
+                    variant,
+                    threshold,
+                    calibration: Some(calibration),
+                    energy_uj,
+                    class_thresholds,
+                    base_escalation,
+                });
             }
         }
         Ok(Self { spec, stages })
@@ -332,6 +364,25 @@ impl Ladder {
         scratch: &mut LadderScratch,
         out: &mut LadderBatch,
     ) -> crate::Result<()> {
+        self.infer_batch_with(engine, x, n, key_seed, scratch, out, &|s, _| self.stages[s].threshold)
+    }
+
+    /// [`Ladder::infer_batch_into`] with an injectable accept threshold:
+    /// `thr(stage, pred)` supplies the threshold each row's margin is
+    /// tested against (the closed-loop controller routes per-class and
+    /// load-tightened values through here).  With the static closure
+    /// `|s, _| stages[s].threshold` the decisions — and hence the
+    /// outputs — are bit-identical to [`Ladder::infer_batch_into`].
+    pub fn infer_batch_with(
+        &self,
+        engine: &mut dyn Backend,
+        x: &[f32],
+        n: usize,
+        key_seed: u32,
+        scratch: &mut LadderScratch,
+        out: &mut LadderBatch,
+        thr: &dyn Fn(usize, i32) -> f64,
+    ) -> crate::Result<()> {
         let (first, _) = self.run_stage_scratch(engine, 0, x, n, key_seed, scratch)?;
         out.pred.clear();
         out.pred.extend_from_slice(&first.pred);
@@ -339,6 +390,8 @@ impl Ladder {
         out.margin.extend_from_slice(&first.margin);
         out.first_pred.clear();
         out.first_pred.extend_from_slice(&first.pred);
+        out.first_margin.clear();
+        out.first_margin.extend_from_slice(&first.margin);
         out.stage.clear();
         out.stage.resize(n, 0);
         out.stage_counts.clear();
@@ -353,7 +406,7 @@ impl Ladder {
         let mut next_rows = std::mem::take(&mut scratch.next_rows);
         let mut gathered = std::mem::take(&mut scratch.gathered);
         rows.clear();
-        rows.extend((0..n).filter(|&i| !accepts(first.margin[i], self.stages[0].threshold)));
+        rows.extend((0..n).filter(|&i| !accepts(first.margin[i], thr(0, first.pred[i]))));
         engine.recycle_outputs(first);
         let mut result = Ok(());
         'stages: for s in 1..self.stages.len() {
@@ -379,7 +432,7 @@ impl Ladder {
                     out.pred[i] = stage_out.pred[j];
                     out.margin[i] = stage_out.margin[j];
                     out.stage[i] = s;
-                    if s + 1 < self.stages.len() && !accepts(stage_out.margin[j], self.stages[s].threshold) {
+                    if s + 1 < self.stages.len() && !accepts(stage_out.margin[j], thr(s, stage_out.pred[j])) {
                         next_rows.push(i);
                     }
                 }
@@ -409,6 +462,7 @@ impl Ladder {
             stage_counts: vec![0; self.stages.len()],
             energy_uj: 0.0,
             first_pred: Vec::with_capacity(data.n),
+            first_margin: Vec::with_capacity(data.n),
             n_classes: 0,
         };
         let mut chunkid = 0u32;
@@ -424,6 +478,7 @@ impl Ladder {
             }
             agg.energy_uj += out.energy_uj;
             agg.first_pred.extend(out.first_pred);
+            agg.first_margin.extend(out.first_margin);
             agg.n_classes = out.n_classes;
             lo = hi;
             chunkid += 1;
@@ -498,6 +553,8 @@ mod tests {
                 threshold: 0.0,
                 calibration: None,
                 energy_uj: level as f64,
+                class_thresholds: Vec::new(),
+                base_escalation: 0.0,
             })
             .collect();
         Ladder { spec, stages }
@@ -544,6 +601,7 @@ mod tests {
             stage_counts: vec![4, 2, 1],
             energy_uj: 0.0,
             first_pred: vec![0; 4],
+            first_margin: vec![0.0; 4],
             n_classes: 10,
         };
         assert_eq!(b.stage_fractions(), vec![1.0, 0.5, 0.25]);

@@ -8,12 +8,17 @@
 //!   there, the rest escalate — with per-stage energy accounting
 //!   `E = Σ_i f_i · E_i` (the paper's eq. 1 generalised);
 //! * [`cascade`] — the paper's two-tier special case, kept as a thin
-//!   wrapper over a 2-level ladder (paper Fig. 7b).
+//!   wrapper over a 2-level ladder (paper Fig. 7b);
+//! * [`control`] — the closed-loop threshold controller: per-class
+//!   thresholds, load-adaptive tighten/relax with hysteresis, and drift
+//!   detection with bounded online recalibration.
 
 pub mod batcher;
 pub mod cascade;
+pub mod control;
 pub mod ladder;
 
 pub use batcher::{Batch, Batcher, BatcherPolicy, FireReason, Pending};
 pub use cascade::{Cascade, CascadeBatch, CascadeSpec, EscalationPolicy};
+pub use control::{ControlPolicy, Controller};
 pub use ladder::{Ladder, LadderBatch, LadderScratch, LadderSpec, LadderStage};

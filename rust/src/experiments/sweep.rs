@@ -164,6 +164,64 @@ pub fn ladder_table(
     Ok(s)
 }
 
+/// The `ari sweep --drift` table: one calibrated ladder evaluated on
+/// progressively drifted copies of the eval split (the fixture suite's
+/// [`DriftSpec`](crate::runtime::fixture::DriftSpec) transform, scaled
+/// by an intensity factor).  Thresholds are calibrated once on the
+/// undrifted stream and held static, so the table shows exactly the
+/// failure mode the control loop's drift monitor exists for: early-stage
+/// margins collapse, acceptance decisions go stale, and ladder accuracy
+/// falls away from the full model's on the same drifted rows.
+#[allow(clippy::too_many_arguments)]
+pub fn drift_table(
+    engine: &mut dyn Backend,
+    ds: &str,
+    mode: Mode,
+    levels: &[usize],
+    threshold: ThresholdPolicy,
+    calib_fraction: f64,
+    batch: usize,
+    seed: u32,
+) -> crate::Result<String> {
+    use crate::runtime::fixture::{drift_eval, DriftSpec};
+    let data = engine.eval_data(ds)?;
+    let n_calib = (((data.n as f64) * calib_fraction) as usize).clamp(1, data.n);
+    let spec = LadderSpec { dataset: ds.to_string(), mode, levels: levels.to_vec(), batch, threshold, seed };
+    let ladder = Ladder::calibrate(engine, spec, &data, n_calib)?;
+    let kind = mode.kind();
+    let full_level = *levels.last().unwrap();
+    let full_v = engine.manifest().variant(ds, kind, full_level, batch)?.clone();
+    let mut s = format!(
+        "drift sweep: {ds} {mode:?} levels={levels:?} threshold={threshold} calib_rows={n_calib} eval_rows={}\n",
+        data.n
+    );
+    s.push_str("(thresholds calibrated on the undrifted stream and held static; `[control] drift = true` recalibrates online)\n");
+    s.push_str("drift | stage fractions f_i | E/inf µJ | ladder acc | full acc\n");
+    let base = DriftSpec::default();
+    for intensity in [0.0f32, 0.25, 0.5, 1.0, 1.5, 2.0] {
+        let drift = DriftSpec {
+            scale: 1.0 + intensity * (base.scale - 1.0),
+            shift: intensity * base.shift,
+            noise: intensity * base.noise,
+            seed: base.seed,
+        };
+        let mut drifted = data.clone();
+        drift_eval(&mut drifted, &drift);
+        let (out, _) = ladder.infer_dataset(engine, &drifted)?;
+        let n = drifted.n.max(1) as f64;
+        let acc = out.pred.iter().zip(&drifted.y).filter(|(a, b)| a == b).count() as f64 / n;
+        let full_out = engine.run_dataset(&full_v, &drifted, seed)?;
+        let full_acc = full_out.pred.iter().zip(&drifted.y).filter(|(a, b)| a == b).count() as f64 / n;
+        let fracs =
+            out.stage_fractions().iter().map(|f| format!("{f:.3}")).collect::<Vec<_>>().join("/");
+        s.push_str(&format!(
+            "{intensity:4.2}x | {fracs} | {:.5} | {acc:.4} | {full_acc:.4}\n",
+            out.energy_uj / n
+        ));
+    }
+    Ok(s)
+}
+
 /// The `ladder` experiment: FP candidate ladders (pairs + multi-level)
 /// on the first manifest dataset at the sweep batch size.
 pub fn ladder_report(engine: &mut dyn Backend) -> crate::Result<String> {

@@ -4,7 +4,7 @@
 //! ari info       [--artifacts DIR] [--backend B]
 //! ari calibrate  [--artifacts DIR] [--backend B] [overrides…]   per-stage threshold table
 //! ari serve      [--artifacts DIR] [--backend B] [--config FILE] [--deferred] [--listen ADDR] [overrides…]
-//! ari sweep      [--artifacts DIR] [--backend B] [--ladder] [overrides…]   ladder tradeoff table
+//! ari sweep      [--artifacts DIR] [--backend B] [--ladder] [--drift] [overrides…]   tradeoff tables
 //! ari experiment <id|all> [--artifacts DIR] [--backend B] [--out DIR]
 //! ari bench-exec [--artifacts DIR] [--backend B] [overrides…]   raw execute timing
 //! ari fixture    --out DIR                                      write synthetic artifacts
@@ -48,6 +48,7 @@ struct Cli {
     out: Option<PathBuf>,
     deferred: bool,
     ladder: bool,
+    drift: bool,
     faults: Option<String>,
     listen: Option<String>,
     positional: Vec<String>,
@@ -62,6 +63,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
         out: None,
         deferred: false,
         ladder: false,
+        drift: false,
         faults: None,
         listen: None,
         positional: Vec::new(),
@@ -76,6 +78,7 @@ fn parse_cli(args: &[String]) -> ari::Result<Cli> {
             "--out" => cli.out = Some(PathBuf::from(next_val(&mut it, "--out")?)),
             "--deferred" => cli.deferred = true,
             "--ladder" => cli.ladder = true,
+            "--drift" => cli.drift = true,
             "--faults" => cli.faults = Some(next_val(&mut it, "--faults")?.to_string()),
             "--listen" => cli.listen = Some(next_val(&mut it, "--listen")?.to_string()),
             "--help" | "-h" => {
@@ -96,6 +99,8 @@ fn next_val<'a>(it: &mut std::iter::Peekable<std::slice::Iter<'a, String>>, flag
 const HELP: &str = "ari — Adaptive Resolution Inference\n\
 commands:\n  info | calibrate | serve | sweep | experiment <id|all> | bench-exec | fixture\n\
 flags: --artifacts DIR  --backend auto|native|pjrt  --config FILE  --out DIR  --deferred  --ladder\n  \
+--drift        sweep the configured ladder over progressively drifted eval streams (static\n  \
+               thresholds; shows the staleness the [control] loop corrects — docs/ROBUSTNESS.md)\n  \
 --faults SPEC  arm fault injection for serve (point[:prob[:count]],…[@seed] or a bare chaos seed;\n  \
                also read from ARI_FAULTS; see docs/ROBUSTNESS.md)\n  \
 --listen ADDR  serve over TCP (length-prefixed wire protocol, see docs/PROTOCOL.md) instead of\n  \
@@ -224,6 +229,27 @@ fn dispatch(args: &[String]) -> ari::Result<()> {
             let cfg = load_config(&cli)?;
             let mut engine = open_backend(&cfg.artifacts, cli.backend)?;
             let kind = cfg.mode.kind();
+            if cli.drift {
+                // Drift axis instead of the ladder axis: one ladder,
+                // static thresholds, progressively drifted streams.
+                let levels = if cfg.levels.is_empty() {
+                    vec![cfg.reduced_level, ari::experiments::sweep::Sweep::full_level(kind)]
+                } else {
+                    cfg.levels.clone()
+                };
+                let table = ari::experiments::sweep::drift_table(
+                    engine.as_mut(),
+                    &cfg.dataset,
+                    cfg.mode,
+                    &levels,
+                    cfg.threshold,
+                    cfg.calib_fraction,
+                    cfg.batch_size,
+                    cfg.seed as u32,
+                )?;
+                print!("{table}");
+                return Ok(());
+            }
             let mut ladders =
                 ari::experiments::sweep::candidate_ladders(engine.as_ref(), &cfg.dataset, kind, cli.ladder);
             if !cfg.levels.is_empty() {

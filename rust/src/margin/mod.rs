@@ -20,6 +20,12 @@ pub struct Calibration {
     pub n: usize,
     /// Count with identical predictions.
     pub agree: usize,
+    /// Per-class mode (Daghero et al., 2204.03431): `class_margins[c]`
+    /// holds the changed-element margins of calibration elements the
+    /// *reduced* model predicted as class `c`.  Empty (the
+    /// [`Calibration::from_pairs`] default) means global-only — the
+    /// bit-identical single-`T` mode.
+    pub class_margins: Vec<Vec<f64>>,
 }
 
 impl Calibration {
@@ -36,7 +42,56 @@ impl Calibration {
                 changed.push(reduced_margin[i] as f64);
             }
         }
-        Self { changed_margins: changed, n: full_pred.len(), agree }
+        Self { changed_margins: changed, n: full_pred.len(), agree, class_margins: Vec::new() }
+    }
+
+    /// Build the per-class mode: like [`Calibration::from_pairs`] but the
+    /// changed-element margins are additionally bucketed by the reduced
+    /// model's predicted class, enabling one `T[c]` per class from the
+    /// same split.  Out-of-range predictions fall into the global pool
+    /// only.
+    pub fn from_pairs_classed(
+        full_pred: &[i32],
+        reduced_pred: &[i32],
+        reduced_margin: &[f32],
+        n_classes: usize,
+    ) -> Self {
+        let mut cal = Self::from_pairs(full_pred, reduced_pred, reduced_margin);
+        let mut buckets = vec![Vec::new(); n_classes];
+        for i in 0..full_pred.len() {
+            if full_pred[i] != reduced_pred[i] {
+                let c = reduced_pred[i];
+                if c >= 0 && (c as usize) < n_classes {
+                    buckets[c as usize].push(reduced_margin[i] as f64);
+                }
+            }
+        }
+        cal.class_margins = buckets;
+        cal
+    }
+
+    /// Per-class thresholds for a policy.  A class whose bucket is empty
+    /// (the reduced model never disagreed with the full model on it in
+    /// calibration — or it was never predicted) falls back to
+    /// `fallback`, normally the global threshold: unseen classes must
+    /// not silently accept everything.  With [`ThresholdPolicy::MMax`]
+    /// every per-class threshold is <= the global one, so per-class mode
+    /// preserves calibration-set parity while escalating no more (and
+    /// usually fewer) elements.
+    pub fn class_thresholds(&self, policy: ThresholdPolicy, fallback: f64) -> Vec<f64> {
+        self.class_margins
+            .iter()
+            .map(|bucket| {
+                if bucket.is_empty() {
+                    fallback
+                } else {
+                    match policy {
+                        ThresholdPolicy::Fixed(t) => t,
+                        p => margin_threshold(bucket, p.coverage().unwrap()),
+                    }
+                }
+            })
+            .collect()
     }
 
     /// Fraction of elements whose class changed under quantisation.
@@ -153,6 +208,43 @@ mod tests {
         assert_eq!(c.threshold(ThresholdPolicy::MMax), 0.0);
         // and nothing escalates except exact-zero margins
         assert!(accepts(0.4, 0.0));
+    }
+
+    /// Per-class MMax thresholds cover every changed element of their
+    /// class (calibration-set parity) while never exceeding the global
+    /// threshold — per-class mode can only reduce escalations.
+    #[test]
+    fn per_class_thresholds_cover_changes_below_global() {
+        let full = [0, 0, 1, 1, 1, 0, 1, 0];
+        let red = [0, 1, 1, 0, 1, 1, 1, 0]; // changes at 1 (pred 1), 3 (pred 0), 5 (pred 1)
+        let marg = [0.9f32, 0.15, 0.8, 0.40, 0.7, 0.25, 0.6, 0.5];
+        let c = Calibration::from_pairs_classed(&full, &red, &marg, 2);
+        let global = c.threshold(ThresholdPolicy::MMax);
+        assert!((global - 0.40).abs() < 1e-7);
+        let per = c.class_thresholds(ThresholdPolicy::MMax, global);
+        assert_eq!(per.len(), 2);
+        assert!((per[0] - 0.40).abs() < 1e-7, "class 0 covers its one change");
+        assert!((per[1] - 0.25).abs() < 1e-7, "class 1 tighter than global");
+        for (i, &m) in marg.iter().enumerate() {
+            if full[i] != red[i] {
+                assert!(!accepts(m, per[red[i] as usize]), "changed element {i} accepted");
+            }
+        }
+        for t in &per {
+            assert!(*t <= global + 1e-12);
+        }
+        // The plain constructor stays global-only.
+        let plain = Calibration::from_pairs(&full, &red, &marg);
+        assert!(plain.class_margins.is_empty());
+    }
+
+    /// Classes the calibration never saw a disagreement for fall back to
+    /// the supplied (global) threshold instead of accepting everything.
+    #[test]
+    fn per_class_empty_bucket_falls_back() {
+        let c = Calibration::from_pairs_classed(&[0, 1], &[0, 1], &[0.4, 0.6], 3);
+        let per = c.class_thresholds(ThresholdPolicy::MMax, 0.33);
+        assert_eq!(per, vec![0.33, 0.33, 0.33]);
     }
 
     #[test]

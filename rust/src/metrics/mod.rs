@@ -114,6 +114,52 @@ pub struct MetricsRegistry {
     pub retries: AtomicU64,
     /// Named counters for anything else (failure injection, retries…).
     extra: Mutex<std::collections::BTreeMap<String, u64>>,
+    /// Ordered log of every adaptation step the threshold controller
+    /// took (see [`ControlEvent`]) — the control loop's replayable
+    /// observability trail.
+    control_events: Mutex<Vec<ControlEvent>>,
+}
+
+/// One adaptation step taken by the closed-loop threshold controller
+/// (`coordinator::control`).  Recorded in order into the
+/// [`MetricsRegistry`] so a session's control trajectory is observable
+/// and replayable after the fact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ControlEvent {
+    /// Load pressure held for the hysteresis window: thresholds moved
+    /// one step down (fewer escalations).  Carries the new tighten
+    /// level.
+    Tighten {
+        /// Tighten level after this step (1..=max_steps).
+        level: u32,
+    },
+    /// Load stayed below the relax band: thresholds moved one step back
+    /// toward calibration.  Carries the new tighten level.
+    Relax {
+        /// Tighten level after this step (0..max_steps).
+        level: u32,
+    },
+    /// The windowed escalation fraction at a stage deviated from the
+    /// calibration-time baseline past the configured tolerance.
+    Drift {
+        /// Ladder stage whose margin statistics drifted.
+        stage: usize,
+        /// Escalation fraction observed over the sliding window.
+        observed: f64,
+        /// Calibration-time baseline escalation fraction.
+        baseline: f64,
+    },
+    /// Online recalibration refreshed a stage's base threshold from the
+    /// sliding margin window (clamped to the configured distance from
+    /// the offline calibration).
+    Recalibrated {
+        /// Ladder stage recalibrated.
+        stage: usize,
+        /// Base threshold before the refresh.
+        from: f64,
+        /// Base threshold after the refresh.
+        to: f64,
+    },
 }
 
 impl MetricsRegistry {
@@ -127,6 +173,18 @@ impl MetricsRegistry {
     /// unrelated panic would hide the very incident being counted.
     pub fn bump(&self, name: &str, by: u64) {
         *self.extra.lock().unwrap_or_else(|e| e.into_inner()).entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Append one typed control-loop adaptation step.  Recovers a
+    /// poisoned guard for the same reason [`MetricsRegistry::bump`]
+    /// does: the log is plain data and must survive unrelated panics.
+    pub fn record_control(&self, event: ControlEvent) {
+        self.control_events.lock().unwrap_or_else(|e| e.into_inner()).push(event);
+    }
+
+    /// Snapshot of the control-event log, in recording order.
+    pub fn control_events(&self) -> Vec<ControlEvent> {
+        self.control_events.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Account modelled energy (µJ, stored as integer nJ).
@@ -183,6 +241,22 @@ impl MetricsRegistry {
             self.failed.load(Ordering::Relaxed),
             self.retries.load(Ordering::Relaxed)
         ));
+        let events = self.control_events.lock().unwrap_or_else(|e| e.into_inner());
+        if !events.is_empty() {
+            let (mut tighten, mut relax, mut drift, mut recal) = (0u64, 0u64, 0u64, 0u64);
+            for e in events.iter() {
+                match e {
+                    ControlEvent::Tighten { .. } => tighten += 1,
+                    ControlEvent::Relax { .. } => relax += 1,
+                    ControlEvent::Drift { .. } => drift += 1,
+                    ControlEvent::Recalibrated { .. } => recal += 1,
+                }
+            }
+            s.push_str(&format!(
+                "control: tighten {tighten} relax {relax} drift {drift} recalibrated {recal}\n"
+            ));
+        }
+        drop(events);
         for (k, v) in self.extra.lock().unwrap_or_else(|e| e.into_inner()).iter() {
             s.push_str(&format!("{k}: {v}\n"));
         }
@@ -280,6 +354,24 @@ mod tests {
         .join();
         m.bump("after-poison", 1);
         assert!(m.report().contains("after-poison: 1"));
+    }
+
+    /// Control events are recorded in order, survive snapshotting, and
+    /// surface as one summary line in the report — absent entirely when
+    /// the controller never acted (the default-off configuration).
+    #[test]
+    fn control_events_recorded_in_order() {
+        let m = MetricsRegistry::new();
+        assert!(!m.report().contains("control:"), "quiet sessions must not mention control");
+        m.record_control(ControlEvent::Tighten { level: 1 });
+        m.record_control(ControlEvent::Drift { stage: 0, observed: 0.6, baseline: 0.2 });
+        m.record_control(ControlEvent::Recalibrated { stage: 0, from: 0.4, to: 0.55 });
+        m.record_control(ControlEvent::Relax { level: 0 });
+        let events = m.control_events();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0], ControlEvent::Tighten { level: 1 });
+        assert_eq!(events[3], ControlEvent::Relax { level: 0 });
+        assert!(m.report().contains("control: tighten 1 relax 1 drift 1 recalibrated 1"));
     }
 
     #[test]

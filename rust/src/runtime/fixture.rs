@@ -160,6 +160,52 @@ pub fn generate(spec: &FixtureSpec) -> Fixture {
     Fixture { spec: spec.clone(), weights, eval }
 }
 
+/// A deterministic input-drift transform for a fixture's eval split:
+/// the drifted stream is the original stream under an affine
+/// feature-space shift plus seeded gaussian noise — the "sensor aged /
+/// environment moved" setting the control loop's drift monitor targets
+/// (`docs/ROBUSTNESS.md`, "Control loop").  Labels are untouched: drift
+/// moves the inputs, not the task.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftSpec {
+    /// Multiplicative feature scale (1.0 = none).
+    pub scale: f32,
+    /// Additive feature shift (0.0 = none).
+    pub shift: f32,
+    /// Std-dev of the extra seeded gaussian noise (0.0 = none).
+    pub noise: f32,
+    /// PRNG seed for the noise stream; same spec, same bytes.
+    pub seed: u64,
+}
+
+impl Default for DriftSpec {
+    fn default() -> Self {
+        Self { scale: 1.15, shift: 0.1, noise: 0.05, seed: 0xD21F }
+    }
+}
+
+/// [`generate`] followed by an in-place [`DriftSpec`] perturbation of
+/// the eval split.  Additive on purpose: `generate` itself is untouched,
+/// so undrifted fixture bytes (and everything calibrated on them) stay
+/// bit-identical.  Deterministic: same `(spec, drift)`, same bytes.
+pub fn generate_drifted(spec: &FixtureSpec, drift: &DriftSpec) -> Fixture {
+    let mut fx = generate(spec);
+    drift_eval(&mut fx.eval, drift);
+    fx
+}
+
+/// Apply a [`DriftSpec`] to an eval split in place.  Deterministic for a
+/// fixed `(data, drift)` pair; labels stay untouched.  This is the one
+/// drift transform in the repo — the fixture generator, `ari sweep
+/// --drift`, and the control-loop tests all go through it so their
+/// notion of "drifted stream" agrees bit for bit.
+pub fn drift_eval(data: &mut EvalData, drift: &DriftSpec) {
+    let mut rng = Pcg64::new(drift.seed, 11);
+    for v in &mut data.x {
+        *v = *v * drift.scale + drift.shift + drift.noise * rng.normal_unpaired() as f32;
+    }
+}
+
 /// The manifest entry for a spec.
 pub fn dataset_entry(spec: &FixtureSpec) -> DatasetEntry {
     DatasetEntry {
@@ -310,6 +356,25 @@ mod tests {
         assert_eq!(a.weights.layers[0].w, b.weights.layers[0].w);
         assert_eq!(a.eval.x, b.eval.x);
         assert_eq!(a.eval.y, b.eval.y);
+    }
+
+    #[test]
+    fn drifted_generation_is_deterministic_and_differs() {
+        let spec = FixtureSpec::small("d", "D", 16, 42);
+        let drift = DriftSpec::default();
+        let a = generate_drifted(&spec, &drift);
+        let b = generate_drifted(&spec, &drift);
+        // Byte-identical per (spec, drift) pair: the drift stream is as
+        // reproducible as the base fixture.
+        assert_eq!(a.eval.x, b.eval.x);
+        let base = generate(&spec);
+        // Weights and labels untouched; inputs moved.
+        assert_eq!(a.weights.layers[0].w, base.weights.layers[0].w);
+        assert_eq!(a.eval.y, base.eval.y);
+        assert_ne!(a.eval.x, base.eval.x);
+        // A different drift seed gives a different (still valid) stream.
+        let c = generate_drifted(&spec, &DriftSpec { seed: 99, ..drift });
+        assert_ne!(a.eval.x, c.eval.x);
     }
 
     #[test]

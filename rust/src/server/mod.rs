@@ -61,7 +61,8 @@ pub mod net;
 
 use crate::config::AriConfig;
 use crate::coordinator::{
-    Batcher, BatcherPolicy, Cascade, EscalationPolicy, Ladder, LadderBatch, LadderScratch, Pending,
+    Batcher, BatcherPolicy, Cascade, ControlPolicy, Controller, EscalationPolicy, Ladder, LadderBatch, LadderScratch,
+    Pending,
 };
 use crate::data::EvalData;
 use crate::metrics::MetricsRegistry;
@@ -195,6 +196,10 @@ pub struct ServeReport {
     pub failed: u64,
     /// Backend execute retries performed across the session.
     pub retries: u64,
+    /// Every control-loop adaptation in emission order (empty with the
+    /// `[control]` section off).  See
+    /// [`crate::metrics::ControlEvent`].
+    pub control_events: Vec<crate::metrics::ControlEvent>,
 }
 
 /// Serving options beyond the config.
@@ -429,11 +434,15 @@ fn stamp_now() -> Instant {
 }
 
 /// Gather the staged requests' input rows into the batch's reusable
-/// buffer.
+/// buffer.  The `drift-shift` fault point perturbs the gathered rows in
+/// place — injected input drift for the control loop's monitor.
 fn stage_rows(data: &EvalData, buf: &mut StagedBatch) {
     buf.x.clear();
     for p in &buf.items {
         buf.x.extend_from_slice(data.row(p.payload.row));
+    }
+    if fault::inject(fault::DRIFT_SHIFT) {
+        fault::drift_rows(&mut buf.x);
     }
 }
 
@@ -617,6 +626,39 @@ impl RowSource<'_> {
     }
 }
 
+/// Lock-free snapshot of the dispatcher's control-loop state, shared
+/// with the network front so a `Stats` frame can be answered without
+/// touching the dispatch path.  All fields are relaxed atomics: the
+/// dispatcher publishes after each batch via
+/// [`Dispatcher::publish_stats`]; readers tolerate tearing across
+/// fields (each field is individually consistent).
+pub struct ControlStats {
+    /// Requests completed per ladder stage (`Ok`/`Degraded` only).
+    pub stage_served: Vec<AtomicU64>,
+    /// Effective per-stage thresholds, stored as `f64::to_bits`.
+    pub thresholds: Vec<AtomicU64>,
+    /// Current load-adaptive tighten level (0 = calibrated).
+    pub level: AtomicU64,
+    /// 1 while the drift monitor holds an active drift verdict.
+    pub drifted: AtomicU64,
+    /// Online recalibrations applied so far.
+    pub recals: AtomicU64,
+}
+
+impl ControlStats {
+    /// Zeroed stats block shaped for `ladder`, thresholds seeded from
+    /// its calibrated values.
+    pub fn new(ladder: &Ladder) -> Self {
+        Self {
+            stage_served: (0..ladder.n_stages()).map(|_| AtomicU64::new(0)).collect(),
+            thresholds: ladder.stages.iter().map(|s| AtomicU64::new(s.threshold.to_bits())).collect(),
+            level: AtomicU64::new(0),
+            drifted: AtomicU64::new(0),
+            recals: AtomicU64::new(0),
+        }
+    }
+}
+
 /// The inference side of the serving loop: ladder dispatch, escalation
 /// queues, completion recording.  Owns every reusable buffer of the
 /// dispatch path (ladder scratch, recycled ladder result, escalation
@@ -653,6 +695,15 @@ struct Dispatcher<'a> {
     /// after rejection, and their re-gathered rows).
     live_items: Vec<Pending<Request>>,
     live_x: Vec<f32>,
+    /// Closed-loop threshold controller (`docs/ROBUSTNESS.md`,
+    /// "Control loop").  `Some` whenever any `[control]` knob is on *or*
+    /// `overload_p95` is set — the latter runs the controller in
+    /// pass-through mode purely for its sliding latency window, which
+    /// replaced the old whole-session p95 (that histogram never decays,
+    /// so one early spike pinned degraded mode forever).
+    ctl: Option<Controller>,
+    /// Requests served (`Ok`/`Degraded`) per ladder stage.
+    stage_served: Vec<u64>,
 }
 
 impl<'a> Dispatcher<'a> {
@@ -664,6 +715,7 @@ impl<'a> Dispatcher<'a> {
         policy: RobustnessPolicy,
         expected: usize,
     ) -> Self {
+        let ctl = policy.overload_p95.is_some().then(|| Controller::new(ControlPolicy::default(), ladder));
         Self {
             ladder,
             rows,
@@ -680,7 +732,65 @@ impl<'a> Dispatcher<'a> {
             gather: Vec::new(),
             live_items: Vec::new(),
             live_x: Vec::new(),
+            ctl,
+            stage_served: vec![0; ladder.n_stages()],
         }
+    }
+
+    /// Install a control policy.  The controller is kept when any of
+    /// its features is enabled or `overload_p95` still needs the
+    /// sliding latency window; otherwise the dispatcher runs the exact
+    /// calibrated thresholds with zero control overhead.
+    fn set_control(&mut self, policy: ControlPolicy) {
+        if policy.enabled() || self.policy.overload_p95.is_some() {
+            self.ctl = Some(Controller::new(policy, self.ladder));
+        } else {
+            self.ctl = None;
+        }
+    }
+
+    /// The effective accept threshold for `stage` given the reduced
+    /// model's predicted class — the controller's view when present,
+    /// the calibrated ladder value otherwise.
+    #[inline]
+    fn threshold_for(&self, stage: usize, pred: i32) -> f64 {
+        match &self.ctl {
+            Some(c) => c.threshold(stage, pred),
+            None => self.ladder.stages[stage].threshold,
+        }
+    }
+
+    /// Close one control-loop batch: feed the controller the current
+    /// queue depth (staged backlog plus queued escalations) and let it
+    /// adapt.  Called once per dispatched first-stage batch.
+    fn end_control_batch(&mut self) {
+        let depth = self.backlog_hint + self.esc_queues.iter().map(Vec::len).sum::<usize>();
+        if let Some(ctl) = self.ctl.as_mut() {
+            ctl.end_batch(depth, self.metrics);
+        }
+    }
+
+    /// Publish the control-loop snapshot for external readers (the
+    /// network front's `Stats` frame).  Relaxed stores only — readers
+    /// tolerate tearing across fields.
+    fn publish_stats(&self, out: &ControlStats) {
+        for (slot, &served) in out.stage_served.iter().zip(&self.stage_served) {
+            slot.store(served, Ordering::Relaxed);
+        }
+        for (s, slot) in out.thresholds.iter().enumerate() {
+            let t = match &self.ctl {
+                Some(c) => c.effective_threshold(s),
+                None => self.ladder.stages[s].threshold,
+            };
+            slot.store(t.to_bits(), Ordering::Relaxed);
+        }
+        let (level, drifted, recals) = match &self.ctl {
+            Some(c) => (c.tighten_level() as u64, c.drifted() as u64, c.recals()),
+            None => (0, 0, 0),
+        };
+        out.level.store(level, Ordering::Relaxed);
+        out.drifted.store(drifted, Ordering::Relaxed);
+        out.recals.store(recals, Ordering::Relaxed);
     }
 
     /// Whether the dispatcher should serve reduced-stage answers
@@ -695,8 +805,12 @@ impl<'a> Dispatcher<'a> {
                 return true;
             }
         }
-        if let Some(t) = self.policy.overload_p95 {
-            if self.metrics.latency.count() >= 16 && self.metrics.latency.quantile(0.95) >= t {
+        // Sliding-window p95 from the controller, not the session
+        // histogram: the histogram never decays, so an early latency
+        // spike used to pin degraded mode for the rest of the session.
+        // The window forgets old samples and the signal recovers.
+        if let (Some(t), Some(ctl)) = (self.policy.overload_p95, self.ctl.as_ref()) {
+            if ctl.window_warm() && Duration::from_micros(ctl.window_p95_us()) >= t {
                 return true;
             }
         }
@@ -804,8 +918,14 @@ impl<'a> Dispatcher<'a> {
             EscalationPolicy::Immediate => {
                 let scratch = &mut self.scratch;
                 let out = &mut self.ladder_out;
-                let run = with_retry(&policy, metrics, || {
-                    ladder.infer_batch_into(engine, x, n, chunk, &mut *scratch, &mut *out)
+                // The controller supplies effective thresholds when
+                // present; `None` takes the calibrated-only entry point
+                // so the default path stays bit-identical.
+                let ctl = self.ctl.as_ref();
+                let run = with_retry(&policy, metrics, || match ctl {
+                    Some(c) => ladder
+                        .infer_batch_with(engine, x, n, chunk, &mut *scratch, &mut *out, &|s, p| c.threshold(s, p)),
+                    None => ladder.infer_batch_into(engine, x, n, chunk, &mut *scratch, &mut *out),
                 });
                 if let Err(e) = run {
                     self.fail_batch(items, &e);
@@ -827,6 +947,11 @@ impl<'a> Dispatcher<'a> {
                     if self.ladder_out.stage[i] > 0 {
                         self.metrics.escalated.fetch_add(1, Ordering::Relaxed);
                     }
+                    if let Some(ctl) = self.ctl.as_mut() {
+                        ctl.record_latency_us(lat.as_micros() as u64);
+                        ctl.observe_margin(0, self.ladder_out.first_margin[i]);
+                    }
+                    self.stage_served[self.ladder_out.stage[i]] += 1;
                     self.completions.push(Completion {
                         id: p.payload.id,
                         row: p.payload.row,
@@ -859,10 +984,17 @@ impl<'a> Dispatcher<'a> {
                     // stays comparable across them.
                     self.metrics.net_wait.record(p.enqueued.duration_since(p.payload.submitted));
                     self.metrics.queue_wait.record(t_disp.duration_since(p.enqueued));
-                    if crate::margin::accepts(red.margin[i], self.ladder.stages[0].threshold) {
+                    if let Some(ctl) = self.ctl.as_mut() {
+                        ctl.observe_margin(0, red.margin[i]);
+                    }
+                    if crate::margin::accepts(red.margin[i], self.threshold_for(0, red.pred[i])) {
                         let lat = now.duration_since(p.payload.submitted);
                         self.metrics.latency.record(lat);
                         self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        if let Some(ctl) = self.ctl.as_mut() {
+                            ctl.record_latency_us(lat.as_micros() as u64);
+                        }
+                        self.stage_served[0] += 1;
                         self.completions.push(Completion {
                             id: p.payload.id,
                             row: p.payload.row,
@@ -891,6 +1023,7 @@ impl<'a> Dispatcher<'a> {
                 }
             }
         }
+        self.end_control_batch();
         Ok(())
     }
 
@@ -932,7 +1065,12 @@ impl<'a> Dispatcher<'a> {
             let lat = now.duration_since(p.payload.submitted);
             self.metrics.latency.record(lat);
             self.metrics.completed.fetch_add(1, Ordering::Relaxed);
-            let outcome = if crate::margin::accepts(red.margin[i], self.ladder.stages[0].threshold) {
+            if let Some(ctl) = self.ctl.as_mut() {
+                ctl.record_latency_us(lat.as_micros() as u64);
+                ctl.observe_margin(0, red.margin[i]);
+            }
+            self.stage_served[0] += 1;
+            let outcome = if crate::margin::accepts(red.margin[i], self.threshold_for(0, red.pred[i])) {
                 CompletionOutcome::Ok
             } else {
                 self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
@@ -950,6 +1088,7 @@ impl<'a> Dispatcher<'a> {
             });
         }
         engine.recycle_outputs(red);
+        self.end_control_batch();
         Ok(())
     }
 
@@ -1025,11 +1164,15 @@ impl<'a> Dispatcher<'a> {
         let now = stamp_now();
         for i in 0..take {
             let req = self.esc_queues[stage][i];
-            if last || crate::margin::accepts(out.margin[i], self.ladder.stages[stage].threshold) {
+            if last || crate::margin::accepts(out.margin[i], self.threshold_for(stage, out.pred[i])) {
                 let lat = now.duration_since(req.submitted);
                 self.metrics.latency.record(lat);
                 self.metrics.completed.fetch_add(1, Ordering::Relaxed);
                 self.metrics.escalated.fetch_add(1, Ordering::Relaxed);
+                if let Some(ctl) = self.ctl.as_mut() {
+                    ctl.record_latency_us(lat.as_micros() as u64);
+                }
+                self.stage_served[stage] += 1;
                 self.completions.push(Completion {
                     id: req.id,
                     row: req.row,
@@ -1141,6 +1284,10 @@ pub fn run_serving_ladder(
     let metrics = MetricsRegistry::new();
     let policy = BatcherPolicy::new(cfg.batch_size, Duration::from_micros(cfg.batch_timeout_us));
     let mut disp = Dispatcher::new(ladder, RowSource::Dataset(data), &metrics, opts.escalation, robustness, n_requests);
+    let control = ControlPolicy::from_config(cfg);
+    if control.enabled() {
+        disp.set_control(control);
+    }
     // The fixed set of staging buffers that circulates through the
     // pipeline for the whole session.
     let staged: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
@@ -1305,6 +1452,7 @@ pub fn run_serving_ladder(
         rejected: metrics.rejected.load(Ordering::Relaxed),
         failed: metrics.failed.load(Ordering::Relaxed),
         retries: metrics.retries.load(Ordering::Relaxed),
+        control_events: metrics.control_events(),
         completions,
         wall,
     })
@@ -1380,6 +1528,8 @@ pub mod model {
         pub flushes: Vec<(u64, u64)>,
         /// `(n, compiled_batch)` per first-stage dispatch.
         pub dispatches: Vec<(u64, u64)>,
+        /// Control-loop adaptation events, in emission order.
+        pub control_events: Vec<crate::metrics::ControlEvent>,
     }
 
     /// Run `batches` (lists of dataset row indices) through a
@@ -1406,8 +1556,25 @@ pub mod model {
         batches: &[Vec<usize>],
         policy: RobustnessPolicy,
     ) -> crate::Result<DeferredSession> {
+        drive_deferred_controlled(engine, ladder, data, batches, policy, None)
+    }
+
+    /// [`drive_deferred_with`] plus an optional [`ControlPolicy`], so
+    /// the model suites can assert the conservation invariants while
+    /// the closed-loop controller moves thresholds mid-session.
+    pub fn drive_deferred_controlled(
+        engine: &mut dyn Backend,
+        ladder: &Ladder,
+        data: &EvalData,
+        batches: &[Vec<usize>],
+        policy: RobustnessPolicy,
+        control: Option<ControlPolicy>,
+    ) -> crate::Result<DeferredSession> {
         let metrics = MetricsRegistry::new();
         let mut disp = Dispatcher::new(ladder, RowSource::Dataset(data), &metrics, EscalationPolicy::Deferred, policy, 64);
+        if let Some(c) = control {
+            disp.set_control(c);
+        }
         // ari-lint: allow(clock-discipline): model-check driver, not the serving loop —
         // the stamp only seeds synthetic request timestamps for the harness.
         let t0 = Instant::now();
@@ -1451,6 +1618,7 @@ pub mod model {
             sc_keys,
             flushes,
             dispatches,
+            control_events: metrics.control_events(),
         })
     }
 }
@@ -1487,6 +1655,7 @@ mod tests {
             rejected: 1,
             failed: 3,
             retries: 4,
+            control_events: vec![],
         };
         assert!((r.savings() - 0.55).abs() < 1e-12);
         assert!(r.summary().contains("55.0%"));
@@ -1717,6 +1886,49 @@ mod tests {
         disp.finish(&mut engine).unwrap();
         assert_eq!(disp.completions.len(), 10);
         assert!(disp.completions[5..].iter().all(|c| c.escalated && c.outcome == CompletionOutcome::Ok));
+    }
+
+    /// Satellite regression (PR 7 bug): the p95 overload signal reads a
+    /// *sliding window*, not the whole-session histogram.  The histogram
+    /// never decays, so an early latency spike used to pin degraded mode
+    /// for the rest of the session; with the window the spike scrolls
+    /// out and the detector recovers.
+    #[test]
+    fn overload_p95_recovers_after_early_spike() {
+        let mut engine = NativeBackend::synthetic();
+        let (ladder, data) = fixture_ladder(&mut engine, ThresholdPolicy::MMax);
+        let metrics = MetricsRegistry::new();
+        let policy =
+            RobustnessPolicy { overload_p95: Some(Duration::from_millis(10)), ..RobustnessPolicy::default() };
+        let mut disp =
+            Dispatcher::new(&ladder, RowSource::Dataset(&data), &metrics, EscalationPolicy::Deferred, policy, 16);
+        assert!(!disp.overload_active(), "cold window never trips the detector");
+        // An early spike: 16 samples (the warm-up gate) far past the
+        // 10 ms threshold.
+        {
+            let ctl = disp.ctl.as_mut().unwrap();
+            for _ in 0..16 {
+                ctl.record_latency_us(50_000);
+            }
+        }
+        disp.end_control_batch();
+        assert!(disp.overload_active(), "sustained spike trips the detector");
+        // A full window of fast samples displaces the spike entirely;
+        // the session histogram this replaced would still report the
+        // 50 ms spike at p95 here.
+        let window = ControlPolicy::default().window;
+        {
+            let ctl = disp.ctl.as_mut().unwrap();
+            for _ in 0..window {
+                ctl.record_latency_us(200);
+            }
+        }
+        disp.end_control_batch();
+        assert!(!disp.overload_active(), "spike scrolled out of the window: the signal must recover");
+        assert_eq!(disp.ctl.as_ref().unwrap().window_p95_us(), 200);
+        // No control knob is on — the pass-through controller emitted
+        // no adaptation events while feeding the overload signal.
+        assert!(metrics.control_events().is_empty());
     }
 
     /// Transient execute faults — one typed error and one panic — are

@@ -319,8 +319,11 @@ pub fn run_client(cfg: &ClientConfig, data: &EvalData) -> crate::Result<ClientRe
                                     dead = true;
                                     break;
                                 }
-                                Ok(Some(Frame::Request(_))) => {
-                                    // Servers never send requests.
+                                Ok(Some(Frame::Request(_)))
+                                | Ok(Some(Frame::StatsRequest))
+                                | Ok(Some(Frame::Stats(_))) => {
+                                    // Servers never send requests or
+                                    // stats traffic we didn't ask for.
                                     wire_errors += 1;
                                     dead = true;
                                     break;
@@ -391,6 +394,48 @@ pub fn run_client(cfg: &ClientConfig, data: &EvalData) -> crate::Result<ClientRe
         wall: epoch.elapsed(),
         responses,
     })
+}
+
+/// Fetch one stats snapshot from a serving-tier address: connect, send
+/// a single stats request, and wait (bounded by `timeout`) for the
+/// stats frame.  Used by `ari-client --stats`; a stats connection is
+/// ordinary wire traffic to the server — it counts as a connection but
+/// never against the request budget or response conservation.
+pub fn fetch_stats(addr: &str, timeout: Duration) -> crate::Result<proto::StatsReply> {
+    let deadline = client_now() + timeout;
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut wire = Vec::new();
+    proto::encode_stats_request(&mut wire);
+    stream.write_all(&wire)?;
+    let mut fb = FrameBuf::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        let now = client_now();
+        anyhow::ensure!(now < deadline, "stats request timed out after {timeout:?}");
+        stream.set_read_timeout(Some(deadline - now))?;
+        match stream.read(&mut chunk) {
+            Ok(0) => anyhow::bail!("server closed the connection before answering the stats request"),
+            Ok(n) => {
+                fb.extend(&chunk[..n]);
+                loop {
+                    match fb.next_frame() {
+                        Ok(Some(Frame::Stats(s))) => return Ok(s.to_reply()),
+                        Ok(Some(Frame::Error(e))) => {
+                            anyhow::bail!("server error frame: code {} detail {}", e.code, e.detail)
+                        }
+                        Ok(Some(_)) => anyhow::bail!("unexpected frame while waiting for the stats reply"),
+                        Ok(None) => break,
+                        Err(e) => anyhow::bail!("protocol error while waiting for the stats reply: {e}"),
+                    }
+                }
+                fb.compact();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut => {}
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
 }
 
 #[cfg(test)]

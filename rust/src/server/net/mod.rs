@@ -69,9 +69,10 @@ use crate::util::fault;
 use crate::util::queue::BoundedQueue;
 
 use super::{
-    panic_msg, Completion, CompletionOutcome, Dispatcher, Heartbeat, Request, RobustnessPolicy, RowSource,
-    ServeOptions, StagedBatch, PIPELINE_DEPTH,
+    panic_msg, Completion, CompletionOutcome, ControlStats, Dispatcher, Heartbeat, Request, RobustnessPolicy,
+    RowSource, ServeOptions, StagedBatch, PIPELINE_DEPTH,
 };
+use crate::coordinator::ControlPolicy;
 
 /// Completions in flight between the inference loop and the net
 /// thread.  Deep enough that routing never backpressures dispatch in
@@ -234,6 +235,9 @@ fn stage_net_rows(rows: &mut VecDeque<f32>, dim: usize, buf: &mut StagedBatch) {
     buf.x.clear();
     let n = buf.items.len();
     buf.x.extend(rows.drain(..n * dim));
+    if fault::inject(fault::DRIFT_SHIFT) {
+        fault::drift_rows(&mut buf.x);
+    }
 }
 
 /// Flush a connection's pending output bytes into its socket.  Returns
@@ -329,6 +333,12 @@ struct NetFront<'q> {
     seq: u64,
     ever_accepted: bool,
     stats: NetStats,
+    /// Shared metrics registry — read-only here, for answering stats
+    /// requests (the dispatcher owns the writes).
+    metrics: &'q MetricsRegistry,
+    /// The dispatcher's published control-loop snapshot (see
+    /// [`ControlStats`]), read when answering stats requests.
+    ctl_stats: &'q ControlStats,
 }
 
 impl<'q> NetFront<'q> {
@@ -344,6 +354,8 @@ impl<'q> NetFront<'q> {
         empties: &'q BoundedQueue<StagedBatch>,
         comps: &'q BoundedQueue<Completion>,
         hb: &'q Heartbeat,
+        metrics: &'q MetricsRegistry,
+        ctl_stats: &'q ControlStats,
     ) -> Self {
         Self {
             listener,
@@ -364,7 +376,43 @@ impl<'q> NetFront<'q> {
             seq: 0,
             ever_accepted: false,
             stats: NetStats::default(),
+            metrics,
+            ctl_stats,
         }
+    }
+
+    /// Answer one stats request: assemble a [`proto::StatsReply`] from
+    /// the wire ledger, the metrics registry and the dispatcher's
+    /// published control snapshot, and encode it straight into the
+    /// connection's write buffer.  Stats frames are diagnostics —
+    /// deliberately *not* recorded in `frame_ends` (the
+    /// response-conservation ledger) and never counted against the
+    /// session's request budget.
+    fn answer_stats(&self, c: &mut Conn) {
+        let reply = proto::StatsReply {
+            admitted: self.stats.admitted,
+            shed: self.stats.shed,
+            responses_sent: self.stats.responses_sent,
+            completed: self.metrics.completed.load(Ordering::Relaxed),
+            degraded: self.metrics.degraded.load(Ordering::Relaxed),
+            rejected: self.metrics.rejected.load(Ordering::Relaxed),
+            failed: self.metrics.failed.load(Ordering::Relaxed),
+            level: self.ctl_stats.level.load(Ordering::Relaxed) as u32,
+            drifted: self.ctl_stats.drifted.load(Ordering::Relaxed) != 0,
+            recals: self.ctl_stats.recals.load(Ordering::Relaxed) as u32,
+            stages: self
+                .ctl_stats
+                .stage_served
+                .iter()
+                .zip(&self.ctl_stats.thresholds)
+                .take(proto::MAX_STAGES as usize)
+                .map(|(served, t)| proto::StageStat {
+                    served: served.load(Ordering::Relaxed),
+                    threshold: f64::from_bits(t.load(Ordering::Relaxed)),
+                })
+                .collect(),
+        };
+        proto::encode_stats(&mut c.wbuf, &reply);
     }
 
     fn live_conns(&self) -> usize {
@@ -524,14 +572,22 @@ impl<'q> NetFront<'q> {
                         self.admit_request(&mut c.in_flight, c.gen, slot as u32, rf.id, rf.send_us, ingress, now);
                     }
                 }
-                // Only clients send requests; a response or error frame
-                // arriving at the server is a protocol violation.
+                Ok(Some(proto::Frame::StatsRequest)) => {
+                    self.answer_stats(c);
+                }
+                // Only clients send requests; a response, error or
+                // stats frame arriving at the server is a protocol
+                // violation.
                 Ok(Some(proto::Frame::Response(_))) => {
                     self.proto_violation(c, proto::ProtoError::BadKind { kind: proto::KIND_RESPONSE });
                     return;
                 }
                 Ok(Some(proto::Frame::Error(_))) => {
                     self.proto_violation(c, proto::ProtoError::BadKind { kind: proto::KIND_ERROR });
+                    return;
+                }
+                Ok(Some(proto::Frame::Stats(_))) => {
+                    self.proto_violation(c, proto::ProtoError::BadKind { kind: proto::KIND_STATS });
                     return;
                 }
                 Ok(None) => break,
@@ -1006,6 +1062,13 @@ pub fn run_net_serving(
         robustness,
         cfg.requests,
     );
+    let control = ControlPolicy::from_config(cfg);
+    if control.enabled() {
+        disp.set_control(control);
+    }
+    // Shared with the net thread so stats requests read a live (if
+    // slightly stale) control snapshot without locking.
+    let ctl_stats = ControlStats::new(ladder);
     let staged: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
     let empties: BoundedQueue<StagedBatch> = BoundedQueue::new(PIPELINE_DEPTH);
     for _ in 0..PIPELINE_DEPTH {
@@ -1030,6 +1093,8 @@ pub fn run_net_serving(
             &empties,
             &comps,
             &hb,
+            &metrics,
+            &ctl_stats,
         );
         let net = s.spawn(move || front.run());
         if let Some(stall_after) = robustness.watchdog_stall {
@@ -1087,11 +1152,13 @@ pub fn run_net_serving(
                 batch.x.clear();
                 let _ = empties.push(batch);
                 r?;
+                disp.publish_stats(&ctl_stats);
                 for done in disp.completions.drain(..) {
                     anyhow::ensure!(comps.push(done).is_ok(), "completion queue closed mid-session (watchdog fired)");
                 }
             }
             disp.finish(engine)?;
+            disp.publish_stats(&ctl_stats);
             for done in disp.completions.drain(..) {
                 anyhow::ensure!(comps.push(done).is_ok(), "completion queue closed during drain (watchdog fired)");
             }

@@ -4,10 +4,23 @@
 //! payload, whose first byte is the frame kind:
 //!
 //! ```text
-//! request  (kind 1): id u64 | send_us u64 | n_features u32 | n × f32
-//! response (kind 2): id u64 | send_us u64 | outcome u8 | stage u8 | pred i32 | margin f32
-//! error    (kind 3): code u8 | detail u32
+//! request    (kind 1): id u64 | send_us u64 | n_features u32 | n × f32
+//! response   (kind 2): id u64 | send_us u64 | outcome u8 | stage u8 | pred i32 | margin f32
+//! error      (kind 3): code u8 | detail u32
+//! stats-req  (kind 4): (kind byte only)
+//! stats      (kind 5): admitted u64 | shed u64 | responses_sent u64 | completed u64
+//!                      | degraded u64 | rejected u64 | failed u64
+//!                      | level u32 | drifted u8 | recals u32
+//!                      | n_stages u8 | n × (served u64 | threshold f64)
 //! ```
+//!
+//! The stats pair is the observability side-channel: a client sends a
+//! bare `stats-req` and gets back the server's live counters, per-stage
+//! serving mix and the control loop's current state (effective
+//! thresholds, tighten level, drift flag — see `docs/ROBUSTNESS.md`,
+//! "Control loop").  Stats frames are *diagnostics*, not responses:
+//! they never count against the session's request budget or the
+//! response-conservation ledger.
 //!
 //! The decoder ([`FrameBuf::next_frame`]) is **total over arbitrary
 //! bytes**: every input either yields a frame, asks for more bytes, or
@@ -26,6 +39,14 @@ pub const KIND_REQUEST: u8 = 1;
 pub const KIND_RESPONSE: u8 = 2;
 /// Frame kind tag: a typed protocol error, sent before closing.
 pub const KIND_ERROR: u8 = 3;
+/// Frame kind tag: client → server stats request (kind byte only).
+pub const KIND_STATS_REQ: u8 = 4;
+/// Frame kind tag: server → client stats snapshot.
+pub const KIND_STATS: u8 = 5;
+
+/// Most ladder stages a stats frame may describe; bounds the frame and
+/// matches any ladder the config layer can express.
+pub const MAX_STAGES: u8 = 16;
 
 /// Most features a request frame may carry; bounds the decode buffer a
 /// malicious length prefix can demand.
@@ -42,6 +63,13 @@ const REQ_HEADER: u32 = 1 + 8 + 8 + 4;
 const RESP_LEN: u32 = 1 + 8 + 8 + 1 + 1 + 4 + 4;
 /// Error payload length: kind + code + detail.
 const ERR_LEN: u32 = 1 + 1 + 4;
+/// Stats-request payload length: the kind byte alone.
+const STATS_REQ_LEN: u32 = 1;
+/// Stats payload bytes before the per-stage records: kind + 7 × u64
+/// counters + level u32 + drifted u8 + recals u32 + n_stages u8.
+const STATS_HEADER: u32 = 1 + 7 * 8 + 4 + 1 + 4 + 1;
+/// Bytes per per-stage record: served u64 + threshold f64.
+const STAGE_REC: u32 = 8 + 8;
 
 /// Why a byte stream failed to decode.  One variant per way the wire
 /// can lie; [`ProtoError::code`] gives the tag shipped in an error
@@ -199,6 +227,60 @@ pub struct ErrorFrame {
     pub detail: u32,
 }
 
+/// One per-stage record of a stats frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageStat {
+    /// Requests served (completed `Ok`/`Degraded`) at this stage.
+    pub served: u64,
+    /// The stage's current effective accept threshold (the controller's
+    /// view when the control loop is on; the calibrated value
+    /// otherwise).
+    pub threshold: f64,
+}
+
+/// A decoded stats snapshot, borrowing its per-stage records from the
+/// decode buffer (same no-copy discipline as [`RequestFrame`]).
+#[derive(Clone, Copy, Debug)]
+pub struct StatsFrame<'a> {
+    /// Requests admitted into the pipeline.
+    pub admitted: u64,
+    /// Requests shed at admission with typed `Rejected` responses.
+    pub shed: u64,
+    /// Response frames fully delivered so far.
+    pub responses_sent: u64,
+    /// Pipeline completions recorded.
+    pub completed: u64,
+    /// Completions served reduced under overload.
+    pub degraded: u64,
+    /// Completions rejected past their deadline.
+    pub rejected: u64,
+    /// Completions failed after exhausting execute retries.
+    pub failed: u64,
+    /// Control loop's current tighten level (0 = calibrated).
+    pub level: u32,
+    /// Whether the drift monitor currently holds a drift verdict.
+    pub drifted: bool,
+    /// Online recalibrations applied so far.
+    pub recals: u32,
+    /// Raw little-endian per-stage records (`16 * n_stages` bytes).
+    raw_stages: &'a [u8],
+}
+
+impl StatsFrame<'_> {
+    /// Ladder stages described.
+    pub fn n_stages(&self) -> usize {
+        self.raw_stages.len() / STAGE_REC as usize
+    }
+
+    /// Iterate the per-stage records without copying.
+    pub fn stages(&self) -> impl Iterator<Item = StageStat> + '_ {
+        self.raw_stages.chunks_exact(STAGE_REC as usize).map(|c| StageStat {
+            served: u64_at(c, 0),
+            threshold: f64::from_bits(u64_at(c, 8)),
+        })
+    }
+}
+
 /// One decoded frame, borrowing from the decode buffer.
 #[derive(Clone, Copy, Debug)]
 pub enum Frame<'a> {
@@ -208,6 +290,10 @@ pub enum Frame<'a> {
     Response(ResponseFrame),
     /// A protocol-error notification.
     Error(ErrorFrame),
+    /// A stats request (client → server, no payload).
+    StatsRequest,
+    /// A stats snapshot (server → client).
+    Stats(StatsFrame<'a>),
 }
 
 /// Incremental, allocation-reusing frame decoder.  Feed it bytes as
@@ -343,6 +429,34 @@ fn parse_payload(payload: &[u8], len: u32) -> Result<Option<Frame<'_>>, ProtoErr
                 detail: u32::from_le_bytes([payload[2], payload[3], payload[4], payload[5]]),
             })))
         }
+        KIND_STATS_REQ => {
+            if len != STATS_REQ_LEN {
+                return Err(ProtoError::SizeMismatch { kind: KIND_STATS_REQ, len });
+            }
+            Ok(Some(Frame::StatsRequest))
+        }
+        KIND_STATS => {
+            if len < STATS_HEADER {
+                return Err(ProtoError::SizeMismatch { kind: KIND_STATS, len });
+            }
+            let n = payload[STATS_HEADER as usize - 1];
+            if n > MAX_STAGES || len != STATS_HEADER + STAGE_REC * n as u32 {
+                return Err(ProtoError::SizeMismatch { kind: KIND_STATS, len });
+            }
+            Ok(Some(Frame::Stats(StatsFrame {
+                admitted: u64_at(payload, 1),
+                shed: u64_at(payload, 9),
+                responses_sent: u64_at(payload, 17),
+                completed: u64_at(payload, 25),
+                degraded: u64_at(payload, 33),
+                rejected: u64_at(payload, 41),
+                failed: u64_at(payload, 49),
+                level: u32::from_le_bytes([payload[57], payload[58], payload[59], payload[60]]),
+                drifted: payload[61] != 0,
+                recals: u32::from_le_bytes([payload[62], payload[63], payload[64], payload[65]]),
+                raw_stages: &payload[STATS_HEADER as usize..],
+            })))
+        }
         kind => Err(ProtoError::BadKind { kind }),
     }
 }
@@ -395,6 +509,78 @@ pub fn encode_error(out: &mut Vec<u8>, code: u8, detail: u32) {
     out.push(KIND_ERROR);
     out.push(code);
     out.extend_from_slice(&detail.to_le_bytes());
+}
+
+/// Owned stats snapshot: what the server assembles to answer a stats
+/// request, and what [`super::client::fetch_stats`] hands back.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsReply {
+    /// Requests admitted into the pipeline.
+    pub admitted: u64,
+    /// Requests shed at admission.
+    pub shed: u64,
+    /// Response frames fully delivered so far.
+    pub responses_sent: u64,
+    /// Pipeline completions recorded.
+    pub completed: u64,
+    /// Completions served reduced under overload.
+    pub degraded: u64,
+    /// Completions rejected past their deadline.
+    pub rejected: u64,
+    /// Completions failed after exhausting execute retries.
+    pub failed: u64,
+    /// Control loop's current tighten level (0 = calibrated).
+    pub level: u32,
+    /// Whether the drift monitor currently holds a drift verdict.
+    pub drifted: bool,
+    /// Online recalibrations applied so far.
+    pub recals: u32,
+    /// Per-stage serving counts and effective thresholds.
+    pub stages: Vec<StageStat>,
+}
+
+impl StatsFrame<'_> {
+    /// Copy this borrowed frame into an owned [`StatsReply`].
+    pub fn to_reply(&self) -> StatsReply {
+        StatsReply {
+            admitted: self.admitted,
+            shed: self.shed,
+            responses_sent: self.responses_sent,
+            completed: self.completed,
+            degraded: self.degraded,
+            rejected: self.rejected,
+            failed: self.failed,
+            level: self.level,
+            drifted: self.drifted,
+            recals: self.recals,
+            stages: self.stages().collect(),
+        }
+    }
+}
+
+/// Append one encoded stats-request frame to `out`.
+pub fn encode_stats_request(out: &mut Vec<u8>) {
+    out.extend_from_slice(&STATS_REQ_LEN.to_le_bytes());
+    out.push(KIND_STATS_REQ);
+}
+
+/// Append one encoded stats frame to `out`.
+pub fn encode_stats(out: &mut Vec<u8>, s: &StatsReply) {
+    assert!(s.stages.len() <= MAX_STAGES as usize, "stats frame exceeds MAX_STAGES");
+    let len = STATS_HEADER + STAGE_REC * s.stages.len() as u32;
+    out.extend_from_slice(&len.to_le_bytes());
+    out.push(KIND_STATS);
+    for v in [s.admitted, s.shed, s.responses_sent, s.completed, s.degraded, s.rejected, s.failed] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&s.level.to_le_bytes());
+    out.push(s.drifted as u8);
+    out.extend_from_slice(&s.recals.to_le_bytes());
+    out.push(s.stages.len() as u8);
+    for st in &s.stages {
+        out.extend_from_slice(&st.served.to_le_bytes());
+        out.extend_from_slice(&st.threshold.to_bits().to_le_bytes());
+    }
 }
 
 #[cfg(test)]
@@ -543,6 +729,56 @@ mod tests {
         }
         // The buffer never grew past one frame.
         assert!(fb.buf.capacity() <= 4 * wire.len(), "compact must bound the buffer");
+    }
+
+    #[test]
+    fn stats_round_trips() {
+        let reply = StatsReply {
+            admitted: 10,
+            shed: 2,
+            responses_sent: 11,
+            completed: 10,
+            degraded: 1,
+            rejected: 0,
+            failed: 3,
+            level: 2,
+            drifted: true,
+            recals: 4,
+            stages: vec![
+                StageStat { served: 7, threshold: 0.25 },
+                StageStat { served: 3, threshold: f64::NEG_INFINITY },
+            ],
+        };
+        let mut wire = Vec::new();
+        encode_stats_request(&mut wire);
+        encode_stats(&mut wire, &reply);
+        let mut fb = FrameBuf::new();
+        fb.extend(&wire);
+        assert!(matches!(fb.next_frame().unwrap().unwrap(), Frame::StatsRequest));
+        let Frame::Stats(s) = fb.next_frame().unwrap().unwrap() else {
+            panic!("expected a stats frame");
+        };
+        assert_eq!(s.n_stages(), 2);
+        assert_eq!(s.to_reply(), reply);
+        assert!(matches!(fb.next_frame(), Ok(None)));
+    }
+
+    #[test]
+    fn stats_size_violations_are_typed_errors() {
+        // A stats request carrying payload bytes.
+        let mut fb = FrameBuf::new();
+        fb.extend(&2u32.to_le_bytes());
+        fb.extend(&[KIND_STATS_REQ, 0]);
+        assert_eq!(fb.next_frame().unwrap_err(), ProtoError::SizeMismatch { kind: KIND_STATS_REQ, len: 2 });
+
+        // A stats frame whose n_stages byte contradicts its length.
+        let mut wire = Vec::new();
+        let one_stage = StatsReply { stages: vec![StageStat { served: 0, threshold: 0.0 }], ..Default::default() };
+        encode_stats(&mut wire, &one_stage);
+        wire[4 + STATS_HEADER as usize - 1] = 2;
+        fb.clear();
+        fb.extend(&wire);
+        assert!(matches!(fb.next_frame().unwrap_err(), ProtoError::SizeMismatch { kind: KIND_STATS, .. }));
     }
 
     #[test]

@@ -84,6 +84,12 @@ pub const WRITE_SPLIT: &str = "write-split";
 /// listener — connection setup latency that exercises client
 /// reconnect-with-backoff.
 pub const ACCEPT_STALL: &str = "accept-stall";
+/// Fault point: a staged batch's feature rows are perturbed in place
+/// (the affine shift of [`drift_rows`]) just before dispatch — input
+/// distribution drift, the environment the control loop's drift
+/// monitor and online recalibration exist to absorb
+/// (`docs/ROBUSTNESS.md`, "Control loop").
+pub const DRIFT_SHIFT: &str = "drift-shift";
 
 /// Every fault point the runtime defines; [`arm_spec`] rejects names
 /// outside this list so typos fail loudly instead of arming nothing.
@@ -99,7 +105,18 @@ pub const POINTS: &[&str] = &[
     FRAME_CORRUPT,
     WRITE_SPLIT,
     ACCEPT_STALL,
+    DRIFT_SHIFT,
 ];
+
+/// The in-place perturbation a [`DRIFT_SHIFT`] hit applies to a staged
+/// batch's feature rows: a fixed affine shift, strong enough to move
+/// reduced-stage margins visibly but not to turn every prediction into
+/// noise (the escalation ladder must still be able to rescue accuracy).
+pub fn drift_rows(x: &mut [f32]) {
+    for v in x {
+        *v = *v * 1.15 + 0.1;
+    }
+}
 
 /// Duration of an injected [`EXEC_DELAY`] / [`QUEUE_STALL`] hiccup.
 /// Long enough to back the pipeline up behind a 2-slot staging queue,
@@ -231,7 +248,8 @@ pub fn disarm_all() {
 pub fn chaos_spec(seed: u64) -> String {
     format!(
         "{EXEC_ERROR}:0.02,{EXEC_PANIC}:0.005,{EXEC_DELAY}:0.05,{QUEUE_STALL}:0.02,{WORKER_DEATH}:1.0:2,\
-         {CONN_DROP}:1.0:2,{FRAME_TRUNC}:1.0:1,{FRAME_CORRUPT}:1.0:2,{WRITE_SPLIT}:0.05,{ACCEPT_STALL}:1.0:2@{seed}"
+         {CONN_DROP}:1.0:2,{FRAME_TRUNC}:1.0:1,{FRAME_CORRUPT}:1.0:2,{WRITE_SPLIT}:0.05,{ACCEPT_STALL}:1.0:2,\
+         {DRIFT_SHIFT}:0.02@{seed}"
     )
 }
 

@@ -13,10 +13,11 @@ use std::sync::Mutex as PlainMutex;
 use std::time::{Duration, Instant};
 
 use ari::config::{Mode, ThresholdPolicy};
-use ari::coordinator::{Batcher, BatcherPolicy, Ladder, LadderSpec};
+use ari::coordinator::{Batcher, BatcherPolicy, ControlPolicy, Ladder, LadderSpec};
 use ari::data::EvalData;
+use ari::metrics::ControlEvent;
 use ari::runtime::{Backend, FlakyBackend, NativeBackend};
-use ari::server::model::{drive_deferred, drive_deferred_with};
+use ari::server::model::{drive_deferred, drive_deferred_controlled, drive_deferred_with};
 use ari::server::{batching_loop, CompletionOutcome, Heartbeat, Request, RobustnessPolicy, ServeClock, StagedBatch};
 use ari::util::queue::BoundedQueue;
 use ari::util::sim;
@@ -191,6 +192,62 @@ pub fn assert_padding_double_entry(engine: &mut dyn Backend, ladder: &Ladder, da
         "padded_slots out of double-entry balance (dispatch {dispatch_pad} + flush {flush_pad})"
     );
     assert_eq!(session.completions.len(), 5, "escalate-all session must still serve every request");
+}
+
+/// Exactly-one-completion conservation while the closed-loop
+/// controller moves thresholds *mid-session*: an aggressive
+/// load-adaptive policy (tighten on a single queued escalation, no
+/// hold, queue signal only so the schedule is deterministic) steps the
+/// tighten level between batches of an MMax ladder, so the accept
+/// thresholds queued rows will be flushed under differ from the ones
+/// they were staged under — and every submitted request must still
+/// yield exactly one completion.
+pub fn assert_conservation_under_threshold_churn() {
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data("fashion_syn").unwrap();
+    let spec = LadderSpec {
+        dataset: "fashion_syn".into(),
+        mode: Mode::Fp,
+        levels: vec![8, 12, 16],
+        batch: 32,
+        threshold: ThresholdPolicy::MMax,
+        seed: 7,
+    };
+    let ladder = Ladder::calibrate(&mut engine, spec, &data, 64).unwrap();
+    let control = ControlPolicy {
+        load_adaptive: true,
+        queue_high: 1,
+        queue_low: 0,
+        p95_high_us: 0,
+        hold: 1,
+        step: 0.2,
+        max_steps: 4,
+        ..ControlPolicy::default()
+    };
+    let batches: Vec<Vec<usize>> = (0..6).map(|b| (0..10).map(|k| (b * 10 + k) % data.n).collect()).collect();
+    let session = drive_deferred_controlled(
+        &mut engine,
+        &ladder,
+        &data,
+        &batches,
+        RobustnessPolicy::default(),
+        Some(control),
+    )
+    .unwrap();
+    assert!(
+        session.control_events.iter().any(|e| matches!(e, ControlEvent::Tighten { .. })),
+        "fixture must actually move thresholds mid-session: {:?}",
+        session.control_events
+    );
+    assert_eq!(session.completions.len(), 60, "every request needs exactly one completion under threshold churn");
+    let mut ids: Vec<u64> = session.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 60, "duplicate completion ids under threshold churn");
+    assert!(
+        session.completions.iter().all(|c| c.outcome != CompletionOutcome::Failed && c.pred >= 0),
+        "no fault armed: every completion is a served prediction"
+    );
 }
 
 /// Exactly-one-typed-completion under a mid-session execute failure:

@@ -15,7 +15,9 @@
 //! * `padded_slots` balances against an independent recomputation over
 //!   first-stage **and** escalation-flush padding;
 //! * under an execute failure at *any* call position, every submitted
-//!   request still yields exactly one typed completion.
+//!   request still yields exactly one typed completion;
+//! * while the closed-loop controller moves accept thresholds
+//!   mid-session, every submitted request still completes exactly once.
 //!
 //! Compiled only when the sim harness is (dev/test builds or
 //! `--features sim`).
@@ -28,8 +30,8 @@ use std::time::Duration;
 use ari::runtime::NativeBackend;
 use ari::util::sim;
 use model_common::{
-    assert_conservation_under_execute_failure, assert_drain_chunked, assert_padding_double_entry,
-    assert_sc_keys_unique, escalate_all_fixture, run_sim_serving_model,
+    assert_conservation_under_execute_failure, assert_conservation_under_threshold_churn, assert_drain_chunked,
+    assert_padding_double_entry, assert_sc_keys_unique, escalate_all_fixture, run_sim_serving_model,
 };
 
 /// Closed-loop burst through the pipelined arrival loop under random
@@ -107,4 +109,12 @@ fn execute_failure_at_every_position_conserves_completions() {
     for fail_call in 0..=8 {
         assert_conservation_under_execute_failure(fail_call);
     }
+}
+
+/// The closed-loop controller tightens thresholds between batches, so
+/// queued escalations flush under different accept thresholds than
+/// they were staged under — and conservation must hold regardless.
+#[test]
+fn threshold_churn_mid_session_conserves_completions() {
+    assert_conservation_under_threshold_churn();
 }

@@ -23,7 +23,7 @@ use std::collections::HashMap;
 use ari::config::{AriConfig, Mode, ThresholdPolicy};
 use ari::coordinator::{Cascade, CascadeSpec};
 use ari::runtime::{Backend, NativeBackend};
-use ari::server::net::client::{run_client, ClientConfig, ClientReport};
+use ari::server::net::client::{fetch_stats, run_client, ClientConfig, ClientReport};
 use ari::server::net::{run_net_serving, NetServeReport};
 use ari::server::{run_serving, ServeOptions};
 use ari::util::fault;
@@ -190,6 +190,60 @@ fn accept_stall_loses_nothing() {
     assert_eq!(creport.received, 192);
 }
 
+/// `Stats` frames are served live, mid-session, without consuming any
+/// of the serving budget: after half the workload, a stats snapshot
+/// reports the counters, per-stage served totals and effective
+/// thresholds so far, and the second half still serves in full.
+#[test]
+fn stats_frames_report_live_control_state() {
+    // Probability-0 arm: serialises against fault tests in this binary.
+    let _quiesce = fault::ArmGuard::arm("conn-drop:0.0");
+    let cfg = base_cfg();
+    let mut engine = NativeBackend::synthetic();
+    let data = engine.eval_data(&cfg.dataset).unwrap();
+    let cascade = Cascade::calibrate(&mut engine, CascadeSpec::from_config(&cfg), &data, data.n / 2).unwrap();
+    let n_stages = cascade.ladder.stages.len();
+    let t0 = cascade.ladder.stages[0].threshold;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cdata = data.clone();
+    let half = (cfg.requests / 2) as u64;
+    // ari-lint: allow(sim-discipline): loopback client on a real thread over a
+    // real socket, same as serve_loopback.
+    let client = std::thread::spawn(move || {
+        let mut ccfg = ClientConfig::default();
+        ccfg.addr = addr.clone();
+        ccfg.requests = half as usize;
+        ccfg.timeout = std::time::Duration::from_secs(1);
+        let r1 = run_client(&ccfg, &cdata).expect("first half failed");
+        let stats = fetch_stats(&addr, std::time::Duration::from_secs(2)).expect("stats fetch failed");
+        let r2 = run_client(&ccfg, &cdata).expect("second half failed");
+        (r1, stats, r2)
+    });
+    let report =
+        run_net_serving(&mut engine, &cascade.ladder, &cfg, data.input_dim, ServeOptions::default(), listener)
+            .expect("net serving session failed");
+    let (r1, stats, r2) = client.join().expect("client thread panicked");
+    // The mid-session snapshot accounts exactly the first half.
+    assert_eq!(r1.received, half);
+    assert_eq!(stats.admitted, half, "stats frames must not consume serving budget");
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.responses_sent, half);
+    assert_eq!(stats.completed, half);
+    assert_eq!(stats.rejected + stats.failed + stats.degraded, 0);
+    assert_eq!(stats.stages.len(), n_stages);
+    assert_eq!(stats.stages.iter().map(|s| s.served).sum::<u64>(), half, "per-stage served totals balance");
+    assert_eq!(stats.stages[0].threshold.to_bits(), t0.to_bits(), "calibrated threshold reported exactly");
+    assert_eq!(stats.stages[n_stages - 1].threshold, f64::NEG_INFINITY, "final stage accepts everything");
+    // No [control] knob is on: the loop reports its quiescent state.
+    assert_eq!((stats.level, stats.drifted, stats.recals), (0, false, 0));
+    // The second half still served in full — the session's budget was
+    // untouched by the stats exchange.
+    assert_eq!(r2.received, half);
+    assert_eq!(report.admitted, 2 * half);
+    assert_eq!(report.responses_sent + report.dropped_dead, report.admitted + report.shed);
+}
+
 /// The canonical chaos schedule — every recoverable fault point, the
 /// five wire points included — over real loopback TCP, with the
 /// watchdog armed: the session must complete (not hang, not bail) with
@@ -198,7 +252,7 @@ fn accept_stall_loses_nothing() {
 #[test]
 fn chaos_session_over_loopback_conserves_and_terminates() {
     let spec = fault::chaos_spec(7);
-    for p in ["conn-drop", "frame-trunc", "frame-corrupt", "write-split", "accept-stall"] {
+    for p in ["conn-drop", "frame-trunc", "frame-corrupt", "write-split", "accept-stall", "drift-shift"] {
         assert!(spec.contains(p), "canonical chaos spec must cover the {p} point");
     }
     let _g = fault::ArmGuard::arm(&spec);
